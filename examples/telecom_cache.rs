@@ -1,0 +1,59 @@
+//! Domain example: a telecom profile store (TATP) and the version-table
+//! cache (paper §4.4 + fig. 18).
+//!
+//! TATP is 80% read-only over small subscriber records — the regime where
+//! the VT cache saves a CVT READ per access. This example sweeps the
+//! cache size and reports hit rate, throughput, and P99 latency, then
+//! shows the zero-overhead invalidation path by disabling the cache.
+//!
+//! ```sh
+//! cargo run --release --example telecom_cache
+//! ```
+
+use lotus::config::{Config, SystemKind};
+use lotus::sim::Cluster;
+use lotus::workloads::WorkloadKind;
+
+fn main() -> lotus::Result<()> {
+    let mut cfg = Config::paper();
+    cfg.scale.tatp_subscribers = 100_000;
+    cfg.coordinators_per_cn = 4;
+    cfg.duration_ns = 10_000_000;
+    cfg.mn_capacity = 1 << 30;
+
+    println!("== TATP ({} subscribers, 80% read-only) ==", cfg.scale.tatp_subscribers);
+    println!(
+        "\n{:>12} {:>10} {:>12} {:>10}",
+        "vt-cache", "hit-rate", "Mtxn/s", "p99(us)"
+    );
+    for entries in [0usize, 16, 128, 1024, 16 * 1024] {
+        let mut c = cfg.clone();
+        if entries == 0 {
+            c.features.vt_cache = false;
+        } else {
+            c.vt_cache_entries = entries;
+        }
+        let cluster = Cluster::build(&c, WorkloadKind::Tatp)?;
+        let report = cluster.run(SystemKind::Lotus)?;
+        let hit = if entries == 0 {
+            0.0
+        } else {
+            cluster
+                .shared
+                .vt_caches
+                .iter()
+                .map(|vc| vc.hit_rate())
+                .sum::<f64>()
+                / c.n_cns as f64
+        };
+        println!(
+            "{:>12} {:>9.1}% {:>12.3} {:>10}",
+            if entries == 0 { "off".to_string() } else { format!("{entries}") },
+            hit * 100.0,
+            report.mtps(),
+            report.p99_us()
+        );
+    }
+    println!("\nlarger caches serve more CVT lookups locally (one RTT saved each).");
+    Ok(())
+}

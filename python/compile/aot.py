@@ -1,0 +1,82 @@
+"""AOT lowering: jax -> HLO TEXT artifacts for the rust PJRT runtime.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` 0.1.6 crate links) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly. Lowered with ``return_tuple=True``; the rust side unwraps with
+``to_tuple{N}``.
+
+Usage (from ``make artifacts``):
+    cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Default topology: mirrors the paper's testbed scale (9 CNs) with 4096
+# shards (12-bit shard number space from fig. 7). Shard-hash batch of 1024.
+DEFAULT_CNS = 9
+DEFAULT_SHARDS = 4096
+DEFAULT_HASH_BATCH = 1024
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_artifact(path: str, text: str) -> None:
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text):>9} chars  {path}")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="artifact directory")
+    p.add_argument("--cns", type=int, default=DEFAULT_CNS)
+    p.add_argument("--shards", type=int, default=DEFAULT_SHARDS)
+    p.add_argument("--hash-batch", type=int, default=DEFAULT_HASH_BATCH)
+    args = p.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+
+    lowered = model.lower_rebalance(args.cns, args.shards)
+    write_artifact(os.path.join(args.out, "rebalance.hlo.txt"), to_hlo_text(lowered))
+
+    lowered = model.lower_shard_hash(args.hash_batch)
+    write_artifact(os.path.join(args.out, "shard_hash.hlo.txt"), to_hlo_text(lowered))
+
+    # Manifest so the rust runtime can validate topology at load time.
+    manifest = {
+        "rebalance": {
+            "file": "rebalance.hlo.txt",
+            "n_cns": args.cns,
+            "n_shards": args.shards,
+            "n_intervals": model.N_INTERVALS,
+            "outputs": ["heat", "load", "overload", "hottest", "target"],
+        },
+        "shard_hash": {
+            "file": "shard_hash.hlo.txt",
+            "batch": args.hash_batch,
+            "outputs": ["fingerprint", "bucket", "shard"],
+        },
+    }
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest       {mpath}")
+
+
+if __name__ == "__main__":
+    main()

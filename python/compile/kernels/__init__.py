@@ -1,0 +1,26 @@
+"""L1 Pallas kernels for LOTUS (build-time only; never on the request path).
+
+Two kernels implement the coordinator's numeric hot-spots:
+
+- ``heat``: tiled EWMA heat scoring over the [CNs x shards] request-count
+  matrix used by the two-level load balancer (paper section 4.3).
+- ``shard_hash``: the vectorized LOTUS key hash (fingerprint / lock-table
+  bucket / shard number, paper sections 4.1-4.2) for batched key planning.
+
+Both are lowered with ``interpret=True`` so the emitted HLO runs on any
+PJRT backend (the rust coordinator uses the CPU client). ``ref.py`` holds
+the pure-jnp oracles that pytest checks the kernels against.
+"""
+
+from .heat import ewma_heat, DEFAULT_ALPHA
+from .shard_hash import shard_hash, FNV_OFFSET, FNV_PRIME, SHARD_BITS, SHARD_MASK
+
+__all__ = [
+    "ewma_heat",
+    "DEFAULT_ALPHA",
+    "shard_hash",
+    "FNV_OFFSET",
+    "FNV_PRIME",
+    "SHARD_BITS",
+    "SHARD_MASK",
+]

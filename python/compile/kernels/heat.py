@@ -1,0 +1,82 @@
+"""EWMA heat-scoring Pallas kernel (L1).
+
+The LOTUS load balancer (paper section 4.3) tracks, per compute node (CN)
+and per shard, an exponentially weighted moving average of request counts:
+
+    heat[c, s] = alpha * counts[c, s] + (1 - alpha) * prev_heat[c, s]
+
+and the per-CN aggregate load ``load[c] = sum_s heat[c, s]``. The matrix is
+[C x S] with S up to a few thousand shards; the kernel tiles the shard axis
+so each grid step streams one contiguous [C x TILE] block through VMEM —
+on a real TPU this is a VPU-bound streaming op (no MXU), and the BlockSpec
+schedule below makes each tile a single contiguous HBM read.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and the rust runtime runs on the CPU client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default EWMA smoothing factor. 0.25 gives ~4-interval memory, matching the
+# paper's 3-consecutive-interval (300 ms) overload criterion granularity.
+DEFAULT_ALPHA = 0.25
+
+# Shard-axis tile. 512 f32 lanes * C rows stays far below VMEM budget while
+# keeping the per-step HBM read contiguous and lane-aligned (512 % 128 == 0).
+DEFAULT_TILE_S = 512
+
+
+def _heat_kernel(counts_ref, prev_ref, alpha_ref, heat_ref, load_ref):
+    """One [C x TILE_S] tile: EWMA update + partial per-CN load reduction."""
+    alpha = alpha_ref[0]
+    counts = counts_ref[...]
+    prev = prev_ref[...]
+    heat = alpha * counts + (1.0 - alpha) * prev
+    heat_ref[...] = heat
+    # Partial row-sum for this shard tile; the caller sums tiles on axis 1.
+    load_ref[...] = jnp.sum(heat, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_s",))
+def ewma_heat(counts, prev_heat, alpha, tile_s=DEFAULT_TILE_S):
+    """EWMA heat update, tiled over the shard axis.
+
+    Args:
+      counts:    f32[C, S] request counts observed this interval.
+      prev_heat: f32[C, S] heat state from the previous interval.
+      alpha:     f32[1] smoothing factor in (0, 1].
+      tile_s:    static shard-axis tile (must divide S).
+
+    Returns:
+      (heat, load): f32[C, S] updated heat and f32[C] per-CN load.
+    """
+    c, s = counts.shape
+    assert prev_heat.shape == (c, s), (counts.shape, prev_heat.shape)
+    if s % tile_s != 0:
+        # Degrade to a single tile for odd sizes (tests sweep these).
+        tile_s = s
+    n_tiles = s // tile_s
+
+    heat, load_parts = pl.pallas_call(
+        _heat_kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((c, tile_s), lambda i: (0, i)),
+            pl.BlockSpec((c, tile_s), lambda i: (0, i)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((c, tile_s), lambda i: (0, i)),
+            pl.BlockSpec((c, 1), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c, s), jnp.float32),
+            jax.ShapeDtypeStruct((c, n_tiles), jnp.float32),
+        ],
+        interpret=True,
+    )(counts, prev_heat, alpha)
+    return heat, jnp.sum(load_parts, axis=1)

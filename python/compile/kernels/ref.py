@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness references: straight-line jax.numpy with no
+pallas, no tiling, no grids. pytest (and hypothesis sweeps) assert the
+kernels match these bit-for-bit (integer kernels) or to float tolerance
+(EWMA kernel).
+"""
+
+import jax.numpy as jnp
+
+from .shard_hash import AVALANCHE, FNV_OFFSET, FNV_PRIME, SHARD_MASK
+
+
+def ewma_heat_ref(counts, prev_heat, alpha):
+    """Reference EWMA heat + per-CN load."""
+    counts = counts.astype(jnp.float32)
+    prev_heat = prev_heat.astype(jnp.float32)
+    heat = alpha * counts + (1.0 - alpha) * prev_heat
+    return heat, jnp.sum(heat, axis=1)
+
+
+def mix32_ref(hi, lo):
+    """Reference FNV-1a 2-round mix with xorshift avalanche (u32 wrap)."""
+    hi = hi.astype(jnp.uint32)
+    lo = lo.astype(jnp.uint32)
+    h = (jnp.uint32(FNV_OFFSET) ^ lo) * jnp.uint32(FNV_PRIME)
+    h = (h ^ hi) * jnp.uint32(FNV_PRIME)
+    h = h ^ (h >> jnp.uint32(15))
+    h = h * jnp.uint32(AVALANCHE)
+    h = h ^ (h >> jnp.uint32(13))
+    return h
+
+
+def shard_hash_ref(hi, lo, n_buckets=65536):
+    """Reference (fingerprint, bucket, shard) triple."""
+    fp = mix32_ref(hi, lo)
+    bucket = fp % jnp.uint32(n_buckets)
+    shard = lo.astype(jnp.uint32) & jnp.uint32(SHARD_MASK)
+    return fp, bucket, shard
+
+
+def rebalance_plan_ref(counts, prev_heat, latency3, alpha=0.25, threshold=1.5):
+    """Reference for the full L2 rebalance planner (model.py).
+
+    Returns:
+      (heat, load, overload, hottest, target):
+        heat     f32[C, S] new EWMA state
+        load     f32[C]    per-CN aggregate heat
+        overload i32[C]    1 iff CN latency > threshold * cluster avg in all
+                           3 intervals (paper's 3-consecutive rule)
+        hottest  i32[C]    per-CN argmax shard of heat
+        target   i32[]     CN with lowest latest-interval latency (receiver)
+    """
+    heat, load = ewma_heat_ref(counts, prev_heat, alpha)
+    avg = jnp.mean(latency3, axis=0, keepdims=True)  # [1, 3]
+    over = jnp.all(latency3 > threshold * avg, axis=1)
+    hottest = jnp.argmax(heat, axis=1).astype(jnp.int32)
+    target = jnp.argmin(latency3[:, -1]).astype(jnp.int32)
+    return heat, load, over.astype(jnp.int32), hottest, target

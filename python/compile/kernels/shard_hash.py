@@ -1,0 +1,96 @@
+"""Vectorized LOTUS key hash as a Pallas kernel (L1).
+
+Paper sections 4.1-4.2: every data record is addressed by a 64-bit LOTUS
+key whose *low 12 bits are the shard number* (taken from the critical
+field); the lock table hashes the key to a 7B *fingerprint* plus a bucket
+index. This kernel is the batched version used for key planning: given a
+batch of keys split into (hi, lo) u32 halves it produces, per key,
+
+    fingerprint = mix32(hi, lo)          (FNV-1a style 2-round mix)
+    bucket      = fingerprint % n_buckets
+    shard       = lo & 0xFFF
+
+The EXACT same mix is implemented in rust (``sharding::key::mix32``); an
+integration test executes this artifact through PJRT and asserts bit
+equality against the rust implementation, pinning the two layers together.
+
+All arithmetic is u32 with wrap-around semantics (matching rust
+``u32::wrapping_mul`` / ``^``), so interpret-mode CPU lowering is exact.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# FNV-1a 32-bit parameters (plain python ints: pallas kernels must not
+# capture traced jax constants from module scope).
+FNV_OFFSET = 2166136261
+FNV_PRIME = 16777619
+AVALANCHE = 2246822519
+
+# Low 12 bits of the LOTUS key are the shard number (paper fig. 7).
+SHARD_BITS = 12
+SHARD_MASK = (1 << SHARD_BITS) - 1
+
+# Lane-aligned batch tile.
+DEFAULT_TILE = 256
+
+
+def _mix32(hi, lo):
+    """Two FNV-1a rounds over the 32-bit halves + xorshift avalanche."""
+    h = (jnp.uint32(FNV_OFFSET) ^ lo) * jnp.uint32(FNV_PRIME)
+    h = (h ^ hi) * jnp.uint32(FNV_PRIME)
+    # Final avalanche (xorshift) so nearby keys spread across buckets.
+    h = h ^ (h >> jnp.uint32(15))
+    h = h * jnp.uint32(AVALANCHE)
+    h = h ^ (h >> jnp.uint32(13))
+    return h
+
+
+def _hash_kernel(hi_ref, lo_ref, fp_ref, bucket_ref, shard_ref, *, n_buckets):
+    hi = hi_ref[...]
+    lo = lo_ref[...]
+    fp = _mix32(hi, lo)
+    fp_ref[...] = fp
+    bucket_ref[...] = fp % jnp.uint32(n_buckets)
+    shard_ref[...] = lo & jnp.uint32(SHARD_MASK)
+
+
+@functools.partial(jax.jit, static_argnames=("n_buckets", "tile"))
+def shard_hash(hi, lo, n_buckets=65536, tile=DEFAULT_TILE):
+    """Batched LOTUS key hash.
+
+    Args:
+      hi, lo:    u32[N] high/low halves of the 64-bit LOTUS keys.
+      n_buckets: static lock-table bucket count (power of two in practice).
+      tile:      static batch tile (must divide N; degrades to N otherwise).
+
+    Returns:
+      (fingerprint, bucket, shard): three u32[N] arrays.
+    """
+    (n,) = hi.shape
+    assert lo.shape == (n,)
+    if n % tile != 0:
+        tile = n
+    kernel = functools.partial(_hash_kernel, n_buckets=n_buckets)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.uint32),
+            jax.ShapeDtypeStruct((n,), jnp.uint32),
+            jax.ShapeDtypeStruct((n,), jnp.uint32),
+        ],
+        interpret=True,
+    )(hi, lo)

@@ -1,0 +1,73 @@
+"""L2 JAX model: the LOTUS rebalance planner + batch key hash graphs.
+
+These are the compute graphs the rust coordinator executes through PJRT at
+run time (python is build-time only). Two exported entry points:
+
+- ``rebalance_plan``: the two-level load balancer's decision function
+  (paper section 4.3). Inputs are the per-CN/per-shard request-count matrix
+  observed this interval, the previous EWMA heat state, and each CN's
+  average latency over the last three 100 ms intervals (the paper's
+  3-consecutive-interval overload rule). Outputs: new heat state, per-CN
+  load, the overload mask, each CN's hottest shard (migration candidate),
+  and the migration receiver (lowest-latency CN). The EWMA scoring runs in
+  the L1 Pallas kernel; the arg-max/arg-min decision layer is plain jnp and
+  fuses into the same HLO module.
+
+- ``shard_hash_batch``: batched LOTUS key hashing (L1 kernel), exported so
+  the rust side can cross-check its native hash implementation bit-for-bit
+  against the artifact (layer-pinning test) and plan key batches.
+
+Shapes are static per artifact: the coordinator is compiled for a fixed
+CN-count / shard-count topology (matching the paper's fixed 9-CN testbed);
+``aot.py`` can emit artifacts for several topologies.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ewma_heat, shard_hash
+
+# Overload rule (paper 4.3): latency > 50% above cluster average for three
+# consecutive 100 ms intervals.
+OVERLOAD_THRESHOLD = 1.5
+N_INTERVALS = 3
+
+
+def rebalance_plan(counts, prev_heat, latency3, alpha):
+    """Two-level load-balancing decision function.
+
+    Args:
+      counts:    f32[C, S] requests per owner CN per shard this interval.
+      prev_heat: f32[C, S] EWMA heat state.
+      latency3:  f32[C, 3] per-CN avg latency, oldest..latest interval.
+      alpha:     f32[1] EWMA factor.
+
+    Returns (tuple):
+      heat f32[C, S], load f32[C], overload i32[C], hottest i32[C],
+      target i32[] (receiver CN id).
+    """
+    heat, load = ewma_heat(counts, prev_heat, alpha)
+    avg = jnp.mean(latency3, axis=0, keepdims=True)
+    overload = jnp.all(latency3 > OVERLOAD_THRESHOLD * avg, axis=1)
+    hottest = jnp.argmax(heat, axis=1).astype(jnp.int32)
+    target = jnp.argmin(latency3[:, -1]).astype(jnp.int32)
+    return heat, load, overload.astype(jnp.int32), hottest, target
+
+
+def shard_hash_batch(hi, lo):
+    """Batched (fingerprint, bucket, shard) for u32[N] key halves."""
+    return shard_hash(hi, lo)
+
+
+def lower_rebalance(n_cns: int, n_shards: int):
+    """Lower ``rebalance_plan`` for a fixed topology; returns jax Lowered."""
+    spec_cs = jax.ShapeDtypeStruct((n_cns, n_shards), jnp.float32)
+    spec_l3 = jax.ShapeDtypeStruct((n_cns, N_INTERVALS), jnp.float32)
+    spec_a = jax.ShapeDtypeStruct((1,), jnp.float32)
+    return jax.jit(rebalance_plan).lower(spec_cs, spec_cs, spec_l3, spec_a)
+
+
+def lower_shard_hash(batch: int):
+    """Lower ``shard_hash_batch`` for a fixed batch size."""
+    spec = jax.ShapeDtypeStruct((batch,), jnp.uint32)
+    return jax.jit(shard_hash_batch).lower(spec, spec)

@@ -1,0 +1,115 @@
+"""L2 model tests: rebalance planner semantics + lowering round-trip."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.aot import to_hlo_text
+from compile.kernels.ref import rebalance_plan_ref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _mk(c=4, s=256, seed=0):
+    k = jax.random.split(jax.random.PRNGKey(seed), 3)
+    counts = jax.random.uniform(k[0], (c, s), jnp.float32, 0, 1e4)
+    prev = jax.random.uniform(k[1], (c, s), jnp.float32, 0, 1e4)
+    lat3 = jax.random.uniform(k[2], (c, 3), jnp.float32, 1.0, 100.0)
+    return counts, prev, lat3
+
+
+class TestRebalancePlan:
+    @settings(**SETTINGS)
+    @given(
+        c=st.integers(2, 12),
+        s=st.sampled_from([64, 256, 512, 1024]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, c, s, seed):
+        counts, prev, lat3 = _mk(c, s, seed)
+        a = jnp.array([0.25], jnp.float32)
+        got = model.rebalance_plan(counts, prev, lat3, a)
+        ref = rebalance_plan_ref(counts, prev, lat3, 0.25, 1.5)
+        names = ["heat", "load", "overload", "hottest", "target"]
+        for name, g, r in zip(names, got, ref):
+            np.testing.assert_allclose(
+                np.asarray(g), np.asarray(r), rtol=1e-5, err_msg=name
+            )
+
+    def test_overload_rule_three_consecutive(self):
+        """CN must exceed 1.5x cluster avg in ALL 3 intervals to trip."""
+        # CN0 hot in all 3 intervals; CN1 hot in 2 of 3; CN2/CN3 cold.
+        lat3 = jnp.array(
+            [[100.0, 100.0, 100.0], [100.0, 100.0, 1.0], [1.0, 1.0, 1.0], [1.0, 1.0, 1.0]],
+            jnp.float32,
+        )
+        counts, prev, _ = _mk(4, 64)
+        _, _, over, _, _ = model.rebalance_plan(
+            counts, prev, lat3, jnp.array([0.25], jnp.float32)
+        )
+        assert list(np.asarray(over)) == [1, 0, 0, 0]
+
+    def test_target_is_lowest_latency_cn(self):
+        lat3 = jnp.array(
+            [[5.0, 5.0, 5.0], [5.0, 5.0, 2.0], [5.0, 5.0, 9.0]], jnp.float32
+        )
+        counts, prev, _ = _mk(3, 64)
+        *_, target = model.rebalance_plan(
+            counts, prev, lat3, jnp.array([0.25], jnp.float32)
+        )
+        assert int(np.asarray(target)) == 1
+
+    def test_hottest_shard_argmax(self):
+        counts = jnp.zeros((2, 128), jnp.float32)
+        counts = counts.at[0, 17].set(1e6).at[1, 99].set(1e6)
+        prev = jnp.zeros((2, 128), jnp.float32)
+        lat3 = jnp.ones((2, 3), jnp.float32)
+        _, _, _, hottest, _ = model.rebalance_plan(
+            counts, prev, lat3, jnp.array([1.0], jnp.float32)
+        )
+        assert list(np.asarray(hottest)) == [17, 99]
+
+    def test_no_overload_when_balanced(self):
+        lat3 = jnp.ones((6, 3), jnp.float32) * 7.0
+        counts, prev, _ = _mk(6, 64)
+        _, _, over, _, _ = model.rebalance_plan(
+            counts, prev, lat3, jnp.array([0.25], jnp.float32)
+        )
+        assert np.asarray(over).sum() == 0
+
+
+class TestLowering:
+    def test_rebalance_lowers_to_hlo_text(self):
+        text = to_hlo_text(model.lower_rebalance(4, 512))
+        assert "HloModule" in text
+        assert len(text) > 500
+
+    def test_shard_hash_lowers_to_hlo_text(self):
+        text = to_hlo_text(model.lower_shard_hash(256))
+        assert "HloModule" in text
+
+    def test_lowered_executes_same_as_eager(self):
+        """Compile the lowered module and compare against eager results."""
+        lowered = model.lower_rebalance(3, 128)
+        compiled = lowered.compile()
+        counts, prev, lat3 = _mk(3, 128, seed=7)
+        a = jnp.array([0.25], jnp.float32)
+        got = compiled(counts, prev, lat3, a)
+        ref = model.rebalance_plan(counts, prev, lat3, a)
+        for g, r in zip(got, ref):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(r), rtol=1e-6)
+
+    def test_hlo_has_no_custom_calls(self):
+        """interpret=True must lower to plain HLO (no Mosaic custom-call)."""
+        for text in (
+            to_hlo_text(model.lower_rebalance(2, 128)),
+            to_hlo_text(model.lower_shard_hash(128)),
+        ):
+            assert "custom-call" not in text.lower(), "CPU PJRT cannot run this"
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,71 @@
+//! Shared helpers for the figure-reproduction benches.
+//!
+//! Every bench is a plain `harness = false` binary that regenerates one
+//! paper table/figure: it builds the cluster, sweeps the figure's x-axis,
+//! and prints the same rows/series the paper reports. Absolute numbers
+//! come from the calibrated simulator (DESIGN.md §5), so the *shape* —
+//! who wins, by what factor, where the knees fall — is the claim, not the
+//! raw Mtxn/s.
+//!
+//! `LOTUS_BENCH_SCALE=full` runs closer-to-paper dataset sizes and longer
+//! virtual durations (slower wall-clock); the default "quick" scale keeps
+//! every bench to a couple of minutes on a small host.
+
+#![allow(dead_code)]
+
+use lotus::config::Config;
+use lotus::metrics::RunReport;
+
+/// Bench scale selected by `LOTUS_BENCH_SCALE` (quick | full).
+pub fn full_scale() -> bool {
+    std::env::var("LOTUS_BENCH_SCALE").map(|v| v == "full").unwrap_or(false)
+}
+
+/// The base configuration for figure benches.
+pub fn bench_config() -> Config {
+    let mut cfg = Config::paper();
+    if full_scale() {
+        cfg.duration_ns = 20_000_000;
+        cfg.scale.kvs_keys = 1_000_000;
+        cfg.scale.smallbank_accounts = 1_000_000;
+        cfg.scale.tatp_subscribers = 300_000;
+        cfg.scale.tpcc_warehouses = 8;
+        cfg.mn_capacity = 6 << 30;
+    } else {
+        cfg.duration_ns = 8_000_000;
+        cfg.scale.kvs_keys = 100_000;
+        cfg.scale.smallbank_accounts = 100_000;
+        cfg.scale.tatp_subscribers = 50_000;
+        cfg.scale.tpcc_warehouses = 4;
+        cfg.mn_capacity = 2 << 30;
+    }
+    cfg
+}
+
+/// Concurrency sweep (total concurrent transactions = n_cns x value).
+pub fn concurrency_points() -> Vec<usize> {
+    if full_scale() {
+        vec![1, 2, 4, 6, 8, 12]
+    } else {
+        vec![1, 2, 4, 6]
+    }
+}
+
+/// One formatted result row.
+pub fn row(label: &str, r: &RunReport) -> String {
+    format!(
+        "{label:<18} {:>8.3} Mtxn/s  p50 {:>5} us  p99 {:>6} us  abort {:>5.2}%",
+        r.mtps(),
+        r.p50_us(),
+        r.p99_us(),
+        r.abort_rate() * 100.0
+    )
+}
+
+/// Print the figure header.
+pub fn header(fig: &str, what: &str) {
+    println!("==============================================================");
+    println!("{fig}: {what}");
+    println!("scale: {}", if full_scale() { "full" } else { "quick (LOTUS_BENCH_SCALE=full for paper-scale)" });
+    println!("==============================================================");
+}

@@ -1,0 +1,36 @@
+//! Figure 2: Motor and FORD throughput/latency vs concurrency on
+//! SmallBank — the MN-RNIC atomics bottleneck. The paper observes ~45
+//! concurrent transactions saturating 3 MNs, after which latency climbs
+//! while throughput flattens.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::{bench_config, concurrency_points, header, row};
+use lotus::config::SystemKind;
+use lotus::sim::Cluster;
+use lotus::workloads::WorkloadKind;
+
+fn main() -> lotus::Result<()> {
+    header("Figure 2", "Motor/FORD on SmallBank vs concurrency (the MN-RNIC knee)");
+    let cfg = bench_config();
+    for system in [SystemKind::Motor, SystemKind::Ford] {
+        println!("\n-- {} --", system.name());
+        let mut last_tput = 0.0;
+        for coords in concurrency_points() {
+            let mut c = cfg.clone();
+            c.coordinators_per_cn = coords;
+            let cluster = Cluster::build(&c, WorkloadKind::SmallBank)?;
+            let r = cluster.run(system)?;
+            let conc = coords * c.n_cns;
+            println!("{}", row(&format!("conc={conc}"), &r));
+            if r.mtps() < last_tput * 1.05 && coords > 1 {
+                println!("{:<18} ^ knee: throughput flattens, latency climbs", "");
+            }
+            last_tput = r.mtps();
+        }
+    }
+    println!("\npaper shape: both systems hit an IOPS wall as CAS lock traffic");
+    println!("saturates the MN RNICs; latency rises sharply past the knee.");
+    Ok(())
+}

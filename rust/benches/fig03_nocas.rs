@@ -1,0 +1,42 @@
+//! Figure 3: Motor and FORD with CAS abandoned (unsafe). The paper
+//! measures Motor-no-CAS reaching 2.4x its lock-bound peak — the headroom
+//! the MN-RNIC atomics bottleneck hides — while FORD gains less (it is
+//! bandwidth-bound early).
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::{bench_config, concurrency_points, header, row};
+use lotus::config::SystemKind;
+use lotus::sim::Cluster;
+use lotus::workloads::WorkloadKind;
+
+fn main() -> lotus::Result<()> {
+    header("Figure 3", "abandoning CAS on SmallBank (unsafe upper bound)");
+    let cfg = bench_config();
+    let mut peaks = std::collections::HashMap::new();
+    for system in [
+        SystemKind::Motor,
+        SystemKind::MotorNoCas,
+        SystemKind::Ford,
+        SystemKind::FordNoCas,
+    ] {
+        println!("\n-- {} --", system.name());
+        let mut peak = 0.0f64;
+        for coords in concurrency_points() {
+            let mut c = cfg.clone();
+            c.coordinators_per_cn = coords;
+            let cluster = Cluster::build(&c, WorkloadKind::SmallBank)?;
+            let r = cluster.run(system)?;
+            println!("{}", row(&format!("conc={}", coords * c.n_cns), &r));
+            peak = peak.max(r.mtps());
+        }
+        peaks.insert(system.name(), peak);
+    }
+    let motor_gain = peaks["motor-nocas"] / peaks["motor"];
+    let ford_gain = peaks["ford-nocas"] / peaks["ford"];
+    println!("\npeak gains from removing CAS:");
+    println!("  motor: {motor_gain:.2}x   (paper: ~2.4x)");
+    println!("  ford:  {ford_gain:.2}x    (paper: smaller — bandwidth-bound)");
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! Figure 14: the ablation — step-by-step impact of each LOTUS component
+//! over a Motor baseline:
+//!
+//!   motor                      -> the baseline system
+//!   +Full Record Store         -> motor with LOTUS's one-full-record-per-
+//!                                 version layout (no delta reconstruction)
+//!   +Lock Sharding (&Log/Vis)  -> LOTUS protocol: CN lock tables + the
+//!                                 log/visible commit steps, but uniform
+//!                                 routing and no VT cache
+//!   +Two-Level Load Balancing  -> adds hybrid routing + resharding
+//!   +Version Table Cache       -> full LOTUS
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::{bench_config, header, row};
+use lotus::config::{Config, SystemKind};
+use lotus::sim::Cluster;
+use lotus::workloads::WorkloadKind;
+
+fn run_step(cfg: &Config, kind: WorkloadKind, system: SystemKind) -> lotus::Result<f64> {
+    let cluster = Cluster::build(cfg, kind)?;
+    let r = cluster.run(system)?;
+    println!("{}", row(system.name(), &r));
+    Ok(r.mtps())
+}
+
+fn main() -> lotus::Result<()> {
+    header("Figure 14", "ablation: adding LOTUS components one at a time");
+    let mut cfg = bench_config();
+    cfg.coordinators_per_cn = if bench_util::full_scale() { 6 } else { 4 };
+    for kind in [WorkloadKind::Tatp, WorkloadKind::Tpcc, WorkloadKind::SmallBank] {
+        println!("\n===== {} =====", kind.name());
+        let base = run_step(&cfg, kind, SystemKind::Motor)?;
+        let full = run_step(&cfg, kind, SystemKind::MotorFullRecord)?;
+
+        // +Lock Sharding (+ the log/visible steps): LOTUS protocol with
+        // hybrid routing and the VT cache disabled.
+        let mut c = cfg.clone();
+        c.features.load_balancing = false;
+        c.features.vt_cache = false;
+        let cluster = Cluster::build(&c, kind)?;
+        let r = cluster.run(SystemKind::Lotus)?;
+        println!("{}", row("+lock-sharding", &r));
+        let shard = r.mtps();
+
+        // +Two-level load balancing.
+        let mut c = cfg.clone();
+        c.features.vt_cache = false;
+        let cluster = Cluster::build(&c, kind)?;
+        let r = cluster.run(SystemKind::Lotus)?;
+        println!("{}", row("+load-balancing", &r));
+        let lb = r.mtps();
+
+        // +Version table cache (full LOTUS).
+        let cluster = Cluster::build(&cfg, kind)?;
+        let r = cluster.run(SystemKind::Lotus)?;
+        println!("{}", row("+vt-cache", &r));
+        let vt = r.mtps();
+
+        println!(
+            "step gains: full-record {:+.1}%, lock-sharding {:+.1}%, \
+             load-balancing {:+.1}%, vt-cache {:+.1}%",
+            (full / base - 1.0) * 100.0,
+            (shard / full - 1.0) * 100.0,
+            (lb / shard - 1.0) * 100.0,
+            (vt / lb - 1.0) * 100.0
+        );
+    }
+    println!("\npaper: +FullRecord 9-14%; +LockSharding +9.9%/+29.7% (TPCC/SB),");
+    println!("-10.8% on TATP (RPC CPU); +2LLB 8-37%; +VTCache 6-20%.");
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Figure 17: LOTUS vs the idealized RDMA lock (DecLock-style model —
+//! single FAA per acquire/release, no queues or notifications; a strict
+//! upper bound on CN-cooperative RDMA locking). The paper measures LOTUS
+//! 1.3–1.9x ahead: even idealized RDMA locks keep global lock state in
+//! the memory pool and pay the MN RNIC atomics pipeline.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::{bench_config, concurrency_points, header, row};
+use lotus::config::SystemKind;
+use lotus::sim::Cluster;
+use lotus::workloads::WorkloadKind;
+
+fn main() -> lotus::Result<()> {
+    header("Figure 17", "LOTUS vs idealized RDMA locking");
+    let cfg = bench_config();
+    for kind in [
+        WorkloadKind::Kvs {
+            rw_pct: 50,
+            skewed: true,
+        },
+        WorkloadKind::SmallBank,
+    ] {
+        println!("\n===== {} =====", kind.name());
+        let mut peak = [0.0f64; 2];
+        for coords in concurrency_points() {
+            let mut c = cfg.clone();
+            c.coordinators_per_cn = coords;
+            let cluster = Cluster::build(&c, kind)?;
+            for (i, system) in [SystemKind::Lotus, SystemKind::IdealLock].iter().enumerate() {
+                let r = cluster.run(*system)?;
+                peak[i] = peak[i].max(r.mtps());
+                println!(
+                    "{}",
+                    row(&format!("{} conc={}", system.name(), coords * c.n_cns), &r)
+                );
+            }
+        }
+        println!(
+            "peak ratio lotus/ideal-lock = {:.2}x (paper: 1.3-1.9x)",
+            peak[0] / peak[1]
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Figure 21: isolation levels on TPC-C — SI (no read locks) vs SR.
+//! The paper measures LOTUS-SI at +9.3% max throughput over LOTUS-SR,
+//! with LOTUS ahead of Motor at both levels.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::{bench_config, header, row};
+use lotus::config::SystemKind;
+use lotus::sim::Cluster;
+use lotus::txn::api::Isolation;
+use lotus::workloads::WorkloadKind;
+
+fn main() -> lotus::Result<()> {
+    header("Figure 21", "TPC-C under SR vs SI");
+    let mut cfg = bench_config();
+    cfg.coordinators_per_cn = if bench_util::full_scale() { 6 } else { 4 };
+    let mut lotus_tput = [0.0f64; 2];
+    for (i, (iso, label)) in [
+        (Isolation::Serializable, "SR"),
+        (Isolation::SnapshotIsolation, "SI"),
+    ]
+    .iter()
+    .enumerate()
+    {
+        println!("\n-- {label} --");
+        let mut c = cfg.clone();
+        c.isolation = *iso;
+        let cluster = Cluster::build(&c, WorkloadKind::Tpcc)?;
+        for system in [SystemKind::Lotus, SystemKind::Motor] {
+            let r = cluster.run(system)?;
+            if system == SystemKind::Lotus {
+                lotus_tput[i] = r.mtps();
+            }
+            println!("{}", row(&format!("{} {label}", system.name()), &r));
+        }
+    }
+    println!(
+        "\nlotus SI/SR = {:+.1}% (paper: +9.3%)",
+        (lotus_tput[1] / lotus_tput[0] - 1.0) * 100.0
+    );
+    Ok(())
+}

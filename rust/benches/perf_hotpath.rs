@@ -1,0 +1,115 @@
+//! §Perf: wall-clock microbenchmarks of the L3 hot paths (not a paper
+//! figure — the performance-optimization deliverable). Reports real
+//! nanoseconds per operation for the structures on the critical path:
+//! the lock-table CAS, the LOTUS key hash, the VT cache, the RNIC queue,
+//! and the end-to-end transaction rate the simulator sustains (virtual
+//! transactions per wall second — the simulator's own efficiency).
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use std::time::Instant;
+
+use lotus::cache::vtcache::{CachedCvt, VtCache};
+use lotus::config::{Config, SystemKind};
+use lotus::dm::rnic::Rnic;
+use lotus::lock::table::{LockMode, LockTable};
+use lotus::sharding::key::LotusKey;
+use lotus::sim::Cluster;
+use lotus::store::cvt::CvtSnapshot;
+use lotus::workloads::WorkloadKind;
+
+fn time<F: FnMut()>(label: &str, iters: u64, mut f: F) {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let el = t0.elapsed();
+    println!(
+        "{label:<44} {:>9.1} ns/op   ({iters} iters, {:?})",
+        el.as_nanos() as f64 / iters as f64,
+        el
+    );
+}
+
+fn main() -> lotus::Result<()> {
+    println!("== §Perf hot-path microbenchmarks (wall-clock) ==\n");
+
+    // L3: lock-table acquire/release cycle (paper target: local lock on
+    // CN CPUs — the op LOTUS substitutes for a 400ns+RTT MN CAS).
+    let table = LockTable::with_capacity_bytes(32 << 20);
+    let keys: Vec<LotusKey> = (0..1024u64).map(|i| LotusKey::compose(i, i)).collect();
+    let mut i = 0usize;
+    time("lock table: write acquire+release", 2_000_000, || {
+        let k = keys[i & 1023];
+        i += 1;
+        let _ = table.acquire(k, LockMode::Write);
+        table.release(k, LockMode::Write);
+    });
+    i = 0;
+    time("lock table: read acquire+release", 2_000_000, || {
+        let k = keys[i & 1023];
+        i += 1;
+        let _ = table.acquire(k, LockMode::Read);
+        table.release(k, LockMode::Read);
+    });
+
+    // L1-pinned hash.
+    let mut acc = 0u64;
+    i = 0;
+    time("lotus key: fingerprint56 + bucket", 10_000_000, || {
+        let k = keys[i & 1023];
+        i += 1;
+        acc ^= k.fingerprint56() ^ k.lock_bucket(1 << 19) as u64;
+    });
+    std::hint::black_box(acc);
+
+    // VT cache hit path.
+    let cache = VtCache::new(64 * 1024);
+    for &k in &keys {
+        cache.put(
+            k,
+            CachedCvt {
+                cvt: CvtSnapshot::empty(2),
+                addr: 64,
+            },
+        );
+    }
+    i = 0;
+    time("vt cache: hit (get)", 2_000_000, || {
+        let k = keys[i & 1023];
+        i += 1;
+        std::hint::black_box(cache.get(k));
+    });
+
+    // RNIC queue charge (the per-verb accounting primitive).
+    let rnic = Rnic::new();
+    let mut t = 0u64;
+    time("rnic: charge", 5_000_000, || {
+        t += 50;
+        std::hint::black_box(rnic.charge(t, 29));
+    });
+
+    // End-to-end simulator efficiency: virtual txns per wall second.
+    let mut cfg = Config::small();
+    cfg.duration_ns = 10_000_000;
+    cfg.scale.kvs_keys = 20_000;
+    let cluster = Cluster::build(
+        &cfg,
+        WorkloadKind::Kvs {
+            rw_pct: 50,
+            skewed: true,
+        },
+    )?;
+    let t0 = Instant::now();
+    let report = cluster.run(SystemKind::Lotus)?;
+    let wall = t0.elapsed();
+    println!(
+        "\ne2e simulator: {} txns in {:?} wall = {:.0} txn/s wall ({:.3} Mtxn/s virtual)",
+        report.commits,
+        wall,
+        report.commits as f64 / wall.as_secs_f64(),
+        report.mtps()
+    );
+    Ok(())
+}

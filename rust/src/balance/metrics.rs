@@ -1,0 +1,173 @@
+//! Interval metrics for the two-level load balancer (paper 4.3).
+//!
+//! Each CN measures its transaction execution latency and per-shard
+//! request rates, "writing these metrics to a preallocated region in the
+//! memory pool every fixed interval (e.g., 100 ms)". The collector here
+//! is that region's in-memory face: lock-free per-(CN, shard) request
+//! counters plus a per-CN 3-interval latency ring matching the paper's
+//! 3-consecutive-interval overload rule.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::sharding::key::N_SHARDS;
+
+/// Number of latency intervals retained (the paper's 3 x 100 ms rule).
+pub const N_INTERVALS: usize = 3;
+
+struct CnLatency {
+    /// Sum of latencies this interval (ns).
+    sum: u64,
+    /// Samples this interval.
+    n: u64,
+    /// Ring of the last [`N_INTERVALS`] interval averages, oldest first.
+    ring: [f64; N_INTERVALS],
+    /// Completed intervals so far.
+    sealed: u64,
+}
+
+/// Cluster-wide balance metrics.
+pub struct BalanceMetrics {
+    n_cns: usize,
+    /// Request counts, `[cn * N_SHARDS + shard]`, drained per interval.
+    counts: Vec<AtomicU64>,
+    latency: Vec<Mutex<CnLatency>>,
+}
+
+impl BalanceMetrics {
+    /// Metrics for `n_cns` compute nodes.
+    pub fn new(n_cns: usize) -> Self {
+        Self {
+            n_cns,
+            counts: (0..n_cns * N_SHARDS).map(|_| AtomicU64::new(0)).collect(),
+            latency: (0..n_cns)
+                .map(|_| {
+                    Mutex::new(CnLatency {
+                        sum: 0,
+                        n: 0,
+                        ring: [0.0; N_INTERVALS],
+                        sealed: 0,
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    /// Number of CNs.
+    pub fn n_cns(&self) -> usize {
+        self.n_cns
+    }
+
+    /// Record one lock/transaction request against `(cn, shard)`.
+    #[inline]
+    pub fn record_request(&self, cn: usize, shard: u16) {
+        self.counts[cn * N_SHARDS + shard as usize].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a committed transaction's latency on `cn`.
+    pub fn record_latency(&self, cn: usize, latency_ns: u64) {
+        let mut l = self.latency[cn].lock().unwrap();
+        l.sum += latency_ns;
+        l.n += 1;
+    }
+
+    /// Seal the current interval on `cn`: pushes the interval average into
+    /// the ring (an idle interval repeats the previous average, so a CN
+    /// that stops receiving work does not look overloaded).
+    pub fn seal_interval(&self, cn: usize) {
+        let mut l = self.latency[cn].lock().unwrap();
+        let avg = if l.n > 0 {
+            l.sum as f64 / l.n as f64
+        } else {
+            l.ring[N_INTERVALS - 1]
+        };
+        l.ring.rotate_left(1);
+        l.ring[N_INTERVALS - 1] = avg;
+        l.sum = 0;
+        l.n = 0;
+        l.sealed += 1;
+    }
+
+    /// Completed intervals on `cn`.
+    pub fn sealed_intervals(&self, cn: usize) -> u64 {
+        self.latency[cn].lock().unwrap().sealed
+    }
+
+    /// Drain the request-count matrix into `out` (f32 `[n_cns * N_SHARDS]`,
+    /// row-major) resetting the counters; the planner's `counts` input.
+    pub fn drain_counts(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.n_cns * N_SHARDS);
+        for (o, c) in out.iter_mut().zip(self.counts.iter()) {
+            *o = c.swap(0, Ordering::Relaxed) as f32;
+        }
+    }
+
+    /// Copy the latency rings into `out` (f32 `[n_cns * N_INTERVALS]`,
+    /// oldest..latest per CN); the planner's `latency3` input.
+    pub fn latency_matrix(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.n_cns * N_INTERVALS);
+        for cn in 0..self.n_cns {
+            let l = self.latency[cn].lock().unwrap();
+            for i in 0..N_INTERVALS {
+                out[cn * N_INTERVALS + i] = l.ring[i] as f32;
+            }
+        }
+    }
+
+    /// Current interval-average latency of `cn` (latest sealed, ns).
+    pub fn latest_latency(&self, cn: usize) -> f64 {
+        self.latency[cn].lock().unwrap().ring[N_INTERVALS - 1]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_accumulate_and_drain() {
+        let m = BalanceMetrics::new(2);
+        m.record_request(0, 5);
+        m.record_request(0, 5);
+        m.record_request(1, 7);
+        let mut out = vec![0f32; 2 * N_SHARDS];
+        m.drain_counts(&mut out);
+        assert_eq!(out[5], 2.0);
+        assert_eq!(out[N_SHARDS + 7], 1.0);
+        // Drained: second read is zero.
+        m.drain_counts(&mut out);
+        assert_eq!(out[5], 0.0);
+    }
+
+    #[test]
+    fn latency_ring_rotates() {
+        let m = BalanceMetrics::new(1);
+        for (interval, lat) in [(1u64, 100u64), (2, 200), (3, 300), (4, 400)] {
+            m.record_latency(0, lat);
+            m.seal_interval(0);
+            assert_eq!(m.sealed_intervals(0), interval);
+        }
+        let mut out = vec![0f32; N_INTERVALS];
+        m.latency_matrix(&mut out);
+        assert_eq!(out, vec![200.0, 300.0, 400.0]);
+        assert_eq!(m.latest_latency(0), 400.0);
+    }
+
+    #[test]
+    fn idle_interval_repeats_last_average() {
+        let m = BalanceMetrics::new(1);
+        m.record_latency(0, 500);
+        m.seal_interval(0);
+        m.seal_interval(0); // no samples
+        assert_eq!(m.latest_latency(0), 500.0);
+    }
+
+    #[test]
+    fn interval_average_is_mean() {
+        let m = BalanceMetrics::new(1);
+        m.record_latency(0, 100);
+        m.record_latency(0, 300);
+        m.seal_interval(0);
+        assert_eq!(m.latest_latency(0), 200.0);
+    }
+}

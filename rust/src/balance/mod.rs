@@ -1,0 +1,24 @@
+//! Two-level load balancing (paper section 4.3).
+//!
+//! Level 1 is the hybrid transaction routing in [`crate::sharding::router`]
+//! (read-only: uniform random CN; read-write: first record's shard owner).
+//! Level 2 is **pass-by-range resharding**: every CN posts its latency and
+//! per-shard request counts to a pre-allocated memory-pool region each
+//! interval (100 ms); a CN whose latency stays >50% above the cluster
+//! average for three consecutive intervals transfers its hottest shard to
+//! the lowest-latency CN — only lock *ownership* moves, never the data.
+//!
+//! - [`metrics`] — interval collection of per-shard request counts + the
+//!   3-interval latency ring.
+//! - [`planner`] — the rebalance decision function. The production path
+//!   executes the AOT-compiled XLA artifact (`artifacts/rebalance.hlo.txt`,
+//!   the L2 JAX model whose EWMA scoring is the L1 Pallas kernel) through
+//!   [`crate::runtime`]; a bit-equivalent rust mirror backs tests and
+//!   artifact-less builds and is cross-checked against the artifact in the
+//!   integration suite.
+
+pub mod metrics;
+pub mod planner;
+
+pub use metrics::BalanceMetrics;
+pub use planner::{PlanOutput, Planner, RustPlanner, XlaPlanner};

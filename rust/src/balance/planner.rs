@@ -1,0 +1,326 @@
+//! The rebalance planner (paper 4.3: pass-by-range resharding decision).
+//!
+//! Decision function (the L2 JAX model in `python/compile/model.py`):
+//!
+//! 1. EWMA heat: `heat = alpha * counts + (1 - alpha) * prev_heat`
+//!    (the L1 Pallas kernel `kernels/heat.py`), plus per-CN load.
+//! 2. Overload: a CN whose latency exceeded 1.5x the cluster average in
+//!    **all three** retained intervals.
+//! 3. Migration candidate: each CN's hottest shard (arg-max heat).
+//! 4. Receiver: the CN with the lowest latest-interval latency.
+//!
+//! [`XlaPlanner`] executes the AOT artifact through PJRT (the production
+//! path — the rust binary never re-derives the model); [`RustPlanner`] is
+//! the bit-equivalent mirror used by tests and artifact-less library
+//! consumers, and the integration suite cross-checks the two.
+
+use crate::runtime::{InValue, LoadedExec, Manifest, XlaRuntime};
+use crate::{Error, Result};
+
+/// Overload threshold: >50% above cluster average (paper 4.3).
+pub const OVERLOAD_THRESHOLD: f32 = 1.5;
+/// Consecutive intervals required (paper: 3 x 100 ms).
+pub const N_INTERVALS: usize = 3;
+/// Default EWMA smoothing factor (matches `kernels/heat.py`).
+pub const DEFAULT_ALPHA: f32 = 0.25;
+
+/// One planning decision.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanOutput {
+    /// Per-CN aggregate heat (diagnostics).
+    pub load: Vec<f32>,
+    /// Per-CN overload flag.
+    pub overload: Vec<bool>,
+    /// Per-CN hottest shard.
+    pub hottest: Vec<u32>,
+    /// Migration receiver (lowest-latency CN).
+    pub target: usize,
+}
+
+impl PlanOutput {
+    /// The shard moves this plan implies: `(shard, from, to)` for every
+    /// overloaded CN other than the receiver itself.
+    pub fn moves(&self) -> Vec<(u16, usize, usize)> {
+        self.overload
+            .iter()
+            .enumerate()
+            .filter(|&(cn, &over)| over && cn != self.target)
+            .map(|(cn, _)| (self.hottest[cn] as u16, cn, self.target))
+            .collect()
+    }
+}
+
+/// A rebalance decision function over `[n_cns x n_shards]` matrices.
+pub trait Planner {
+    /// Plan one interval. `counts` is row-major `[n_cns * n_shards]`,
+    /// `latency3` is row-major `[n_cns * 3]` (oldest..latest).
+    fn plan(&mut self, counts: &[f32], latency3: &[f32]) -> Result<PlanOutput>;
+    /// Topology.
+    fn shape(&self) -> (usize, usize);
+}
+
+/// Pure-rust mirror of the L2 model (see module docs).
+pub struct RustPlanner {
+    n_cns: usize,
+    n_shards: usize,
+    alpha: f32,
+    heat: Vec<f32>,
+}
+
+impl RustPlanner {
+    /// Planner for a fixed topology.
+    pub fn new(n_cns: usize, n_shards: usize) -> Self {
+        Self {
+            n_cns,
+            n_shards,
+            alpha: DEFAULT_ALPHA,
+            heat: vec![0.0; n_cns * n_shards],
+        }
+    }
+
+    /// Override the EWMA factor.
+    pub fn with_alpha(mut self, alpha: f32) -> Self {
+        self.alpha = alpha;
+        self
+    }
+}
+
+impl Planner for RustPlanner {
+    fn plan(&mut self, counts: &[f32], latency3: &[f32]) -> Result<PlanOutput> {
+        let (c, s) = (self.n_cns, self.n_shards);
+        debug_assert_eq!(counts.len(), c * s);
+        debug_assert_eq!(latency3.len(), c * N_INTERVALS);
+        // 1. EWMA heat + load (mirror of kernels/heat.py).
+        let mut load = vec![0.0f32; c];
+        for cn in 0..c {
+            let row = &mut self.heat[cn * s..(cn + 1) * s];
+            let mut acc = 0.0f32;
+            for (h, &x) in row.iter_mut().zip(&counts[cn * s..(cn + 1) * s]) {
+                *h = self.alpha * x + (1.0 - self.alpha) * *h;
+                acc += *h;
+            }
+            load[cn] = acc;
+        }
+        // 2. Overload rule (per-interval cluster averages).
+        let mut avg = [0.0f32; N_INTERVALS];
+        for i in 0..N_INTERVALS {
+            avg[i] = (0..c).map(|cn| latency3[cn * N_INTERVALS + i]).sum::<f32>() / c as f32;
+        }
+        let overload: Vec<bool> = (0..c)
+            .map(|cn| {
+                (0..N_INTERVALS)
+                    .all(|i| latency3[cn * N_INTERVALS + i] > OVERLOAD_THRESHOLD * avg[i])
+            })
+            .collect();
+        // 3. Hottest shard per CN (first max, matching jnp.argmax).
+        let hottest: Vec<u32> = (0..c)
+            .map(|cn| {
+                let row = &self.heat[cn * s..(cn + 1) * s];
+                let mut best = 0usize;
+                for (i, &v) in row.iter().enumerate() {
+                    if v > row[best] {
+                        best = i;
+                    }
+                }
+                best as u32
+            })
+            .collect();
+        // 4. Receiver: lowest latest-interval latency (first min).
+        let mut target = 0usize;
+        for cn in 1..c {
+            if latency3[cn * N_INTERVALS + N_INTERVALS - 1]
+                < latency3[target * N_INTERVALS + N_INTERVALS - 1]
+            {
+                target = cn;
+            }
+        }
+        Ok(PlanOutput {
+            load,
+            overload,
+            hottest,
+            target,
+        })
+    }
+
+    fn shape(&self) -> (usize, usize) {
+        (self.n_cns, self.n_shards)
+    }
+}
+
+/// Production planner: executes `artifacts/rebalance.hlo.txt` via PJRT.
+pub struct XlaPlanner {
+    exe: LoadedExec,
+    n_cns: usize,
+    n_shards: usize,
+    alpha: [f32; 1],
+    heat: Vec<f32>,
+}
+
+impl XlaPlanner {
+    /// Load the artifact named by `dir/manifest.json` and validate its
+    /// compiled topology against `(n_cns, n_shards)`.
+    pub fn load(dir: &std::path::Path, n_cns: usize, n_shards: usize) -> Result<Self> {
+        let manifest = Manifest::load(dir.join("manifest.json"))?;
+        if manifest.n_cns != n_cns || manifest.n_shards != n_shards {
+            return Err(Error::Runtime(format!(
+                "artifact topology {}x{} != cluster {}x{}; re-run `make artifacts` \
+                 with --cns {} --shards {}",
+                manifest.n_cns, manifest.n_shards, n_cns, n_shards, n_cns, n_shards
+            )));
+        }
+        let rt = XlaRuntime::cpu()?;
+        let exe = rt.load_hlo_text(dir.join(&manifest.rebalance_file))?;
+        Ok(Self {
+            exe,
+            n_cns,
+            n_shards,
+            alpha: [DEFAULT_ALPHA],
+            heat: vec![0.0; n_cns * n_shards],
+        })
+    }
+}
+
+impl Planner for XlaPlanner {
+    fn plan(&mut self, counts: &[f32], latency3: &[f32]) -> Result<PlanOutput> {
+        let (c, s) = (self.n_cns as i64, self.n_shards as i64);
+        let out = self.exe.run(&[
+            InValue::F32(counts, &[c, s]),
+            InValue::F32(&self.heat, &[c, s]),
+            InValue::F32(latency3, &[c, N_INTERVALS as i64]),
+            InValue::F32(&self.alpha, &[1]),
+        ])?;
+        if out.len() != 5 {
+            return Err(Error::Runtime(format!(
+                "rebalance artifact returned {} outputs, expected 5",
+                out.len()
+            )));
+        }
+        // Carry the heat state forward (the artifact is pure).
+        self.heat.copy_from_slice(out[0].as_f32());
+        Ok(PlanOutput {
+            load: out[1].as_f32().to_vec(),
+            overload: out[2].as_i32().iter().map(|&v| v != 0).collect(),
+            hottest: out[3].as_i32().iter().map(|&v| v as u32).collect(),
+            target: out[4].as_i32()[0] as usize,
+        })
+    }
+
+    fn shape(&self) -> (usize, usize) {
+        (self.n_cns, self.n_shards)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lat(rows: &[[f32; 3]]) -> Vec<f32> {
+        rows.iter().flatten().copied().collect()
+    }
+
+    #[test]
+    fn no_overload_when_balanced() {
+        let mut p = RustPlanner::new(3, 8);
+        let counts = vec![1.0; 24];
+        let out = p
+            .plan(&counts, &lat(&[[100.0; 3], [100.0; 3], [100.0; 3]]))
+            .unwrap();
+        assert!(out.overload.iter().all(|&o| !o));
+        assert!(out.moves().is_empty());
+    }
+
+    #[test]
+    fn sustained_high_latency_triggers_move_to_coldest() {
+        let mut p = RustPlanner::new(3, 8);
+        let mut counts = vec![0.0; 24];
+        counts[5] = 100.0; // CN0's hottest shard is 5
+        let lat3 = lat(&[[900.0; 3], [100.0; 3], [50.0; 3]]);
+        let out = p.plan(&counts, &lat3).unwrap();
+        assert!(out.overload[0]);
+        assert!(!out.overload[1] && !out.overload[2]);
+        assert_eq!(out.target, 2, "receiver must be the lowest-latency CN");
+        assert_eq!(out.moves(), vec![(5u16, 0usize, 2usize)]);
+    }
+
+    #[test]
+    fn single_hot_interval_does_not_trigger() {
+        let mut p = RustPlanner::new(2, 4);
+        // High latency only in the latest interval: rule needs all 3.
+        let lat3 = lat(&[[100.0, 100.0, 900.0], [100.0; 3]]);
+        let out = p.plan(&vec![1.0; 8], &lat3).unwrap();
+        assert!(!out.overload[0]);
+    }
+
+    #[test]
+    fn ewma_state_accumulates_across_plans() {
+        let mut p = RustPlanner::new(1, 4).with_alpha(0.5);
+        let lat3 = lat(&[[1.0; 3]]);
+        p.plan(&[8.0, 0.0, 0.0, 0.0], &lat3).unwrap();
+        let out = p.plan(&[0.0, 0.0, 0.0, 0.0], &lat3).unwrap();
+        // heat[0] = 0.5*0 + 0.5*(0.5*8) = 2.0
+        assert!((out.load[0] - 2.0).abs() < 1e-6);
+        assert_eq!(out.hottest[0], 0);
+    }
+
+    #[test]
+    fn receiver_never_moves_to_itself() {
+        let p = RustPlanner::new(2, 4);
+        // Both overloaded relative to... impossible; make CN1 the target
+        // and CN1 overloaded — its move must be filtered out.
+        let out = PlanOutput {
+            load: vec![0.0, 0.0],
+            overload: vec![true, true],
+            hottest: vec![1, 2],
+            target: 1,
+        };
+        assert_eq!(out.moves(), vec![(1u16, 0usize, 1usize)]);
+        let _ = p; // silence
+    }
+
+    #[test]
+    fn prop_rust_planner_matches_naive_overload_rule() {
+        crate::testing::prop(30, |g| {
+            let c = g.usize(1, 6);
+            let s = g.usize(1, 32);
+            let mut p = RustPlanner::new(c, s);
+            let counts: Vec<f32> = (0..c * s).map(|_| g.u64(0, 100) as f32).collect();
+            let lat3: Vec<f32> = (0..c * 3).map(|_| g.u64(1, 1000) as f32).collect();
+            let out = p.plan(&counts, &lat3).unwrap();
+            for cn in 0..c {
+                let naive = (0..3).all(|i| {
+                    let avg: f32 = (0..c).map(|x| lat3[x * 3 + i]).sum::<f32>() / c as f32;
+                    lat3[cn * 3 + i] > 1.5 * avg
+                });
+                assert_eq!(out.overload[cn], naive, "cn={cn}");
+                assert!((out.hottest[cn] as usize) < s);
+            }
+            assert!(out.target < c);
+        });
+    }
+
+    #[test]
+    fn xla_planner_matches_rust_planner() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let manifest = Manifest::load(dir.join("manifest.json")).unwrap();
+        let (c, s) = (manifest.n_cns, manifest.n_shards);
+        let mut xp = XlaPlanner::load(&dir, c, s).unwrap();
+        let mut rp = RustPlanner::new(c, s);
+        let mut rng = crate::util::Xoshiro256::new(7);
+        for round in 0..3 {
+            let counts: Vec<f32> = (0..c * s).map(|_| rng.below(50) as f32).collect();
+            let lat3: Vec<f32> = (0..c * 3).map(|_| rng.below(900) as f32 + 100.0).collect();
+            let a = xp.plan(&counts, &lat3).unwrap();
+            let b = rp.plan(&counts, &lat3).unwrap();
+            assert_eq!(a.overload, b.overload, "round {round}");
+            assert_eq!(a.hottest, b.hottest, "round {round}");
+            assert_eq!(a.target, b.target, "round {round}");
+            for (x, y) in a.load.iter().zip(&b.load) {
+                assert!((x - y).abs() < 1e-2 * (1.0 + y.abs()), "round {round}: {x} vs {y}");
+            }
+        }
+    }
+}

@@ -1,0 +1,1015 @@
+//! The shared baseline protocol engine.
+//!
+//! Implements the Motor/FORD-style transaction flow in which locks are
+//! **one-sided RDMA CAS on the memory nodes** (vs LOTUS's CN-resident
+//! lock tables). The same [`crate::txn::api::TxnApi`] surface as the
+//! LOTUS coordinator, so every workload runs unmodified.
+//!
+//! Protocol (fig. 2's systems):
+//!
+//! 1. *Resolve*: find each record's CVT (address cache, else bucket READ).
+//! 2. *Lock + read*: doorbell-batched `CAS(lock) + READ(CVT)` per MN —
+//!    the paper's 1-RTT lock-and-read optimization. A failed CAS aborts
+//!    the transaction and releases every lock already acquired (the
+//!    wasted-work pattern §2.2 highlights).
+//! 3. *Read data*: MVCC select (Motor) or single-version (FORD); the
+//!    delta store charges an extra READ for non-latest versions.
+//! 4. *Commit*: validate the read set (re-read version words), draw the
+//!    commit timestamp, write records + CVT cells to primary and backups
+//!    (UPS-backed DRAM assumption: no log, no separate visible step),
+//!    release locks with async WRITEs.
+//!
+//! Style axes (see [`BaselineStyle`]) select Motor vs FORD vs the no-CAS
+//! and idealized-lock variants.
+
+use std::sync::Arc;
+
+use crate::dm::clock::VClock;
+use crate::dm::verbs::{Endpoint, VerbOp};
+use crate::dm::NetConfig;
+use crate::store::cvt::{CellSnapshot, CvtSnapshot, INVISIBLE};
+use crate::store::{gc, record};
+use crate::txn::api::{Isolation, RecordRef, TxnApi, TxnCtl};
+use crate::txn::coordinator::SharedCluster;
+use crate::txn::timestamp::phys_of;
+use crate::{abort, AbortReason, Result};
+
+/// Which baseline flavour the engine runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BaselineStyle {
+    /// MVCC over the CVT cells (Motor) vs single-versioning (FORD).
+    pub mvcc: bool,
+    /// Issue RDMA CAS locks (false = the unsafe fig. 3 mode).
+    pub use_cas: bool,
+    /// Motor's delta store: reading a non-latest version costs an extra
+    /// READ of the base record (reconstruction).
+    pub delta_store: bool,
+    /// FORD's bucket layout: values live beside versions in the hash
+    /// bucket, so bucket/CVT reads carry full values (bandwidth-bound)
+    /// and the data read piggybacks on the lock round.
+    pub value_in_bucket: bool,
+    /// Fig. 17 idealized lock: acquire/release are FAA-priced single ops
+    /// (no retry loops, no queues) — still MN RNIC atomics.
+    pub ideal_faa: bool,
+    /// Display name.
+    pub name: &'static str,
+}
+
+/// Per-record transaction state.
+#[derive(Debug, Clone)]
+struct Rec {
+    r: RecordRef,
+    write: bool,
+    insert: bool,
+    delete: bool,
+    value: Option<Vec<u8>>,
+    new_value: Option<Vec<u8>>,
+    cvt: Option<CvtSnapshot>,
+    bucket: u64,
+    slot: u8,
+    /// Version observed at execute (read-set validation).
+    seen_version: u64,
+}
+
+impl Rec {
+    fn new(r: RecordRef, write: bool) -> Self {
+        Self {
+            r,
+            write,
+            insert: false,
+            delete: false,
+            value: None,
+            new_value: None,
+            cvt: None,
+            bucket: 0,
+            slot: 0,
+            seen_version: 0,
+        }
+    }
+}
+
+/// An MN-side lock word we hold.
+#[derive(Debug, Clone, Copy)]
+struct HeldWord {
+    mn: usize,
+    addr: u64,
+}
+
+/// The baseline coordinator.
+pub struct BaselineCoordinator {
+    /// Shared cluster state.
+    pub cluster: Arc<SharedCluster>,
+    /// This coordinator's CN.
+    pub cn: usize,
+    /// Virtual clock.
+    pub clk: VClock,
+    /// The flavour.
+    pub style: BaselineStyle,
+    ep: Endpoint,
+    rng: crate::util::Xoshiro256,
+    txn_id: u64,
+    read_only: bool,
+    start_ts: u64,
+    records: Vec<Rec>,
+    executed_upto: usize,
+    held: Vec<HeldWord>,
+}
+
+impl BaselineCoordinator {
+    /// Coordinator on CN `cn` with a globally unique id (seeds the RNG).
+    pub fn new(cluster: Arc<SharedCluster>, cn: usize, global_id: usize, style: BaselineStyle) -> Self {
+        let ep = Endpoint::new(cn, cluster.cn_nics[cn].clone(), cluster.net.clone());
+        let seed = cluster.cfg.seed ^ (global_id as u64 + 1).wrapping_mul(0xD1B5_4A32_D192_ED03);
+        Self {
+            cluster,
+            cn,
+            clk: VClock::zero(),
+            style,
+            ep,
+            rng: crate::util::Xoshiro256::new(seed),
+            txn_id: 0,
+            read_only: false,
+            start_ts: 0,
+            records: Vec::new(),
+            executed_upto: 0,
+            held: Vec::new(),
+        }
+    }
+
+    #[inline]
+    fn net(&self) -> &NetConfig {
+        &self.cluster.net
+    }
+
+    /// MN-side lock word of a CVT slot.
+    fn slot_lock_addr(&self, table: u16, bucket: u64, slot: u8) -> (usize, u64) {
+        let t = self.cluster.table(table);
+        let base = self.cluster.baseline_lock_bases[table as usize];
+        (
+            t.primary().mn,
+            base + (bucket * t.spec.assoc as u64 + slot as u64) * 8,
+        )
+    }
+
+    /// MN-side lock word of an index bucket (inserts).
+    fn bucket_lock_addr(&self, table: u16, bucket: u64) -> (usize, u64) {
+        let t = self.cluster.table(table);
+        let base = self.cluster.baseline_lock_bases[table as usize];
+        (
+            t.primary().mn,
+            base + (t.layout.n_buckets * t.spec.assoc as u64 + bucket) * 8,
+        )
+    }
+
+    /// Release every held lock word (async WRITE 0 / FAA-priced for the
+    /// idealized model; free in the no-CAS mode).
+    fn release_locks(&mut self) {
+        let held = std::mem::take(&mut self.held);
+        if held.is_empty() {
+            return;
+        }
+        let mut by_mn: Vec<(usize, Vec<VerbOp>)> = Vec::new();
+        for h in held {
+            // Really clear the word so other coordinators can lock.
+            let _ = self.cluster.mns[h.mn].store_u64(h.addr, 0);
+            if !self.style.use_cas {
+                continue;
+            }
+            let op = if self.style.ideal_faa {
+                VerbOp::Faa {
+                    addr: h.addr,
+                    delta: 0,
+                    old: 0,
+                }
+            } else {
+                VerbOp::Write {
+                    addr: h.addr,
+                    data: 0u64.to_le_bytes().to_vec(),
+                }
+            };
+            match by_mn.iter_mut().find(|(mn, _)| *mn == h.mn) {
+                Some((_, v)) => v.push(op),
+                None => by_mn.push((h.mn, vec![op])),
+            }
+        }
+        for (mn_id, mut ops) in by_mn {
+            // Charge-only (the words were already cleared above; FAA of 0
+            // and rewriting 0 are idempotent).
+            let _ = self
+                .ep
+                .doorbell_async(&self.cluster.mns[mn_id], &mut ops, &mut self.clk);
+        }
+    }
+
+    fn fail(&mut self, reason: AbortReason) -> crate::Error {
+        self.release_locks();
+        abort(reason)
+    }
+
+    /// Resolve (bucket, slot, cvt) for records `[from..]`. Charges bucket
+    /// READs (FORD's carry full values).
+    fn resolve_phase(&mut self, from: usize) -> Result<()> {
+        let addr_cache = self.cluster.addr_caches[self.cn].clone();
+        for i in from..self.records.len() {
+            let (r, is_insert) = {
+                let rec = &self.records[i];
+                (rec.r, rec.insert)
+            };
+            let table = self.cluster.tables[r.table as usize].clone();
+            let bucket = table.bucket_of(r.key);
+            self.clk.advance(self.net().cache_op_ns);
+            let cached = if is_insert { None } else { addr_cache.get(r.key) };
+            if let Some(addr) = cached {
+                if let Ok((b, s)) = table.locate_cvt(addr) {
+                    let rec = &mut self.records[i];
+                    rec.bucket = b;
+                    rec.slot = s;
+                    continue; // CVT itself is read in the lock round.
+                }
+                addr_cache.invalidate(r.key);
+            }
+            // Bucket READs over the probe chain (one doorbell). FORD's
+            // buckets embed full values, inflating every byte read.
+            let extra = if self.style.value_in_bucket {
+                table.spec.assoc as usize * table.spec.record_len as usize
+            } else {
+                0
+            };
+            let buckets: Vec<u64> = table.probe_buckets(r.key).collect();
+            let mn = self.cluster.mns[table.primary().mn].clone();
+            let mut ops: Vec<VerbOp> = buckets
+                .iter()
+                .map(|&b| VerbOp::Read {
+                    addr: table.bucket_addr(0, b),
+                    out: vec![0u8; table.layout.bucket_size() as usize + extra],
+                })
+                .collect();
+            self.ep.doorbell(&mn, &mut ops, &mut self.clk)?;
+            let bufs: Vec<&[u8]> = ops
+                .iter()
+                .map(|op| {
+                    let VerbOp::Read { out, .. } = op else { unreachable!() };
+                    &out[..table.layout.bucket_size() as usize]
+                })
+                .collect();
+            if is_insert {
+                let mut placed = None;
+                for (&b, buf) in buckets.iter().zip(&bufs) {
+                    if table.find_in_bucket(buf, r.key).is_some() {
+                        return Err(self.fail(AbortReason::Duplicate));
+                    }
+                    if placed.is_none() {
+                        if let Some(slot) = table.find_empty_in_bucket(buf) {
+                            placed = Some((b, slot));
+                        }
+                    }
+                }
+                let Some((b, slot)) = placed else {
+                    self.release_locks();
+                    return Err(crate::Error::OutOfMemory(format!(
+                        "table {} probe chain of bucket {bucket} full",
+                        table.spec.name
+                    )));
+                };
+                let mut cvt = CvtSnapshot::empty(table.spec.ncells);
+                cvt.key = r.key.0;
+                cvt.occupied = true;
+                cvt.table_id = table.spec.id;
+                let rec = &mut self.records[i];
+                rec.bucket = b;
+                rec.slot = slot;
+                rec.cvt = Some(cvt);
+            } else {
+                let mut found = None;
+                for (&b, buf) in buckets.iter().zip(&bufs) {
+                    if let Some((slot, cvt)) = table.find_in_bucket(buf, r.key) {
+                        found = Some((b, slot, cvt));
+                        break;
+                    }
+                }
+                let Some((b, slot, cvt)) = found else {
+                    return Err(self.fail(AbortReason::NotFound));
+                };
+                addr_cache.put(r.key, table.cvt_addr(0, b, slot));
+                let rec = &mut self.records[i];
+                rec.bucket = b;
+                rec.slot = slot;
+                rec.cvt = Some(cvt);
+            }
+        }
+        Ok(())
+    }
+
+    /// Lock (CAS) + CVT READ in one doorbell per MN for `[from..]`.
+    fn lock_read_phase(&mut self, from: usize) -> Result<()> {
+        // Plan ops: per record, optional CAS word(s) + a CVT read (when
+        // not already fetched by a bucket read this round).
+        struct Planned {
+            rec_idx: usize,
+            mn: usize,
+            cas_addrs: Vec<u64>,
+            read_cvt: Option<u64>, // cvt addr
+        }
+        let mut plans: Vec<Planned> = Vec::new();
+        for i in from..self.records.len() {
+            let rec = &self.records[i];
+            let table = self.cluster.table(rec.r.table);
+            let mut cas_addrs = Vec::new();
+            if rec.write && !self.read_only && self.style.use_cas {
+                cas_addrs.push(self.slot_lock_addr(rec.r.table, rec.bucket, rec.slot).1);
+                if rec.insert || rec.delete {
+                    let chain: Vec<u64> = table
+                        .probe_buckets(rec.r.key)
+                        .map(|b| self.bucket_lock_addr(rec.r.table, b).1)
+                        .collect();
+                    cas_addrs.extend(chain);
+                }
+            }
+            let read_cvt = if rec.cvt.is_some() && !rec.write {
+                None // fresh from this round's bucket read
+            } else if rec.insert {
+                None
+            } else {
+                Some(table.cvt_addr(0, rec.bucket, rec.slot))
+            };
+            plans.push(Planned {
+                rec_idx: i,
+                mn: table.primary().mn,
+                cas_addrs,
+                read_cvt,
+            });
+        }
+        // Issue per-MN doorbells: CAS ops then READs.
+        let mut by_mn: Vec<usize> = Vec::new();
+        for p in &plans {
+            if !by_mn.contains(&p.mn) {
+                by_mn.push(p.mn);
+            }
+        }
+        for mn_id in by_mn {
+            let mut ops: Vec<VerbOp> = Vec::new();
+            let mut op_map: Vec<(usize, bool)> = Vec::new(); // (plan idx, is_cas)
+            for (pi, p) in plans.iter().enumerate() {
+                if p.mn != mn_id {
+                    continue;
+                }
+                for &a in &p.cas_addrs {
+                    ops.push(if self.style.ideal_faa {
+                        // FAA-priced single-shot acquisition; the real
+                        // mutual exclusion runs below.
+                        VerbOp::Faa {
+                            addr: a,
+                            delta: 0,
+                            old: 0,
+                        }
+                    } else {
+                        VerbOp::Cas {
+                            addr: a,
+                            expect: 0,
+                            swap: self.txn_id,
+                            old: 0,
+                        }
+                    });
+                    op_map.push((pi, true));
+                }
+                if let Some(addr) = p.read_cvt {
+                    let table = self.cluster.table(self.records[p.rec_idx].r.table);
+                    let extra = if self.style.value_in_bucket {
+                        table.spec.record_len as usize
+                    } else {
+                        0
+                    };
+                    ops.push(VerbOp::Read {
+                        addr,
+                        out: vec![0u8; table.layout.cvt_size() as usize + extra],
+                    });
+                    op_map.push((pi, false));
+                }
+            }
+            if ops.is_empty() {
+                continue;
+            }
+            // For the idealized model the FAA op above is cost-only; take
+            // the real lock word by CAS through the MN directly.
+            if self.style.ideal_faa {
+                for (op, &(pi, is_cas)) in ops.iter().zip(&op_map) {
+                    if !is_cas {
+                        continue;
+                    }
+                    if let VerbOp::Faa { addr, .. } = op {
+                        let got = self.cluster.mns[mn_id].cas_u64(*addr, 0, self.txn_id)?;
+                        if got != 0 {
+                            // Conflict: charge the round, then abort.
+                            let mn = self.cluster.mns[mn_id].clone();
+                            let mut cost_only = vec![VerbOp::Faa {
+                                addr: *addr,
+                                delta: 0,
+                                old: 0,
+                            }];
+                            self.ep.doorbell(&mn, &mut cost_only, &mut self.clk)?;
+                            let _ = pi;
+                            return Err(self.fail(AbortReason::LockConflict));
+                        }
+                        self.held.push(HeldWord {
+                            mn: mn_id,
+                            addr: *addr,
+                        });
+                    }
+                }
+            }
+            let mn = self.cluster.mns[mn_id].clone();
+            self.ep.doorbell(&mn, &mut ops, &mut self.clk)?;
+            // Harvest results.
+            for (op, &(pi, is_cas)) in ops.iter().zip(&op_map) {
+                match op {
+                    VerbOp::Cas { addr, old, .. } if is_cas => {
+                        if *old != 0 {
+                            return Err(self.fail(AbortReason::LockConflict));
+                        }
+                        self.held.push(HeldWord {
+                            mn: mn_id,
+                            addr: *addr,
+                        });
+                    }
+                    VerbOp::Read { out, .. } => {
+                        let i = plans[pi].rec_idx;
+                        let table = self.cluster.tables[self.records[i].r.table as usize].clone();
+                        let cvt =
+                            CvtSnapshot::parse(&out[..table.layout.cvt_size() as usize], &table.layout);
+                        if cvt.is_empty() || cvt.key != self.records[i].r.key.0 {
+                            // Stale cached address.
+                            self.cluster.addr_caches[self.cn].invalidate(self.records[i].r.key);
+                            return Err(self.fail(AbortReason::NotFound));
+                        }
+                        self.records[i].cvt = Some(cvt);
+                    }
+                    _ => {}
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Version select + record reads for `[from..]`.
+    fn read_data_phase(&mut self, from: usize) -> Result<()> {
+        let mut reads: Vec<(usize, usize, u64, usize, u32, u8, bool)> = Vec::new();
+        for i in from..self.records.len() {
+            let (sel, table_id) = {
+                let rec = &self.records[i];
+                if rec.insert {
+                    continue;
+                }
+                let cvt = rec.cvt.as_ref().expect("resolved");
+                let sel = if self.style.mvcc {
+                    let (best, newer) = cvt.select_version(self.start_ts);
+                    if !self.read_only
+                        && newer
+                        && self.cluster.cfg.isolation == Isolation::Serializable
+                    {
+                        None // forces VersionTooNew below
+                    } else {
+                        best.copied().map(|c| (c, newer))
+                    }
+                } else {
+                    // FORD single-versioning: cell 0 only; an in-flight
+                    // write (INVISIBLE) blocks readers.
+                    match cvt.cells.first() {
+                        Some(c) if c.valid && c.version != INVISIBLE => Some((*c, false)),
+                        _ => None,
+                    }
+                };
+                (sel, rec.r.table)
+            };
+            let Some((cell, _newer)) = sel else {
+                let reason = if self.style.mvcc {
+                    AbortReason::VersionTooNew
+                } else {
+                    AbortReason::NoVisibleVersion
+                };
+                return Err(self.fail(reason));
+            };
+            let table = self.cluster.table(table_id);
+            // Motor delta store: non-latest versions need the base too.
+            let is_latest = self.records[i]
+                .cvt
+                .as_ref()
+                .and_then(|c| c.latest())
+                .map(|l| l.addr == cell.addr)
+                .unwrap_or(true);
+            let extra_read = self.style.delta_store && !is_latest;
+            {
+                let rec = &mut self.records[i];
+                rec.seen_version = cell.version;
+            }
+            reads.push((
+                i,
+                table.primary().mn,
+                cell.addr,
+                cell.len as usize,
+                table.spec.record_len,
+                cell.cv,
+                extra_read,
+            ));
+        }
+        // FORD already carried values with the CVT reads — the data READ
+        // is free (charge-wise); still execute it for real bytes.
+        let mut by_mn: Vec<(usize, Vec<usize>)> = Vec::new();
+        for (ri, rd) in reads.iter().enumerate() {
+            match by_mn.iter_mut().find(|(mn, _)| *mn == rd.1) {
+                Some((_, v)) => v.push(ri),
+                None => by_mn.push((rd.1, vec![ri])),
+            }
+        }
+        for (mn_id, idxs) in by_mn {
+            let mn = self.cluster.mns[mn_id].clone();
+            if !self.style.value_in_bucket {
+                let mut ops: Vec<VerbOp> = Vec::new();
+                for &ri in &idxs {
+                    let (_, _, addr, _, record_len, _, extra) = reads[ri];
+                    ops.push(VerbOp::Read {
+                        addr,
+                        out: vec![0u8; record::slot_size(record_len)],
+                    });
+                    if extra {
+                        // Delta reconstruction: base record read.
+                        ops.push(VerbOp::Read {
+                            addr,
+                            out: vec![0u8; record::slot_size(record_len)],
+                        });
+                    }
+                }
+                self.ep.doorbell(&mn, &mut ops, &mut self.clk)?;
+            }
+            for &ri in &idxs {
+                let (i, _, addr, payload_len, record_len, want_cv, _) = reads[ri];
+                let mut buf = vec![0u8; record::slot_size(record_len)];
+                mn.read_bytes(addr, &mut buf)?;
+                match record::decode(&buf, payload_len, record_len) {
+                    Some((cv, payload)) if cv == want_cv => {
+                        self.records[i].value = Some(payload);
+                    }
+                    _ => return Err(self.fail(AbortReason::InconsistentRead)),
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// OCC read-set validation: re-read each read-only record's CVT and
+    /// abort if any version newer than T_start appeared (the validation
+    /// LOTUS's read locks make unnecessary). FORD runs this even for
+    /// read-only transactions (single-versioning, paper §8.3).
+    fn validate_read_set(&mut self) -> Result<()> {
+        {
+            let mut checks: Vec<(usize, usize, u64)> = Vec::new(); // (i, mn, cvt addr)
+            for i in 0..self.records.len() {
+                let rec = &self.records[i];
+                if rec.write || rec.insert || rec.cvt.is_none() {
+                    continue;
+                }
+                let table = self.cluster.table(rec.r.table);
+                checks.push((
+                    i,
+                    table.primary().mn,
+                    table.cvt_addr(0, rec.bucket, rec.slot),
+                ));
+            }
+            let mut by_mn: Vec<(usize, Vec<usize>)> = Vec::new();
+            for (ci, c) in checks.iter().enumerate() {
+                match by_mn.iter_mut().find(|(mn, _)| *mn == c.1) {
+                    Some((_, v)) => v.push(ci),
+                    None => by_mn.push((c.1, vec![ci])),
+                }
+            }
+            for (mn_id, idxs) in by_mn {
+                let mn = self.cluster.mns[mn_id].clone();
+                let mut ops: Vec<VerbOp> = idxs
+                    .iter()
+                    .map(|&ci| {
+                        let table = self.cluster.table(self.records[checks[ci].0].r.table);
+                        VerbOp::Read {
+                            addr: checks[ci].2,
+                            out: vec![0u8; table.layout.cvt_size() as usize],
+                        }
+                    })
+                    .collect();
+                self.ep.doorbell(&mn, &mut ops, &mut self.clk)?;
+                for (&ci, op) in idxs.iter().zip(&ops) {
+                    if let VerbOp::Read { out, .. } = op {
+                        let i = checks[ci].0;
+                        let table =
+                            self.cluster.tables[self.records[i].r.table as usize].clone();
+                        let cvt = CvtSnapshot::parse(out, &table.layout);
+                        let (best, newer) = cvt.select_version(self.start_ts);
+                        let changed = best
+                            .map(|c| c.version != self.records[i].seen_version)
+                            .unwrap_or(true);
+                        if newer || changed {
+                            return Err(self.fail(AbortReason::VersionTooNew));
+                        }
+                    }
+                }
+            }
+        }
+
+        Ok(())
+    }
+
+    /// Commit a read-write transaction.
+    fn commit_rw(&mut self) -> Result<()> {
+        if self.cluster.doomed.take(self.txn_id) {
+            return Err(self.fail(AbortReason::OwnerFailed));
+        }
+        if self.cluster.cfg.isolation == Isolation::Serializable {
+            self.validate_read_set()?;
+        }
+        // --- Commit timestamp (UPS assumption: drawn before the write,
+        //     data becomes visible in the data write itself). ---
+        let ts_svc = self.net().ts_oracle_ns;
+        let commit_ts = self
+            .cluster
+            .oracle
+            .timestamp(&mut self.clk, ts_svc);
+        let now_phys = phys_of(self.clk.now());
+        let gc_thresh = self.cluster.cfg.gc_threshold_ns;
+
+        // --- Write data + CVT cells to every replica. ---
+        let mut writes: Vec<(usize, u64, Vec<u8>)> = Vec::new();
+        for i in 0..self.records.len() {
+            let rec = self.records[i].clone();
+            if !rec.write {
+                continue;
+            }
+            let table = self.cluster.tables[rec.r.table as usize].clone();
+            let mut cvt = rec.cvt.clone().expect("resolved");
+            if rec.delete {
+                let cleared = CvtSnapshot::empty(table.spec.ncells);
+                for (r, rep) in table.replicas.iter().enumerate() {
+                    writes.push((
+                        rep.mn,
+                        table.cvt_addr(r, rec.bucket, rec.slot),
+                        cleared.serialize(&table.layout),
+                    ));
+                }
+                continue;
+            }
+            let Some(new_value) = rec.new_value.clone() else {
+                continue;
+            };
+            let cell_idx = if self.style.mvcc {
+                match gc::choose_victim(&cvt.cells, now_phys, gc_thresh) {
+                    Some(c) => c as u8,
+                    None => return Err(self.fail(AbortReason::LockConflict)),
+                }
+            } else {
+                // FORD: single version updated in place — an undo log of
+                // the old value must be persisted first (full record).
+                let (log_mn, log_addr) = self.cluster.log_slots
+                    [self.cn * self.cluster.cfg.coordinators_per_cn % self.cluster.log_slots.len()];
+                let old_len = rec.value.as_ref().map(|v| v.len()).unwrap_or(8).max(8);
+                writes.push((log_mn, log_addr, vec![0u8; old_len.min(64)]));
+                0
+            };
+            let old_cv = cvt.cells[cell_idx as usize].cv;
+            let new_cv = old_cv.wrapping_add(1);
+            let rec_addr = table.record_addr(0, rec.bucket, rec.slot, cell_idx);
+            cvt.cells[cell_idx as usize] = CellSnapshot {
+                cv: new_cv,
+                valid: true,
+                len: new_value.len() as u16,
+                version: commit_ts,
+                addr: rec_addr,
+                consistent: true,
+            };
+            cvt.record_len = new_value.len() as u16;
+            if rec.insert {
+                cvt.key = rec.r.key.0;
+                cvt.occupied = true;
+                cvt.table_id = table.spec.id;
+            }
+            let slot_img = record::encode(new_cv, &new_value, table.spec.record_len);
+            let cvt_img = cvt.serialize(&table.layout);
+            for (r, rep) in table.replicas.iter().enumerate() {
+                writes.push((
+                    rep.mn,
+                    table.record_addr(r, rec.bucket, rec.slot, cell_idx),
+                    slot_img.clone(),
+                ));
+                writes.push((rep.mn, table.cvt_addr(r, rec.bucket, rec.slot), cvt_img.clone()));
+            }
+        }
+        let mut by_mn: Vec<(usize, Vec<VerbOp>)> = Vec::new();
+        for (mn, addr, data) in writes {
+            let op = VerbOp::Write { addr, data };
+            match by_mn.iter_mut().find(|(m, _)| *m == mn) {
+                Some((_, v)) => v.push(op),
+                None => by_mn.push((mn, vec![op])),
+            }
+        }
+        for (mn_id, mut ops) in by_mn {
+            let mn = self.cluster.mns[mn_id].clone();
+            self.ep.doorbell(&mn, &mut ops, &mut self.clk)?;
+        }
+
+        // --- Unlock. ---
+        self.release_locks();
+        Ok(())
+    }
+}
+
+impl TxnCtl for BaselineCoordinator {
+    fn add_ro(&mut self, r: RecordRef) {
+        self.records.push(Rec::new(r, false));
+    }
+
+    fn add_rw(&mut self, r: RecordRef) {
+        self.records.push(Rec::new(r, true));
+    }
+
+    fn add_insert(&mut self, r: RecordRef, payload: Vec<u8>) {
+        let mut rec = Rec::new(r, true);
+        rec.insert = true;
+        rec.new_value = Some(payload);
+        self.records.push(rec);
+    }
+
+    fn add_delete(&mut self, r: RecordRef) {
+        let mut rec = Rec::new(r, true);
+        rec.delete = true;
+        self.records.push(rec);
+    }
+
+    fn execute(&mut self) -> Result<()> {
+        let from = self.executed_upto;
+        self.resolve_phase(from)?;
+        // Read-only transactions take no locks, but still fetch CVTs for
+        // address-cached records in this round (the CAS ops are gated on
+        // write intent inside).
+        self.lock_read_phase(from)?;
+        self.read_data_phase(from)?;
+        self.executed_upto = self.records.len();
+        Ok(())
+    }
+
+    fn value(&self, r: RecordRef) -> Option<&[u8]> {
+        self.records
+            .iter()
+            .find(|rec| rec.r == r)
+            .and_then(|rec| rec.value.as_deref())
+    }
+
+    fn stage_write(&mut self, r: RecordRef, payload: Vec<u8>) {
+        let rec = self
+            .records
+            .iter_mut()
+            .find(|rec| rec.r == r)
+            .expect("stage_write on unknown record");
+        rec.new_value = Some(payload);
+    }
+
+    fn commit(&mut self) -> Result<()> {
+        self.clk.advance(self.net().txn_logic_ns);
+        if self.read_only {
+            // FORD's single-versioning: "even read-only transactions
+            // require validation before commit" (paper §8.3).
+            if !self.style.mvcc
+                && self.cluster.cfg.isolation == Isolation::Serializable
+            {
+                self.validate_read_set()?;
+            }
+        } else {
+            self.commit_rw()?;
+        }
+        Ok(())
+    }
+
+    fn rollback(&mut self) {
+        self.release_locks();
+    }
+}
+
+impl TxnApi for BaselineCoordinator {
+    fn begin(&mut self, read_only: bool) {
+        self.records.clear();
+        self.held.clear();
+        self.executed_upto = 0;
+        self.read_only = read_only;
+        self.txn_id = self.cluster.next_txn_id();
+        let ts_svc = self.net().ts_oracle_ns;
+        self.start_ts = self
+            .cluster
+            .oracle
+            .timestamp(&mut self.clk, ts_svc);
+    }
+
+    fn txn(&mut self) -> &mut dyn TxnCtl {
+        self
+    }
+
+    fn now(&self) -> u64 {
+        self.clk.now()
+    }
+
+    fn rng(&mut self) -> &mut crate::util::Xoshiro256 {
+        &mut self.rng
+    }
+
+    fn cn(&self) -> usize {
+        self.cn
+    }
+
+    fn attach_gate(&mut self, gate: Arc<crate::dm::clock::TimeGate>, gid: usize) {
+        self.ep.attach_gate(gate, gid);
+    }
+
+    fn crash(&mut self) {
+        self.records.clear();
+        self.held.clear();
+        self.executed_upto = 0;
+    }
+
+    fn skip_to(&mut self, t_ns: u64) {
+        self.clk.catch_up(t_ns);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{ford, motor, nolock};
+    use crate::sharding::key::LotusKey;
+    use crate::config::Config;
+    use crate::sim::Cluster;
+    use crate::store::index::TableSpec;
+
+    fn mini(style: BaselineStyle) -> (Arc<SharedCluster>, Vec<BaselineCoordinator>) {
+        let mut cfg = Config::small();
+        cfg.n_cns = 2;
+        let specs = vec![TableSpec {
+            id: 0,
+            name: "t".into(),
+            record_len: 40,
+            ncells: 2,
+            assoc: 4,
+            expected_records: 2048,
+        }];
+        let cluster = Cluster::build_shared(&cfg, specs).unwrap();
+        for uid in 0..64u64 {
+            cluster.tables[0]
+                .load_insert(
+                    &cluster.mns,
+                    LotusKey::compose(uid, uid),
+                    format!("base-{uid}").as_bytes(),
+                    1,
+                )
+                .unwrap();
+        }
+        let coords = (0..4)
+            .map(|g| BaselineCoordinator::new(cluster.clone(), g / 2, g, style))
+            .collect();
+        (cluster, coords)
+    }
+
+    fn rr(uid: u64) -> RecordRef {
+        RecordRef::new(0, LotusKey::compose(uid, uid))
+    }
+
+    fn smoke(style: BaselineStyle) {
+        let (_c, mut coords) = mini(style);
+        // Update.
+        {
+            let co = &mut coords[0];
+            co.begin(false);
+            co.txn().add_rw(rr(3));
+            co.txn().execute().unwrap();
+            assert_eq!(co.txn().value(rr(3)).unwrap(), b"base-3");
+            co.txn().stage_write(rr(3), b"updated".to_vec());
+            co.txn().commit().unwrap();
+        }
+        // Read back from another CN.
+        let co = &mut coords[2];
+        co.begin(true);
+        co.txn().add_ro(rr(3));
+        co.txn().execute().unwrap();
+        assert_eq!(co.txn().value(rr(3)).unwrap(), b"updated");
+        co.txn().commit().unwrap();
+    }
+
+    #[test]
+    fn motor_update_roundtrip() {
+        smoke(motor::style());
+    }
+
+    #[test]
+    fn ford_update_roundtrip() {
+        smoke(ford::style());
+    }
+
+    #[test]
+    fn nocas_update_roundtrip() {
+        smoke(nolock::motor_nocas_style());
+    }
+
+    #[test]
+    fn ideal_lock_update_roundtrip() {
+        smoke(crate::baselines::ideal_rdma_lock::style());
+    }
+
+    #[test]
+    fn write_write_conflict_detected_via_mn_cas() {
+        let (_c, mut coords) = mini(motor::style());
+        let (a, rest) = coords.split_at_mut(2);
+        let a = &mut a[0];
+        let b = &mut rest[0];
+        a.begin(false);
+        a.txn().add_rw(rr(5));
+        a.txn().execute().unwrap();
+        b.begin(false);
+        b.txn().add_rw(rr(5));
+        let err = b.txn().execute().unwrap_err();
+        assert_eq!(err.abort_reason(), Some(AbortReason::LockConflict));
+        a.txn().rollback();
+        // After release, b can lock.
+        b.begin(false);
+        b.txn().add_rw(rr(5));
+        b.txn().execute().unwrap();
+        b.txn().rollback();
+    }
+
+    #[test]
+    fn nocas_ignores_conflicts_unsafely() {
+        let (_c, mut coords) = mini(nolock::motor_nocas_style());
+        let (a, rest) = coords.split_at_mut(2);
+        let a = &mut a[0];
+        let b = &mut rest[0];
+        a.begin(false);
+        a.txn().add_rw(rr(6));
+        a.txn().execute().unwrap();
+        b.begin(false);
+        b.txn().add_rw(rr(6));
+        b.txn().execute().unwrap(); // no lock, no conflict — unsafe mode
+        a.txn().rollback();
+        b.txn().rollback();
+    }
+
+    #[test]
+    fn ford_read_blocked_by_inflight_write_version() {
+        // Single-versioning: an INVISIBLE cell 0 blocks readers.
+        let (c, mut coords) = mini(ford::style());
+        let table = c.table(0);
+        let key = LotusKey::compose(8, 8);
+        let b = table.bucket_of(key);
+        let mut buf = vec![0u8; table.layout.bucket_size() as usize];
+        c.mns[table.primary().mn]
+            .read_bytes(table.bucket_addr(0, b), &mut buf)
+            .unwrap();
+        let (slot, mut cvt) = table.find_in_bucket(&buf, key).unwrap();
+        cvt.cells[0].version = INVISIBLE;
+        c.mns[table.primary().mn]
+            .write_bytes(table.cvt_addr(0, b, slot), &cvt.serialize(&table.layout))
+            .unwrap();
+        let co = &mut coords[0];
+        co.begin(true);
+        co.txn().add_ro(rr(8));
+        let err = co.txn().execute().unwrap_err();
+        assert_eq!(err.abort_reason(), Some(AbortReason::NoVisibleVersion));
+    }
+
+    #[test]
+    fn read_validation_catches_concurrent_update() {
+        let (_c, mut coords) = mini(motor::style());
+        let (a, rest) = coords.split_at_mut(2);
+        let a = &mut a[0];
+        let b = &mut rest[0];
+        // a reads key 9 (read set), b updates it, a commits a write on 10.
+        a.begin(false);
+        a.txn().add_ro(rr(9));
+        a.txn().add_rw(rr(10));
+        a.txn().execute().unwrap();
+        b.begin(false);
+        b.txn().add_rw(rr(9));
+        b.txn().execute().unwrap();
+        b.txn().stage_write(rr(9), b"changed".to_vec());
+        b.txn().commit().unwrap();
+        a.txn().stage_write(rr(10), b"mine".to_vec());
+        let err = a.txn().commit().unwrap_err();
+        assert_eq!(err.abort_reason(), Some(AbortReason::VersionTooNew));
+    }
+
+    #[test]
+    fn cas_lock_costs_more_than_lotus_local_lock() {
+        // The core premise: an MN CAS round trip dwarfs a CN-local CAS.
+        let (_c, mut coords) = mini(motor::style());
+        let co = &mut coords[0];
+        let t0 = co.clk.now();
+        co.begin(false);
+        co.txn().add_rw(rr(11));
+        co.txn().execute().unwrap();
+        co.txn().rollback();
+        let elapsed = co.clk.now() - t0;
+        assert!(
+            elapsed > co.cluster.net.rtt_ns,
+            "MN lock must cost at least an RTT: {elapsed}"
+        );
+    }
+}

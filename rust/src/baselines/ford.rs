@@ -1,0 +1,29 @@
+//! FORD-like baseline (paper [98]): single-versioned transactions on DM.
+//!
+//! One version per record (readers abort while a write is in flight),
+//! values stored beside the versions in the hash bucket (bucket and CVT
+//! reads carry full values — the bandwidth-bound behaviour fig. 3 calls
+//! out), CAS+READ doorbell locking, read-set validation before commit.
+
+use crate::baselines::common::BaselineStyle;
+
+/// FORD's style parameters.
+pub fn style() -> BaselineStyle {
+    BaselineStyle {
+        mvcc: false,
+        use_cas: true,
+        delta_store: false,
+        value_in_bucket: true,
+        ideal_faa: false,
+        name: "ford",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn style_is_single_version_value_in_bucket() {
+        let s = super::style();
+        assert!(!s.mvcc && s.use_cas && s.value_in_bucket);
+    }
+}

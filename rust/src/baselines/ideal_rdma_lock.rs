@@ -1,0 +1,32 @@
+//! The idealized RDMA lock model (paper fig. 17, modelled after
+//! DecLock [96]).
+//!
+//! Each acquisition/release is a single FAA-priced MN round trip — no
+//! retry loops, no queues, no notification traffic — "a strict upper
+//! bound" on CN-cooperative RDMA locking. LOTUS still wins 1.3–1.9x
+//! because these designs keep the lock's *global state* in the memory
+//! pool: every transition crosses the MN RNIC's atomics pipeline, while
+//! LOTUS's locks never leave the compute pool.
+
+use crate::baselines::common::BaselineStyle;
+
+/// Idealized-lock style: LOTUS-equivalent MVCC data path, FAA locking.
+pub fn style() -> BaselineStyle {
+    BaselineStyle {
+        mvcc: true,
+        use_cas: true,
+        delta_store: false,
+        value_in_bucket: false,
+        ideal_faa: true,
+        name: "ideal-lock",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn style_uses_faa() {
+        let s = super::style();
+        assert!(s.ideal_faa && s.mvcc && !s.delta_store);
+    }
+}

@@ -1,0 +1,30 @@
+//! Baseline transaction systems (paper §8: Motor, FORD, their unsafe
+//! no-CAS variants, and the idealized RDMA lock).
+//!
+//! All baselines co-locate locks with data in the memory pool: locking is
+//! a one-sided **RDMA CAS to the MN RNIC** — the 2.5 Mops bottleneck the
+//! paper identifies — while LOTUS handles locks on CN CPUs. The baselines
+//! share one protocol engine ([`common::BaselineCoordinator`])
+//! parameterized by a [`common::BaselineStyle`]:
+//!
+//! - [`motor`] — Motor-like: MVCC over CVTs, doorbell-batched CAS+READ,
+//!   delta-store layout (full record + deltas: old-version reads pay an
+//!   extra READ), UPS-backed DRAM assumption (no log / visible steps).
+//! - [`ford`] — FORD-like: single-versioning (in-flight writes block
+//!   readers), read validation before commit, value stored with the
+//!   version in the hash bucket (bucket reads carry full values, making
+//!   FORD bandwidth-bound early — fig. 3's observation).
+//! - [`nolock`] — fig. 3: Motor/FORD with CAS abandoned (unsafe), showing
+//!   the headroom the MN-RNIC atomics bottleneck hides.
+//! - [`ideal_rdma_lock`] — fig. 17: locks stay logically global but an
+//!   RDMA FAA reaches the MN only when key ownership *transfers* between
+//!   CNs — a strict upper bound on CN-cooperative RDMA locking
+//!   (DSLR/ShiftLock/DecLock-style).
+
+pub mod common;
+pub mod ford;
+pub mod ideal_rdma_lock;
+pub mod motor;
+pub mod nolock;
+
+pub use common::{BaselineCoordinator, BaselineStyle};

@@ -1,0 +1,40 @@
+//! Motor-like baseline (paper [97]): MVCC on DM with MN-side CAS locks.
+//!
+//! Multi-versioned CVTs, doorbell-batched CAS+READ locking, delta-store
+//! record layout (one full record plus deltas — non-latest reads pay a
+//! reconstruction READ), and the UPS-backed-DRAM durability assumption
+//! (no commit log, no separate write-visible step).
+
+use crate::baselines::common::BaselineStyle;
+
+/// Motor's style parameters.
+pub fn style() -> BaselineStyle {
+    BaselineStyle {
+        mvcc: true,
+        use_cas: true,
+        delta_store: true,
+        value_in_bucket: false,
+        ideal_faa: false,
+        name: "motor",
+    }
+}
+
+/// Motor with the "+Full Record Store" ablation applied (fig. 14): every
+/// version an independent full record, no delta reconstruction reads.
+pub fn full_record_style() -> BaselineStyle {
+    BaselineStyle {
+        delta_store: false,
+        name: "motor-full-record",
+        ..style()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn style_is_mvcc_with_cas() {
+        let s = super::style();
+        assert!(s.mvcc && s.use_cas && s.delta_store);
+        assert!(!s.value_in_bucket && !s.ideal_faa);
+    }
+}

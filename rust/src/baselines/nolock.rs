@@ -1,0 +1,36 @@
+//! The fig. 3 "abandon CAS" variants: Motor and FORD with every RDMA
+//! atomic removed (operating **unsafely** — no mutual exclusion). The
+//! paper uses these to expose how much headroom the MN-RNIC atomics
+//! bottleneck hides: Motor-no-CAS reaches 2.4x its lock-bound peak.
+
+use crate::baselines::common::BaselineStyle;
+use crate::baselines::{ford, motor};
+
+/// Motor without CAS.
+pub fn motor_nocas_style() -> BaselineStyle {
+    BaselineStyle {
+        use_cas: false,
+        name: "motor-nocas",
+        ..motor::style()
+    }
+}
+
+/// FORD without CAS.
+pub fn ford_nocas_style() -> BaselineStyle {
+    BaselineStyle {
+        use_cas: false,
+        name: "ford-nocas",
+        ..ford::style()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn nocas_styles_disable_cas_only() {
+        let m = super::motor_nocas_style();
+        assert!(!m.use_cas && m.mvcc);
+        let f = super::ford_nocas_style();
+        assert!(!f.use_cas && !f.mvcc && f.value_in_bucket);
+    }
+}

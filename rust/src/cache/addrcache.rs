@@ -1,0 +1,135 @@
+//! The version table **address** cache (paper section 5).
+//!
+//! Maps key -> CVT address on the primary MN. Unlike the version table
+//! cache it "requires no active consistency maintenance, since CNs can
+//! detect stale cached addresses by validating the retrieved CVTs" (the
+//! fetched CVT's key field must equal the requested key). Unbounded, like
+//! the address caches in FORD/Motor (paper 8.1: "we do not impose a size
+//! limit ... consistent with the previous studies").
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::sharding::key::LotusKey;
+
+const SHARDS: usize = 32;
+
+/// key -> primary CVT address.
+pub struct AddrCache {
+    shards: Vec<Mutex<HashMap<u64, u64>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for AddrCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AddrCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        Self {
+            shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn shard(&self, key: LotusKey) -> &Mutex<HashMap<u64, u64>> {
+        &self.shards[(key.fingerprint32() as usize >> 8) % SHARDS]
+    }
+
+    /// Cached CVT address for a key.
+    pub fn get(&self, key: LotusKey) -> Option<u64> {
+        let found = self.shard(key).lock().unwrap().get(&key.0).copied();
+        match found {
+            Some(a) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(a)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Record a key's CVT address.
+    pub fn put(&self, key: LotusKey, addr: u64) {
+        self.shard(key).lock().unwrap().insert(key.0, addr);
+    }
+
+    /// Drop a stale address (validation failed).
+    pub fn invalidate(&self, key: LotusKey) {
+        self.shard(key).lock().unwrap().remove(&key.0);
+    }
+
+    /// Entry count.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    /// Is the cache empty?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// (hits, misses).
+    pub fn stats(&self) -> (u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Drop everything (CN restart).
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.lock().unwrap().clear();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k(i: u64) -> LotusKey {
+        LotusKey::compose(i, i)
+    }
+
+    #[test]
+    fn put_get_invalidate() {
+        let c = AddrCache::new();
+        assert_eq!(c.get(k(1)), None);
+        c.put(k(1), 0xAB);
+        assert_eq!(c.get(k(1)), Some(0xAB));
+        c.invalidate(k(1));
+        assert_eq!(c.get(k(1)), None);
+        assert_eq!(c.stats(), (1, 2));
+    }
+
+    #[test]
+    fn overwrite_updates() {
+        let c = AddrCache::new();
+        c.put(k(2), 1);
+        c.put(k(2), 2);
+        assert_eq!(c.get(k(2)), Some(2));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn clear_empties() {
+        let c = AddrCache::new();
+        for i in 0..100 {
+            c.put(k(i), i);
+        }
+        assert_eq!(c.len(), 100);
+        c.clear();
+        assert!(c.is_empty());
+    }
+}

@@ -1,0 +1,17 @@
+//! CN-side caches (paper sections 4.4 and 5).
+//!
+//! - [`vtcache`] — the **version table cache**: LRU sub-caches of CVT
+//!   snapshots for keys within the CN's managed lock range. Consistency
+//!   costs nothing extra: local writers update the cached CVT while they
+//!   update the memory pool (they hold the write lock), and remote write
+//!   locks invalidate the entry as part of lock-request processing
+//!   (Algorithm 1 line 15).
+//! - [`addrcache`] — the **version table address cache**: key -> CVT
+//!   address. Needs no consistency maintenance at all: a stale address is
+//!   detected when the fetched CVT's key does not match.
+
+pub mod addrcache;
+pub mod vtcache;
+
+pub use addrcache::AddrCache;
+pub use vtcache::VtCache;

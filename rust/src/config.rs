@@ -1,0 +1,372 @@
+//! Cluster + benchmark configuration.
+//!
+//! One [`Config`] describes everything a [`crate::sim::Cluster`] needs:
+//! topology (MN/CN counts, coordinators per CN), memory budgets (lock
+//! table, version-table cache — paper 8.1 defaults 32 MB and 4.5 MB),
+//! MVCC geometry (versions per record), isolation level, replication
+//! factor, the calibrated network constants, and run parameters. A small
+//! TOML-ish `key=value` file parser plus CLI override support back the
+//! `lotus` binary; presets mirror the paper's testbed.
+
+use crate::dm::NetConfig;
+use crate::txn::api::Isolation;
+use crate::{Error, Result};
+
+/// Which transaction system to run (LOTUS or a baseline).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SystemKind {
+    /// LOTUS: lock disaggregation + lock-first protocol.
+    Lotus,
+    /// Motor-like baseline: MVCC, MN-side CAS locks.
+    Motor,
+    /// FORD-like baseline: single-versioning, MN-side CAS locks.
+    Ford,
+    /// Motor with LOTUS's full-record store layout (fig. 14 "+Full
+    /// Record Store" ablation step).
+    MotorFullRecord,
+    /// Motor with CAS abandoned (unsafe, fig. 3).
+    MotorNoCas,
+    /// FORD with CAS abandoned (unsafe, fig. 3).
+    FordNoCas,
+    /// Idealized RDMA lock model (fig. 17).
+    IdealLock,
+}
+
+impl SystemKind {
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "lotus" => SystemKind::Lotus,
+            "motor" => SystemKind::Motor,
+            "ford" => SystemKind::Ford,
+            "motor-full-record" | "motorfullrecord" => SystemKind::MotorFullRecord,
+            "motor-nocas" | "motornocas" => SystemKind::MotorNoCas,
+            "ford-nocas" | "fordnocas" => SystemKind::FordNoCas,
+            "ideal-lock" | "ideallock" => SystemKind::IdealLock,
+            other => return Err(Error::Config(format!("unknown system '{other}'"))),
+        })
+    }
+
+    /// Display name used in reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            SystemKind::Lotus => "lotus",
+            SystemKind::Motor => "motor",
+            SystemKind::Ford => "ford",
+            SystemKind::MotorFullRecord => "motor-full-record",
+            SystemKind::MotorNoCas => "motor-nocas",
+            SystemKind::FordNoCas => "ford-nocas",
+            SystemKind::IdealLock => "ideal-lock",
+        }
+    }
+}
+
+/// LOTUS feature toggles (the fig. 14 ablation axes).
+#[derive(Debug, Clone, Copy)]
+pub struct Features {
+    /// Store each version as an independent full record (vs delta store).
+    pub full_record_store: bool,
+    /// Write commit logs + the extra write-visible RTT (no UPS reliance).
+    pub log_and_visible: bool,
+    /// Disaggregate locks to CNs (vs MN-side CAS).
+    pub lock_sharding: bool,
+    /// Two-level load balancing (hybrid routing + resharding).
+    pub load_balancing: bool,
+    /// Version-table cache.
+    pub vt_cache: bool,
+}
+
+impl Default for Features {
+    fn default() -> Self {
+        Self::all()
+    }
+}
+
+impl Features {
+    /// Everything on (LOTUS proper).
+    pub fn all() -> Self {
+        Self {
+            full_record_store: true,
+            log_and_visible: true,
+            lock_sharding: true,
+            load_balancing: true,
+            vt_cache: true,
+        }
+    }
+}
+
+/// Dataset scale knobs. The paper loads 20M KV pairs / 20M accounts /
+/// 3M subscribers / 105 warehouses on 64 GB machines; the simulator keeps
+/// the same *shapes* at a scale that fits one host (see EXPERIMENTS.md for
+/// the scaling substitution note).
+#[derive(Debug, Clone, Copy)]
+pub struct Scale {
+    /// KVS key count (paper: 20M).
+    pub kvs_keys: u64,
+    /// SmallBank account count (paper: 20M).
+    pub smallbank_accounts: u64,
+    /// TATP subscriber count (paper: 3M).
+    pub tatp_subscribers: u64,
+    /// TPC-C warehouse count (paper: 105).
+    pub tpcc_warehouses: u64,
+}
+
+impl Default for Scale {
+    fn default() -> Self {
+        Self {
+            kvs_keys: 1_000_000,
+            smallbank_accounts: 1_000_000,
+            tatp_subscribers: 300_000,
+            tpcc_warehouses: 8,
+        }
+    }
+}
+
+/// Full cluster + run configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of memory nodes (paper testbed: 3).
+    pub n_mns: usize,
+    /// Number of compute nodes (paper testbed: 9).
+    pub n_cns: usize,
+    /// Coordinator threads per CN ("threads x coroutines" in the paper;
+    /// each simulated coordinator is one concurrent transaction stream).
+    pub coordinators_per_cn: usize,
+    /// Memory per MN in bytes.
+    pub mn_capacity: u64,
+    /// Lock-table budget per CN in bytes (paper default 32 MB).
+    pub lock_table_bytes: usize,
+    /// Version-table cache entries per CN (paper default 64K CVTs ~ 4.5 MB).
+    pub vt_cache_entries: usize,
+    /// Versions per record (paper default 2).
+    pub n_versions: u8,
+    /// Index bucket associativity (CVTs per bucket).
+    pub assoc: u8,
+    /// Replication factor including the primary (paper 8.1: 3-way).
+    pub replicas: usize,
+    /// Isolation level.
+    pub isolation: Isolation,
+    /// Feature toggles (ablation).
+    pub features: Features,
+    /// Calibrated network constants.
+    pub net: NetConfig,
+    /// Virtual run duration (ns).
+    pub duration_ns: u64,
+    /// Virtual-time skew window for the [`crate::dm::TimeGate`].
+    pub gate_window_ns: u64,
+    /// Timeline sampling interval for recovery plots (0 = no timeline).
+    pub timeline_interval_ns: u64,
+    /// GC staleness threshold (ns, paper 7.1: 500 ms).
+    pub gc_threshold_ns: u64,
+    /// Load-balancer metrics interval (ns, paper 4.3: 100 ms).
+    pub balance_interval_ns: u64,
+    /// Dataset scale.
+    pub scale: Scale,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self::paper()
+    }
+}
+
+impl Config {
+    /// The paper's testbed scale: 3 MNs, 9 CNs.
+    pub fn paper() -> Self {
+        Self {
+            n_mns: 3,
+            n_cns: 9,
+            coordinators_per_cn: 4,
+            mn_capacity: 4 << 30,
+            lock_table_bytes: 32 << 20,
+            vt_cache_entries: 64 * 1024,
+            n_versions: 2,
+            assoc: 4,
+            replicas: 3,
+            isolation: Isolation::Serializable,
+            features: Features::all(),
+            net: NetConfig::default(),
+            duration_ns: 100_000_000, // 100 ms virtual
+            gate_window_ns: 1_000,
+            timeline_interval_ns: 0,
+            gc_threshold_ns: crate::store::gc::DEFAULT_GC_THRESHOLD_NS,
+            balance_interval_ns: 100_000_000,
+            scale: Scale::default(),
+            seed: 42,
+        }
+    }
+
+    /// Small topology for tests / doc examples: 2 MNs, 3 CNs, short run.
+    pub fn small() -> Self {
+        Self {
+            n_mns: 2,
+            n_cns: 3,
+            coordinators_per_cn: 2,
+            mn_capacity: 256 << 20,
+            lock_table_bytes: 1 << 20,
+            vt_cache_entries: 4096,
+            replicas: 2,
+            duration_ns: 10_000_000, // 10 ms virtual
+            scale: Scale {
+                kvs_keys: 20_000,
+                smallbank_accounts: 20_000,
+                tatp_subscribers: 10_000,
+                tpcc_warehouses: 2,
+            },
+            ..Self::paper()
+        }
+    }
+
+    /// Total coordinator count across the cluster.
+    pub fn total_coordinators(&self) -> usize {
+        self.n_cns * self.coordinators_per_cn
+    }
+
+    /// Validate invariants; returns self for chaining.
+    pub fn validate(self) -> Result<Self> {
+        if self.n_mns == 0 || self.n_cns == 0 || self.coordinators_per_cn == 0 {
+            return Err(Error::Config("topology counts must be positive".into()));
+        }
+        if self.replicas == 0 || self.replicas > self.n_mns {
+            return Err(Error::Config(format!(
+                "replicas {} must be in 1..={}",
+                self.replicas, self.n_mns
+            )));
+        }
+        if self.n_versions == 0 {
+            return Err(Error::Config("n_versions must be >= 1".into()));
+        }
+        if self.duration_ns == 0 {
+            return Err(Error::Config("duration_ns must be positive".into()));
+        }
+        Ok(self)
+    }
+
+    /// Apply a `key=value` override (CLI / config file). Unknown keys err.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        fn p<T: std::str::FromStr>(k: &str, v: &str) -> Result<T> {
+            v.parse()
+                .map_err(|_| Error::Config(format!("bad value '{v}' for '{k}'")))
+        }
+        match key {
+            "n_mns" => self.n_mns = p(key, value)?,
+            "n_cns" => self.n_cns = p(key, value)?,
+            "coordinators_per_cn" => self.coordinators_per_cn = p(key, value)?,
+            "mn_capacity" => self.mn_capacity = p(key, value)?,
+            "lock_table_bytes" => self.lock_table_bytes = p(key, value)?,
+            "vt_cache_entries" => self.vt_cache_entries = p(key, value)?,
+            "n_versions" => self.n_versions = p(key, value)?,
+            "assoc" => self.assoc = p(key, value)?,
+            "replicas" => self.replicas = p(key, value)?,
+            "duration_ns" => self.duration_ns = p(key, value)?,
+            "duration_ms" => self.duration_ns = p::<u64>(key, value)? * 1_000_000,
+            "gate_window_ns" => self.gate_window_ns = p(key, value)?,
+            "timeline_interval_ns" => self.timeline_interval_ns = p(key, value)?,
+            "gc_threshold_ns" => self.gc_threshold_ns = p(key, value)?,
+            "balance_interval_ns" => self.balance_interval_ns = p(key, value)?,
+            "kvs_keys" => self.scale.kvs_keys = p(key, value)?,
+            "smallbank_accounts" => self.scale.smallbank_accounts = p(key, value)?,
+            "tatp_subscribers" => self.scale.tatp_subscribers = p(key, value)?,
+            "tpcc_warehouses" => self.scale.tpcc_warehouses = p(key, value)?,
+            "seed" => self.seed = p(key, value)?,
+            "isolation" => {
+                self.isolation = match value {
+                    "sr" | "serializable" => Isolation::Serializable,
+                    "si" | "snapshot" => Isolation::SnapshotIsolation,
+                    v => return Err(Error::Config(format!("bad isolation '{v}'"))),
+                }
+            }
+            "full_record_store" => self.features.full_record_store = p(key, value)?,
+            "log_and_visible" => self.features.log_and_visible = p(key, value)?,
+            "lock_sharding" => self.features.lock_sharding = p(key, value)?,
+            "load_balancing" => self.features.load_balancing = p(key, value)?,
+            "vt_cache" => self.features.vt_cache = p(key, value)?,
+            other => return Err(Error::Config(format!("unknown config key '{other}'"))),
+        }
+        Ok(())
+    }
+
+    /// Parse a minimal `key = value` config file (# comments, blank lines).
+    pub fn load_overrides(&mut self, text: &str) -> Result<()> {
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                return Err(Error::Config(format!("line {}: expected key=value", lineno + 1)));
+            };
+            self.set(k.trim(), v.trim())?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        assert!(Config::paper().validate().is_ok());
+        assert!(Config::small().validate().is_ok());
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = Config::small();
+        c.replicas = 10; // > n_mns
+        assert!(c.validate().is_err());
+        let mut c = Config::small();
+        c.n_versions = 0;
+        assert!(c.validate().is_err());
+        let mut c = Config::small();
+        c.n_cns = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = Config::small();
+        c.set("n_cns", "5").unwrap();
+        c.set("isolation", "si").unwrap();
+        c.set("vt_cache", "false").unwrap();
+        c.set("duration_ms", "25").unwrap();
+        assert_eq!(c.n_cns, 5);
+        assert_eq!(c.isolation, Isolation::SnapshotIsolation);
+        assert!(!c.features.vt_cache);
+        assert_eq!(c.duration_ns, 25_000_000);
+        assert!(c.set("nonsense", "1").is_err());
+        assert!(c.set("n_cns", "abc").is_err());
+    }
+
+    #[test]
+    fn config_file_parsing() {
+        let mut c = Config::small();
+        c.load_overrides("# comment\n n_mns = 4 \n\nseed=7 # trailing\n")
+            .unwrap();
+        assert_eq!(c.n_mns, 4);
+        assert_eq!(c.seed, 7);
+        assert!(c.load_overrides("not-an-assignment").is_err());
+    }
+
+    #[test]
+    fn system_kind_parse() {
+        assert_eq!(SystemKind::parse("lotus").unwrap(), SystemKind::Lotus);
+        assert_eq!(SystemKind::parse("Motor").unwrap(), SystemKind::Motor);
+        assert_eq!(SystemKind::parse("ford-nocas").unwrap(), SystemKind::FordNoCas);
+        assert!(SystemKind::parse("mystery").is_err());
+        for k in [
+            SystemKind::Lotus,
+            SystemKind::Motor,
+            SystemKind::Ford,
+            SystemKind::MotorNoCas,
+            SystemKind::FordNoCas,
+            SystemKind::IdealLock,
+        ] {
+            assert_eq!(SystemKind::parse(k.name()).unwrap(), k);
+        }
+    }
+}

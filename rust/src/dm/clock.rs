@@ -1,0 +1,168 @@
+//! Virtual time: per-coordinator clocks and the cross-coordinator gate.
+//!
+//! Every coordinator thread owns a [`VClock`] (u64 virtual ns) advanced by
+//! the cost model. Real threads execute at wall speed, so without
+//! coupling, one coordinator's virtual clock could race far ahead of
+//! another's and contention would be computed between events that are not
+//! actually concurrent. [`TimeGate`] bounds that skew: each coordinator
+//! publishes its clock and may only proceed while it is within `window_ns`
+//! of the slowest live coordinator (a conservative discrete-event
+//! synchronization, cf. conservative PDES null-message windows).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A coordinator's private virtual clock (ns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct VClock(pub u64);
+
+impl VClock {
+    /// Time zero.
+    pub fn zero() -> Self {
+        VClock(0)
+    }
+
+    /// Advance by `ns` and return the new time.
+    #[inline]
+    pub fn advance(&mut self, ns: u64) -> u64 {
+        self.0 += ns;
+        self.0
+    }
+
+    /// Jump to `t` if `t` is later.
+    #[inline]
+    pub fn catch_up(&mut self, t: u64) {
+        if t > self.0 {
+            self.0 = t;
+        }
+    }
+
+    /// Current time (ns).
+    #[inline]
+    pub fn now(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Bounded-skew synchronizer across coordinator threads.
+pub struct TimeGate {
+    clocks: Vec<AtomicU64>,
+    cached_min: AtomicU64,
+    window_ns: u64,
+}
+
+impl TimeGate {
+    /// Gate for `n` coordinators with the given skew window.
+    pub fn new(n: usize, window_ns: u64) -> Self {
+        Self {
+            clocks: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            cached_min: AtomicU64::new(0),
+            window_ns,
+        }
+    }
+
+    /// Number of registered coordinators.
+    pub fn len(&self) -> usize {
+        self.clocks.len()
+    }
+
+    /// True if the gate tracks no coordinators.
+    pub fn is_empty(&self) -> bool {
+        self.clocks.is_empty()
+    }
+
+    fn scan_min(&self) -> u64 {
+        let mut min = u64::MAX;
+        for c in &self.clocks {
+            let v = c.load(Ordering::Acquire);
+            if v < min {
+                min = v;
+            }
+        }
+        // Publish so other coordinators can skip their own scans.
+        self.cached_min.fetch_max(min, Ordering::AcqRel);
+        min
+    }
+
+    /// Publish `now` for coordinator `id` and block (spin-yield) until the
+    /// slowest live coordinator is within the window.
+    pub fn sync(&self, id: usize, now: u64) {
+        self.clocks[id].store(now, Ordering::Release);
+        if now <= self.cached_min.load(Ordering::Acquire).saturating_add(self.window_ns) {
+            return;
+        }
+        loop {
+            let min = self.scan_min();
+            if now <= min.saturating_add(self.window_ns) {
+                return;
+            }
+            std::thread::yield_now();
+        }
+    }
+
+    /// Mark coordinator `id` finished so it never blocks others.
+    pub fn finish(&self, id: usize) {
+        self.clocks[id].store(u64::MAX, Ordering::Release);
+    }
+
+    /// Lowest live clock (u64::MAX when all are finished).
+    pub fn min_clock(&self) -> u64 {
+        self.scan_min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn vclock_advances() {
+        let mut c = VClock::zero();
+        assert_eq!(c.advance(10), 10);
+        assert_eq!(c.advance(5), 15);
+        c.catch_up(12); // older — no-op
+        assert_eq!(c.now(), 15);
+        c.catch_up(40);
+        assert_eq!(c.now(), 40);
+    }
+
+    #[test]
+    fn gate_allows_within_window() {
+        let g = TimeGate::new(2, 1000);
+        g.sync(0, 100); // other clock is 0, skew 100 <= 1000 — no block
+        g.sync(1, 900);
+        assert!(g.min_clock() <= 900);
+    }
+
+    #[test]
+    fn gate_blocks_until_peer_advances() {
+        let g = Arc::new(TimeGate::new(2, 100));
+        let g2 = g.clone();
+        let t = std::thread::spawn(move || {
+            // Coordinator 0 wants to reach t=10_000; it must wait for 1.
+            g2.sync(0, 10_000);
+            10_000u64
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(!t.is_finished(), "should be gated on coordinator 1");
+        g.sync(1, 9_950);
+        let v = t.join().unwrap();
+        assert_eq!(v, 10_000);
+    }
+
+    #[test]
+    fn finished_coordinator_never_blocks() {
+        let g = TimeGate::new(2, 10);
+        g.finish(1);
+        g.sync(0, 1_000_000); // must not block
+    }
+
+    #[test]
+    fn min_clock_tracks_slowest() {
+        let g = TimeGate::new(3, u64::MAX);
+        g.sync(0, 500);
+        g.sync(1, 100);
+        g.sync(2, 900);
+        assert_eq!(g.min_clock(), 100);
+    }
+}

@@ -1,0 +1,271 @@
+//! Memory node: RDMA-registered memory regions + the MN-side RNIC.
+//!
+//! MN memory is a flat array of `AtomicU64` words addressed by *byte*
+//! offsets (all allocations are 8B-aligned with 8B-rounded sizes, so no
+//! two allocations share a word and plain Relaxed word ops are
+//! race-free at the allocation level; intra-record consistency is
+//! enforced by the seqlock cacheline versions in `store::record`).
+//!
+//! The MN CPU is used only at init (memory registration, metadata) — at
+//! run time all access is one-sided through [`crate::dm::verbs`], exactly
+//! as in the paper.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::dm::rnic::Rnic;
+use crate::{Error, Result};
+
+/// A contiguous RDMA-registered region [base, base+len) on some MN.
+#[derive(Debug, Clone, Copy)]
+pub struct MemRegion {
+    /// Owning memory node id.
+    pub mn: usize,
+    /// Byte offset of the region start.
+    pub base: u64,
+    /// Region length in bytes.
+    pub len: u64,
+}
+
+impl MemRegion {
+    /// Does the region contain [addr, addr+len)?
+    pub fn contains(&self, addr: u64, len: u64) -> bool {
+        addr >= self.base && addr + len <= self.base + self.len
+    }
+}
+
+/// One memory node.
+pub struct MemNode {
+    /// Node id.
+    pub id: usize,
+    words: Vec<AtomicU64>,
+    /// The node's RNIC (the contended resource).
+    pub rnic: Rnic,
+    /// Bump pointer for region registration (init-time only).
+    next: AtomicU64,
+    /// Fail-stop flag (MNs are assumed fault-tolerant in the paper; this
+    /// exists for fault-injection tests of the *replication* path).
+    failed: std::sync::atomic::AtomicBool,
+}
+
+impl MemNode {
+    /// Memory node with `capacity` bytes (rounded up to whole words).
+    pub fn new(id: usize, capacity: u64) -> Self {
+        let words = (capacity as usize).div_ceil(8);
+        Self {
+            id,
+            words: (0..words).map(|_| AtomicU64::new(0)).collect(),
+            rnic: Rnic::new(),
+            next: AtomicU64::new(8), // offset 0 reserved as "null"
+            failed: std::sync::atomic::AtomicBool::new(false),
+        }
+    }
+
+    /// Total capacity in bytes.
+    pub fn capacity(&self) -> u64 {
+        self.words.len() as u64 * 8
+    }
+
+    /// Bytes allocated so far.
+    pub fn allocated(&self) -> u64 {
+        self.next.load(Ordering::Relaxed)
+    }
+
+    /// Register (allocate) a region of `len` bytes; 8B aligned + rounded.
+    pub fn register(&self, len: u64) -> Result<MemRegion> {
+        let len = crate::util::bytes::align_up(len.max(8), 8);
+        let base = self.next.fetch_add(len, Ordering::Relaxed);
+        if base + len > self.capacity() {
+            return Err(Error::OutOfMemory(format!(
+                "mn{}: want {} B at {:#x}, capacity {}",
+                self.id,
+                len,
+                base,
+                self.capacity()
+            )));
+        }
+        Ok(MemRegion {
+            mn: self.id,
+            base,
+            len,
+        })
+    }
+
+    #[inline]
+    fn word(&self, addr: u64) -> Result<&AtomicU64> {
+        if addr % 8 != 0 {
+            return Err(Error::BadAddress(addr, "unaligned"));
+        }
+        self.words
+            .get((addr / 8) as usize)
+            .ok_or(Error::BadAddress(addr, "out of range"))
+    }
+
+    /// Raw 8B load.
+    #[inline]
+    pub fn load_u64(&self, addr: u64) -> Result<u64> {
+        Ok(self.word(addr)?.load(Ordering::Acquire))
+    }
+
+    /// Raw 8B store.
+    #[inline]
+    pub fn store_u64(&self, addr: u64, v: u64) -> Result<()> {
+        self.word(addr)?.store(v, Ordering::Release);
+        Ok(())
+    }
+
+    /// RDMA CAS semantics: atomically replace if equal; returns the old value.
+    #[inline]
+    pub fn cas_u64(&self, addr: u64, expect: u64, new: u64) -> Result<u64> {
+        Ok(
+            match self.word(addr)?.compare_exchange(
+                expect,
+                new,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(old) => old,
+                Err(old) => old,
+            },
+        )
+    }
+
+    /// RDMA FAA semantics: fetch-and-add; returns the old value.
+    #[inline]
+    pub fn faa_u64(&self, addr: u64, delta: u64) -> Result<u64> {
+        Ok(self.word(addr)?.fetch_add(delta, Ordering::AcqRel))
+    }
+
+    /// Copy `out.len()` bytes starting at `addr` (must be 8B aligned; the
+    /// tail partial word is truncated from a whole-word load).
+    pub fn read_bytes(&self, addr: u64, out: &mut [u8]) -> Result<()> {
+        if addr % 8 != 0 {
+            return Err(Error::BadAddress(addr, "unaligned read"));
+        }
+        let mut off = 0usize;
+        while off < out.len() {
+            let w = self.load_u64(addr + off as u64)?;
+            let bytes = w.to_le_bytes();
+            let n = (out.len() - off).min(8);
+            out[off..off + n].copy_from_slice(&bytes[..n]);
+            off += n;
+        }
+        Ok(())
+    }
+
+    /// Write `data` starting at `addr` (8B aligned; the tail partial word
+    /// is read-modify-written so neighbours within the word survive).
+    pub fn write_bytes(&self, addr: u64, data: &[u8]) -> Result<()> {
+        if addr % 8 != 0 {
+            return Err(Error::BadAddress(addr, "unaligned write"));
+        }
+        let mut off = 0usize;
+        while off < data.len() {
+            let n = (data.len() - off).min(8);
+            let waddr = addr + off as u64;
+            if n == 8 {
+                let w = u64::from_le_bytes(data[off..off + 8].try_into().unwrap());
+                self.store_u64(waddr, w)?;
+            } else {
+                let mut bytes = self.load_u64(waddr)?.to_le_bytes();
+                bytes[..n].copy_from_slice(&data[off..off + n]);
+                self.store_u64(waddr, u64::from_le_bytes(bytes))?;
+            }
+            off += n;
+        }
+        Ok(())
+    }
+
+    /// Inject / clear a fail-stop failure.
+    pub fn set_failed(&self, failed: bool) {
+        self.failed.store(failed, Ordering::SeqCst);
+    }
+
+    /// Is the node failed?
+    pub fn is_failed(&self) -> bool {
+        self.failed.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_is_aligned_and_disjoint() {
+        let mn = MemNode::new(0, 1 << 16);
+        let a = mn.register(13).unwrap();
+        let b = mn.register(100).unwrap();
+        assert_eq!(a.base % 8, 0);
+        assert_eq!(b.base % 8, 0);
+        assert!(a.base + a.len <= b.base, "regions overlap");
+        assert_eq!(a.len, 16); // 13 rounded to 16
+    }
+
+    #[test]
+    fn register_exhaustion() {
+        let mn = MemNode::new(0, 64);
+        assert!(mn.register(32).is_ok());
+        assert!(mn.register(64).is_err());
+    }
+
+    #[test]
+    fn u64_roundtrip_and_cas() {
+        let mn = MemNode::new(0, 4096);
+        let r = mn.register(64).unwrap();
+        mn.store_u64(r.base, 7).unwrap();
+        assert_eq!(mn.load_u64(r.base).unwrap(), 7);
+        // CAS success
+        assert_eq!(mn.cas_u64(r.base, 7, 9).unwrap(), 7);
+        assert_eq!(mn.load_u64(r.base).unwrap(), 9);
+        // CAS failure returns current
+        assert_eq!(mn.cas_u64(r.base, 7, 11).unwrap(), 9);
+        assert_eq!(mn.load_u64(r.base).unwrap(), 9);
+    }
+
+    #[test]
+    fn faa_accumulates() {
+        let mn = MemNode::new(0, 4096);
+        let r = mn.register(8).unwrap();
+        assert_eq!(mn.faa_u64(r.base, 5).unwrap(), 0);
+        assert_eq!(mn.faa_u64(r.base, 3).unwrap(), 5);
+        assert_eq!(mn.load_u64(r.base).unwrap(), 8);
+    }
+
+    #[test]
+    fn byte_roundtrip_odd_lengths() {
+        let mn = MemNode::new(0, 4096);
+        let r = mn.register(64).unwrap();
+        let data: Vec<u8> = (0..23).collect();
+        mn.write_bytes(r.base, &data).unwrap();
+        let mut out = vec![0u8; 23];
+        mn.read_bytes(r.base, &mut out).unwrap();
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn unaligned_access_rejected() {
+        let mn = MemNode::new(0, 4096);
+        assert!(mn.load_u64(3).is_err());
+        assert!(mn.write_bytes(5, &[1, 2]).is_err());
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        let mn = MemNode::new(0, 64);
+        assert!(mn.load_u64(1 << 20).is_err());
+    }
+
+    #[test]
+    fn prop_byte_roundtrip() {
+        crate::testing::prop(40, |g| {
+            let mn = MemNode::new(0, 1 << 14);
+            let len = g.usize(1, 512);
+            let r = mn.register(len as u64).unwrap();
+            let data: Vec<u8> = (0..len).map(|_| g.u64(0, 255) as u8).collect();
+            mn.write_bytes(r.base, &data).unwrap();
+            let mut out = vec![0u8; len];
+            mn.read_bytes(r.base, &mut out).unwrap();
+            assert_eq!(out, data);
+        });
+    }
+}

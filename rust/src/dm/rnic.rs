@@ -1,0 +1,196 @@
+//! Simulated RDMA NIC: a FIFO server in virtual time.
+//!
+//! Each RNIC processes verbs serially at per-verb service rates; the
+//! `busy_until` atomic is the virtual time at which the NIC frees up. A
+//! verb arriving at `t_arrive` completes at `max(t_arrive, busy) + svc`,
+//! and that completion becomes the new `busy`. This is an M/G/1-style
+//! FIFO queue evaluated exactly, and is what makes MN NICs saturate under
+//! CAS-heavy lock traffic (the paper's bottleneck).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// One simulated NIC (MN-side or CN-side).
+#[derive(Debug, Default)]
+pub struct Rnic {
+    busy_until: AtomicU64,
+    /// Op counter (for utilization reporting).
+    ops: AtomicU64,
+    /// Cumulative service ns (for utilization reporting).
+    busy_ns: AtomicU64,
+    /// Cumulative queue-wait ns experienced by ops (diagnostics).
+    wait_ns: AtomicU64,
+}
+
+impl Rnic {
+    /// Fresh idle NIC.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Enqueue a verb arriving at `t_arrive` needing `svc` ns of NIC time;
+    /// returns its completion time. Linearizable via CAS loop.
+    #[inline]
+    pub fn charge(&self, t_arrive: u64, svc: u64) -> u64 {
+        self.ops.fetch_add(1, Ordering::Relaxed);
+        self.busy_ns.fetch_add(svc, Ordering::Relaxed);
+        let mut cur = self.busy_until.load(Ordering::Relaxed);
+        loop {
+            let start = cur.max(t_arrive);
+            let done = start + svc;
+            match self.busy_until.compare_exchange_weak(
+                cur,
+                done,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    self.wait_ns.fetch_add(start - t_arrive, Ordering::Relaxed);
+                    return done;
+                }
+                Err(v) => cur = v,
+            }
+        }
+    }
+
+    /// Cumulative queue-wait ns (diagnostics).
+    pub fn wait_ns(&self) -> u64 {
+        self.wait_ns.load(Ordering::Relaxed)
+    }
+
+    /// Completion time if the verb were issued now, without enqueueing.
+    pub fn peek(&self, t_arrive: u64, svc: u64) -> u64 {
+        self.busy_until.load(Ordering::Relaxed).max(t_arrive) + svc
+    }
+
+    /// Total ops processed.
+    pub fn op_count(&self) -> u64 {
+        self.ops.load(Ordering::Relaxed)
+    }
+
+    /// Total busy virtual ns.
+    pub fn busy_ns(&self) -> u64 {
+        self.busy_ns.load(Ordering::Relaxed)
+    }
+
+    /// Virtual time at which the NIC frees up.
+    pub fn busy_until(&self) -> u64 {
+        self.busy_until.load(Ordering::Relaxed)
+    }
+
+    /// Utilization over a run of `duration_ns` virtual time.
+    pub fn utilization(&self, duration_ns: u64) -> f64 {
+        if duration_ns == 0 {
+            return 0.0;
+        }
+        (self.busy_ns() as f64 / duration_ns as f64).min(1.0)
+    }
+
+    /// Reset counters (not the queue time).
+    pub fn reset_counters(&self) {
+        self.ops.store(0, Ordering::Relaxed);
+        self.busy_ns.store(0, Ordering::Relaxed);
+        self.wait_ns.store(0, Ordering::Relaxed);
+    }
+
+    /// Reset the queue to idle at time zero (between benchmark runs —
+    /// virtual time restarts per run; never call mid-run).
+    pub fn reset(&self) {
+        self.busy_until.store(0, Ordering::SeqCst);
+        self.reset_counters();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn idle_nic_serves_immediately() {
+        let n = Rnic::new();
+        assert_eq!(n.charge(1000, 30), 1030);
+    }
+
+    #[test]
+    fn back_to_back_ops_queue() {
+        let n = Rnic::new();
+        // Two ops arriving at the same instant serialize.
+        let a = n.charge(0, 100);
+        let b = n.charge(0, 100);
+        assert_eq!(a, 100);
+        assert_eq!(b, 200);
+    }
+
+    #[test]
+    fn late_arrival_after_idle_gap() {
+        let n = Rnic::new();
+        n.charge(0, 50);
+        // Arrives after the queue drained — no waiting.
+        assert_eq!(n.charge(1_000, 50), 1_050);
+    }
+
+    #[test]
+    fn cas_queue_grows_faster_than_write_queue() {
+        // The paper's premise in miniature: same arrival pattern, CAS svc
+        // (400ns) builds a queue ~14x deeper than WRITE svc (29ns).
+        let writes = Rnic::new();
+        let cas = Rnic::new();
+        for i in 0..1000u64 {
+            let t = i * 50; // arrivals every 50ns
+            writes.charge(t, 29);
+            cas.charge(t, 400);
+        }
+        let write_lag = writes.busy_until().saturating_sub(1000 * 50);
+        let cas_lag = cas.busy_until().saturating_sub(1000 * 50);
+        assert!(write_lag < 1_000, "writes keep up: lag={write_lag}");
+        assert!(cas_lag > 300_000, "cas falls behind: lag={cas_lag}");
+    }
+
+    #[test]
+    fn concurrent_charges_conserve_service_time() {
+        let n = Arc::new(Rnic::new());
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let n = n.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        n.charge(0, 10);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        // 8000 ops x 10ns each, all arriving at t=0 => busy_until == 80_000.
+        assert_eq!(n.busy_until(), 80_000);
+        assert_eq!(n.op_count(), 8000);
+    }
+
+    #[test]
+    fn utilization_reporting() {
+        let n = Rnic::new();
+        for i in 0..10 {
+            n.charge(i * 100, 50);
+        }
+        let u = n.utilization(1000);
+        assert!((u - 0.5).abs() < 1e-9, "u={u}");
+    }
+
+    #[test]
+    fn prop_completion_after_arrival_and_monotone_queue() {
+        crate::testing::prop(50, |g| {
+            let n = Rnic::new();
+            let mut last_done = 0;
+            let mut t = 0u64;
+            for _ in 0..g.usize(1, 200) {
+                t += g.u64(0, 500);
+                let svc = g.u64(1, 600);
+                let done = n.charge(t, svc);
+                assert!(done >= t + svc, "completion before arrival+svc");
+                assert!(done >= last_done, "FIFO completions must be monotone");
+                last_done = done;
+            }
+        });
+    }
+}

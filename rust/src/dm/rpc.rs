@@ -1,0 +1,190 @@
+//! CN-to-CN RPC fabric (UD-QP SEND/RECV with timeouts, paper section 3).
+//!
+//! In LOTUS remote lock/unlock requests travel CN-to-CN as RPCs handled by
+//! the *i-th coordinator to i-th coordinator* pairing (paper 4.1), so each
+//! (CN, slot) pair has its own handler queue — a CPU, not a NIC, since the
+//! remote coordinator's CPU executes the lock ops. The actual lock-table
+//! mutation is performed by the caller thread against the target CN's
+//! (real, shared) lock table after the cost is charged; this is
+//! functionally identical to a synchronous RPC and keeps the simulator
+//! single-address-space.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::dm::clock::VClock;
+use crate::dm::netconfig::NetConfig;
+use crate::dm::rnic::Rnic;
+use crate::{Error, Result};
+
+/// RPC fabric across CNs.
+pub struct RpcFabric {
+    /// Per-CN NIC (shared with one-sided verbs from that CN).
+    cn_nics: Vec<Arc<Rnic>>,
+    /// Per-(CN, coordinator-slot) handler CPU queues.
+    handlers: Vec<Vec<Arc<Rnic>>>,
+    /// Fail-stop flags per CN.
+    failed: Vec<AtomicBool>,
+    net: Arc<NetConfig>,
+}
+
+impl RpcFabric {
+    /// Fabric for `n_cns` CNs with `slots` coordinator slots each.
+    pub fn new(cn_nics: Vec<Arc<Rnic>>, slots: usize, net: Arc<NetConfig>) -> Self {
+        let n = cn_nics.len();
+        Self {
+            cn_nics,
+            handlers: (0..n)
+                .map(|_| (0..slots).map(|_| Arc::new(Rnic::new())).collect())
+                .collect(),
+            failed: (0..n).map(|_| AtomicBool::new(false)).collect(),
+            net,
+        }
+    }
+
+    /// Number of CNs.
+    pub fn n_cns(&self) -> usize {
+        self.cn_nics.len()
+    }
+
+    /// Inject / clear a CN fail-stop failure.
+    pub fn set_failed(&self, cn: usize, failed: bool) {
+        self.failed[cn].store(failed, Ordering::SeqCst);
+    }
+
+    /// Is the CN failed?
+    pub fn is_failed(&self, cn: usize) -> bool {
+        self.failed[cn].load(Ordering::SeqCst)
+    }
+
+    /// Charge a synchronous RPC carrying `n_reqs` lock-class requests from
+    /// `(src_cn)` to `(dst_cn, slot)`; advances `clk` to the reply time.
+    /// Fails with `NodeUnavailable` (after a timeout charge) if the target
+    /// CN is failed — the UD transport's timeout mechanism.
+    pub fn call(
+        &self,
+        src_cn: usize,
+        dst_cn: usize,
+        slot: usize,
+        n_reqs: usize,
+        clk: &mut VClock,
+    ) -> Result<()> {
+        if self.is_failed(dst_cn) {
+            // Timeout: the caller burns a full timeout interval.
+            clk.advance(self.net.rpc_rtt_ns * 4);
+            return Err(Error::NodeUnavailable(format!("cn{dst_cn} (rpc timeout)")));
+        }
+        let t_send = self.cn_nics[src_cn].charge(clk.now(), self.net.cn_issue_ns);
+        let t_arrive = t_send + self.net.rpc_rtt_ns / 2;
+        // Receive-side NIC + handler CPU (batched requests in ONE message,
+        // paper 4.1: "multiple remote lock requests ... batched into a
+        // single RDMA message, saving IOPS").
+        let t_recv = self.cn_nics[dst_cn].charge(t_arrive, self.net.cn_issue_ns);
+        let t_handled = self.handlers[dst_cn][slot]
+            .charge(t_recv, self.net.rpc_handle_ns * n_reqs.max(1) as u64);
+        clk.catch_up(t_handled + self.net.rpc_rtt_ns / 2);
+        Ok(())
+    }
+
+    /// Fire-and-forget RPC (async unlock): charges queues, caller clock
+    /// advances only by the send cost.
+    pub fn call_async(
+        &self,
+        src_cn: usize,
+        dst_cn: usize,
+        slot: usize,
+        n_reqs: usize,
+        clk: &mut VClock,
+    ) -> Result<()> {
+        if self.is_failed(dst_cn) {
+            return Err(Error::NodeUnavailable(format!("cn{dst_cn} (async rpc)")));
+        }
+        let t_send = self.cn_nics[src_cn].charge(clk.now(), self.net.cn_issue_ns);
+        let t_arrive = t_send + self.net.rpc_rtt_ns / 2;
+        let t_recv = self.cn_nics[dst_cn].charge(t_arrive, self.net.cn_issue_ns);
+        self.handlers[dst_cn][slot].charge(t_recv, self.net.rpc_handle_ns * n_reqs.max(1) as u64);
+        clk.catch_up(t_send);
+        Ok(())
+    }
+
+    /// Handler-CPU busy time of a CN (for the ablation's CPU-saturation
+    /// effect on read-heavy workloads, fig. 14 TATP).
+    pub fn handler_busy_ns(&self, cn: usize) -> u64 {
+        self.handlers[cn].iter().map(|h| h.busy_ns()).sum()
+    }
+
+    /// Reset every handler queue to idle (between benchmark runs).
+    pub fn reset_queues(&self) {
+        for cn in &self.handlers {
+            for h in cn {
+                h.reset();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fabric(n: usize, slots: usize) -> RpcFabric {
+        let nics = (0..n).map(|_| Arc::new(Rnic::new())).collect();
+        RpcFabric::new(nics, slots, Arc::new(NetConfig::default()))
+    }
+
+    #[test]
+    fn rpc_costs_at_least_one_rtt() {
+        let f = fabric(2, 1);
+        let mut clk = VClock::zero();
+        f.call(0, 1, 0, 1, &mut clk).unwrap();
+        assert!(clk.now() >= f.net.rpc_rtt_ns, "t={}", clk.now());
+    }
+
+    #[test]
+    fn batched_requests_cheaper_than_separate_calls() {
+        let f1 = fabric(2, 1);
+        let mut c1 = VClock::zero();
+        f1.call(0, 1, 0, 8, &mut c1).unwrap();
+
+        let f2 = fabric(2, 1);
+        let mut c2 = VClock::zero();
+        for _ in 0..8 {
+            f2.call(0, 1, 0, 1, &mut c2).unwrap();
+        }
+        assert!(c1.now() * 3 < c2.now(), "batch {} vs {}", c1.now(), c2.now());
+    }
+
+    #[test]
+    fn failed_cn_times_out() {
+        let f = fabric(2, 1);
+        f.set_failed(1, true);
+        let mut clk = VClock::zero();
+        let err = f.call(0, 1, 0, 1, &mut clk).unwrap_err();
+        assert!(matches!(err, Error::NodeUnavailable(_)));
+        assert!(clk.now() >= f.net.rpc_rtt_ns * 4, "timeout not charged");
+        f.set_failed(1, false);
+        f.call(0, 1, 0, 1, &mut VClock::zero()).unwrap();
+    }
+
+    #[test]
+    fn async_call_does_not_block() {
+        let f = fabric(2, 1);
+        let mut clk = VClock::zero();
+        f.call_async(0, 1, 0, 4, &mut clk).unwrap();
+        assert!(clk.now() < f.net.rpc_rtt_ns / 2);
+        assert!(f.handler_busy_ns(1) > 0);
+    }
+
+    #[test]
+    fn handler_queues_are_per_slot() {
+        let f = fabric(2, 2);
+        let mut c0 = VClock::zero();
+        let mut c1 = VClock::zero();
+        // Two slots handled in parallel: same arrival, no cross-queueing.
+        f.call(0, 1, 0, 10, &mut c0).unwrap();
+        f.call(0, 1, 1, 10, &mut c1).unwrap();
+        // c1 may still pay NIC serialization, but not slot-0's handler time.
+        let serial = f.net.rpc_handle_ns * 10;
+        assert!(c1.now() < c0.now() + serial, "slots share a queue?");
+    }
+}

@@ -1,0 +1,155 @@
+//! # LOTUS — disaggregated transactions with disaggregated locks
+//!
+//! Production-quality reproduction of *"LOTUS: Optimizing Disaggregated
+//! Transactions with Disaggregated Locks"* (CS.DC 2025).
+//!
+//! LOTUS is a distributed transaction system for disaggregated memory (DM)
+//! whose key idea is **lock disaggregation**: locks are decoupled from data
+//! and live in the *compute pool* (CN lock tables), while data lives in the
+//! *memory pool* (MN consecutive version tables + records). This removes
+//! the MN-RNIC bottleneck caused by one-sided RDMA atomic (CAS/FAA) lock
+//! traffic in prior systems (FORD, Motor).
+//!
+//! ## Crate layout (bottom-up)
+//!
+//! - [`dm`] — the disaggregated-memory fabric substrate: memory nodes,
+//!   simulated RNICs with a calibrated queueing cost model, one-sided
+//!   verbs (READ/WRITE/CAS/FAA, doorbell batching), CN-to-CN RPC, and
+//!   per-coordinator virtual clocks. All data operations execute against
+//!   real shared memory; all network operations are *also* charged against
+//!   the cost model, reproducing the paper's RNIC-IOPS bottleneck.
+//! - [`store`] — MN-side data store: consecutive version tables (CVT),
+//!   hash index, seqlock cacheline versions, GC, primary-backup replication.
+//! - [`lock`] — CN-side distributed lock tables (8B fingerprint+counter
+//!   slots, 8-slot buckets, holder state for idempotency).
+//! - [`sharding`] — 64-bit LOTUS keys (low 12 bits = shard number from the
+//!   application's critical field), the routing layer, pass-by-range
+//!   resharding.
+//! - [`cache`] — version-table cache (LRU sub-caches, zero-overhead
+//!   consistency) and CVT address cache.
+//! - [`txn`] — the lock-first transaction protocol (Execute/Commit, MVCC,
+//!   SR + SI isolation), HLC timestamp oracle, commit logs.
+//! - [`balance`] — two-level load balancing: metrics collection and the
+//!   rebalance planner (executes the AOT-compiled XLA artifact via
+//!   [`runtime`]).
+//! - [`recovery`] — lease-based membership + lock-rebuild-free CN recovery.
+//! - [`baselines`] — re-implementations of Motor, FORD, their no-CAS
+//!   variants, and the idealized RDMA lock (paper figures 2/3/13/17).
+//! - [`workloads`] — KVS, SmallBank, TATP, TPC-C generators.
+//! - [`runtime`] — PJRT loader/executor for `artifacts/*.hlo.txt`.
+//! - [`sim`] — the cluster harness that wires everything together.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use lotus::config::{Config, SystemKind};
+//! use lotus::sim::Cluster;
+//! use lotus::workloads::WorkloadKind;
+//!
+//! let cfg = Config::small();
+//! let cluster = Cluster::build(&cfg, WorkloadKind::SmallBank).unwrap();
+//! let report = cluster.run(SystemKind::Lotus).unwrap();
+//! println!("tput = {:.2} Mtxn/s, p50 = {} us", report.mtps(), report.p50_us());
+//! ```
+
+pub mod balance;
+pub mod baselines;
+pub mod cache;
+pub mod config;
+pub mod dm;
+pub mod lock;
+pub mod metrics;
+pub mod recovery;
+pub mod runtime;
+pub mod sharding;
+pub mod sim;
+pub mod store;
+pub mod testing;
+pub mod txn;
+pub mod util;
+pub mod workloads;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Transaction aborted (lock conflict, validation failure, ...).
+    #[error("transaction aborted: {0}")]
+    Abort(AbortReason),
+    /// A memory-node address is out of range or misaligned.
+    #[error("bad address: {0:#x} ({1})")]
+    BadAddress(u64, &'static str),
+    /// Requested node does not exist or has failed.
+    #[error("node unavailable: {0}")]
+    NodeUnavailable(String),
+    /// Lock table bucket is full — the key cannot be locked.
+    #[error("lock bucket full")]
+    LockBucketFull,
+    /// Shard not managed by this CN (stale routing); retry with fresh map.
+    #[error("wrong shard owner: shard {shard} not owned by cn {cn}")]
+    WrongShardOwner { shard: u16, cn: usize },
+    /// Memory-pool allocation failed.
+    #[error("out of memory-pool space: {0}")]
+    OutOfMemory(String),
+    /// Configuration problem.
+    #[error("config error: {0}")]
+    Config(String),
+    /// Artifact loading / PJRT problems.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    /// XLA error bubbled up from the PJRT client.
+    #[error("xla: {0}")]
+    Xla(String),
+    /// I/O error.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+/// Why a transaction aborted — recorded in metrics for abort-rate figures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AbortReason {
+    /// A lock could not be acquired (conflict or bucket full).
+    LockConflict,
+    /// A version newer than the start timestamp was found (SR violation).
+    VersionTooNew,
+    /// Seqlock cacheline-version mismatch on an unlocked read.
+    InconsistentRead,
+    /// No visible version at/below the read timestamp.
+    NoVisibleVersion,
+    /// Key not found in the index.
+    NotFound,
+    /// The lock owner CN failed (recovery in progress).
+    OwnerFailed,
+    /// Insert found the key already present.
+    Duplicate,
+    /// Explicit user abort (workload logic).
+    UserAbort,
+}
+
+impl std::fmt::Display for AbortReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+/// Crate-wide result type.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Convenience: is this an abort (retryable) rather than a hard error?
+    pub fn is_abort(&self) -> bool {
+        matches!(self, Error::Abort(_))
+    }
+
+    /// The abort reason, if this is an abort.
+    pub fn abort_reason(&self) -> Option<AbortReason> {
+        match self {
+            Error::Abort(r) => Some(*r),
+            _ => None,
+        }
+    }
+}
+
+/// Shorthand constructor used across the protocol code.
+pub fn abort(reason: AbortReason) -> Error {
+    Error::Abort(reason)
+}

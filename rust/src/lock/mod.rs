@@ -1,0 +1,17 @@
+//! CN-side distributed lock tables (paper section 4.1, Algorithm 1).
+//!
+//! LOTUS disaggregates locks from data: every CN hosts a fixed-length
+//! hash [`table::LockTable`] of 8-byte slots (7B fingerprint + 1B
+//! counter, 8 slots per bucket) and a [`state::LockState`] side map
+//! recording holders (txn id, CN id, mode) for idempotency, recovery and
+//! resharding. [`service::LockService`] dispatches a transaction's lock
+//! set: local requests execute as CPU CAS on the local table; remote
+//! requests are batched per target CN into a single RPC.
+
+pub mod service;
+pub mod state;
+pub mod table;
+
+pub use service::{AcquiredLock, LockRequest, LockService};
+pub use state::{HolderId, LockState};
+pub use table::{LockMode, LockTable};

@@ -1,0 +1,307 @@
+//! The per-CN lock service: Algorithm 1 end-to-end.
+//!
+//! Combines the slot [`LockTable`], the holder [`LockState`], the CN's
+//! [`VtCache`] (invalidated on remote write locks, Algorithm 1 line 15)
+//! and the routing-layer ownership check (a request for a shard this CN
+//! no longer owns returns [`crate::Error::WrongShardOwner`], prompting
+//! the caller to retry with a fresh map — paper section 4.2).
+//!
+//! Resharding pauses a shard ([`LockService::pause_shard`]) so the sender
+//! can drain or abort its holders before ownership moves (section 4.3).
+
+use std::collections::HashSet;
+use std::sync::{Arc, Mutex};
+
+use crate::cache::VtCache;
+use crate::lock::state::{HolderId, LockState};
+use crate::lock::table::{AcquireOutcome, LockMode, LockTable};
+use crate::sharding::key::LotusKey;
+use crate::sharding::router::Router;
+use crate::{Error, Result};
+
+/// One lock request inside a (possibly batched) acquisition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LockRequest {
+    /// Key to lock.
+    pub key: LotusKey,
+    /// Requested mode.
+    pub mode: LockMode,
+}
+
+/// A successfully acquired lock (needed to release it later).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AcquiredLock {
+    /// Locked key.
+    pub key: LotusKey,
+    /// Held mode.
+    pub mode: LockMode,
+    /// CN whose lock table holds the lock.
+    pub owner_cn: usize,
+}
+
+/// The lock service running on one CN.
+pub struct LockService {
+    /// This CN's id.
+    pub cn: usize,
+    table: LockTable,
+    state: LockState,
+    vt_cache: Arc<VtCache>,
+    /// Shards paused for migration (reject requests with WrongShardOwner).
+    paused: Mutex<HashSet<u16>>,
+}
+
+impl LockService {
+    /// Service with a lock table of `table_bytes` and this CN's VT cache.
+    pub fn new(cn: usize, table_bytes: usize, vt_cache: Arc<VtCache>) -> Self {
+        Self {
+            cn,
+            table: LockTable::with_capacity_bytes(table_bytes),
+            state: LockState::new(),
+            vt_cache,
+            paused: Mutex::new(HashSet::new()),
+        }
+    }
+
+    /// The raw slot table (diagnostics, memory accounting).
+    pub fn table(&self) -> &LockTable {
+        &self.table
+    }
+
+    /// The holder state (recovery + resharding scans).
+    pub fn state(&self) -> &LockState {
+        &self.state
+    }
+
+    /// Algorithm 1: try to acquire `mode` on `key` for `holder`.
+    ///
+    /// `from_remote` marks requests arriving by RPC from another CN; a
+    /// remote *write* lock invalidates this CN's cached CVT for the key
+    /// (line 15). Returns `Ok(true)` acquired (or already held — the
+    /// idempotency check of line 5), `Ok(false)` on conflict, and `Err`
+    /// for bucket-full or stale routing.
+    pub fn try_acquire(
+        &self,
+        router: &Router,
+        key: LotusKey,
+        mode: LockMode,
+        holder: HolderId,
+        from_remote: bool,
+    ) -> Result<bool> {
+        router.assert_owner(self.cn, key.shard())?;
+        if self.paused.lock().unwrap().contains(&key.shard()) {
+            return Err(Error::WrongShardOwner {
+                shard: key.shard(),
+                cn: self.cn,
+            });
+        }
+        // Line 5: the holder already has a satisfying lock.
+        if self.state.already_holds(key, mode, holder) {
+            return Ok(true);
+        }
+        match self.table.acquire(key, mode)? {
+            AcquireOutcome::Conflict => Ok(false),
+            AcquireOutcome::Acquired => {
+                if from_remote && mode == LockMode::Write {
+                    self.vt_cache.invalidate(key); // line 15
+                }
+                self.state.record(key, mode, holder); // line 21
+                Ok(true)
+            }
+        }
+    }
+
+    /// Release a lock held by `holder`; idempotent (recovery may race a
+    /// normal unlock).
+    pub fn release(&self, key: LotusKey, mode: LockMode, holder: HolderId) {
+        if self.state.erase(key, mode, holder) {
+            self.table.release(key, mode);
+        }
+    }
+
+    /// Release **all** locks held by CN `cn` (recovery, section 6);
+    /// returns the released holders' transaction ids.
+    pub fn release_all_of_cn(&self, cn: usize) -> Vec<u64> {
+        let held = self.state.held_by_cn(cn);
+        let mut txns: Vec<u64> = held.iter().map(|(_, _, h)| h.txn).collect();
+        for (key, mode, holder) in held {
+            self.release(key, mode, holder);
+        }
+        txns.sort_unstable();
+        txns.dedup();
+        txns
+    }
+
+    /// Pause a shard before migration (new requests bounce).
+    pub fn pause_shard(&self, shard: u16) {
+        self.paused.lock().unwrap().insert(shard);
+    }
+
+    /// Resume a shard (migration receiver side, or aborted migration).
+    pub fn resume_shard(&self, shard: u16) {
+        self.paused.lock().unwrap().remove(&shard);
+    }
+
+    /// Is the shard paused?
+    pub fn is_paused(&self, shard: u16) -> bool {
+        self.paused.lock().unwrap().contains(&shard)
+    }
+
+    /// Holders with live locks in `shard` (resharding abort scan).
+    pub fn holders_in_shard(&self, shard: u16) -> Vec<HolderId> {
+        self.state.holders_in_shard(shard)
+    }
+
+    /// Force-release every lock in `shard` (resharding timeout path);
+    /// returns the affected transaction ids.
+    pub fn force_release_shard(&self, shard: u16) -> Vec<u64> {
+        let mut txns = Vec::new();
+        for (key, mode, holder) in self
+            .state
+            .held_by_cn_filter(|k| k.shard() == shard)
+        {
+            txns.push(holder.txn);
+            self.release(key, mode, holder);
+        }
+        txns.sort_unstable();
+        txns.dedup();
+        txns
+    }
+
+    /// Wipe the table + state (restarted CN begins empty — the
+    /// lock-rebuild-free path, section 6).
+    pub fn clear(&self) {
+        self.table.clear();
+        self.state.clear();
+        self.paused.lock().unwrap().clear();
+    }
+
+    /// Count of live lock slots (diagnostics).
+    pub fn held_slots(&self) -> usize {
+        self.table.held_slots()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(n_cns: usize) -> (Router, Vec<LockService>) {
+        let router = Router::new(n_cns);
+        let services = (0..n_cns)
+            .map(|cn| LockService::new(cn, 64 * 1024, Arc::new(VtCache::new(64))))
+            .collect();
+        (router, services)
+    }
+
+    fn holder(cn: usize, txn: u64) -> HolderId {
+        HolderId { cn, txn }
+    }
+
+    #[test]
+    fn local_acquire_release_cycle() {
+        let (router, svcs) = setup(1);
+        let k = LotusKey::compose(1, 1);
+        let h = holder(0, 1);
+        assert!(svcs[0].try_acquire(&router, k, LockMode::Write, h, false).unwrap());
+        // Idempotent re-acquire by the same txn.
+        assert!(svcs[0].try_acquire(&router, k, LockMode::Write, h, false).unwrap());
+        // Conflicting holder.
+        assert!(!svcs[0]
+            .try_acquire(&router, k, LockMode::Write, holder(0, 2), false)
+            .unwrap());
+        svcs[0].release(k, LockMode::Write, h);
+        assert!(svcs[0]
+            .try_acquire(&router, k, LockMode::Write, holder(0, 2), false)
+            .unwrap());
+    }
+
+    #[test]
+    fn wrong_owner_rejected() {
+        let (router, svcs) = setup(2);
+        // Find a shard owned by CN 1.
+        let shard = (0..4096u16).find(|&s| router.owner_of(s) == 1).unwrap();
+        let k = LotusKey::compose(shard as u64, 9);
+        let err = svcs[0]
+            .try_acquire(&router, k, LockMode::Write, holder(0, 1), false)
+            .unwrap_err();
+        assert!(matches!(err, Error::WrongShardOwner { .. }));
+        assert!(svcs[1].try_acquire(&router, k, LockMode::Write, holder(0, 1), true).unwrap());
+    }
+
+    #[test]
+    fn remote_write_lock_invalidates_vt_cache() {
+        let cache = Arc::new(VtCache::new(64));
+        let svc = LockService::new(0, 64 * 1024, cache.clone());
+        let router = Router::new(1);
+        let k = LotusKey::compose(3, 3);
+        cache.put(
+            k,
+            crate::cache::vtcache::CachedCvt {
+                cvt: crate::store::cvt::CvtSnapshot::empty(1),
+                addr: 0x10,
+            },
+        );
+        // Local write lock does NOT invalidate (local writer updates it).
+        assert!(svc.try_acquire(&router, k, LockMode::Write, holder(0, 1), false).unwrap());
+        assert!(cache.get(k).is_some());
+        svc.release(k, LockMode::Write, holder(0, 1));
+        // Remote write lock DOES invalidate.
+        assert!(svc.try_acquire(&router, k, LockMode::Write, holder(1, 2), true).unwrap());
+        assert!(cache.get(k).is_none());
+    }
+
+    #[test]
+    fn paused_shard_bounces() {
+        let (router, svcs) = setup(1);
+        let k = LotusKey::compose(5, 5);
+        svcs[0].pause_shard(k.shard());
+        let err = svcs[0]
+            .try_acquire(&router, k, LockMode::Read, holder(0, 1), false)
+            .unwrap_err();
+        assert!(matches!(err, Error::WrongShardOwner { .. }));
+        svcs[0].resume_shard(k.shard());
+        assert!(svcs[0].try_acquire(&router, k, LockMode::Read, holder(0, 1), false).unwrap());
+    }
+
+    #[test]
+    fn release_all_of_cn_frees_everything() {
+        let (router, svcs) = setup(1);
+        for i in 0..20 {
+            let k = LotusKey::compose(i, i);
+            let h = holder((i % 2) as usize, i);
+            svcs[0].try_acquire(&router, k, LockMode::Write, h, false).unwrap();
+        }
+        assert_eq!(svcs[0].held_slots(), 20);
+        let txns = svcs[0].release_all_of_cn(1);
+        assert_eq!(txns.len(), 10);
+        assert_eq!(svcs[0].held_slots(), 10);
+        svcs[0].release_all_of_cn(0);
+        assert_eq!(svcs[0].held_slots(), 0);
+    }
+
+    #[test]
+    fn force_release_shard_returns_txns() {
+        let (router, svcs) = setup(1);
+        let k1 = LotusKey::compose(7, 1);
+        let k2 = LotusKey::compose(7, 2);
+        let k3 = LotusKey::compose(8, 3);
+        svcs[0].try_acquire(&router, k1, LockMode::Write, holder(0, 11), false).unwrap();
+        svcs[0].try_acquire(&router, k2, LockMode::Read, holder(0, 12), false).unwrap();
+        svcs[0].try_acquire(&router, k3, LockMode::Write, holder(0, 13), false).unwrap();
+        let txns = svcs[0].force_release_shard(7);
+        assert_eq!(txns, vec![11, 12]);
+        assert_eq!(svcs[0].held_slots(), 1); // k3 survives
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let (router, svcs) = setup(1);
+        let k = LotusKey::compose(1, 1);
+        svcs[0].try_acquire(&router, k, LockMode::Write, holder(0, 1), false).unwrap();
+        svcs[0].pause_shard(2);
+        svcs[0].clear();
+        assert_eq!(svcs[0].held_slots(), 0);
+        assert!(!svcs[0].is_paused(2));
+        assert!(svcs[0].try_acquire(&router, k, LockMode::Write, holder(0, 9), false).unwrap());
+    }
+}

@@ -1,0 +1,408 @@
+//! The fixed-length lock hash table (paper fig. 6 + Algorithm 1).
+//!
+//! Each slot is 8 bytes: a 7-byte (56-bit) key fingerprint and a 1-byte
+//! counter. Counter encoding (paper 4.1):
+//!
+//! - `0`   — free (the whole slot is zero; unlock clears freed slots so a
+//!           write-lock CAS can always compare against 0);
+//! - `1`   — write-locked;
+//! - even `>= 2` — read-locked by counter/2 readers.
+//!
+//! Every 8 slots form a *lock bucket*; a key hashes to exactly one bucket
+//! (no probing — if the bucket is full the acquisition fails and the
+//! transaction aborts, a deliberate paper design point). Two keys with
+//! equal bucket + fingerprint alias to the same lock; with 56-bit
+//! fingerprints this is vanishingly rare and merely over-serializes.
+//!
+//! All mutation is CAS on the slot word, exactly the instruction the
+//! paper uses on CN CPUs after disaggregating locks away from MN RNICs.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::sharding::key::LotusKey;
+use crate::{Error, Result};
+
+/// Slots per bucket (paper: "every 8 slots form a lock bucket").
+pub const SLOTS_PER_BUCKET: usize = 8;
+/// Max readers per slot: counter is 1 byte, even values => 127 readers.
+pub const MAX_READERS: u8 = 126; // counter 252; +2 would overflow at 254
+
+const COUNTER_MASK: u64 = 0xFF;
+const WRITE_LOCKED: u64 = 1;
+
+/// Lock mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LockMode {
+    /// Shared (read) lock.
+    Read,
+    /// Exclusive (write) lock.
+    Write,
+}
+
+#[inline]
+fn pack(fp56: u64, counter: u64) -> u64 {
+    (fp56 << 8) | counter
+}
+
+#[inline]
+fn slot_fp(slot: u64) -> u64 {
+    slot >> 8
+}
+
+#[inline]
+fn slot_counter(slot: u64) -> u64 {
+    slot & COUNTER_MASK
+}
+
+/// A CN's lock table.
+pub struct LockTable {
+    slots: Vec<AtomicU64>,
+    n_buckets: u32,
+}
+
+/// Outcome of a lock attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AcquireOutcome {
+    /// Lock acquired.
+    Acquired,
+    /// Conflicting lock held (read-write / write-write / reader overflow).
+    Conflict,
+}
+
+impl LockTable {
+    /// Table with `n_buckets` buckets (8 slots each, 8B per slot).
+    /// A 32 MB table (paper default) is `n_buckets = 512 * 1024`.
+    pub fn new(n_buckets: u32) -> Self {
+        assert!(n_buckets > 0);
+        Self {
+            slots: (0..n_buckets as usize * SLOTS_PER_BUCKET)
+                .map(|_| AtomicU64::new(0))
+                .collect(),
+            n_buckets,
+        }
+    }
+
+    /// Table sized to approximately `bytes` of slot memory.
+    pub fn with_capacity_bytes(bytes: usize) -> Self {
+        let buckets = (bytes / (SLOTS_PER_BUCKET * 8)).max(1);
+        Self::new(buckets as u32)
+    }
+
+    /// Slot memory footprint in bytes.
+    pub fn mem_bytes(&self) -> usize {
+        self.slots.len() * 8
+    }
+
+    /// Number of buckets.
+    pub fn n_buckets(&self) -> u32 {
+        self.n_buckets
+    }
+
+    #[inline]
+    fn bucket_range(&self, key: LotusKey) -> std::ops::Range<usize> {
+        let b = key.lock_bucket(self.n_buckets) as usize;
+        let start = b * SLOTS_PER_BUCKET;
+        start..start + SLOTS_PER_BUCKET
+    }
+
+    /// Algorithm 1 core: try to acquire `mode` on `key`. Returns
+    /// `Conflict` for lock conflicts, `Err(LockBucketFull)` when the
+    /// bucket has no slot for this fingerprint.
+    pub fn acquire(&self, key: LotusKey, mode: LockMode) -> Result<AcquireOutcome> {
+        let fp = key.fingerprint56();
+        let range = self.bucket_range(key);
+        'retry: loop {
+            // FINDMATCH: first matching-fingerprint slot, else first empty.
+            let mut empty: Option<usize> = None;
+            let mut matched: Option<(usize, u64)> = None;
+            for i in range.clone() {
+                let v = self.slots[i].load(Ordering::Acquire);
+                if v == 0 {
+                    if empty.is_none() {
+                        empty = Some(i);
+                    }
+                } else if slot_fp(v) == fp {
+                    matched = Some((i, v));
+                    break;
+                }
+            }
+            let (idx, cur) = match (matched, empty) {
+                (Some(m), _) => m,
+                (None, Some(e)) => (e, 0),
+                (None, None) => return Err(Error::LockBucketFull),
+            };
+            let counter = slot_counter(cur);
+            let new = match mode {
+                LockMode::Write => {
+                    if cur != 0 {
+                        // Any existing holder conflicts with a writer.
+                        return Ok(AcquireOutcome::Conflict);
+                    }
+                    pack(fp, WRITE_LOCKED)
+                }
+                LockMode::Read => {
+                    if counter == WRITE_LOCKED {
+                        return Ok(AcquireOutcome::Conflict);
+                    }
+                    if counter >= (MAX_READERS as u64) * 2 {
+                        // Counter would overflow — treated as a conflict.
+                        return Ok(AcquireOutcome::Conflict);
+                    }
+                    pack(fp, counter + 2)
+                }
+            };
+            match self.slots[idx].compare_exchange(cur, new, Ordering::AcqRel, Ordering::Acquire) {
+                Ok(_) => return Ok(AcquireOutcome::Acquired),
+                // Slot changed under us (another coordinator on this CN or
+                // an RPC-handled remote request): recompute — the state may
+                // still be compatible (e.g. another reader arrived).
+                Err(_) => continue 'retry,
+            }
+        }
+    }
+
+    /// Release a lock previously acquired with `mode`. Clears the slot
+    /// when the last holder leaves so future write CAS can compare 0.
+    pub fn release(&self, key: LotusKey, mode: LockMode) {
+        let fp = key.fingerprint56();
+        let range = self.bucket_range(key);
+        loop {
+            let mut found: Option<(usize, u64)> = None;
+            for i in range.clone() {
+                let v = self.slots[i].load(Ordering::Acquire);
+                if v != 0 && slot_fp(v) == fp {
+                    found = Some((i, v));
+                    break;
+                }
+            }
+            let Some((idx, cur)) = found else {
+                // Already released (idempotent unlock during recovery).
+                return;
+            };
+            let counter = slot_counter(cur);
+            let new = match mode {
+                LockMode::Write => 0,
+                LockMode::Read => {
+                    let c = counter.saturating_sub(2);
+                    if c == 0 {
+                        0
+                    } else {
+                        pack(fp, c)
+                    }
+                }
+            };
+            if self.slots[idx]
+                .compare_exchange(cur, new, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return;
+            }
+        }
+    }
+
+    /// Inspect a key's lock: `None` if unlocked, else the raw counter.
+    pub fn peek(&self, key: LotusKey) -> Option<u64> {
+        let fp = key.fingerprint56();
+        for i in self.bucket_range(key) {
+            let v = self.slots[i].load(Ordering::Acquire);
+            if v != 0 && slot_fp(v) == fp {
+                return Some(slot_counter(v));
+            }
+        }
+        None
+    }
+
+    /// Clear the entire table (used when a restarted CN starts empty —
+    /// the lock-rebuild-free recovery path).
+    pub fn clear(&self) {
+        for s in &self.slots {
+            s.store(0, Ordering::Release);
+        }
+    }
+
+    /// Count of currently held slots (diagnostics).
+    pub fn held_slots(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| s.load(Ordering::Relaxed) != 0)
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn key(i: u64) -> LotusKey {
+        LotusKey::compose(i, i)
+    }
+
+    #[test]
+    fn write_lock_excludes_everyone() {
+        let t = LockTable::new(64);
+        assert_eq!(t.acquire(key(1), LockMode::Write).unwrap(), AcquireOutcome::Acquired);
+        assert_eq!(t.acquire(key(1), LockMode::Write).unwrap(), AcquireOutcome::Conflict);
+        assert_eq!(t.acquire(key(1), LockMode::Read).unwrap(), AcquireOutcome::Conflict);
+        t.release(key(1), LockMode::Write);
+        assert_eq!(t.acquire(key(1), LockMode::Read).unwrap(), AcquireOutcome::Acquired);
+    }
+
+    #[test]
+    fn read_locks_share() {
+        let t = LockTable::new(64);
+        for _ in 0..10 {
+            assert_eq!(t.acquire(key(2), LockMode::Read).unwrap(), AcquireOutcome::Acquired);
+        }
+        assert_eq!(t.peek(key(2)), Some(20)); // 10 readers * 2
+        // Writer blocked while readers hold.
+        assert_eq!(t.acquire(key(2), LockMode::Write).unwrap(), AcquireOutcome::Conflict);
+        for _ in 0..10 {
+            t.release(key(2), LockMode::Read);
+        }
+        assert_eq!(t.peek(key(2)), None);
+        assert_eq!(t.acquire(key(2), LockMode::Write).unwrap(), AcquireOutcome::Acquired);
+    }
+
+    #[test]
+    fn reader_overflow_is_conflict() {
+        let t = LockTable::new(64);
+        for _ in 0..MAX_READERS {
+            assert_eq!(t.acquire(key(3), LockMode::Read).unwrap(), AcquireOutcome::Acquired);
+        }
+        assert_eq!(t.acquire(key(3), LockMode::Read).unwrap(), AcquireOutcome::Conflict);
+    }
+
+    #[test]
+    fn bucket_full_fails() {
+        let t = LockTable::new(1); // single bucket, 8 slots
+        let mut locked = 0;
+        let mut full = false;
+        for i in 0..100 {
+            match t.acquire(key(i), LockMode::Write) {
+                Ok(AcquireOutcome::Acquired) => locked += 1,
+                Ok(AcquireOutcome::Conflict) => {}
+                Err(Error::LockBucketFull) => {
+                    full = true;
+                    break;
+                }
+                Err(e) => panic!("{e}"),
+            }
+        }
+        assert_eq!(locked, SLOTS_PER_BUCKET);
+        assert!(full);
+    }
+
+    #[test]
+    fn release_clears_slot_for_reuse() {
+        let t = LockTable::new(1);
+        // Fill the bucket, release everything, refill with new keys.
+        let first: Vec<u64> = (0..8).collect();
+        for &i in &first {
+            t.acquire(key(i), LockMode::Write).unwrap();
+        }
+        for &i in &first {
+            t.release(key(i), LockMode::Write);
+        }
+        assert_eq!(t.held_slots(), 0);
+        for i in 100..108 {
+            assert_eq!(t.acquire(key(i), LockMode::Write).unwrap(), AcquireOutcome::Acquired);
+        }
+    }
+
+    #[test]
+    fn release_unheld_is_idempotent() {
+        let t = LockTable::new(16);
+        t.release(key(9), LockMode::Write); // no-op
+        t.release(key(9), LockMode::Read);
+        assert_eq!(t.peek(key(9)), None);
+    }
+
+    #[test]
+    fn concurrent_writers_one_winner() {
+        let t = Arc::new(LockTable::new(256));
+        let k = key(42);
+        let threads: Vec<_> = (0..16)
+            .map(|_| {
+                let t = t.clone();
+                std::thread::spawn(move || {
+                    matches!(t.acquire(k, LockMode::Write).unwrap(), AcquireOutcome::Acquired)
+                })
+            })
+            .collect();
+        let wins: usize = threads.into_iter().map(|h| h.join().unwrap()).filter(|&w| w).count();
+        assert_eq!(wins, 1, "exactly one writer must win");
+    }
+
+    #[test]
+    fn concurrent_readers_all_win_then_counter_returns_to_zero() {
+        let t = Arc::new(LockTable::new(256));
+        let k = key(43);
+        let threads: Vec<_> = (0..32)
+            .map(|_| {
+                let t = t.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        while !matches!(
+                            t.acquire(k, LockMode::Read).unwrap(),
+                            AcquireOutcome::Acquired
+                        ) {
+                            std::hint::spin_loop();
+                        }
+                        t.release(k, LockMode::Read);
+                    }
+                })
+            })
+            .collect();
+        for h in threads {
+            h.join().unwrap();
+        }
+        assert_eq!(t.peek(k), None, "counter must return to zero");
+    }
+
+    #[test]
+    fn prop_lock_counter_algebra() {
+        // Random acquire/release sequences: the table's counter always
+        // equals 2*readers (or 1 for a writer), and never goes negative.
+        crate::testing::prop(50, |g| {
+            let t = LockTable::new(4);
+            let k = key(g.u64(0, 3));
+            let mut readers = 0u64;
+            let mut writer = false;
+            for _ in 0..g.usize(1, 200) {
+                if g.bool(0.5) {
+                    // try acquire
+                    let mode = if g.bool(0.3) { LockMode::Write } else { LockMode::Read };
+                    match t.acquire(k, mode) {
+                        Ok(AcquireOutcome::Acquired) => match mode {
+                            LockMode::Write => {
+                                assert!(!writer && readers == 0);
+                                writer = true;
+                            }
+                            LockMode::Read => {
+                                assert!(!writer);
+                                readers += 1;
+                            }
+                        },
+                        Ok(AcquireOutcome::Conflict) => match mode {
+                            LockMode::Write => assert!(writer || readers > 0),
+                            LockMode::Read => assert!(writer || readers >= MAX_READERS as u64),
+                        },
+                        Err(_) => {}
+                    }
+                } else {
+                    // release if held
+                    if writer {
+                        t.release(k, LockMode::Write);
+                        writer = false;
+                    } else if readers > 0 {
+                        t.release(k, LockMode::Read);
+                        readers -= 1;
+                    }
+                }
+                let expect = if writer { Some(1) } else if readers > 0 { Some(readers * 2) } else { None };
+                assert_eq!(t.peek(k), expect);
+            }
+        });
+    }
+}

@@ -1,0 +1,210 @@
+//! `lotus` — the cluster launcher / benchmark CLI.
+//!
+//! ```text
+//! lotus run      --system lotus --workload smallbank [--set k=v ...]
+//! lotus compare  --workload tatp [--systems lotus,motor,ford]
+//! lotus recovery [--crash-cns 3] [--at-ms 20]
+//! lotus info
+//! ```
+//!
+//! `--set key=value` overrides any [`lotus::config::Config`] field
+//! (repeatable); `--config path` loads a `key = value` file first.
+
+use std::process::ExitCode;
+
+use lotus::config::{Config, SystemKind};
+use lotus::metrics::RunReport;
+use lotus::sim::{Cluster, CrashEvent};
+use lotus::workloads::WorkloadKind;
+
+fn usage() -> &'static str {
+    "usage:\n  lotus run --system <lotus|motor|ford|motor-nocas|ford-nocas|ideal-lock> \\\n            --workload <kvs|smallbank|tatp|tpcc> [--config FILE] [--set k=v ...]\n  lotus compare --workload <w> [--systems a,b,c] [--config FILE] [--set k=v ...]\n  lotus recovery [--crash-cns N] [--at-ms T] [--config FILE] [--set k=v ...]\n  lotus info"
+}
+
+struct Args {
+    cmd: String,
+    system: String,
+    systems: Option<String>,
+    workload: String,
+    crash_cns: usize,
+    at_ms: u64,
+    config: Option<String>,
+    sets: Vec<(String, String)>,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut argv = std::env::args().skip(1);
+    let cmd = argv.next().ok_or_else(|| usage().to_string())?;
+    let mut args = Args {
+        cmd,
+        system: "lotus".into(),
+        systems: None,
+        workload: "smallbank".into(),
+        crash_cns: 3,
+        at_ms: 20,
+        config: None,
+        sets: Vec::new(),
+    };
+    while let Some(flag) = argv.next() {
+        let mut need = |name: &str| -> Result<String, String> {
+            argv.next().ok_or(format!("{name} needs a value"))
+        };
+        match flag.as_str() {
+            "--system" => args.system = need("--system")?,
+            "--systems" => args.systems = Some(need("--systems")?),
+            "--workload" => args.workload = need("--workload")?,
+            "--crash-cns" => {
+                args.crash_cns = need("--crash-cns")?
+                    .parse()
+                    .map_err(|_| "--crash-cns: not a number".to_string())?
+            }
+            "--at-ms" => {
+                args.at_ms = need("--at-ms")?
+                    .parse()
+                    .map_err(|_| "--at-ms: not a number".to_string())?
+            }
+            "--config" => args.config = Some(need("--config")?),
+            "--set" => {
+                let kv = need("--set")?;
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| "--set expects key=value".to_string())?;
+                args.sets.push((k.trim().into(), v.trim().into()));
+            }
+            other => return Err(format!("unknown flag '{other}'\n{}", usage())),
+        }
+    }
+    Ok(args)
+}
+
+fn build_config(args: &Args) -> Result<Config, lotus::Error> {
+    let mut cfg = Config::paper();
+    if let Some(path) = &args.config {
+        let text = std::fs::read_to_string(path)?;
+        cfg.load_overrides(&text)?;
+    }
+    for (k, v) in &args.sets {
+        cfg.set(k, v)?;
+    }
+    cfg.validate()
+}
+
+fn print_report(label: &str, r: &RunReport) {
+    println!(
+        "{label:<14} {:>9.3} Mtxn/s  p50 {:>7} us  p99 {:>7} us  abort {:>5.1}%  ({} commits)",
+        r.mtps(),
+        r.p50_us(),
+        r.p99_us(),
+        r.abort_rate() * 100.0,
+        r.commits
+    );
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return ExitCode::from(2);
+        }
+    };
+    match run(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(args: &Args) -> lotus::Result<()> {
+    match args.cmd.as_str() {
+        "run" => {
+            let cfg = build_config(args)?;
+            let system = SystemKind::parse(&args.system)?;
+            let kind = WorkloadKind::parse(&args.workload)?;
+            eprintln!(
+                "building {} cluster: {} MNs, {} CNs x {} coordinators ...",
+                kind.name(),
+                cfg.n_mns,
+                cfg.n_cns,
+                cfg.coordinators_per_cn
+            );
+            let cluster = Cluster::build(&cfg, kind)?;
+            eprintln!("running {} for {} ms virtual ...", system.name(), cfg.duration_ns / 1_000_000);
+            let report = cluster.run(system)?;
+            print_report(system.name(), &report);
+            for (reason, n) in &report.abort_reasons {
+                println!("  abort[{reason}] = {n}");
+            }
+            Ok(())
+        }
+        "compare" => {
+            let cfg = build_config(args)?;
+            let kind = WorkloadKind::parse(&args.workload)?;
+            let list = args
+                .systems
+                .clone()
+                .unwrap_or_else(|| "lotus,motor,ford".into());
+            let systems: Vec<SystemKind> = list
+                .split(',')
+                .map(SystemKind::parse)
+                .collect::<lotus::Result<_>>()?;
+            eprintln!("building {} cluster ...", kind.name());
+            let cluster = Cluster::build(&cfg, kind)?;
+            for system in systems {
+                let report = cluster.run(system)?;
+                print_report(system.name(), &report);
+            }
+            Ok(())
+        }
+        "recovery" => {
+            let mut cfg = build_config(args)?;
+            if cfg.timeline_interval_ns == 0 {
+                cfg.timeline_interval_ns = 1_000_000;
+            }
+            let cluster = Cluster::build(&cfg, WorkloadKind::SmallBank)?;
+            let cns: Vec<usize> = (0..args.crash_cns.min(cfg.n_cns - 1)).collect();
+            eprintln!(
+                "crashing CNs {:?} at {} ms; duration {} ms",
+                cns,
+                args.at_ms,
+                cfg.duration_ns / 1_000_000
+            );
+            let report = cluster.run_with_events(
+                SystemKind::Lotus,
+                &[CrashEvent {
+                    at_ns: args.at_ms * 1_000_000,
+                    cns,
+                }],
+            )?;
+            print_report("lotus", &report);
+            println!("timeline (Mtxn/s per {} ms):", report.timeline_interval_ns / 1_000_000);
+            for (i, c) in report.timeline.iter().enumerate() {
+                let mtps = *c as f64 / (report.timeline_interval_ns as f64 / 1e9) / 1e6;
+                println!("  {:>4} ms  {:>8.3}", i as u64 * report.timeline_interval_ns / 1_000_000, mtps);
+            }
+            Ok(())
+        }
+        "info" => {
+            println!("lotus {} — disaggregated transactions with disaggregated locks", env!("CARGO_PKG_VERSION"));
+            let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+            match lotus::runtime::Manifest::load(dir.join("manifest.json")) {
+                Ok(m) => println!(
+                    "artifacts: rebalance {}x{} ({}), shard_hash batch {} ({})",
+                    m.n_cns, m.n_shards, m.rebalance_file, m.hash_batch, m.shard_hash_file
+                ),
+                Err(e) => println!("artifacts: not built ({e}); run `make artifacts`"),
+            }
+            match lotus::runtime::XlaRuntime::cpu() {
+                Ok(rt) => println!("pjrt: {} client ready", rt.platform()),
+                Err(e) => println!("pjrt: unavailable ({e})"),
+            }
+            Ok(())
+        }
+        other => Err(lotus::Error::Config(format!(
+            "unknown command '{other}'\n{}",
+            usage()
+        ))),
+    }
+}

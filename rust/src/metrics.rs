@@ -1,0 +1,325 @@
+//! Metrics: latency histograms, throughput accounting, abort counters.
+//!
+//! Latencies are recorded in **virtual nanoseconds** (see [`crate::dm::clock`]).
+//! The histogram uses log-linear buckets (HdrHistogram-style: 64 major
+//! log2 buckets x 32 linear sub-buckets) giving <= ~3% relative error,
+//! plenty for P50/P99 reporting.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::AbortReason;
+
+const SUB_BITS: u32 = 5; // 32 sub-buckets per power of two
+const SUB: usize = 1 << SUB_BITS;
+const MAJORS: usize = 64 - SUB_BITS as usize;
+const BUCKETS: usize = MAJORS * SUB;
+
+/// Lock-free log-linear latency histogram (values in ns).
+pub struct Histogram {
+    counts: Vec<AtomicU64>,
+    total: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Self {
+            counts: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            total: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn index(value: u64) -> usize {
+        let v = value.max(1);
+        let major = (63 - v.leading_zeros()) as usize;
+        if major < SUB_BITS as usize {
+            // Small values land in the first linear region.
+            return v as usize;
+        }
+        let sub = ((v >> (major - SUB_BITS as usize)) & (SUB as u64 - 1)) as usize;
+        ((major - SUB_BITS as usize) * SUB + sub).min(BUCKETS - 1)
+    }
+
+    /// Bucket lower bound for an index (inverse of `index`, approximate).
+    fn bucket_value(idx: usize) -> u64 {
+        if idx < SUB {
+            return idx as u64;
+        }
+        let major = idx / SUB + SUB_BITS as usize;
+        let sub = (idx % SUB) as u64;
+        (1u64 << major) + (sub << (major - SUB_BITS as usize))
+    }
+
+    /// Record one value (ns).
+    #[inline]
+    pub fn record(&self, value: u64) {
+        self.counts[Self::index(value)].fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(value, Ordering::Relaxed);
+        self.max.fetch_max(value, Ordering::Relaxed);
+    }
+
+    /// Number of recorded values.
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// Mean (ns), 0 if empty.
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Maximum recorded value (ns).
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Value at quantile `q` in [0, 1]. Returns 0 if empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = ((n as f64) * q).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c.load(Ordering::Relaxed);
+            if acc >= target {
+                return Self::bucket_value(i);
+            }
+        }
+        self.max()
+    }
+
+    /// P50 in ns.
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    /// P99 in ns.
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&self, other: &Histogram) {
+        for (a, b) in self.counts.iter().zip(other.counts.iter()) {
+            a.fetch_add(b.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.total
+            .fetch_add(other.total.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum
+            .fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max
+            .fetch_max(other.max.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Reset all counters.
+    pub fn reset(&self) {
+        for c in &self.counts {
+            c.store(0, Ordering::Relaxed);
+        }
+        self.total.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Aggregated result of one benchmark run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Committed transactions.
+    pub commits: u64,
+    /// Aborted transaction *attempts* (a txn retried N times counts N).
+    pub aborts: u64,
+    /// Virtual duration of the run (ns).
+    pub duration_ns: u64,
+    /// Commit latency percentiles (ns).
+    pub p50_ns: u64,
+    /// 99th percentile commit latency (ns).
+    pub p99_ns: u64,
+    /// Mean commit latency (ns).
+    pub mean_ns: f64,
+    /// Abort breakdown.
+    pub abort_reasons: HashMap<String, u64>,
+    /// Per-interval committed counts (for recovery timelines), interval ns.
+    pub timeline: Vec<u64>,
+    /// Timeline sampling interval (ns); 0 if no timeline.
+    pub timeline_interval_ns: u64,
+}
+
+impl RunReport {
+    /// Throughput in million transactions per second (virtual time).
+    pub fn mtps(&self) -> f64 {
+        if self.duration_ns == 0 {
+            return 0.0;
+        }
+        self.commits as f64 / (self.duration_ns as f64 / 1e9) / 1e6
+    }
+
+    /// Abort rate: aborted attempts / all attempts.
+    pub fn abort_rate(&self) -> f64 {
+        let attempts = self.commits + self.aborts;
+        if attempts == 0 {
+            0.0
+        } else {
+            self.aborts as f64 / attempts as f64
+        }
+    }
+
+    /// P50 latency in microseconds.
+    pub fn p50_us(&self) -> u64 {
+        self.p50_ns / 1000
+    }
+
+    /// P99 latency in microseconds.
+    pub fn p99_us(&self) -> u64 {
+        self.p99_ns / 1000
+    }
+}
+
+/// Per-coordinator counters folded into a [`RunReport`].
+#[derive(Default)]
+pub struct TxnStats {
+    /// Committed count.
+    pub commits: AtomicU64,
+    /// Aborted attempts.
+    pub aborts: AtomicU64,
+    /// Abort reasons.
+    pub reasons: std::sync::Mutex<HashMap<AbortReason, u64>>,
+}
+
+impl TxnStats {
+    /// Record a commit.
+    pub fn commit(&self) {
+        self.commits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record an abort attempt with its reason.
+    pub fn abort(&self, reason: AbortReason) {
+        self.aborts.fetch_add(1, Ordering::Relaxed);
+        *self.reasons.lock().unwrap().entry(reason).or_insert(0) += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_empty() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p50(), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn histogram_single_value() {
+        let h = Histogram::new();
+        h.record(1000);
+        assert_eq!(h.count(), 1);
+        let p50 = h.p50();
+        assert!((968..=1032).contains(&p50), "p50={p50}");
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = Histogram::new();
+        for i in 1..=10_000u64 {
+            h.record(i);
+        }
+        let p50 = h.p50();
+        let p90 = h.quantile(0.90);
+        let p99 = h.p99();
+        assert!(p50 <= p90 && p90 <= p99, "{p50} {p90} {p99}");
+        // ~3% relative error bound
+        assert!((4800..=5300).contains(&p50), "p50={p50}");
+        assert!((9500..=10200).contains(&p99), "p99={p99}");
+    }
+
+    #[test]
+    fn histogram_small_values_exact() {
+        let h = Histogram::new();
+        for v in [0u64, 1, 2, 3, 7, 15, 31] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 7);
+        assert_eq!(h.max(), 31);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        for i in 0..500 {
+            a.record(i);
+        }
+        for i in 500..1000 {
+            b.record(i);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 1000);
+        let p50 = a.p50();
+        assert!((450..=560).contains(&p50), "p50={p50}");
+    }
+
+    #[test]
+    fn histogram_huge_values() {
+        let h = Histogram::new();
+        h.record(u64::MAX);
+        h.record(u64::MAX / 2);
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(1.0) > 1u64 << 60);
+    }
+
+    #[test]
+    fn report_mtps() {
+        let r = RunReport {
+            commits: 1_000_000,
+            aborts: 0,
+            duration_ns: 1_000_000_000,
+            p50_ns: 0,
+            p99_ns: 0,
+            mean_ns: 0.0,
+            abort_reasons: HashMap::new(),
+            timeline: vec![],
+            timeline_interval_ns: 0,
+        };
+        assert!((r.mtps() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prop_quantile_monotone() {
+        crate::testing::prop(30, |g| {
+            let h = Histogram::new();
+            let n = g.usize(1, 2000);
+            for _ in 0..n {
+                h.record(g.u64(0, 1_000_000));
+            }
+            let mut last = 0;
+            for q in [0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0] {
+                let v = h.quantile(q);
+                assert!(v >= last, "quantile not monotone");
+                last = v;
+            }
+        });
+    }
+}

@@ -1,0 +1,148 @@
+//! Lease-based membership service (paper section 6).
+//!
+//! The paper employs "a lease-based membership service [25, 31] to detect
+//! node failures". In the simulator, failure *injection* flips a node to
+//! `Failed` and failure *detection* is the lease expiry: queries made
+//! within `lease_ns` of the failure still see the node as alive, modelling
+//! the detection delay that shapes the fig. 15 recovery timeline.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A CN's membership state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeState {
+    /// Serving.
+    Alive,
+    /// Fail-stopped (lease may not have expired yet).
+    Failed,
+    /// Recovering: lock table cleared, not yet serving.
+    Restarting,
+}
+
+const ST_ALIVE: u64 = 0;
+const ST_FAILED: u64 = 1;
+const ST_RESTARTING: u64 = 2;
+
+struct Node {
+    state: AtomicU64,
+    /// Virtual time of the last state change.
+    since: AtomicU64,
+    /// Incarnation (bumps on every restart).
+    epoch: AtomicU64,
+}
+
+/// Cluster membership registry.
+pub struct Membership {
+    nodes: Vec<Node>,
+    lease_ns: u64,
+}
+
+impl Membership {
+    /// Registry for `n_cns` CNs with the given lease duration.
+    pub fn new(n_cns: usize, lease_ns: u64) -> Self {
+        Self {
+            nodes: (0..n_cns)
+                .map(|_| Node {
+                    state: AtomicU64::new(ST_ALIVE),
+                    since: AtomicU64::new(0),
+                    epoch: AtomicU64::new(0),
+                })
+                .collect(),
+            lease_ns,
+        }
+    }
+
+    /// Number of registered CNs.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Is the registry empty?
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Inject a fail-stop failure at virtual time `now`.
+    pub fn fail(&self, cn: usize, now: u64) {
+        self.nodes[cn].state.store(ST_FAILED, Ordering::Release);
+        self.nodes[cn].since.store(now, Ordering::Release);
+    }
+
+    /// Begin restart (recovery cleared the node's state) at `now`.
+    pub fn begin_restart(&self, cn: usize, now: u64) {
+        self.nodes[cn].state.store(ST_RESTARTING, Ordering::Release);
+        self.nodes[cn].since.store(now, Ordering::Release);
+    }
+
+    /// Complete restart: the node serves again with a new incarnation.
+    pub fn complete_restart(&self, cn: usize, now: u64) {
+        self.nodes[cn].epoch.fetch_add(1, Ordering::AcqRel);
+        self.nodes[cn].state.store(ST_ALIVE, Ordering::Release);
+        self.nodes[cn].since.store(now, Ordering::Release);
+    }
+
+    /// Raw state (no lease semantics).
+    pub fn state(&self, cn: usize) -> NodeState {
+        match self.nodes[cn].state.load(Ordering::Acquire) {
+            ST_ALIVE => NodeState::Alive,
+            ST_FAILED => NodeState::Failed,
+            _ => NodeState::Restarting,
+        }
+    }
+
+    /// Node incarnation.
+    pub fn epoch(&self, cn: usize) -> u64 {
+        self.nodes[cn].epoch.load(Ordering::Acquire)
+    }
+
+    /// Failure *detected* at `now`? True once the lease has expired.
+    pub fn detected_failed(&self, cn: usize, now: u64) -> bool {
+        self.state(cn) == NodeState::Failed
+            && now >= self.nodes[cn].since.load(Ordering::Acquire) + self.lease_ns
+    }
+
+    /// Is the node serving (alive from the observer's perspective)?
+    pub fn is_serving(&self, cn: usize) -> bool {
+        self.state(cn) == NodeState::Alive
+    }
+
+    /// All CNs whose failure is detected at `now`.
+    pub fn failed_at(&self, now: u64) -> Vec<usize> {
+        (0..self.nodes.len())
+            .filter(|&cn| self.detected_failed(cn, now))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle() {
+        let m = Membership::new(3, 1_000);
+        assert!(m.is_serving(1));
+        m.fail(1, 5_000);
+        assert_eq!(m.state(1), NodeState::Failed);
+        // Lease not expired: not yet detected.
+        assert!(!m.detected_failed(1, 5_500));
+        assert!(m.detected_failed(1, 6_000));
+        assert_eq!(m.failed_at(10_000), vec![1]);
+        m.begin_restart(1, 10_000);
+        assert_eq!(m.state(1), NodeState::Restarting);
+        assert!(!m.is_serving(1));
+        let e0 = m.epoch(1);
+        m.complete_restart(1, 11_000);
+        assert!(m.is_serving(1));
+        assert_eq!(m.epoch(1), e0 + 1);
+    }
+
+    #[test]
+    fn multiple_failures_detected_independently() {
+        let m = Membership::new(4, 100);
+        m.fail(0, 0);
+        m.fail(2, 50);
+        assert_eq!(m.failed_at(100), vec![0]);
+        assert_eq!(m.failed_at(150), vec![0, 2]);
+    }
+}

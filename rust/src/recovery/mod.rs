@@ -1,0 +1,24 @@
+//! CN fault tolerance (paper section 6).
+//!
+//! LOTUS treats locks as **ephemeral**: a failed CN's lock table is never
+//! reconstructed. Recovery decomposes into independent tasks running on
+//! surviving CNs:
+//!
+//! 1. *Transaction recovery* — scan the failed CN's commit logs in the
+//!    memory pool; transactions whose new versions are all visible
+//!    complete, all others roll back (their INVISIBLE cells are
+//!    invalidated, old versions serve as undo logs).
+//! 2. *Lock cleanup* — surviving CNs release every lock held by the
+//!    failed CN; transactions (from surviving CNs) whose locks lived *on*
+//!    the failed CN are doomed unless already in their commit phase.
+//! 3. *Restart* — the CN comes back with an **empty** lock table
+//!    (lock-rebuild-free) and empty caches.
+//!
+//! [`membership`] provides the lease-based failure detector the paper
+//! assumes; [`recovery`] implements the procedure.
+
+pub mod membership;
+pub mod recovery;
+
+pub use membership::{Membership, NodeState};
+pub use recovery::{recover_cn_failure, RecoveryReport};

@@ -1,0 +1,371 @@
+//! Lock-rebuild-free recovery of CN failures (paper section 6).
+//!
+//! Runs on a *surviving* coordinator (recovery "proceeds independently of
+//! CN recovery" and "does not depend on the CN's restart"); every memory
+//! access is charged to that coordinator's virtual clock so the fig. 15
+//! timeline reflects real recovery cost.
+
+use crate::dm::clock::VClock;
+use crate::dm::verbs::{Endpoint, VerbOp};
+use crate::store::cvt::INVISIBLE;
+use crate::txn::coordinator::SharedCluster;
+use crate::txn::log::{slot_size, LogRecord, STATE_EMPTY};
+use crate::Result;
+
+/// Outcome of one recovery pass.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RecoveryReport {
+    /// Log slots scanned.
+    pub scanned_logs: usize,
+    /// In-flight commits completed (all versions already visible).
+    pub completed: usize,
+    /// In-flight commits rolled back (INVISIBLE versions invalidated).
+    pub rolled_back: usize,
+    /// Locks released on surviving CNs on behalf of the failed CNs.
+    pub released_locks: usize,
+    /// Surviving transactions doomed (their locks lived on a failed CN).
+    pub doomed_txns: usize,
+    /// Virtual time the pass took (ns).
+    pub duration_ns: u64,
+}
+
+/// Recover from the fail-stop failure of `failed` CNs.
+///
+/// `ep` / `clk` belong to the surviving coordinator executing the
+/// procedure. Concurrent failures are handled in one pass (the paper:
+/// recovery "decomposed into independent tasks ... handled in parallel").
+pub fn recover_cn_failure(
+    cluster: &SharedCluster,
+    failed: &[usize],
+    ep: &Endpoint,
+    clk: &mut VClock,
+) -> Result<RecoveryReport> {
+    let t0 = clk.now();
+    let mut report = RecoveryReport::default();
+
+    // --- 1. Transaction recovery: scan the failed CNs' commit logs. ---
+    let per_cn = cluster.cfg.coordinators_per_cn;
+    for &cn in failed {
+        for slot in 0..per_cn {
+            let gid = cn * per_cn + slot;
+            let (log_mn, log_addr) = cluster.log_slots[gid];
+            let mn = &cluster.mns[log_mn];
+            let buf = ep.read(mn, log_addr, slot_size() as usize, clk)?;
+            report.scanned_logs += 1;
+            let rec = LogRecord::parse(&buf);
+            if !rec.is_prepared() {
+                continue;
+            }
+            // Read the listed CVT cells' version words.
+            let mut visible = true;
+            for e in &rec.entries {
+                let v = ep.read_u64(&cluster.mns[e.mn as usize], e.cell_addr + 8, clk)?;
+                if v == INVISIBLE {
+                    visible = false;
+                }
+            }
+            if visible {
+                // Commit already took effect (past Write Visible): the
+                // transaction "continues its commit phase" — nothing is
+                // left but the unlock, handled by the lock cleanup below.
+                report.completed += 1;
+            } else {
+                // Not yet visible: abort. Invalidate the new cells (old
+                // versions are the undo log) on every replica.
+                for e in &rec.entries {
+                    let table = cluster.table(e.table);
+                    for r in 0..table.replicas.len() {
+                        let cell_addr = table.to_replica_addr(e.cell_addr, r);
+                        // Clear the `valid` byte (word 0 of the cell holds
+                        // head_cv|valid; writing 0 also resets the CV,
+                        // which is safe: the cell is invalid).
+                        let mut ops = [VerbOp::Write {
+                            addr: cell_addr,
+                            data: 0u64.to_le_bytes().to_vec(),
+                        }];
+                        ep.doorbell(&cluster.mns[table.replicas[r].mn], &mut ops, clk)?;
+                    }
+                }
+                report.rolled_back += 1;
+            }
+            // Clear the slot so a second recovery pass is a no-op.
+            let mut ops = [VerbOp::Write {
+                addr: log_addr,
+                data: STATE_EMPTY.to_le_bytes().to_vec(),
+            }];
+            ep.doorbell(mn, &mut ops, clk)?;
+        }
+    }
+
+    // --- 2. Lock cleanup on surviving CNs. ---
+    for (cn, svc) in cluster.lock_services.iter().enumerate() {
+        if failed.contains(&cn) {
+            continue;
+        }
+        for &f in failed {
+            let txns = svc.release_all_of_cn(f);
+            report.released_locks += txns.len();
+        }
+    }
+
+    // --- 3. Doom surviving transactions whose locks lived on failed CNs,
+    //        then wipe the failed lock tables (rebuild-free). ---
+    for &f in failed {
+        let svc = &cluster.lock_services[f];
+        let mut doomed = Vec::new();
+        for survivor_cn in 0..cluster.cfg.n_cns {
+            if failed.contains(&survivor_cn) {
+                continue;
+            }
+            doomed.extend(
+                svc.state()
+                    .held_by_cn(survivor_cn)
+                    .into_iter()
+                    .map(|(_, _, h)| h.txn),
+            );
+        }
+        doomed.sort_unstable();
+        doomed.dedup();
+        report.doomed_txns += doomed.len();
+        cluster.doomed.doom_all(doomed);
+        svc.clear();
+        cluster.vt_caches[f].clear();
+        cluster.addr_caches[f].clear();
+    }
+
+    report.duration_ns = clk.now() - t0;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::lock::table::LockMode;
+    use crate::sharding::key::LotusKey;
+    use crate::sim::Cluster;
+    use crate::store::index::TableSpec;
+    use crate::txn::api::{RecordRef, TxnApi};
+    use crate::txn::coordinator::LotusCoordinator;
+    use std::sync::Arc;
+
+    fn mini() -> (Arc<SharedCluster>, Vec<LotusCoordinator>) {
+        let mut cfg = Config::small();
+        cfg.n_cns = 3;
+        cfg.coordinators_per_cn = 2;
+        let specs = vec![TableSpec {
+            id: 0,
+            name: "t".into(),
+            record_len: 40,
+            ncells: 2,
+            assoc: 4,
+            expected_records: 16384,
+        }];
+        let cluster = Cluster::build_shared(&cfg, specs).unwrap();
+        for uid in 0..4096u64 {
+            cluster.tables[0]
+                .load_insert(
+                    &cluster.mns,
+                    LotusKey::compose(uid, uid),
+                    format!("v-{uid}").as_bytes(),
+                    1,
+                )
+                .unwrap();
+        }
+        let coords = (0..6)
+            .map(|g| LotusCoordinator::new(cluster.clone(), g / 2, g % 2, g))
+            .collect();
+        (cluster, coords)
+    }
+
+    fn recovery_ep(c: &Arc<SharedCluster>, cn: usize) -> (Endpoint, VClock) {
+        (
+            Endpoint::new(cn, c.cn_nics[cn].clone(), c.net.clone()),
+            VClock::zero(),
+        )
+    }
+
+    #[test]
+    fn clean_cluster_recovers_trivially() {
+        let (c, _coords) = mini();
+        let (ep, mut clk) = recovery_ep(&c, 1);
+        let rep = recover_cn_failure(&c, &[0], &ep, &mut clk).unwrap();
+        assert_eq!(rep.completed + rep.rolled_back, 0);
+        assert_eq!(rep.released_locks, 0);
+        assert!(rep.duration_ns > 0, "log scan must cost time");
+        assert_eq!(rep.scanned_logs, 2);
+    }
+
+    #[test]
+    fn failed_cn_locks_released_everywhere() {
+        let (c, mut coords) = mini();
+        // CN0's coordinator takes locks on keys spread over owners.
+        let co = &mut coords[0];
+        co.begin(false);
+        for uid in [1u64, 5, 9, 13, 21] {
+            co.txn().add_rw(RecordRef::new(0, LotusKey::compose(uid, uid)));
+        }
+        co.txn().execute().unwrap();
+        let held_before: usize = c.lock_services.iter().map(|s| s.held_slots()).sum();
+        assert!(held_before >= 5);
+        // CN0 dies mid-transaction.
+        let (ep, mut clk) = recovery_ep(&c, 1);
+        recover_cn_failure(&c, &[0], &ep, &mut clk).unwrap();
+        let held_after: usize = c.lock_services.iter().map(|s| s.held_slots()).sum();
+        assert_eq!(held_after, 0, "all of the failed CN's locks must be freed");
+    }
+
+    #[test]
+    fn survivor_with_locks_on_failed_cn_is_doomed() {
+        let (c, mut coords) = mini();
+        // A CN1 coordinator locks a key whose lock lives on CN2.
+        let uid = (0..4096u64)
+            .find(|&u| c.router.owner_of_key(LotusKey::compose(u, u)) == 2)
+            .unwrap();
+        let co = &mut coords[2]; // CN1, slot 0
+        assert_eq!(co.cn, 1);
+        co.begin(false);
+        co.txn().add_rw(RecordRef::new(0, LotusKey::compose(uid, uid)));
+        co.txn().execute().unwrap();
+        co.txn()
+            .stage_write(RecordRef::new(0, LotusKey::compose(uid, uid)), b"x".to_vec());
+        // CN2 fails; recovery dooms the CN1 transaction.
+        let (ep, mut clk) = recovery_ep(&c, 0);
+        let rep = recover_cn_failure(&c, &[2], &ep, &mut clk).unwrap();
+        assert_eq!(rep.doomed_txns, 1);
+        // The commit must now abort.
+        assert!(coords[2].txn().commit().is_err());
+    }
+
+    #[test]
+    fn prepared_log_with_invisible_cells_rolls_back() {
+        let (c, mut coords) = mini();
+        let key = LotusKey::compose(7, 7);
+        let r = RecordRef::new(0, key);
+        // Manually simulate a CN0 coordinator crashing between
+        // "Write Data & Log" and "Write Visible": run the writes by hand.
+        let co = &mut coords[0];
+        co.begin(false);
+        co.txn().add_rw(r);
+        co.txn().execute().unwrap();
+        co.txn().stage_write(r, b"halfway".to_vec());
+        // Cheat: write data + log exactly as commit would, then "crash".
+        // We reuse commit() but doom the txn right after the data write is
+        // impossible from outside, so instead craft the log directly:
+        let table = c.table(0);
+        let bucket = table.bucket_of(key);
+        let mut bucket_buf = vec![0u8; table.layout.bucket_size() as usize];
+        c.mns[table.primary().mn]
+            .read_bytes(table.bucket_addr(0, bucket), &mut bucket_buf)
+            .unwrap();
+        let (slot, cvt) = table.find_in_bucket(&bucket_buf, key).unwrap();
+        // Pick the free cell (ncells=2, only cell 0 used by the load).
+        let cell_idx = 1u8;
+        let cell_addr = table.cvt_addr(0, bucket, slot) + table.layout.cell_off(cell_idx);
+        let rec_addr = table.record_addr(0, bucket, slot, cell_idx);
+        for rr in 0..table.replicas.len() {
+            let mn = &c.mns[table.replicas[rr].mn];
+            let img = crate::store::record::encode(1, b"halfway", table.spec.record_len);
+            mn.write_bytes(table.to_replica_addr(rec_addr, rr), &img).unwrap();
+            let cell = crate::store::cvt::CellSnapshot {
+                cv: 1,
+                valid: true,
+                len: 7,
+                version: INVISIBLE,
+                addr: rec_addr,
+                consistent: true,
+            };
+            mn.write_bytes(
+                table.to_replica_addr(cell_addr, rr),
+                &crate::store::cvt::CvtSnapshot::serialize_cell(&cell),
+            )
+            .unwrap();
+        }
+        let gid = 0; // CN0 slot 0
+        let (log_mn, log_addr) = c.log_slots[gid];
+        let log = LogRecord::prepared(
+            9999,
+            vec![crate::txn::log::LogEntry {
+                table: 0,
+                mn: table.primary().mn as u16,
+                cell_addr,
+            }],
+        )
+        .unwrap();
+        c.mns[log_mn].write_bytes(log_addr, &log.serialize()).unwrap();
+        // Drop the in-flight txn state (the crash) and recover.
+        coords[0].txn().rollback();
+        let (ep, mut clk) = recovery_ep(&c, 1);
+        let rep = recover_cn_failure(&c, &[0], &ep, &mut clk).unwrap();
+        assert_eq!(rep.rolled_back, 1);
+        assert_eq!(rep.completed, 0);
+        // The INVISIBLE cell is invalidated; readers still see the old value.
+        let got = table.load_get(&c.mns, 0, key).unwrap();
+        assert_eq!(got, b"v-7");
+        // Idempotent: a second pass scans an empty log.
+        let rep2 = recover_cn_failure(&c, &[0], &ep, &mut clk).unwrap();
+        assert_eq!(rep2.rolled_back, 0);
+        let _ = cvt;
+    }
+
+    #[test]
+    fn prepared_log_with_visible_cells_completes() {
+        let (c, _coords) = mini();
+        let table = c.table(0);
+        let key = LotusKey::compose(9, 9);
+        let bucket = table.bucket_of(key);
+        let mut bucket_buf = vec![0u8; table.layout.bucket_size() as usize];
+        c.mns[table.primary().mn]
+            .read_bytes(table.bucket_addr(0, bucket), &mut bucket_buf)
+            .unwrap();
+        let (slot, _cvt) = table.find_in_bucket(&bucket_buf, key).unwrap();
+        // Cell 0 is the loaded, *visible* version — log points at it.
+        let cell_addr = table.cvt_addr(0, bucket, slot) + table.layout.cell_off(0);
+        let (log_mn, log_addr) = c.log_slots[1];
+        let log = LogRecord::prepared(
+            8888,
+            vec![crate::txn::log::LogEntry {
+                table: 0,
+                mn: table.primary().mn as u16,
+                cell_addr,
+            }],
+        )
+        .unwrap();
+        c.mns[log_mn].write_bytes(log_addr, &log.serialize()).unwrap();
+        let (ep, mut clk) = recovery_ep(&c, 1);
+        let rep = recover_cn_failure(&c, &[0], &ep, &mut clk).unwrap();
+        assert_eq!(rep.completed, 1);
+        assert_eq!(rep.rolled_back, 0);
+        // Data untouched.
+        assert_eq!(table.load_get(&c.mns, 0, key).unwrap(), b"v-9");
+    }
+
+    #[test]
+    fn restarted_cn_starts_empty_and_serves() {
+        let (c, mut coords) = mini();
+        // Lock something on CN0, fail it, recover, restart.
+        let uid = (0..4096u64)
+            .find(|&u| c.router.owner_of_key(LotusKey::compose(u, u)) == 0)
+            .unwrap();
+        let key = LotusKey::compose(uid, uid);
+        {
+            let co = &mut coords[0];
+            co.begin(false);
+            co.txn().add_rw(RecordRef::new(0, key));
+            co.txn().execute().unwrap();
+        }
+        c.membership.fail(0, 1000);
+        c.rpc.set_failed(0, true);
+        let (ep, mut clk) = recovery_ep(&c, 1);
+        recover_cn_failure(&c, &[0], &ep, &mut clk).unwrap();
+        assert_eq!(c.lock_services[0].held_slots(), 0);
+        assert!(c.vt_caches[0].is_empty());
+        // Restart: empty table serves new lock requests.
+        c.rpc.set_failed(0, false);
+        c.membership.complete_restart(0, 2000);
+        let holder = crate::lock::state::HolderId { cn: 1, txn: 777 };
+        assert!(c.lock_services[0]
+            .try_acquire(&c.router, key, LockMode::Write, holder, true)
+            .unwrap());
+    }
+}

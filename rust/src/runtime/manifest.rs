@@ -1,0 +1,155 @@
+//! Artifact manifest: topology metadata written by `python/compile/aot.py`.
+//!
+//! The manifest lets the runtime validate at load time that the compiled
+//! artifact's static shapes (CN count, shard count, hash batch) match the
+//! cluster configuration — a mismatch is a build error, not a silent
+//! mis-execution. The file is a small fixed-schema JSON document; the
+//! extractor here is deliberately minimal (no serde in the dependency
+//! set) and rejects anything it does not understand.
+
+use std::path::Path;
+
+use crate::{Error, Result};
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    /// Rebalance artifact file name.
+    pub rebalance_file: String,
+    /// CN count the rebalance artifact was compiled for.
+    pub n_cns: usize,
+    /// Shard count the rebalance artifact was compiled for.
+    pub n_shards: usize,
+    /// Shard-hash artifact file name.
+    pub shard_hash_file: String,
+    /// Shard-hash batch size.
+    pub hash_batch: usize,
+}
+
+/// Extract `"key": <number>` from a JSON fragment.
+fn num_field(json: &str, key: &str) -> Result<usize> {
+    let needle = format!("\"{key}\"");
+    let at = json
+        .find(&needle)
+        .ok_or_else(|| Error::Runtime(format!("manifest missing field '{key}'")))?;
+    let rest = &json[at + needle.len()..];
+    let rest = rest.trim_start().strip_prefix(':').ok_or_else(|| {
+        Error::Runtime(format!("manifest field '{key}' malformed"))
+    })?;
+    let digits: String = rest.trim_start().chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits
+        .parse()
+        .map_err(|_| Error::Runtime(format!("manifest field '{key}' is not a number")))
+}
+
+/// Extract `"key": "<string>"` from a JSON fragment.
+fn str_field(json: &str, key: &str) -> Result<String> {
+    let needle = format!("\"{key}\"");
+    let at = json
+        .find(&needle)
+        .ok_or_else(|| Error::Runtime(format!("manifest missing field '{key}'")))?;
+    let rest = &json[at + needle.len()..];
+    let rest = rest.trim_start().strip_prefix(':').ok_or_else(|| {
+        Error::Runtime(format!("manifest field '{key}' malformed"))
+    })?;
+    let rest = rest.trim_start();
+    let rest = rest
+        .strip_prefix('"')
+        .ok_or_else(|| Error::Runtime(format!("manifest field '{key}' is not a string")))?;
+    let end = rest
+        .find('"')
+        .ok_or_else(|| Error::Runtime(format!("manifest field '{key}' unterminated")))?;
+    Ok(rest[..end].to_string())
+}
+
+/// Slice out one top-level object section (`"name": { ... }`).
+fn section<'a>(json: &'a str, name: &str) -> Result<&'a str> {
+    let needle = format!("\"{name}\"");
+    let at = json
+        .find(&needle)
+        .ok_or_else(|| Error::Runtime(format!("manifest missing section '{name}'")))?;
+    let open = json[at..]
+        .find('{')
+        .ok_or_else(|| Error::Runtime(format!("manifest section '{name}' malformed")))?;
+    let start = at + open;
+    let mut depth = 0usize;
+    for (i, c) in json[start..].char_indices() {
+        match c {
+            '{' => depth += 1,
+            '}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Ok(&json[start..start + i + 1]);
+                }
+            }
+            _ => {}
+        }
+    }
+    Err(Error::Runtime(format!("manifest section '{name}' unterminated")))
+}
+
+impl Manifest {
+    /// Parse the manifest text.
+    pub fn parse(json: &str) -> Result<Self> {
+        let rb = section(json, "rebalance")?;
+        let sh = section(json, "shard_hash")?;
+        Ok(Self {
+            rebalance_file: str_field(rb, "file")?,
+            n_cns: num_field(rb, "n_cns")?,
+            n_shards: num_field(rb, "n_shards")?,
+            shard_hash_file: str_field(sh, "file")?,
+            hash_batch: num_field(sh, "batch")?,
+        })
+    }
+
+    /// Load + parse from a path.
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Self::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "rebalance": {
+        "file": "rebalance.hlo.txt",
+        "n_cns": 9,
+        "n_shards": 4096,
+        "n_intervals": 3,
+        "outputs": ["heat", "load", "overload", "hottest", "target"]
+      },
+      "shard_hash": {
+        "file": "shard_hash.hlo.txt",
+        "batch": 1024,
+        "outputs": ["fingerprint", "bucket", "shard"]
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.rebalance_file, "rebalance.hlo.txt");
+        assert_eq!(m.n_cns, 9);
+        assert_eq!(m.n_shards, 4096);
+        assert_eq!(m.shard_hash_file, "shard_hash.hlo.txt");
+        assert_eq!(m.hash_batch, 1024);
+    }
+
+    #[test]
+    fn missing_field_errors() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"rebalance": {"file": "x"}}"#).is_err());
+    }
+
+    #[test]
+    fn parses_real_artifact_manifest_if_present() {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        if p.exists() {
+            let m = Manifest::load(p).unwrap();
+            assert!(m.n_cns > 0 && m.n_shards > 0 && m.hash_batch > 0);
+        }
+    }
+}

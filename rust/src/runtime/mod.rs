@@ -1,0 +1,219 @@
+//! PJRT runtime bridge: load + execute the AOT-compiled XLA artifacts.
+//!
+//! `make artifacts` runs `python/compile/aot.py` once at build time,
+//! lowering the L2 JAX model (whose hot spots are the L1 Pallas kernels)
+//! to **HLO text** in `artifacts/*.hlo.txt`. This module loads that text
+//! with `HloModuleProto::from_text_file`, compiles it on the PJRT CPU
+//! client, and executes it from the rust hot path — python never runs at
+//! transaction time.
+//!
+//! HLO *text* (not `.serialize()`) is the interchange format because
+//! jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+//! linked xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+pub mod manifest;
+
+use std::path::Path;
+
+use crate::{Error, Result};
+
+pub use manifest::Manifest;
+
+fn xerr(e: xla::Error) -> Error {
+    Error::Xla(e.to_string())
+}
+
+/// A PJRT CPU client plus the compiled LOTUS artifacts.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+}
+
+impl XlaRuntime {
+    /// Start a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        Ok(Self {
+            client: xla::PjRtClient::cpu().map_err(xerr)?,
+        })
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text<P: AsRef<Path>>(&self, path: P) -> Result<LoadedExec> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(|e| {
+            Error::Runtime(format!("loading {}: {e}", path.display()))
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(xerr)?;
+        Ok(LoadedExec { exe })
+    }
+}
+
+/// One compiled executable.
+pub struct LoadedExec {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// A typed output extracted from an executed tuple.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OutValue {
+    /// f32 tensor, flattened row-major.
+    F32(Vec<f32>),
+    /// i32 tensor, flattened row-major.
+    I32(Vec<i32>),
+    /// u32 tensor, flattened row-major.
+    U32(Vec<u32>),
+}
+
+impl OutValue {
+    /// Borrow as f32, panicking on type mismatch (artifact contract).
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            OutValue::F32(v) => v,
+            other => panic!("expected f32 output, got {other:?}"),
+        }
+    }
+
+    /// Borrow as i32.
+    pub fn as_i32(&self) -> &[i32] {
+        match self {
+            OutValue::I32(v) => v,
+            other => panic!("expected i32 output, got {other:?}"),
+        }
+    }
+
+    /// Borrow as u32.
+    pub fn as_u32(&self) -> &[u32] {
+        match self {
+            OutValue::U32(v) => v,
+            other => panic!("expected u32 output, got {other:?}"),
+        }
+    }
+}
+
+/// An input literal under construction.
+pub enum InValue<'a> {
+    /// f32 tensor with dims.
+    F32(&'a [f32], &'a [i64]),
+    /// u32 tensor with dims.
+    U32(&'a [u32], &'a [i64]),
+}
+
+impl LoadedExec {
+    /// Execute with the given inputs; returns the artifact's output tuple
+    /// decomposed into typed vectors.
+    pub fn run(&self, inputs: &[InValue<'_>]) -> Result<Vec<OutValue>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for inp in inputs {
+            let lit = match inp {
+                InValue::F32(data, dims) => {
+                    xla::Literal::vec1(data).reshape(dims).map_err(xerr)?
+                }
+                InValue::U32(data, dims) => {
+                    xla::Literal::vec1(data).reshape(dims).map_err(xerr)?
+                }
+            };
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals).map_err(xerr)?;
+        let root = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| Error::Runtime("empty execution result".into()))?
+            .to_literal_sync()
+            .map_err(xerr)?;
+        let parts = root.to_tuple().map_err(xerr)?;
+        let mut out = Vec::with_capacity(parts.len());
+        for part in parts {
+            out.push(Self::typed(part)?);
+        }
+        Ok(out)
+    }
+
+    fn typed(lit: xla::Literal) -> Result<OutValue> {
+        let ty = lit.ty().map_err(xerr)?;
+        Ok(match ty {
+            xla::ElementType::F32 => OutValue::F32(lit.to_vec::<f32>().map_err(xerr)?),
+            xla::ElementType::S32 => OutValue::I32(lit.to_vec::<i32>().map_err(xerr)?),
+            xla::ElementType::U32 => OutValue::U32(lit.to_vec::<u32>().map_err(xerr)?),
+            other => {
+                return Err(Error::Runtime(format!(
+                    "unsupported artifact output type {other:?}"
+                )))
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn shard_hash_artifact_matches_rust_mix32() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let manifest = Manifest::load(dir.join("manifest.json")).unwrap();
+        let rt = XlaRuntime::cpu().unwrap();
+        let exe = rt.load_hlo_text(dir.join(&manifest.shard_hash_file)).unwrap();
+        let n = manifest.hash_batch;
+        let mut rng = crate::util::Xoshiro256::new(99);
+        let hi: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+        let lo: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+        let dims = [n as i64];
+        let out = exe
+            .run(&[InValue::U32(&hi, &dims), InValue::U32(&lo, &dims)])
+            .unwrap();
+        assert_eq!(out.len(), 3);
+        let fp = out[0].as_u32();
+        let shard = out[2].as_u32();
+        // Layer-pinning: the artifact's mix must equal rust's bit-for-bit.
+        for i in 0..n {
+            assert_eq!(fp[i], crate::sharding::key::mix32(hi[i], lo[i]), "i={i}");
+            assert_eq!(shard[i], lo[i] & 0xFFF);
+        }
+    }
+
+    #[test]
+    fn rebalance_artifact_loads_and_runs() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let manifest = Manifest::load(dir.join("manifest.json")).unwrap();
+        let rt = XlaRuntime::cpu().unwrap();
+        let exe = rt.load_hlo_text(dir.join(&manifest.rebalance_file)).unwrap();
+        let (c, s) = (manifest.n_cns, manifest.n_shards);
+        let counts = vec![1.0f32; c * s];
+        let prev = vec![0.0f32; c * s];
+        let lat = vec![100.0f32; c * 3];
+        let alpha = [0.25f32];
+        let out = exe
+            .run(&[
+                InValue::F32(&counts, &[c as i64, s as i64]),
+                InValue::F32(&prev, &[c as i64, s as i64]),
+                InValue::F32(&lat, &[c as i64, 3]),
+                InValue::F32(&alpha, &[1]),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 5);
+        let heat = out[0].as_f32();
+        assert_eq!(heat.len(), c * s);
+        assert!((heat[0] - 0.25).abs() < 1e-6);
+        let load = out[1].as_f32();
+        assert!((load[0] - 0.25 * s as f32).abs() < 1e-2);
+        // Uniform latencies: nobody overloaded.
+        assert!(out[2].as_i32().iter().all(|&v| v == 0));
+    }
+}

@@ -1,0 +1,18 @@
+//! Application-aware lock sharding (paper section 4.2) and the routing
+//! layer (sections 3, 4.3).
+//!
+//! - [`key`] — the 64-bit LOTUS key: low 12 bits are the *shard number*
+//!   taken from the application's critical field; the upper 52 bits keep
+//!   the record unique. Also the fingerprint hash shared bit-for-bit with
+//!   the L1 Pallas kernel.
+//! - [`router`] — the shard-to-CN map + hybrid transaction routing
+//!   (read-only: uniform random CN; read-write: the CN owning the first
+//!   record's shard).
+
+pub mod key;
+pub mod resharding;
+pub mod router;
+
+pub use key::{LotusKey, N_SHARDS, SHARD_BITS};
+pub use resharding::{transfer_shard, ReshardReport};
+pub use router::{Router, RouteDecision};

@@ -1,0 +1,158 @@
+//! Pass-by-range resharding (paper section 4.3).
+//!
+//! Moves **lock ownership** of one shard between CNs — never the data.
+//! The sender stops serving the shard, drains (or proactively aborts) the
+//! transactions still holding locks in it, clears its cached state for
+//! the shard, and hands ownership to the receiver with one RPC; finally
+//! the routing layer is updated. Requests racing the window bounce with
+//! `WrongShardOwner` and retry against the fresh map, so the lock service
+//! is only briefly interrupted (paper: 0.19–4.67 ms measured).
+
+use crate::dm::clock::VClock;
+use crate::txn::coordinator::SharedCluster;
+use crate::Result;
+
+/// Outcome of one shard transfer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReshardReport {
+    /// Shard moved.
+    pub shard: u16,
+    /// Previous owner.
+    pub from: usize,
+    /// New owner.
+    pub to: usize,
+    /// Transactions proactively aborted (lock drain timeout path).
+    pub aborted_txns: usize,
+    /// Virtual ns the shard's lock service was interrupted.
+    pub interruption_ns: u64,
+}
+
+/// Transfer `shard` from CN `from` to CN `to`. Executed by a coordinator
+/// thread of the sender (its `clk` is charged).
+pub fn transfer_shard(
+    cluster: &SharedCluster,
+    shard: u16,
+    from: usize,
+    to: usize,
+    clk: &mut VClock,
+) -> Result<ReshardReport> {
+    debug_assert_ne!(from, to);
+    debug_assert_eq!(cluster.router.owner_of(shard), from);
+    let t0 = clk.now();
+    let sender = &cluster.lock_services[from];
+
+    // 1. Stop serving lock requests for the shard.
+    sender.pause_shard(shard);
+
+    // 2. Drain: the paper waits up to ~10 ms for in-flight holders, then
+    //    proactively aborts them via the (txn, CN) ids in the lock state.
+    //    The simulator cannot block a virtual-time window across threads,
+    //    so it takes the proactive path directly whenever holders exist —
+    //    a conservative (worst-case) model of the drain.
+    let holders = sender.holders_in_shard(shard);
+    let aborted = if holders.is_empty() {
+        0
+    } else {
+        cluster.doomed.doom_all(holders.iter().map(|h| h.txn));
+        let txns = sender.force_release_shard(shard);
+        txns.len()
+    };
+
+    // 3. Clear shard-local cached state (the receiver owns it now).
+    cluster.vt_caches[from].invalidate_shard(shard);
+
+    // 4. Hand over via RPC (SEND/RECV, paper 4.3).
+    cluster.rpc.call(from, to, 0, 1, clk)?;
+    cluster.lock_services[to].resume_shard(shard); // defensive: fresh start
+
+    // 5. Publish the new mapping to the routing layer.
+    cluster.router.set_owner(shard, to);
+    sender.resume_shard(shard); // sender no longer owns it; unpause
+
+    Ok(ReshardReport {
+        shard,
+        from,
+        to,
+        aborted_txns: aborted,
+        interruption_ns: clk.now() - t0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::lock::state::HolderId;
+    use crate::lock::table::LockMode;
+    use crate::sharding::key::LotusKey;
+    use crate::sim::Cluster;
+    use crate::store::index::TableSpec;
+    use std::sync::Arc;
+
+    fn mini() -> Arc<SharedCluster> {
+        let mut cfg = Config::small();
+        cfg.n_cns = 3;
+        let specs = vec![TableSpec {
+            id: 0,
+            name: "t".into(),
+            record_len: 16,
+            ncells: 2,
+            assoc: 4,
+            expected_records: 1024,
+        }];
+        Cluster::build_shared(&cfg, specs).unwrap()
+    }
+
+    #[test]
+    fn ownership_moves_and_requests_follow() {
+        let c = mini();
+        let shard = c.router.shards_of(0)[0];
+        let key = LotusKey::compose(shard as u64, 42);
+        let mut clk = VClock::zero();
+        let rep = transfer_shard(&c, shard, 0, 1, &mut clk).unwrap();
+        assert_eq!(rep.aborted_txns, 0);
+        assert!(rep.interruption_ns > 0);
+        assert_eq!(c.router.owner_of(shard), 1);
+        // The old owner bounces, the new owner serves.
+        let h = HolderId { cn: 2, txn: 1 };
+        assert!(c.lock_services[0]
+            .try_acquire(&c.router, key, LockMode::Write, h, true)
+            .is_err());
+        assert!(c.lock_services[1]
+            .try_acquire(&c.router, key, LockMode::Write, h, true)
+            .unwrap());
+    }
+
+    #[test]
+    fn holders_are_aborted_and_locks_freed() {
+        let c = mini();
+        let shard = c.router.shards_of(0)[1];
+        let key = LotusKey::compose(shard as u64, 7);
+        let h = HolderId { cn: 2, txn: 555 };
+        assert!(c.lock_services[0]
+            .try_acquire(&c.router, key, LockMode::Write, h, true)
+            .unwrap());
+        let mut clk = VClock::zero();
+        let rep = transfer_shard(&c, shard, 0, 2, &mut clk).unwrap();
+        assert_eq!(rep.aborted_txns, 1);
+        assert!(c.doomed.contains(555), "holder must be doomed");
+        assert_eq!(c.lock_services[0].held_slots(), 0);
+    }
+
+    #[test]
+    fn vt_cache_entries_of_shard_cleared_on_sender() {
+        let c = mini();
+        let shard = c.router.shards_of(0)[0];
+        let key = LotusKey::compose(shard as u64, 3);
+        c.vt_caches[0].put(
+            key,
+            crate::cache::vtcache::CachedCvt {
+                cvt: crate::store::cvt::CvtSnapshot::empty(1),
+                addr: 8,
+            },
+        );
+        let mut clk = VClock::zero();
+        transfer_shard(&c, shard, 0, 1, &mut clk).unwrap();
+        assert!(c.vt_caches[0].get(key).is_none());
+    }
+}

@@ -1,0 +1,203 @@
+//! The routing layer: shard-to-CN mapping + hybrid transaction routing.
+//!
+//! Paper section 4.2-4.3: upper-layer applications submit transactions to
+//! a routing layer that caches the latest shard-to-CN mapping. Read-only
+//! transactions go to a uniformly random CN; read-write transactions go to
+//! the CN owning the shard of their *first* record, so most lock requests
+//! are local. CNs validate ownership on every lock request and return
+//! [`crate::Error::WrongShardOwner`] on staleness, prompting a refresh.
+//!
+//! The paper assumes the routing layer is scalable and fault-tolerant
+//! (replicated, read-mostly) and orthogonal to the contribution; here it
+//! is an atomic array, which satisfies the same interface.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use crate::sharding::key::{LotusKey, N_SHARDS};
+use crate::util::Xoshiro256;
+use crate::{Error, Result};
+
+/// Where a transaction should run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteDecision {
+    /// Run on this CN.
+    Cn(usize),
+}
+
+/// Shard-to-CN routing table.
+pub struct Router {
+    owner: Vec<AtomicUsize>,
+    n_cns: usize,
+    /// Bumped on every remap (lets CNs cheaply notice staleness).
+    epoch: AtomicU64,
+}
+
+impl Router {
+    /// Initial mapping: key range evenly distributed among CNs
+    /// (shard `s` -> CN `s * n_cns / N_SHARDS`, contiguous ranges).
+    pub fn new(n_cns: usize) -> Self {
+        assert!(n_cns > 0);
+        let owner = (0..N_SHARDS)
+            .map(|s| AtomicUsize::new(s * n_cns / N_SHARDS))
+            .collect();
+        Self {
+            owner,
+            n_cns,
+            epoch: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of CNs.
+    pub fn n_cns(&self) -> usize {
+        self.n_cns
+    }
+
+    /// Current owner of a shard.
+    #[inline]
+    pub fn owner_of(&self, shard: u16) -> usize {
+        self.owner[shard as usize].load(Ordering::Acquire)
+    }
+
+    /// Owner of a key's shard.
+    #[inline]
+    pub fn owner_of_key(&self, key: LotusKey) -> usize {
+        self.owner_of(key.shard())
+    }
+
+    /// Remap a shard to a new owner (resharding commits through here).
+    pub fn set_owner(&self, shard: u16, cn: usize) {
+        assert!(cn < self.n_cns);
+        self.owner[shard as usize].store(cn, Ordering::Release);
+        self.epoch.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Routing-table epoch (bumps on every remap).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Hybrid routing: read-write transactions go to the owner of the
+    /// first record's shard.
+    #[inline]
+    pub fn route_rw(&self, first_key: LotusKey) -> RouteDecision {
+        RouteDecision::Cn(self.owner_of_key(first_key))
+    }
+
+    /// Hybrid routing: read-only transactions go to a uniform random CN.
+    #[inline]
+    pub fn route_ro(&self, rng: &mut Xoshiro256) -> RouteDecision {
+        RouteDecision::Cn(rng.below_usize(self.n_cns))
+    }
+
+    /// CN-side ownership check for an incoming lock request.
+    #[inline]
+    pub fn assert_owner(&self, cn: usize, shard: u16) -> Result<()> {
+        let owner = self.owner_of(shard);
+        if owner == cn {
+            Ok(())
+        } else {
+            Err(Error::WrongShardOwner { shard, cn })
+        }
+    }
+
+    /// All shards currently owned by `cn` (used by resharding + recovery).
+    pub fn shards_of(&self, cn: usize) -> Vec<u16> {
+        (0..N_SHARDS as u16)
+            .filter(|&s| self.owner_of(s) == cn)
+            .collect()
+    }
+
+    /// Shard-count balance: (min, max) shards per CN.
+    pub fn balance(&self) -> (usize, usize) {
+        let mut counts = vec![0usize; self.n_cns];
+        for s in 0..N_SHARDS as u16 {
+            counts[self.owner_of(s)] += 1;
+        }
+        (
+            *counts.iter().min().unwrap(),
+            *counts.iter().max().unwrap(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_mapping_covers_all_cns_evenly() {
+        let r = Router::new(9);
+        let (min, max) = r.balance();
+        assert!(max - min <= 1, "uneven initial split: {min}..{max}");
+        // Every CN owns something.
+        for cn in 0..9 {
+            assert!(!r.shards_of(cn).is_empty());
+        }
+    }
+
+    #[test]
+    fn initial_mapping_is_contiguous_ranges() {
+        let r = Router::new(4);
+        // Owners must be monotone over shard ids.
+        let mut last = 0;
+        for s in 0..N_SHARDS as u16 {
+            let o = r.owner_of(s);
+            assert!(o >= last, "non-contiguous mapping at shard {s}");
+            last = o;
+        }
+    }
+
+    #[test]
+    fn rw_routing_follows_owner() {
+        let r = Router::new(4);
+        let k = LotusKey::compose(100, 5);
+        let RouteDecision::Cn(cn) = r.route_rw(k);
+        assert_eq!(cn, r.owner_of(k.shard()));
+    }
+
+    #[test]
+    fn ro_routing_is_spread() {
+        let r = Router::new(8);
+        let mut rng = Xoshiro256::new(1);
+        let mut seen = [false; 8];
+        for _ in 0..1000 {
+            let RouteDecision::Cn(cn) = r.route_ro(&mut rng);
+            seen[cn] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "RO routing misses CNs: {seen:?}");
+    }
+
+    #[test]
+    fn remap_bumps_epoch_and_moves_ownership() {
+        let r = Router::new(3);
+        let e0 = r.epoch();
+        r.set_owner(7, 2);
+        assert_eq!(r.owner_of(7), 2);
+        assert!(r.epoch() > e0);
+        assert!(r.assert_owner(2, 7).is_ok());
+        let err = r.assert_owner(0, 7).unwrap_err();
+        assert!(matches!(err, Error::WrongShardOwner { shard: 7, cn: 0 }));
+    }
+
+    #[test]
+    fn shards_of_consistent_with_owner_of() {
+        crate::testing::prop(20, |g| {
+            let n = g.usize(1, 12);
+            let r = Router::new(n);
+            // random remaps
+            for _ in 0..g.usize(0, 50) {
+                let s = g.u64(0, N_SHARDS as u64 - 1) as u16;
+                let cn = g.usize(0, n - 1);
+                r.set_owner(s, cn);
+            }
+            let mut total = 0;
+            for cn in 0..n {
+                for s in r.shards_of(cn) {
+                    assert_eq!(r.owner_of(s), cn);
+                    total += 1;
+                }
+            }
+            assert_eq!(total, N_SHARDS, "shards lost or duplicated");
+        });
+    }
+}

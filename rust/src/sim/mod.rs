@@ -1,0 +1,589 @@
+//! The cluster harness: builds a simulated DM cluster and runs timed
+//! benchmarks on it.
+//!
+//! [`Cluster::build`] wires MNs, CN NICs, the RPC fabric, the routing
+//! layer, lock services, caches, DB tables (replicated per the config)
+//! and bulk-loads the chosen workload. [`Cluster::run`] spawns one OS
+//! thread per coordinator; each thread executes transactions in **virtual
+//! time** (see [`crate::dm::clock`]), kept within a bounded skew window
+//! by a [`TimeGate`] so contention between coordinators is faithful.
+//!
+//! The same harness drives LOTUS and every baseline
+//! ([`crate::config::SystemKind`]), the two-level load balancer (L2/L1
+//! artifact via PJRT when the compiled topology matches, rust mirror
+//! otherwise), and fail-stop crash injection for the fig. 15 recovery
+//! timeline.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::balance::planner::{Planner, RustPlanner, XlaPlanner};
+use crate::balance::BalanceMetrics;
+use crate::baselines::{ford, ideal_rdma_lock, motor, nolock, BaselineCoordinator};
+use crate::cache::{AddrCache, VtCache};
+use crate::config::{Config, SystemKind};
+use crate::dm::clock::{TimeGate, VClock};
+use crate::dm::memnode::MemNode;
+use crate::dm::rnic::Rnic;
+use crate::dm::rpc::RpcFabric;
+use crate::dm::verbs::Endpoint;
+use crate::lock::service::LockService;
+use crate::metrics::{Histogram, RunReport, TxnStats};
+use crate::recovery::membership::Membership;
+use crate::recovery::recovery::recover_cn_failure;
+use crate::sharding::key::N_SHARDS;
+use crate::sharding::resharding::transfer_shard;
+use crate::sharding::router::Router;
+use crate::store::index::{TableSpec, TableStore};
+use crate::txn::api::TxnApi;
+use crate::txn::coordinator::{LotusCoordinator, SharedCluster};
+use crate::txn::doomed::DoomedSet;
+use crate::txn::log;
+use crate::txn::timestamp::TimestampOracle;
+use crate::workloads::{RouteCtx, Workload, WorkloadKind};
+use crate::{Error, Result};
+
+/// Failure-detection lease (virtual ns) used by the crash harness.
+pub const LEASE_NS: u64 = 5_000_000; // 5 ms
+/// Extra virtual time a restarted CN spends re-registering MRs + QPs.
+pub const RESTART_EXTRA_NS: u64 = 20_000_000; // 20 ms
+
+/// A fail-stop crash injection (fig. 15).
+#[derive(Debug, Clone)]
+pub struct CrashEvent {
+    /// Virtual time of the crash.
+    pub at_ns: u64,
+    /// CNs that fail simultaneously.
+    pub cns: Vec<usize>,
+}
+
+/// A built cluster, ready to run benchmarks.
+pub struct Cluster {
+    /// Shared state.
+    pub shared: Arc<SharedCluster>,
+    /// The loaded workload.
+    pub workload: Arc<dyn Workload>,
+}
+
+impl Cluster {
+    /// Build the shared cluster state for `specs` (no workload data).
+    pub fn build_shared(cfg: &Config, specs: Vec<TableSpec>) -> Result<Arc<SharedCluster>> {
+        let cfg = cfg.clone().validate()?;
+        let net = Arc::new(cfg.net.clone());
+        let mns: Vec<Arc<MemNode>> = (0..cfg.n_mns)
+            .map(|i| Arc::new(MemNode::new(i, cfg.mn_capacity)))
+            .collect();
+        let cn_nics: Vec<Arc<Rnic>> = (0..cfg.n_cns).map(|_| Arc::new(Rnic::new())).collect();
+        let rpc = Arc::new(RpcFabric::new(
+            cn_nics.clone(),
+            cfg.coordinators_per_cn,
+            net.clone(),
+        ));
+        let router = Arc::new(Router::new(cfg.n_cns));
+        let vt_caches: Vec<Arc<VtCache>> = (0..cfg.n_cns)
+            .map(|_| Arc::new(VtCache::new(cfg.vt_cache_entries)))
+            .collect();
+        let addr_caches: Vec<Arc<AddrCache>> =
+            (0..cfg.n_cns).map(|_| Arc::new(AddrCache::new())).collect();
+        let lock_services: Vec<Arc<LockService>> = (0..cfg.n_cns)
+            .map(|cn| {
+                Arc::new(LockService::new(
+                    cn,
+                    cfg.lock_table_bytes,
+                    vt_caches[cn].clone(),
+                ))
+            })
+            .collect();
+        // Tables: MVCC geometry from the config; replicas round-robin
+        // over MNs starting at the table id (primary first).
+        let mut tables = Vec::with_capacity(specs.len());
+        let mut baseline_lock_bases = Vec::with_capacity(specs.len());
+        for (ti, mut spec) in specs.into_iter().enumerate() {
+            debug_assert_eq!(ti, spec.id as usize, "table ids must be dense");
+            spec.ncells = cfg.n_versions;
+            spec.assoc = cfg.assoc;
+            let replica_mns: Vec<usize> = (0..cfg.replicas)
+                .map(|r| (spec.id as usize + r) % cfg.n_mns)
+                .collect();
+            let table = TableStore::create(spec, &mns, &replica_mns)?;
+            // Baseline MN-side lock words: one per CVT slot + one per
+            // bucket, on the primary MN.
+            let lock_words =
+                table.layout.n_buckets * table.spec.assoc as u64 + table.layout.n_buckets;
+            let region = mns[table.primary().mn].register(lock_words * 8)?;
+            baseline_lock_bases.push(region.base);
+            tables.push(Arc::new(table));
+        }
+        // Per-coordinator commit-log slots, spread over MNs.
+        let total = cfg.total_coordinators();
+        let mut log_slots = Vec::with_capacity(total);
+        for gid in 0..total {
+            let mn = gid % cfg.n_mns;
+            let region = mns[mn].register(log::slot_size())?;
+            log_slots.push((mn, region.base));
+        }
+        let n_cns = cfg.n_cns;
+        Ok(Arc::new(SharedCluster {
+            cfg,
+            mns,
+            cn_nics,
+            rpc,
+            router,
+            oracle: Arc::new(TimestampOracle::new()),
+            net,
+            lock_services,
+            vt_caches,
+            addr_caches,
+            tables,
+            doomed: Arc::new(DoomedSet::new()),
+            metrics: Arc::new(BalanceMetrics::new(n_cns)),
+            membership: Arc::new(Membership::new(n_cns, LEASE_NS)),
+            log_slots,
+            baseline_lock_bases,
+            txn_counter: AtomicU64::new(0),
+        }))
+    }
+
+    /// Build a cluster and bulk-load `kind`'s dataset.
+    pub fn build(cfg: &Config, kind: WorkloadKind) -> Result<Cluster> {
+        let workload = kind.instantiate(cfg);
+        Self::build_with(cfg, workload)
+    }
+
+    /// Build with an explicit workload instance.
+    pub fn build_with(cfg: &Config, workload: Arc<dyn Workload>) -> Result<Cluster> {
+        let shared = Self::build_shared(cfg, workload.table_specs())?;
+        workload.load(&shared)?;
+        Ok(Cluster { shared, workload })
+    }
+
+    /// Run a timed benchmark of `system` on this cluster.
+    pub fn run(&self, system: SystemKind) -> Result<RunReport> {
+        self.run_with_events(system, &[])
+    }
+
+    /// Run with fail-stop crash injections (fig. 15).
+    pub fn run_with_events(&self, system: SystemKind, events: &[CrashEvent]) -> Result<RunReport> {
+        // Each run restarts virtual time at zero: drain the fabric queues
+        // left by any previous run on this cluster.
+        for mn in &self.shared.mns {
+            mn.rnic.reset();
+        }
+        for nic in &self.shared.cn_nics {
+            nic.reset();
+        }
+        self.shared.rpc.reset_queues();
+        let cfg = &self.shared.cfg;
+        let total = cfg.total_coordinators();
+        let gate = Arc::new(TimeGate::new(total, cfg.gate_window_ns));
+        let hist = Arc::new(Histogram::new());
+        let stats = Arc::new(TxnStats::default());
+        let fatal: Arc<Mutex<Option<Error>>> = Arc::new(Mutex::new(None));
+        let timeline_n = if cfg.timeline_interval_ns > 0 {
+            (cfg.duration_ns / cfg.timeline_interval_ns + 1) as usize
+        } else {
+            0
+        };
+        let timeline: Arc<Vec<AtomicU64>> =
+            Arc::new((0..timeline_n).map(|_| AtomicU64::new(0)).collect());
+        let run = Arc::new(RunCtl {
+            events: events.to_vec(),
+            triggered: (0..events.len()).map(|_| AtomicBool::new(false)).collect(),
+            recovered: (0..events.len()).map(|_| AtomicBool::new(false)).collect(),
+            restart_at: (0..events.len()).map(|_| AtomicU64::new(u64::MAX)).collect(),
+            last_interval: (0..cfg.n_cns).map(|_| AtomicU64::new(0)).collect(),
+        });
+
+        std::thread::scope(|scope| {
+            for gid in 0..total {
+                let shared = self.shared.clone();
+                let workload = self.workload.clone();
+                let gate = gate.clone();
+                let hist = hist.clone();
+                let stats = stats.clone();
+                let fatal = fatal.clone();
+                let timeline = timeline.clone();
+                let run = run.clone();
+                scope.spawn(move || {
+                    let res = coordinator_thread(
+                        shared, workload, system, gid, gate, hist, stats, timeline, run,
+                    );
+                    if let Err(e) = res {
+                        let mut f = fatal.lock().unwrap();
+                        if f.is_none() {
+                            *f = Some(e);
+                        }
+                    }
+                });
+            }
+        });
+        if let Some(e) = fatal.lock().unwrap().take() {
+            return Err(e);
+        }
+        if std::env::var("LOTUS_FABRIC_STATS").is_ok() {
+            for mn in &self.shared.mns {
+                eprintln!(
+                    "mn{} rnic: ops={} busy={}ns wait={}ns busy_until={}ns util={:.2}",
+                    mn.id,
+                    mn.rnic.op_count(),
+                    mn.rnic.busy_ns(),
+                    mn.rnic.wait_ns(),
+                    mn.rnic.busy_until(),
+                    mn.rnic.utilization(cfg.duration_ns)
+                );
+            }
+            for (i, nic) in self.shared.cn_nics.iter().enumerate() {
+                eprintln!(
+                    "cn{i} nic: ops={} busy={}ns wait={}ns util={:.2}",
+                    nic.op_count(),
+                    nic.busy_ns(),
+                    nic.wait_ns(),
+                    nic.utilization(cfg.duration_ns)
+                );
+            }
+        }
+        let mut reasons = std::collections::HashMap::new();
+        for (k, v) in stats.reasons.lock().unwrap().iter() {
+            reasons.insert(k.to_string(), *v);
+        }
+        Ok(RunReport {
+            commits: stats.commits.load(Ordering::Relaxed),
+            aborts: stats.aborts.load(Ordering::Relaxed),
+            duration_ns: cfg.duration_ns,
+            p50_ns: hist.p50(),
+            p99_ns: hist.p99(),
+            mean_ns: hist.mean(),
+            abort_reasons: reasons,
+            timeline: timeline.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            timeline_interval_ns: cfg.timeline_interval_ns,
+        })
+    }
+
+    /// MN memory actually allocated (fig. 16 accounting), per MN.
+    pub fn mn_allocated_bytes(&self) -> Vec<u64> {
+        self.shared.mns.iter().map(|m| m.allocated()).collect()
+    }
+}
+
+/// Shared run-loop control state.
+struct RunCtl {
+    events: Vec<CrashEvent>,
+    triggered: Vec<AtomicBool>,
+    recovered: Vec<AtomicBool>,
+    restart_at: Vec<AtomicU64>,
+    last_interval: Vec<AtomicU64>,
+}
+
+/// The balancer planner lives on the thread that runs it (the PJRT
+/// executable is not `Send`).
+fn make_planner(cfg: &Config, system: SystemKind) -> Option<Box<dyn Planner>> {
+    if system != SystemKind::Lotus || !cfg.features.load_balancing {
+        return None;
+    }
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match XlaPlanner::load(&dir, cfg.n_cns, N_SHARDS) {
+        Ok(p) => Some(Box::new(p)),
+        Err(_) => Some(Box::new(RustPlanner::new(cfg.n_cns, N_SHARDS))),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn coordinator_thread(
+    shared: Arc<SharedCluster>,
+    workload: Arc<dyn Workload>,
+    system: SystemKind,
+    gid: usize,
+    gate: Arc<TimeGate>,
+    hist: Arc<Histogram>,
+    stats: Arc<TxnStats>,
+    timeline: Arc<Vec<AtomicU64>>,
+    run: Arc<RunCtl>,
+) -> Result<()> {
+    let cfg = shared.cfg.clone();
+    let cn = gid / cfg.coordinators_per_cn;
+    let slot = gid % cfg.coordinators_per_cn;
+    let mut api: Box<dyn TxnApi> = match system {
+        SystemKind::Lotus => Box::new(LotusCoordinator::new(shared.clone(), cn, slot, gid)),
+        SystemKind::Motor => Box::new(BaselineCoordinator::new(shared.clone(), cn, gid, motor::style())),
+        SystemKind::Ford => Box::new(BaselineCoordinator::new(shared.clone(), cn, gid, ford::style())),
+        SystemKind::MotorFullRecord => Box::new(BaselineCoordinator::new(
+            shared.clone(),
+            cn,
+            gid,
+            motor::full_record_style(),
+        )),
+        SystemKind::MotorNoCas => Box::new(BaselineCoordinator::new(
+            shared.clone(),
+            cn,
+            gid,
+            nolock::motor_nocas_style(),
+        )),
+        SystemKind::FordNoCas => Box::new(BaselineCoordinator::new(
+            shared.clone(),
+            cn,
+            gid,
+            nolock::ford_nocas_style(),
+        )),
+        SystemKind::IdealLock => Box::new(BaselineCoordinator::new(
+            shared.clone(),
+            cn,
+            gid,
+            ideal_rdma_lock::style(),
+        )),
+    };
+    api.attach_gate(gate.clone(), gid);
+    let hybrid = system == SystemKind::Lotus && cfg.features.load_balancing;
+    let mut balancer = if slot == 0 && gid == 0 {
+        make_planner(&cfg, system).map(|planner| {
+            (
+                planner,
+                vec![0f32; cfg.n_cns * N_SHARDS],
+                vec![0f32; cfg.n_cns * crate::balance::metrics::N_INTERVALS],
+            )
+        })
+    } else {
+        None
+    };
+
+    loop {
+        let now = api.now();
+        if now >= cfg.duration_ns {
+            break;
+        }
+        gate.sync(gid, now);
+
+        // --- Crash events. ---
+        for (k, ev) in run.events.iter().enumerate() {
+            if now >= ev.at_ns && !run.triggered[k].load(Ordering::Acquire) {
+                if run.triggered[k]
+                    .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+                {
+                    for &c in &ev.cns {
+                        shared.membership.fail(c, ev.at_ns);
+                        shared.rpc.set_failed(c, true);
+                    }
+                }
+            }
+            // Recovery driver: lowest surviving coordinator past the lease.
+            if run.triggered[k].load(Ordering::Acquire)
+                && !ev.cns.contains(&cn)
+                && now >= ev.at_ns + LEASE_NS
+                && !run.recovered[k].load(Ordering::Acquire)
+                && run.recovered[k]
+                    .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+            {
+                let ep = Endpoint::new(cn, shared.cn_nics[cn].clone(), shared.net.clone());
+                let mut rclk = VClock(ev.at_ns + LEASE_NS);
+                let _report = recover_cn_failure(&shared, &ev.cns, &ep, &mut rclk)?;
+                let restart = rclk.now() + RESTART_EXTRA_NS;
+                run.restart_at[k].store(restart, Ordering::Release);
+                for &c in &ev.cns {
+                    shared.membership.begin_restart(c, rclk.now());
+                    shared.rpc.set_failed(c, false);
+                    shared.membership.complete_restart(c, restart);
+                }
+            }
+            // Crashed CN: park until restart.
+            if run.triggered[k].load(Ordering::Acquire) && ev.cns.contains(&cn) && now >= ev.at_ns
+            {
+                let restart = run.restart_at[k].load(Ordering::Acquire);
+                if restart == u64::MAX || now < restart {
+                    api.crash();
+                    gate.finish(gid);
+                    loop {
+                        let r = run.restart_at[k].load(Ordering::Acquire);
+                        if r != u64::MAX {
+                            api.skip_to(r);
+                            break;
+                        }
+                        if gate.min_clock() == u64::MAX {
+                            // Every live coordinator finished before the
+                            // recovery driver ran — end the run.
+                            return Ok(());
+                        }
+                        std::thread::yield_now();
+                    }
+                }
+            }
+        }
+
+        // --- Load-balancer interval duties (slot 0 of each CN). ---
+        if slot == 0 && cfg.balance_interval_ns > 0 {
+            let interval = now / cfg.balance_interval_ns;
+            let last = run.last_interval[cn].load(Ordering::Acquire);
+            if interval > last
+                && run.last_interval[cn]
+                    .compare_exchange(last, interval, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+            {
+                shared.metrics.seal_interval(cn);
+                if let Some((planner, counts, lat)) = balancer.as_mut() {
+                    shared.metrics.drain_counts(counts);
+                    shared.metrics.latency_matrix(lat);
+                    if let Ok(plan) = planner.plan(counts, lat) {
+                        for (shard, from, to) in plan.moves() {
+                            if shared.router.owner_of(shard) == from
+                                && shared.membership.is_serving(from)
+                                && shared.membership.is_serving(to)
+                            {
+                                let mut clk = VClock(api.now());
+                                let _ = transfer_shard(&shared, shard, from, to, &mut clk);
+                                api.skip_to(clk.now());
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // --- One transaction. ---
+        let route = RouteCtx {
+            router: &shared.router,
+            cn,
+            hybrid,
+        };
+        let t0 = api.now();
+        match workload.run_one(api.as_mut(), &route) {
+            Ok(()) => {
+                let t1 = api.now();
+                stats.commit();
+                hist.record(t1 - t0);
+                shared.metrics.record_latency(cn, t1 - t0);
+                if cfg.timeline_interval_ns > 0 {
+                    let bucket = (t1 / cfg.timeline_interval_ns) as usize;
+                    if bucket < timeline.len() {
+                        timeline[bucket].fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            Err(e) if e.is_abort() => {
+                stats.abort(e.abort_reason().unwrap());
+            }
+            Err(Error::NodeUnavailable(_)) => {
+                stats.abort(crate::AbortReason::OwnerFailed);
+            }
+            Err(e) => {
+                gate.finish(gid);
+                return Err(e);
+            }
+        }
+    }
+    gate.finish(gid);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> Config {
+        let mut cfg = Config::small();
+        cfg.duration_ns = 3_000_000; // 3 ms virtual
+        cfg.scale.kvs_keys = 2_000;
+        cfg.scale.smallbank_accounts = 2_000;
+        cfg
+    }
+
+    #[test]
+    fn lotus_kvs_end_to_end() {
+        let cfg = tiny_cfg();
+        let cluster = Cluster::build(
+            &cfg,
+            WorkloadKind::Kvs {
+                rw_pct: 50,
+                skewed: true,
+            },
+        )
+        .unwrap();
+        let report = cluster.run(SystemKind::Lotus).unwrap();
+        assert!(report.commits > 100, "commits={}", report.commits);
+        assert!(report.p50_ns > 0);
+        // All locks must be free after the run.
+        let held: usize = cluster
+            .shared
+            .lock_services
+            .iter()
+            .map(|s| s.held_slots())
+            .sum();
+        assert_eq!(held, 0);
+    }
+
+    #[test]
+    fn all_systems_run_smallbank() {
+        let cfg = tiny_cfg();
+        let cluster = Cluster::build(&cfg, WorkloadKind::SmallBank).unwrap();
+        for system in [
+            SystemKind::Lotus,
+            SystemKind::Motor,
+            SystemKind::Ford,
+            SystemKind::MotorNoCas,
+            SystemKind::FordNoCas,
+            SystemKind::IdealLock,
+        ] {
+            let report = cluster.run(system).unwrap();
+            assert!(
+                report.commits > 50,
+                "{}: commits={}",
+                system.name(),
+                report.commits
+            );
+        }
+    }
+
+    #[test]
+    fn lotus_beats_motor_on_smallbank() {
+        // The headline claim: lock disaggregation wins on the write-heavy,
+        // small-record benchmark — once concurrency saturates the MN RNIC
+        // atomics pipeline (the fig. 2 knee); below it the systems tie.
+        let mut cfg = tiny_cfg();
+        cfg.duration_ns = 5_000_000;
+        cfg.coordinators_per_cn = 8; // 24 concurrent over 2 MNs
+        let cluster = Cluster::build(&cfg, WorkloadKind::SmallBank).unwrap();
+        let lotus = cluster.run(SystemKind::Lotus).unwrap();
+        let motor = cluster.run(SystemKind::Motor).unwrap();
+        assert!(
+            lotus.mtps() > motor.mtps(),
+            "lotus {:.3} vs motor {:.3} Mtps",
+            lotus.mtps(),
+            motor.mtps()
+        );
+    }
+
+    #[test]
+    fn crash_event_dips_and_recovers() {
+        let mut cfg = tiny_cfg();
+        cfg.duration_ns = 60_000_000; // 60 ms
+        cfg.timeline_interval_ns = 1_000_000; // 1 ms buckets
+        let cluster = Cluster::build(
+            &cfg,
+            WorkloadKind::Kvs {
+                rw_pct: 50,
+                skewed: false,
+            },
+        )
+        .unwrap();
+        let events = [CrashEvent {
+            at_ns: 20_000_000,
+            cns: vec![2],
+        }];
+        let report = cluster.run_with_events(SystemKind::Lotus, &events).unwrap();
+        assert!(report.commits > 0);
+        // Throughput after restart must recover to a similar level.
+        let t = &report.timeline;
+        let before: u64 = t[5..15].iter().sum();
+        let after: u64 = t[45..55].iter().sum();
+        assert!(
+            after * 3 > before,
+            "no recovery: before={before} after={after} timeline={t:?}"
+        );
+        let held: usize = cluster
+            .shared
+            .lock_services
+            .iter()
+            .map(|s| s.held_slots())
+            .sum();
+        assert_eq!(held, 0, "recovery must leave no stale locks");
+    }
+}

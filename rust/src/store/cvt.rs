@@ -1,0 +1,338 @@
+//! Consecutive version tables: parse/serialize + version selection.
+//!
+//! A CVT is read from the memory pool in ONE one-sided READ (its raison
+//! d'être, paper 4.4) and parsed into a [`CvtSnapshot`]. Cell encoding:
+//!
+//! ```text
+//! word0: head_cv u8 | valid u8 | len u16 | pad4     word2: record addr u64
+//! word1: version u64                      word3: tail_cv u8 | pad7
+//! ```
+//!
+//! `version == u64::MAX` is the INVISIBLE marker a committing writer uses
+//! between *Write Data* and *Write Visible* (paper 5.1). Head/tail CVs
+//! bracket the cell so a torn cell overwrite is detectable, and the cell
+//! CV must match the record slot's seqlock CV (section 7.1).
+
+use crate::store::layout::{Layout, CELL_SIZE, CVT_HEADER};
+use crate::util::bytes::{get_u16, get_u64, put_u16, put_u64};
+
+/// Version marker for not-yet-visible data (64-bit max, paper 5.1).
+pub const INVISIBLE: u64 = u64::MAX;
+
+/// One parsed CVT cell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CellSnapshot {
+    /// Seqlock CV of the record slot this cell points to.
+    pub cv: u8,
+    /// Is the cell occupied?
+    pub valid: bool,
+    /// Payload length of THIS version (versions may differ in length).
+    pub len: u16,
+    /// Commit timestamp ([`INVISIBLE`] while a commit is in flight).
+    pub version: u64,
+    /// Record slot address on the same MN.
+    pub addr: u64,
+    /// True iff head and tail CVs matched when parsed.
+    pub consistent: bool,
+}
+
+/// One parsed CVT.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CvtSnapshot {
+    /// The record's LOTUS key.
+    pub key: u64,
+    /// Is this CVT slot occupied? (explicit flag — key 0 is a legal key).
+    pub occupied: bool,
+    /// Owning table.
+    pub table_id: u16,
+    /// Record payload length.
+    pub record_len: u16,
+    /// Cells (version slots).
+    pub cells: Vec<CellSnapshot>,
+}
+
+impl CvtSnapshot {
+    /// An empty (unoccupied) CVT.
+    pub fn empty(ncells: u8) -> Self {
+        Self {
+            key: 0,
+            occupied: false,
+            table_id: 0,
+            record_len: 0,
+            cells: vec![
+                CellSnapshot {
+                    cv: 0,
+                    valid: false,
+                    len: 0,
+                    version: 0,
+                    addr: 0,
+                    consistent: true,
+                };
+                ncells as usize
+            ],
+        }
+    }
+
+    /// Is this CVT slot unoccupied?
+    pub fn is_empty(&self) -> bool {
+        !self.occupied
+    }
+
+    /// Parse from `layout.cvt_size()` bytes.
+    pub fn parse(buf: &[u8], layout: &Layout) -> Self {
+        debug_assert!(buf.len() as u64 >= layout.cvt_size());
+        let key = get_u64(buf, 0);
+        let table_id = get_u16(buf, 8);
+        let record_len = get_u16(buf, 10);
+        let ncells = buf[12].min(layout.ncells);
+        let occupied = buf[13] != 0;
+        let mut cells = Vec::with_capacity(layout.ncells as usize);
+        for c in 0..layout.ncells {
+            if c >= ncells {
+                cells.push(CellSnapshot {
+                    cv: 0,
+                    valid: false,
+                    len: 0,
+                    version: 0,
+                    addr: 0,
+                    consistent: true,
+                });
+                continue;
+            }
+            let off = (CVT_HEADER + c as u64 * CELL_SIZE) as usize;
+            let head_cv = buf[off];
+            let valid = buf[off + 1] != 0;
+            let len = get_u16(buf, off + 2);
+            let version = get_u64(buf, off + 8);
+            let addr = get_u64(buf, off + 16);
+            let tail_cv = buf[off + 24];
+            cells.push(CellSnapshot {
+                cv: head_cv,
+                valid,
+                len,
+                version,
+                addr,
+                consistent: head_cv == tail_cv,
+            });
+        }
+        Self {
+            key,
+            occupied,
+            table_id,
+            record_len,
+            cells,
+        }
+    }
+
+    /// Serialize into `layout.cvt_size()` bytes.
+    pub fn serialize(&self, layout: &Layout) -> Vec<u8> {
+        let mut buf = vec![0u8; layout.cvt_size() as usize];
+        put_u64(&mut buf, 0, self.key);
+        put_u16(&mut buf, 8, self.table_id);
+        put_u16(&mut buf, 10, self.record_len);
+        buf[12] = self.cells.len() as u8;
+        buf[13] = self.occupied as u8;
+        for (c, cell) in self.cells.iter().enumerate() {
+            let off = (CVT_HEADER + c as u64 * CELL_SIZE) as usize;
+            buf[off] = cell.cv;
+            buf[off + 1] = cell.valid as u8;
+            put_u16(&mut buf, off + 2, cell.len);
+            put_u64(&mut buf, off + 8, cell.version);
+            put_u64(&mut buf, off + 16, cell.addr);
+            buf[off + 24] = cell.cv; // tail CV mirrors head
+        }
+        buf
+    }
+
+    /// Serialize a single cell (the 32B written by *Write Data*).
+    pub fn serialize_cell(cell: &CellSnapshot) -> [u8; CELL_SIZE as usize] {
+        let mut buf = [0u8; CELL_SIZE as usize];
+        buf[0] = cell.cv;
+        buf[1] = cell.valid as u8;
+        put_u16(&mut buf, 2, cell.len);
+        put_u64(&mut buf, 8, cell.version);
+        put_u64(&mut buf, 16, cell.addr);
+        buf[24] = cell.cv;
+        buf
+    }
+
+    /// MVCC read rule: the cell with the **largest version <= ts** among
+    /// valid, visible, consistent cells. Also reports whether any visible
+    /// version **> ts** exists (the serializability abort condition for
+    /// read-write transactions, paper 5.1).
+    pub fn select_version(&self, ts: u64) -> (Option<&CellSnapshot>, bool) {
+        let mut best: Option<&CellSnapshot> = None;
+        let mut newer = false;
+        for c in &self.cells {
+            if !c.valid || !c.consistent || c.version == INVISIBLE {
+                continue;
+            }
+            if c.version > ts {
+                newer = true;
+            } else if best.is_none_or(|b| c.version > b.version) {
+                best = Some(c);
+            }
+        }
+        (best, newer)
+    }
+
+    /// Latest visible version, if any.
+    pub fn latest(&self) -> Option<&CellSnapshot> {
+        self.cells
+            .iter()
+            .filter(|c| c.valid && c.version != INVISIBLE && c.consistent)
+            .max_by_key(|c| c.version)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> Layout {
+        Layout {
+            ncells: 3,
+            assoc: 4,
+            record_len: 40,
+            n_buckets: 16,
+        }
+    }
+
+    fn cell(version: u64, addr: u64, cv: u8) -> CellSnapshot {
+        CellSnapshot {
+            cv,
+            valid: true,
+            len: 8,
+            version,
+            addr,
+            consistent: true,
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let l = layout();
+        let cvt = CvtSnapshot {
+            key: 0xABCD_EF01_2345,
+            occupied: true,
+            table_id: 3,
+            record_len: 40,
+            cells: vec![cell(10, 0x100, 1), cell(20, 0x200, 2), cell(INVISIBLE, 0x300, 3)],
+        };
+        let buf = cvt.serialize(&l);
+        assert_eq!(buf.len() as u64, l.cvt_size());
+        let parsed = CvtSnapshot::parse(&buf, &l);
+        assert_eq!(parsed, cvt);
+    }
+
+    #[test]
+    fn empty_roundtrip() {
+        let l = layout();
+        let e = CvtSnapshot::empty(3);
+        assert!(e.is_empty());
+        let parsed = CvtSnapshot::parse(&e.serialize(&l), &l);
+        assert!(parsed.is_empty());
+    }
+
+    #[test]
+    fn select_version_rules() {
+        let mut cvt = CvtSnapshot::empty(3);
+        cvt.key = 1;
+        cvt.cells = vec![cell(10, 0xA, 0), cell(30, 0xB, 0), cell(20, 0xC, 0)];
+        // ts=25: best is 20, newer=true (30 exists).
+        let (best, newer) = cvt.select_version(25);
+        assert_eq!(best.unwrap().version, 20);
+        assert!(newer);
+        // ts=35: best is 30, no newer.
+        let (best, newer) = cvt.select_version(35);
+        assert_eq!(best.unwrap().version, 30);
+        assert!(!newer);
+        // ts=5: nothing visible at/below, newer=true.
+        let (best, newer) = cvt.select_version(5);
+        assert!(best.is_none());
+        assert!(newer);
+    }
+
+    #[test]
+    fn select_skips_invisible_and_invalid() {
+        let mut cvt = CvtSnapshot::empty(3);
+        cvt.key = 1;
+        cvt.cells = vec![
+            cell(INVISIBLE, 0xA, 0),
+            CellSnapshot {
+                valid: false,
+                ..cell(5, 0xB, 0)
+            },
+            cell(7, 0xC, 0),
+        ];
+        let (best, newer) = cvt.select_version(100);
+        assert_eq!(best.unwrap().version, 7);
+        assert!(!newer, "INVISIBLE must not count as newer");
+    }
+
+    #[test]
+    fn select_skips_torn_cells() {
+        let mut cvt = CvtSnapshot::empty(2);
+        cvt.key = 1;
+        let mut torn = cell(50, 0xA, 1);
+        torn.consistent = false;
+        cvt.cells = vec![torn, cell(7, 0xC, 0)];
+        let (best, _) = cvt.select_version(100);
+        assert_eq!(best.unwrap().version, 7, "torn cell must be skipped");
+    }
+
+    #[test]
+    fn torn_cell_detected_on_parse() {
+        let l = layout();
+        let cvt = CvtSnapshot {
+            key: 9,
+            occupied: true,
+            table_id: 1,
+            record_len: 8,
+            cells: vec![cell(1, 0x10, 5), cell(2, 0x20, 6), cell(3, 0x30, 7)],
+        };
+        let mut buf = cvt.serialize(&l);
+        // Corrupt the tail CV of cell 1.
+        let off = (CVT_HEADER + CELL_SIZE + 24) as usize;
+        buf[off] = 99;
+        let parsed = CvtSnapshot::parse(&buf, &l);
+        assert!(parsed.cells[0].consistent);
+        assert!(!parsed.cells[1].consistent);
+        assert!(parsed.cells[2].consistent);
+    }
+
+    #[test]
+    fn prop_select_version_matches_naive() {
+        crate::testing::prop(100, |g| {
+            let n = g.usize(1, 6);
+            let cells: Vec<CellSnapshot> = (0..n)
+                .map(|i| {
+                    let mut c = cell(g.u64(0, 100), i as u64 * 8, 0);
+                    c.valid = g.bool(0.8);
+                    if g.bool(0.1) {
+                        c.version = INVISIBLE;
+                    }
+                    c
+                })
+                .collect();
+            let cvt = CvtSnapshot {
+                key: 1,
+                occupied: true,
+                table_id: 0,
+                record_len: 8,
+                cells: cells.clone(),
+            };
+            let ts = g.u64(0, 120);
+            let (best, newer) = cvt.select_version(ts);
+            // naive oracle
+            let vis: Vec<&CellSnapshot> = cells
+                .iter()
+                .filter(|c| c.valid && c.version != INVISIBLE)
+                .collect();
+            let naive_best = vis.iter().filter(|c| c.version <= ts).max_by_key(|c| c.version);
+            let naive_newer = vis.iter().any(|c| c.version > ts);
+            assert_eq!(best.map(|c| c.version), naive_best.map(|c| c.version));
+            assert_eq!(newer, naive_newer);
+        });
+    }
+}

@@ -1,0 +1,148 @@
+//! Lightweight garbage collection (paper section 7.1).
+//!
+//! Updates write the new version into a *free* CVT cell. If all cells are
+//! occupied, the oldest version's cell (and its record slot) is reused.
+//! Additionally, during writes the coordinator clears any cell whose
+//! timestamp is older than a threshold relative to the (bounded-drift)
+//! local clock — the paper's 500 ms default — reclaiming memory eagerly.
+//!
+//! Cells with `version == INVISIBLE` belong to an in-flight commit and
+//! are never victims (the write lock guarantees at most one per CVT).
+
+use crate::store::cvt::{CellSnapshot, INVISIBLE};
+use crate::txn::timestamp::phys_of;
+
+/// Default staleness threshold (500 ms, paper 7.1).
+pub const DEFAULT_GC_THRESHOLD_NS: u64 = 500_000_000;
+
+/// Pick the cell to hold a new version. Preference order:
+/// 1. an invalid (never used / reclaimed) cell,
+/// 2. the oldest cell past the GC threshold,
+/// 3. the oldest visible cell.
+///
+/// Returns `None` only if every cell is INVISIBLE (cannot happen with the
+/// write lock held, but callers treat it as an abort for safety).
+pub fn choose_victim(cells: &[CellSnapshot], _now_phys_ns: u64, threshold_ns: u64) -> Option<usize> {
+    // 1. free cell
+    if let Some(i) = cells.iter().position(|c| !c.valid) {
+        return Some(i);
+    }
+    // 2/3. oldest non-INVISIBLE cell (GC threshold only changes whether we
+    // *also* clear other stale cells; the victim choice is the oldest).
+    let _ = threshold_ns;
+    cells
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| c.version != INVISIBLE)
+        .min_by_key(|(_, c)| c.version)
+        .map(|(i, _)| i)
+}
+
+/// Indices of cells that are valid, visible, and stale past the threshold
+/// — reclaimed (set invalid) opportunistically during a write. The cell
+/// holding the newest version is never reclaimed (a reader must always
+/// find the latest committed version).
+pub fn reclaimable(cells: &[CellSnapshot], now_phys_ns: u64, threshold_ns: u64) -> Vec<usize> {
+    let newest = cells
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| c.valid && c.version != INVISIBLE)
+        .max_by_key(|(_, c)| c.version)
+        .map(|(i, _)| i);
+    cells
+        .iter()
+        .enumerate()
+        .filter(|(i, c)| {
+            Some(*i) != newest
+                && c.valid
+                && c.version != INVISIBLE
+                && phys_of(c.version).saturating_add(threshold_ns) < now_phys_ns
+        })
+        .map(|(i, _)| i)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::txn::timestamp::compose_ts;
+
+    fn cell(version: u64, valid: bool) -> CellSnapshot {
+        CellSnapshot {
+            cv: 0,
+            valid,
+            len: 8,
+            version,
+            addr: 0,
+            consistent: true,
+        }
+    }
+
+    #[test]
+    fn prefers_free_cell() {
+        let cells = [cell(compose_ts(10, 0), true), cell(0, false)];
+        assert_eq!(choose_victim(&cells, 1000, 100), Some(1));
+    }
+
+    #[test]
+    fn evicts_oldest_when_full() {
+        let cells = [
+            cell(compose_ts(30, 0), true),
+            cell(compose_ts(10, 0), true),
+            cell(compose_ts(20, 0), true),
+        ];
+        assert_eq!(choose_victim(&cells, 1000, 100), Some(1));
+    }
+
+    #[test]
+    fn never_evicts_invisible() {
+        let cells = [cell(INVISIBLE, true), cell(compose_ts(5, 0), true)];
+        assert_eq!(choose_victim(&cells, 1000, 100), Some(1));
+        let all_invisible = [cell(INVISIBLE, true), cell(INVISIBLE, true)];
+        assert_eq!(choose_victim(&all_invisible, 1000, 100), None);
+    }
+
+    #[test]
+    fn reclaimable_respects_threshold_and_keeps_newest() {
+        let now = 10_000;
+        let cells = [
+            cell(compose_ts(100, 0), true),   // stale
+            cell(compose_ts(9_990, 0), true), // fresh (within threshold)
+            cell(compose_ts(200, 0), true),   // stale
+            cell(compose_ts(9_999, 0), true), // newest — protected
+        ];
+        let r = reclaimable(&cells, now, 1_000);
+        assert_eq!(r, vec![0, 2]);
+    }
+
+    #[test]
+    fn reclaimable_never_includes_only_version() {
+        let cells = [cell(compose_ts(1, 0), true)];
+        assert!(reclaimable(&cells, u64::MAX / 2, 1).is_empty());
+    }
+
+    #[test]
+    fn prop_victim_is_never_invisible_and_prefers_invalid() {
+        crate::testing::prop(100, |g| {
+            let n = g.usize(1, 8);
+            let cells: Vec<CellSnapshot> = (0..n)
+                .map(|_| {
+                    let invisible = g.bool(0.2);
+                    cell(
+                        if invisible { INVISIBLE } else { compose_ts(g.u64(0, 1 << 30), 0) },
+                        g.bool(0.8),
+                    )
+                })
+                .collect();
+            match choose_victim(&cells, 1 << 31, 500) {
+                Some(i) => {
+                    assert!(!cells[i].valid || cells[i].version != INVISIBLE);
+                    if cells.iter().any(|c| !c.valid) {
+                        assert!(!cells[i].valid, "must prefer a free cell");
+                    }
+                }
+                None => assert!(cells.iter().all(|c| c.valid && c.version == INVISIBLE)),
+            }
+        });
+    }
+}

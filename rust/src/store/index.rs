@@ -1,0 +1,446 @@
+//! DB tables: hash index of CVT buckets + record heaps (paper fig. 11).
+//!
+//! A [`TableStore`] describes one DB table laid out **identically** on
+//! every replica MN (primary first): an index region of
+//! `n_buckets x assoc` CVTs and a records region holding one fixed slot
+//! per CVT cell. Identical layout means a primary address maps to a
+//! backup address by pure offset arithmetic — exactly how primary-backup
+//! replication on DM writes both copies with the same doorbell batch.
+//!
+//! The store itself performs **no network charging**; coordinators read
+//! and write through [`crate::dm::Endpoint`] using the addresses computed
+//! here. Init-time bulk loading uses the MN CPU directly (paper section 3:
+//! "MNs utilize their limited CPUs to allocate memory ... application
+//! data is loaded into DB tables").
+
+use std::sync::Arc;
+
+use crate::dm::memnode::MemNode;
+use crate::sharding::key::LotusKey;
+use crate::store::cvt::{CellSnapshot, CvtSnapshot};
+use crate::store::layout::Layout;
+use crate::store::record;
+use crate::{Error, Result};
+
+/// Max buckets probed on lookup/insert (home + 7 successors). Linear
+/// probing induces clustering, so the chain is sized generously; lookups
+/// stop at the first hit (usually the home bucket).
+pub const PROBE_MAX: usize = 8;
+
+/// Static description of a DB table.
+#[derive(Debug, Clone)]
+pub struct TableSpec {
+    /// Table id (unique per cluster).
+    pub id: u16,
+    /// Human-readable name (reports).
+    pub name: String,
+    /// Max record payload bytes.
+    pub record_len: u32,
+    /// Versions per record (CVT cells).
+    pub ncells: u8,
+    /// CVTs per index bucket.
+    pub assoc: u8,
+    /// Expected record count (sizes the index).
+    pub expected_records: u64,
+}
+
+impl TableSpec {
+    /// Bucket count for a ~40% load factor, rounded to a power of two
+    /// (headroom keeps probe chains short under linear-probing clustering).
+    pub fn n_buckets(&self) -> u64 {
+        let want = (self.expected_records as f64 / (self.assoc as f64 * 0.4)).ceil() as u64;
+        want.max(1).next_power_of_two()
+    }
+
+    /// Derived geometry.
+    pub fn layout(&self) -> Layout {
+        Layout {
+            ncells: self.ncells,
+            assoc: self.assoc,
+            record_len: self.record_len,
+            n_buckets: self.n_buckets(),
+        }
+    }
+}
+
+/// One replica's placement of the table.
+#[derive(Debug, Clone, Copy)]
+pub struct TableReplica {
+    /// MN id.
+    pub mn: usize,
+    /// Index region base address.
+    pub index_base: u64,
+    /// Records region base address.
+    pub records_base: u64,
+}
+
+/// One DB table across its replicas.
+pub struct TableStore {
+    /// The table's spec.
+    pub spec: TableSpec,
+    /// Derived geometry.
+    pub layout: Layout,
+    /// Replicas, primary first.
+    pub replicas: Vec<TableReplica>,
+}
+
+impl TableStore {
+    /// Register the table's regions on `replica_mns` (primary first).
+    pub fn create(spec: TableSpec, mns: &[Arc<MemNode>], replica_mns: &[usize]) -> Result<Self> {
+        assert!(!replica_mns.is_empty());
+        let layout = spec.layout();
+        let records_size =
+            layout.n_buckets * spec.assoc as u64 * spec.ncells as u64 * layout.record_slot();
+        let mut replicas = Vec::with_capacity(replica_mns.len());
+        for &mn_id in replica_mns {
+            let mn = mns
+                .get(mn_id)
+                .ok_or_else(|| Error::NodeUnavailable(format!("mn{mn_id}")))?;
+            let index = mn.register(layout.index_size())?;
+            let records = mn.register(records_size)?;
+            replicas.push(TableReplica {
+                mn: mn_id,
+                index_base: index.base,
+                records_base: records.base,
+            });
+        }
+        Ok(Self {
+            spec,
+            layout,
+            replicas,
+        })
+    }
+
+    /// The primary replica.
+    #[inline]
+    pub fn primary(&self) -> &TableReplica {
+        &self.replicas[0]
+    }
+
+    /// Index bucket for a key (home bucket; see [`PROBE_MAX`]).
+    #[inline]
+    pub fn bucket_of(&self, key: LotusKey) -> u64 {
+        key.index_bucket(self.layout.n_buckets)
+    }
+
+    /// The buckets a key may live in: its home bucket plus up to
+    /// [`PROBE_MAX`]`- 1` linear-probe successors (wrapping). Bounded
+    /// probing keeps bulk loads and inserts from failing on the rare
+    /// over-full bucket while keeping lookups O(1).
+    pub fn probe_buckets(&self, key: LotusKey) -> impl Iterator<Item = u64> + '_ {
+        let home = self.bucket_of(key);
+        let n = self.layout.n_buckets;
+        (0..PROBE_MAX as u64).map(move |i| (home + i) % n)
+    }
+
+    /// Address of bucket `b` on replica `r`.
+    #[inline]
+    pub fn bucket_addr(&self, r: usize, b: u64) -> u64 {
+        self.replicas[r].index_base + self.layout.bucket_off(b)
+    }
+
+    /// Address of CVT `(b, slot)` on replica `r`.
+    #[inline]
+    pub fn cvt_addr(&self, r: usize, b: u64, slot: u8) -> u64 {
+        self.bucket_addr(r, b) + self.layout.cvt_off_in_bucket(slot)
+    }
+
+    /// Inverse of [`Self::cvt_addr`] for the primary: `(bucket, slot)`.
+    pub fn locate_cvt(&self, primary_cvt_addr: u64) -> Result<(u64, u8)> {
+        let base = self.primary().index_base;
+        if primary_cvt_addr < base {
+            return Err(Error::BadAddress(primary_cvt_addr, "below index"));
+        }
+        let off = primary_cvt_addr - base;
+        let idx = off / self.layout.cvt_size();
+        if off % self.layout.cvt_size() != 0 || idx >= self.layout.n_buckets * self.spec.assoc as u64
+        {
+            return Err(Error::BadAddress(primary_cvt_addr, "not a CVT address"));
+        }
+        Ok((idx / self.spec.assoc as u64, (idx % self.spec.assoc as u64) as u8))
+    }
+
+    /// Address of the fixed record slot for `(b, slot, cell)` on replica `r`.
+    #[inline]
+    pub fn record_addr(&self, r: usize, b: u64, slot: u8, cell: u8) -> u64 {
+        let idx = (b * self.spec.assoc as u64 + slot as u64) * self.spec.ncells as u64
+            + cell as u64;
+        self.replicas[r].records_base + idx * self.layout.record_slot()
+    }
+
+    /// Translate any primary address into replica `r`'s copy (identical
+    /// layout => identical offset).
+    #[inline]
+    pub fn to_replica_addr(&self, primary_addr: u64, r: usize) -> u64 {
+        let p = self.primary();
+        let rep = &self.replicas[r];
+        if primary_addr >= p.records_base {
+            rep.records_base + (primary_addr - p.records_base)
+        } else {
+            rep.index_base + (primary_addr - p.index_base)
+        }
+    }
+
+    /// The lock key guarding an index bucket during inserts (paper 4.1:
+    /// "using the index bucket address as a key to locate the lock").
+    /// Unique across tables; shares the bucket's shard-routing semantics.
+    pub fn bucket_lock_key(&self, b: u64) -> LotusKey {
+        // unique = [tag 15 (reserved) : 5 | table : 12 | bucket : 35] —
+        // tag 15 is reserved cluster-wide so bucket locks never collide
+        // with data keys (workload key tags stay below 15).
+        let unique = (15u64 << 47) | ((self.spec.id as u64) << 35) | (b & ((1 << 35) - 1));
+        LotusKey::compose(b, unique)
+    }
+
+    /// Find the CVT matching `key` inside a parsed bucket image; returns
+    /// `(slot, snapshot)`.
+    pub fn find_in_bucket(&self, bucket_buf: &[u8], key: LotusKey) -> Option<(u8, CvtSnapshot)> {
+        let sz = self.layout.cvt_size() as usize;
+        for slot in 0..self.spec.assoc {
+            let off = slot as usize * sz;
+            let cvt = CvtSnapshot::parse(&bucket_buf[off..off + sz], &self.layout);
+            if !cvt.is_empty() && cvt.key == key.0 {
+                return Some((slot, cvt));
+            }
+        }
+        None
+    }
+
+    /// Find an empty CVT slot inside a parsed bucket image.
+    pub fn find_empty_in_bucket(&self, bucket_buf: &[u8]) -> Option<u8> {
+        let sz = self.layout.cvt_size() as usize;
+        (0..self.spec.assoc).find(|&slot| {
+            let off = slot as usize * sz;
+            CvtSnapshot::parse(&bucket_buf[off..off + sz], &self.layout).is_empty()
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // Init-time bulk loading (MN CPU; no network cost).
+    // ------------------------------------------------------------------
+
+    /// Insert `(key, payload)` at version `version` on every replica.
+    pub fn load_insert(
+        &self,
+        mns: &[Arc<MemNode>],
+        key: LotusKey,
+        payload: &[u8],
+        version: u64,
+    ) -> Result<()> {
+        if payload.len() > self.spec.record_len as usize {
+            return Err(Error::Config(format!(
+                "payload {} exceeds record_len {}",
+                payload.len(),
+                self.spec.record_len
+            )));
+        }
+        // Find the slot on the primary (identical on every replica),
+        // probing the home bucket then its successors.
+        let mn0 = &mns[self.primary().mn];
+        let mut slot_found = None;
+        for b in self.probe_buckets(key) {
+            for slot in 0..self.spec.assoc {
+                let addr = self.cvt_addr(0, b, slot);
+                let existing_key = mn0.load_u64(addr)?;
+                // Header word 1 carries the occupied flag at byte 13.
+                let flags = mn0.load_u64(addr + 8)?;
+                let occupied = (flags >> 40) & 0xFF != 0;
+                if occupied && existing_key == key.0 {
+                    return Err(crate::abort(crate::AbortReason::Duplicate));
+                }
+                if !occupied && slot_found.is_none() {
+                    slot_found = Some((b, slot));
+                }
+            }
+        }
+        let Some((b, slot)) = slot_found else {
+            return Err(Error::OutOfMemory(format!(
+                "table {} probe chain of bucket {} full during load",
+                self.spec.name,
+                self.bucket_of(key)
+            )));
+        };
+        let cv = 1u8;
+        let mut cvt = CvtSnapshot::empty(self.spec.ncells);
+        cvt.key = key.0;
+        cvt.occupied = true;
+        cvt.table_id = self.spec.id;
+        cvt.record_len = payload.len() as u16;
+        cvt.cells[0] = CellSnapshot {
+            cv,
+            valid: true,
+            len: payload.len() as u16,
+            version,
+            addr: self.record_addr(0, b, slot, 0),
+            consistent: true,
+        };
+        let slot_img = record::encode(cv, payload, self.spec.record_len);
+        for (r, rep) in self.replicas.iter().enumerate() {
+            let mn = &mns[rep.mn];
+            // Cell addr in the CVT always names the *primary* record slot;
+            // replicas translate by offset when reading/writing.
+            mn.write_bytes(self.cvt_addr(r, b, slot), &cvt.serialize(&self.layout))?;
+            mn.write_bytes(self.record_addr(r, b, slot, 0), &slot_img)?;
+        }
+        Ok(())
+    }
+
+    /// Read back the latest version of `key` from replica `r` via the MN
+    /// CPU (tests + verification; not part of the transaction path).
+    pub fn load_get(&self, mns: &[Arc<MemNode>], r: usize, key: LotusKey) -> Option<Vec<u8>> {
+        let mn = &mns[self.replicas[r].mn];
+        let mut found = None;
+        for b in self.probe_buckets(key) {
+            let mut bucket_buf = vec![0u8; self.layout.bucket_size() as usize];
+            mn.read_bytes(self.bucket_addr(r, b), &mut bucket_buf).ok()?;
+            if let Some(hit) = self.find_in_bucket(&bucket_buf, key) {
+                found = Some(hit);
+                break;
+            }
+        }
+        let (_slot, cvt) = found?;
+        let cell = cvt.latest()?;
+        let addr = self.to_replica_addr(cell.addr, r);
+        let mut slot_buf = vec![0u8; record::slot_size(self.spec.record_len)];
+        mn.read_bytes(addr, &mut slot_buf).ok()?;
+        let (_cv, payload) =
+            record::decode(&slot_buf, cell.len as usize, self.spec.record_len)?;
+        Some(payload)
+    }
+
+    /// Total bytes this table occupies per replica (memory accounting,
+    /// fig. 16).
+    pub fn bytes_per_replica(&self) -> u64 {
+        self.layout.index_size()
+            + self.layout.n_buckets
+                * self.spec.assoc as u64
+                * self.spec.ncells as u64
+                * self.layout.record_slot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk() -> (Vec<Arc<MemNode>>, TableStore) {
+        let mns: Vec<Arc<MemNode>> = (0..3).map(|i| Arc::new(MemNode::new(i, 64 << 20))).collect();
+        let spec = TableSpec {
+            id: 1,
+            name: "kv".into(),
+            record_len: 40,
+            ncells: 2,
+            assoc: 4,
+            expected_records: 1000,
+        };
+        let t = TableStore::create(spec, &mns, &[0, 1, 2]).unwrap();
+        (mns, t)
+    }
+
+    #[test]
+    fn create_places_identical_layout() {
+        let (_mns, t) = mk();
+        assert_eq!(t.replicas.len(), 3);
+        // Same offsets on every replica.
+        let a0 = t.cvt_addr(0, 5, 2) - t.replicas[0].index_base;
+        let a1 = t.cvt_addr(1, 5, 2) - t.replicas[1].index_base;
+        assert_eq!(a0, a1);
+    }
+
+    #[test]
+    fn load_insert_and_get_roundtrip_all_replicas() {
+        let (mns, t) = mk();
+        let key = LotusKey::compose(7, 123);
+        t.load_insert(&mns, key, b"forty-byte-payload", 100).unwrap();
+        for r in 0..3 {
+            assert_eq!(
+                t.load_get(&mns, r, key).as_deref(),
+                Some(b"forty-byte-payload".as_ref()),
+                "replica {r}"
+            );
+        }
+        assert!(t.load_get(&mns, 0, LotusKey::compose(7, 999)).is_none());
+    }
+
+    #[test]
+    fn duplicate_load_insert_rejected() {
+        let (mns, t) = mk();
+        let key = LotusKey::compose(1, 1);
+        t.load_insert(&mns, key, b"a", 1).unwrap();
+        let err = t.load_insert(&mns, key, b"b", 2).unwrap_err();
+        assert!(matches!(err, Error::Abort(crate::AbortReason::Duplicate)));
+    }
+
+    #[test]
+    fn oversized_payload_rejected() {
+        let (mns, t) = mk();
+        let err = t
+            .load_insert(&mns, LotusKey::compose(1, 2), &[0u8; 41], 1)
+            .unwrap_err();
+        assert!(matches!(err, Error::Config(_)));
+    }
+
+    #[test]
+    fn locate_cvt_inverts_cvt_addr() {
+        let (_mns, t) = mk();
+        for (b, slot) in [(0u64, 0u8), (3, 1), (t.layout.n_buckets - 1, 3)] {
+            let addr = t.cvt_addr(0, b, slot);
+            assert_eq!(t.locate_cvt(addr).unwrap(), (b, slot));
+        }
+        assert!(t.locate_cvt(t.primary().index_base + 1).is_err());
+    }
+
+    #[test]
+    fn replica_addr_translation() {
+        let (_mns, t) = mk();
+        let rec = t.record_addr(0, 2, 1, 1);
+        let rec_r2 = t.to_replica_addr(rec, 2);
+        assert_eq!(rec_r2, t.record_addr(2, 2, 1, 1));
+        let cvt = t.cvt_addr(0, 2, 1);
+        assert_eq!(t.to_replica_addr(cvt, 1), t.cvt_addr(1, 2, 1));
+    }
+
+    #[test]
+    fn bucket_lock_keys_unique_per_table_and_bucket() {
+        let (_mns, t) = mk();
+        let a = t.bucket_lock_key(1);
+        let b = t.bucket_lock_key(2);
+        assert_ne!(a, b);
+        // Distinct from any data key (reserved tag 15 in the top bits).
+        assert_eq!(a.unique() >> 47, 15);
+    }
+
+    #[test]
+    fn n_buckets_sizing() {
+        let spec = TableSpec {
+            id: 0,
+            name: "t".into(),
+            record_len: 8,
+            ncells: 1,
+            assoc: 4,
+            expected_records: 1000,
+        };
+        let nb = spec.n_buckets();
+        assert!(nb.is_power_of_two());
+        assert!(nb * 4 * 6 / 10 >= 1000, "load factor too high: {nb}");
+    }
+
+    #[test]
+    fn prop_load_many_then_get() {
+        crate::testing::prop(5, |g| {
+            let (mns, t) = mk();
+            let n = g.usize(1, 300);
+            let mut inserted = Vec::new();
+            for i in 0..n {
+                let key = LotusKey::compose(g.u64(0, 50), i as u64);
+                let val = vec![(i % 251) as u8; g.usize(1, 40)];
+                if t.load_insert(&mns, key, &val, i as u64 + 1).is_ok() {
+                    inserted.push((key, val));
+                }
+            }
+            for (key, val) in inserted {
+                assert_eq!(t.load_get(&mns, 0, key), Some(val));
+            }
+        });
+    }
+}

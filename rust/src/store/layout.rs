@@ -1,0 +1,115 @@
+//! Binary layout constants + address arithmetic for the memory store.
+//!
+//! All structures are 8B-aligned so every word belongs to exactly one
+//! structure (see [`crate::dm::memnode`]).
+
+use crate::util::bytes::align_up;
+
+/// CVT header bytes: key u64 | table_id u16 | record_len u16 | ncells u8 | pad3.
+pub const CVT_HEADER: u64 = 16;
+/// Cell bytes: head word | version | addr | tail word.
+pub const CELL_SIZE: u64 = 32;
+
+/// Table geometry derived from a spec.
+#[derive(Debug, Clone, Copy)]
+pub struct Layout {
+    /// Versions per record (cells per CVT).
+    pub ncells: u8,
+    /// CVTs per index bucket.
+    pub assoc: u8,
+    /// Max record payload bytes.
+    pub record_len: u32,
+    /// Number of index buckets.
+    pub n_buckets: u64,
+}
+
+impl Layout {
+    /// Bytes of one CVT.
+    #[inline]
+    pub fn cvt_size(&self) -> u64 {
+        CVT_HEADER + CELL_SIZE * self.ncells as u64
+    }
+
+    /// Bytes of one index bucket.
+    #[inline]
+    pub fn bucket_size(&self) -> u64 {
+        self.cvt_size() * self.assoc as u64
+    }
+
+    /// Bytes of the whole index region.
+    #[inline]
+    pub fn index_size(&self) -> u64 {
+        self.bucket_size() * self.n_buckets
+    }
+
+    /// Bytes of one record slot: head word + aligned payload + tail word.
+    #[inline]
+    pub fn record_slot(&self) -> u64 {
+        8 + align_up(self.record_len as u64, 8) + 8
+    }
+
+    /// Offset of bucket `b` within the index region.
+    #[inline]
+    pub fn bucket_off(&self, b: u64) -> u64 {
+        debug_assert!(b < self.n_buckets);
+        b * self.bucket_size()
+    }
+
+    /// Offset of CVT slot `slot` within a bucket.
+    #[inline]
+    pub fn cvt_off_in_bucket(&self, slot: u8) -> u64 {
+        debug_assert!(slot < self.assoc);
+        slot as u64 * self.cvt_size()
+    }
+
+    /// Offset of cell `c` within a CVT.
+    #[inline]
+    pub fn cell_off(&self, c: u8) -> u64 {
+        debug_assert!(c < self.ncells);
+        CVT_HEADER + c as u64 * CELL_SIZE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn l() -> Layout {
+        Layout {
+            ncells: 2,
+            assoc: 4,
+            record_len: 40,
+            n_buckets: 1024,
+        }
+    }
+
+    #[test]
+    fn sizes_are_aligned() {
+        let l = l();
+        assert_eq!(l.cvt_size() % 8, 0);
+        assert_eq!(l.bucket_size() % 8, 0);
+        assert_eq!(l.record_slot() % 8, 0);
+        assert_eq!(l.cvt_size(), 16 + 2 * 32);
+        assert_eq!(l.bucket_size(), 4 * 80);
+    }
+
+    #[test]
+    fn offsets_disjoint() {
+        let l = l();
+        // Cells within a CVT don't overlap the header or each other.
+        assert!(l.cell_off(0) >= CVT_HEADER);
+        assert_eq!(l.cell_off(1) - l.cell_off(0), CELL_SIZE);
+        assert!(l.cell_off(1) + CELL_SIZE <= l.cvt_size());
+        // CVTs within a bucket are consecutive.
+        assert_eq!(l.cvt_off_in_bucket(3), 3 * l.cvt_size());
+    }
+
+    #[test]
+    fn record_slot_padding() {
+        let mut l = l();
+        l.record_len = 13;
+        assert_eq!(l.record_slot(), 8 + 16 + 8);
+        l.record_len = 672; // TPCC max
+        assert_eq!(l.record_slot(), 8 + 672 + 8);
+    }
+}

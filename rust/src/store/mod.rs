@@ -1,0 +1,30 @@
+//! MN-side data store (paper section 7.1, fig. 11).
+//!
+//! Layout on each memory node:
+//!
+//! ```text
+//! DB table  =  hash index of buckets
+//! bucket    =  ASSOC consecutive CVTs
+//! CVT       =  header (key, table, len) + N cells
+//! cell      =  { head_cv, valid, version, record addr, tail_cv }
+//! record    =  seqlock-versioned full record (one per cell, fixed slot)
+//! ```
+//!
+//! Each version is an **independent full record** (LOTUS's RDMA-friendly
+//! store: one READ per version, no delta reconstruction), with cell-level
+//! *cacheline versions* (CV) providing seqlock consistency for lock-free
+//! readers, and a timestamp-threshold GC reusing the oldest cell + its
+//! record slot in place (section 7.1, "lightweight garbage collection").
+//!
+//! Replication: a table is laid out identically on the primary and backup
+//! MNs; commit-phase writes go to all replicas (paper 8.1: 3-way).
+
+pub mod cvt;
+pub mod gc;
+pub mod index;
+pub mod layout;
+pub mod record;
+
+pub use cvt::{CellSnapshot, CvtSnapshot, INVISIBLE};
+pub use index::{TableSpec, TableStore};
+pub use layout::Layout;

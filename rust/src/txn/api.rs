@@ -1,0 +1,117 @@
+//! The user-facing transaction interface (paper section 7.3).
+//!
+//! ```text
+//! Begin()    start a transaction and get a start timestamp
+//! AddRO()    add a data record to the read-only set
+//! AddRW()    add a data record to the read-write set
+//! Execute()  acquire locks, read data
+//! Commit()   get a commit timestamp, write data, release locks
+//! ```
+//!
+//! [`TxnApi`] is implemented by the LOTUS coordinator
+//! ([`crate::txn::coordinator`]) **and** by every baseline system
+//! ([`crate::baselines`]), so each workload (KVS, TATP, SmallBank, TPC-C)
+//! is written once and runs unmodified on every system under comparison —
+//! exactly how the paper's evaluation drives all three systems with the
+//! same benchmarks.
+//!
+//! Error contract: when `execute()` or `commit()` returns an abort, the
+//! implementation has already rolled the transaction back (all locks
+//! released, no partial writes visible); the caller may immediately
+//! `begin()` a retry.
+
+use crate::sharding::key::LotusKey;
+use crate::util::Xoshiro256;
+use crate::Result;
+
+/// Isolation level (paper section 5.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Isolation {
+    /// Serializability: write locks on the read-write set **and** read
+    /// locks on the read-only set of read-write transactions.
+    Serializable,
+    /// Snapshot isolation: no read locks; write locks only.
+    SnapshotIsolation,
+}
+
+/// A reference to one record in a DB table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct RecordRef {
+    /// DB table id.
+    pub table: u16,
+    /// The record's LOTUS key.
+    pub key: LotusKey,
+}
+
+impl RecordRef {
+    /// Convenience constructor.
+    pub fn new(table: u16, key: LotusKey) -> Self {
+        Self { table, key }
+    }
+}
+
+/// Control interface of one in-flight transaction; see module docs.
+pub trait TxnCtl {
+    /// Add a record to the read-only set (must precede `execute`).
+    fn add_ro(&mut self, r: RecordRef);
+    /// Add a record to the read-write set (must precede `execute`).
+    fn add_rw(&mut self, r: RecordRef);
+    /// Add an insert of a new record (locks the key *and* the index
+    /// bucket, paper 4.1).
+    fn add_insert(&mut self, r: RecordRef, payload: Vec<u8>);
+    /// Add a delete of an existing record (locks the key and the index
+    /// bucket; the commit clears the record's CVT).
+    fn add_delete(&mut self, r: RecordRef);
+    /// Lock-first execution: acquire all locks, then read all data.
+    /// On `Err` the transaction is already rolled back.
+    fn execute(&mut self) -> Result<()>;
+    /// Read a record's bytes fetched by `execute`.
+    fn value(&self, r: RecordRef) -> Option<&[u8]>;
+    /// Stage the new bytes for a read-write record (before `commit`).
+    fn stage_write(&mut self, r: RecordRef, payload: Vec<u8>);
+    /// Commit: write data + log, draw the commit timestamp, make data
+    /// visible, unlock. On `Err` the transaction is already rolled back.
+    fn commit(&mut self) -> Result<()>;
+    /// Abort voluntarily (releases all locks; always succeeds).
+    fn rollback(&mut self);
+}
+
+/// A transaction executor bound to one coordinator thread.
+pub trait TxnApi {
+    /// Begin a transaction. `read_only` transactions take no locks and
+    /// read a consistent snapshot (paper 5.1 "Processing Read-Only
+    /// Transactions").
+    fn begin(&mut self, read_only: bool);
+    /// The in-flight transaction's control interface.
+    fn txn(&mut self) -> &mut dyn TxnCtl;
+    /// The coordinator's virtual clock (ns).
+    fn now(&self) -> u64;
+    /// The coordinator's workload RNG.
+    fn rng(&mut self) -> &mut Xoshiro256;
+    /// Which CN this coordinator runs on.
+    fn cn(&self) -> usize;
+    /// Attach the benchmark run's time gate (conservative-PDES sync at
+    /// every shared-queue charge; see [`crate::dm::clock::TimeGate`]).
+    fn attach_gate(&mut self, gate: std::sync::Arc<crate::dm::clock::TimeGate>, gid: usize);
+    /// Fail-stop: drop all in-flight transaction state **without
+    /// releasing locks** (the locks die with the CN and are cleaned up by
+    /// recovery, paper §6). Used by the fig. 15 crash-injection harness.
+    fn crash(&mut self);
+    /// Jump the coordinator's virtual clock forward (restart after a
+    /// crash: the CN resumes at the recovery-completion time).
+    fn skip_to(&mut self, t_ns: u64);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_ref_equality() {
+        let a = RecordRef::new(1, LotusKey::compose(5, 10));
+        let b = RecordRef::new(1, LotusKey::compose(5, 10));
+        let c = RecordRef::new(2, LotusKey::compose(5, 10));
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,91 @@
+//! Doomed-transaction registry.
+//!
+//! Resharding (paper 4.3: the sender "proactively aborts the running
+//! transactions using the transaction and CN IDs recorded in the lock
+//! state") and recovery (section 6: surviving CNs "stop all transactions
+//! whose locks are held on the failed CN") must abort transactions that
+//! are running *on other coordinator threads*. A doomed transaction may
+//! not enter its commit phase: the coordinator checks the registry at the
+//! commit boundary and aborts if listed. Transactions already in the
+//! commit phase are allowed to finish (the paper's rule), which the
+//! coordinator enforces by checking *before* the first commit write.
+
+use std::collections::HashSet;
+use std::sync::Mutex;
+
+/// Shared set of transaction ids that must abort before commit.
+#[derive(Debug, Default)]
+pub struct DoomedSet {
+    inner: Mutex<HashSet<u64>>,
+}
+
+impl DoomedSet {
+    /// Empty set.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Doom a transaction (idempotent).
+    pub fn doom(&self, txn: u64) {
+        self.inner.lock().unwrap().insert(txn);
+    }
+
+    /// Doom many.
+    pub fn doom_all<I: IntoIterator<Item = u64>>(&self, txns: I) {
+        let mut set = self.inner.lock().unwrap();
+        set.extend(txns);
+    }
+
+    /// Check-and-clear: returns true (and forgets the id) if doomed.
+    /// Clearing keeps the set from growing with txn-id churn.
+    pub fn take(&self, txn: u64) -> bool {
+        self.inner.lock().unwrap().remove(&txn)
+    }
+
+    /// Non-destructive check.
+    pub fn contains(&self, txn: u64) -> bool {
+        self.inner.lock().unwrap().contains(&txn)
+    }
+
+    /// Number of doomed transactions pending.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    /// Is the set empty?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn doom_take_roundtrip() {
+        let d = DoomedSet::new();
+        assert!(!d.take(7));
+        d.doom(7);
+        assert!(d.contains(7));
+        assert!(d.take(7));
+        assert!(!d.take(7), "take must clear");
+    }
+
+    #[test]
+    fn doom_all_extends() {
+        let d = DoomedSet::new();
+        d.doom_all([1, 2, 3]);
+        assert_eq!(d.len(), 3);
+        assert!(d.take(2));
+        assert_eq!(d.len(), 2);
+    }
+
+    #[test]
+    fn idempotent_doom() {
+        let d = DoomedSet::new();
+        d.doom(9);
+        d.doom(9);
+        assert_eq!(d.len(), 1);
+    }
+}

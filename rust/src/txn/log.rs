@@ -1,0 +1,175 @@
+//! Commit logs (paper 5.1, "Write Data & Log").
+//!
+//! Because LOTUS is multi-versioned, old versions already act as undo
+//! logs; the commit log carries only **metadata** — the addresses of the
+//! CVT cells the transaction is making visible — so it stays small. Each
+//! coordinator owns one exclusive, pre-allocated log slot in the memory
+//! pool (it runs one transaction at a time), written before the commit
+//! timestamp is drawn and cleared after unlock.
+//!
+//! Recovery (section 6) scans a failed CN's log slots: a slot with
+//! `state == PREPARED` names a transaction in its commit phase; the
+//! recovery coordinator reads the listed CVT cells and either completes
+//! the commit (all cells already visible) or rolls it back (any cell
+//! still INVISIBLE).
+
+use crate::util::bytes::{get_u16, get_u64, put_u16, put_u64};
+use crate::{Error, Result};
+
+/// Maximum write-set entries a log slot can describe.
+pub const MAX_LOG_ENTRIES: usize = 32;
+
+/// Slot state: empty / fully released.
+pub const STATE_EMPTY: u64 = 0;
+/// Slot state: log written, commit in flight.
+pub const STATE_PREPARED: u64 = 1;
+
+/// One logged write: where the new version's CVT cell lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LogEntry {
+    /// DB table id.
+    pub table: u16,
+    /// Primary MN id.
+    pub mn: u16,
+    /// CVT cell address on the primary MN.
+    pub cell_addr: u64,
+}
+
+/// A parsed log slot.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LogRecord {
+    /// Transaction id (0 is reserved / invalid).
+    pub txn: u64,
+    /// Slot state ([`STATE_EMPTY`] / [`STATE_PREPARED`]).
+    pub state: u64,
+    /// Logged writes.
+    pub entries: Vec<LogEntry>,
+}
+
+/// Byte size of one log slot in the memory pool.
+pub const fn slot_size() -> u64 {
+    // state | txn | n | entries * (cell_addr, table|mn)
+    8 * 3 + (MAX_LOG_ENTRIES as u64) * 16
+}
+
+impl LogRecord {
+    /// A prepared record for `txn` covering `entries`.
+    pub fn prepared(txn: u64, entries: Vec<LogEntry>) -> Result<Self> {
+        if entries.len() > MAX_LOG_ENTRIES {
+            return Err(Error::Config(format!(
+                "write set of {} exceeds MAX_LOG_ENTRIES={}",
+                entries.len(),
+                MAX_LOG_ENTRIES
+            )));
+        }
+        Ok(Self {
+            txn,
+            state: STATE_PREPARED,
+            entries,
+        })
+    }
+
+    /// Serialize to the slot image. The state word is written **last**
+    /// positionally (offset 0 still works because the whole image goes in
+    /// a single WRITE; the word-atomic memory keeps the state word
+    /// consistent).
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut buf = vec![0u8; slot_size() as usize];
+        put_u64(&mut buf, 0, self.state);
+        put_u64(&mut buf, 8, self.txn);
+        put_u64(&mut buf, 16, self.entries.len() as u64);
+        for (i, e) in self.entries.iter().enumerate() {
+            let off = 24 + i * 16;
+            put_u64(&mut buf, off, e.cell_addr);
+            put_u16(&mut buf, off + 8, e.table);
+            put_u16(&mut buf, off + 10, e.mn);
+        }
+        buf
+    }
+
+    /// Parse a slot image.
+    pub fn parse(buf: &[u8]) -> Self {
+        let state = get_u64(buf, 0);
+        let txn = get_u64(buf, 8);
+        let n = (get_u64(buf, 16) as usize).min(MAX_LOG_ENTRIES);
+        let entries = (0..n)
+            .map(|i| {
+                let off = 24 + i * 16;
+                LogEntry {
+                    cell_addr: get_u64(buf, off),
+                    table: get_u16(buf, off + 8),
+                    mn: get_u16(buf, off + 10),
+                }
+            })
+            .collect();
+        Self { txn, state, entries }
+    }
+
+    /// Is this slot describing an in-flight commit?
+    pub fn is_prepared(&self) -> bool {
+        self.state == STATE_PREPARED && self.txn != 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(i: u64) -> LogEntry {
+        LogEntry {
+            table: i as u16,
+            mn: (i % 3) as u16,
+            cell_addr: 0x1000 + i * 32,
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let rec = LogRecord::prepared(77, (0..5).map(entry).collect()).unwrap();
+        let buf = rec.serialize();
+        assert_eq!(buf.len() as u64, slot_size());
+        assert_eq!(LogRecord::parse(&buf), rec);
+        assert!(rec.is_prepared());
+    }
+
+    #[test]
+    fn empty_slot_not_prepared() {
+        let buf = vec![0u8; slot_size() as usize];
+        let rec = LogRecord::parse(&buf);
+        assert!(!rec.is_prepared());
+        assert_eq!(rec.state, STATE_EMPTY);
+    }
+
+    #[test]
+    fn oversized_write_set_rejected() {
+        let entries: Vec<LogEntry> = (0..MAX_LOG_ENTRIES as u64 + 1).map(entry).collect();
+        assert!(LogRecord::prepared(1, entries).is_err());
+    }
+
+    #[test]
+    fn max_entries_fit() {
+        let entries: Vec<LogEntry> = (0..MAX_LOG_ENTRIES as u64).map(entry).collect();
+        let rec = LogRecord::prepared(1, entries).unwrap();
+        let parsed = LogRecord::parse(&rec.serialize());
+        assert_eq!(parsed.entries.len(), MAX_LOG_ENTRIES);
+    }
+
+    #[test]
+    fn prop_roundtrip() {
+        crate::testing::prop(50, |g| {
+            let n = g.usize(0, MAX_LOG_ENTRIES);
+            let rec = LogRecord::prepared(
+                g.u64(1, u64::MAX / 2),
+                (0..n)
+                    .map(|_| LogEntry {
+                        table: g.u64(0, u16::MAX as u64) as u16,
+                        mn: g.u64(0, 255) as u16,
+                        cell_addr: g.u64(0, 1 << 40),
+                    })
+                    .collect(),
+            )
+            .unwrap();
+            assert_eq!(LogRecord::parse(&rec.serialize()), rec);
+        });
+    }
+}

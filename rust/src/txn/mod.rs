@@ -1,0 +1,34 @@
+//! The lock-first transaction protocol (paper section 5).
+//!
+//! LOTUS separates the **locking phase as the first step** of every
+//! read-write transaction execution: all locks (write locks for the
+//! read-write set, read locks for the read-only set under SR) are acquired
+//! *before* any data is read, so conflicting transactions are detected and
+//! aborted before a single byte crosses the network to the memory pool.
+//!
+//! Modules:
+//! - [`timestamp`] — the HLC timestamp oracle (scalable service in the
+//!   compute pool, paper section 5).
+//! - [`log`] — small commit logs written to each coordinator's exclusive
+//!   memory-pool region (paper 5.1 "Write Data & Log"; MVCC old versions
+//!   are the undo log, so the log carries only metadata).
+//! - [`api`] — the user-facing transaction interface
+//!   (Begin/AddRO/AddRW/Execute/Commit, paper section 7.3), implemented by
+//!   the LOTUS coordinator and by the baseline systems so every workload
+//!   runs unmodified on every system.
+//! - [`coordinator`] — the LOTUS coordinator: lock-first Execute
+//!   (lock -> read CVT -> read data) and Commit (write+log -> commit ts ->
+//!   write visible -> unlock), with SR and SI isolation.
+//! - [`doomed`] — the doomed-transaction registry used by resharding and
+//!   recovery to proactively abort transactions that must not commit.
+
+pub mod api;
+pub mod coordinator;
+pub mod doomed;
+pub mod log;
+pub mod timestamp;
+
+pub use api::{Isolation, TxnApi, TxnCtl};
+pub use coordinator::{LotusCoordinator, SharedCluster};
+pub use doomed::DoomedSet;
+pub use timestamp::{compose_ts, logical_of, phys_of, TimestampOracle};

@@ -1,0 +1,80 @@
+//! Little-endian byte encoding helpers for fixed-layout MN structures.
+//!
+//! All memory-pool structures (CVTs, records, logs) are encoded with these
+//! helpers so the layout is explicit and testable, exactly as an
+//! RDMA-addressable structure must be.
+
+/// Read a `u64` (little-endian) at `off` from `buf`.
+#[inline]
+pub fn get_u64(buf: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(buf[off..off + 8].try_into().unwrap())
+}
+
+/// Write a `u64` (little-endian) at `off` into `buf`.
+#[inline]
+pub fn put_u64(buf: &mut [u8], off: usize, v: u64) {
+    buf[off..off + 8].copy_from_slice(&v.to_le_bytes());
+}
+
+/// Read a `u32` at `off`.
+#[inline]
+pub fn get_u32(buf: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes(buf[off..off + 4].try_into().unwrap())
+}
+
+/// Write a `u32` at `off`.
+#[inline]
+pub fn put_u32(buf: &mut [u8], off: usize, v: u32) {
+    buf[off..off + 4].copy_from_slice(&v.to_le_bytes());
+}
+
+/// Read a `u16` at `off`.
+#[inline]
+pub fn get_u16(buf: &[u8], off: usize) -> u16 {
+    u16::from_le_bytes(buf[off..off + 2].try_into().unwrap())
+}
+
+/// Write a `u16` at `off`.
+#[inline]
+pub fn put_u16(buf: &mut [u8], off: usize, v: u16) {
+    buf[off..off + 2].copy_from_slice(&v.to_le_bytes());
+}
+
+/// Round `n` up to a multiple of `align` (power of two).
+#[inline]
+pub fn align_up(n: u64, align: u64) -> u64 {
+    debug_assert!(align.is_power_of_two());
+    (n + align - 1) & !(align - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u64_roundtrip() {
+        let mut buf = [0u8; 24];
+        put_u64(&mut buf, 8, 0xDEADBEEF_CAFEBABE);
+        assert_eq!(get_u64(&buf, 8), 0xDEADBEEF_CAFEBABE);
+        assert_eq!(get_u64(&buf, 0), 0);
+        assert_eq!(get_u64(&buf, 16), 0);
+    }
+
+    #[test]
+    fn u32_u16_roundtrip() {
+        let mut buf = [0u8; 8];
+        put_u32(&mut buf, 0, 0x12345678);
+        put_u16(&mut buf, 4, 0xABCD);
+        assert_eq!(get_u32(&buf, 0), 0x12345678);
+        assert_eq!(get_u16(&buf, 4), 0xABCD);
+    }
+
+    #[test]
+    fn align_up_cases() {
+        assert_eq!(align_up(0, 8), 0);
+        assert_eq!(align_up(1, 8), 8);
+        assert_eq!(align_up(8, 8), 8);
+        assert_eq!(align_up(9, 8), 16);
+        assert_eq!(align_up(100, 64), 128);
+    }
+}

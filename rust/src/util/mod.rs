@@ -1,0 +1,11 @@
+//! Small shared utilities: PRNGs and byte-level encoding helpers.
+//!
+//! Crates.io `rand` is unavailable in the offline vendor set, so the
+//! simulator carries its own small, well-known generators (SplitMix64 for
+//! seeding, xoshiro256** for streams). Both are deterministic and seedable
+//! so every benchmark run is reproducible.
+
+pub mod bytes;
+pub mod rng;
+
+pub use rng::{SplitMix64, Xoshiro256};

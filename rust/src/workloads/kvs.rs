@@ -1,0 +1,129 @@
+//! KVS microbenchmark (paper 8.2).
+//!
+//! One table of `(8B key, 40B value)` pairs. Two transaction types:
+//! `UpdateOne` (read-write) and `ReadOne` (read-only), mixed by the
+//! configured read-write percentage, with skewed (Zipfian theta=0.99) or
+//! uniform access. This is the workload behind fig. 12's four panels.
+
+use crate::sharding::key::LotusKey;
+use crate::store::index::TableSpec;
+use crate::txn::api::{RecordRef, TxnApi};
+use crate::txn::coordinator::SharedCluster;
+use crate::util::bytes::put_u64;
+use crate::workloads::zipf::AccessPattern;
+use crate::workloads::{RouteCtx, Workload};
+use crate::Result;
+
+/// KVS value size (paper: 40 B).
+pub const VALUE_LEN: u32 = 40;
+/// Table id.
+pub const TABLE: u16 = 0;
+
+/// The KVS workload.
+pub struct KvsWorkload {
+    n_keys: u64,
+    rw_pct: u32,
+    pattern: AccessPattern,
+}
+
+impl KvsWorkload {
+    /// `n_keys` pairs, `rw_pct`% UpdateOne, skewed or uniform access.
+    pub fn new(n_keys: u64, rw_pct: u32, skewed: bool) -> Self {
+        assert!(rw_pct <= 100);
+        Self {
+            n_keys,
+            rw_pct,
+            pattern: AccessPattern::new(n_keys, skewed),
+        }
+    }
+
+    /// The LOTUS key of logical key `i`: the key id is its own critical
+    /// field (like a partition key on the primary key).
+    #[inline]
+    pub fn key(i: u64) -> LotusKey {
+        LotusKey::compose(i, i)
+    }
+
+    fn value_of(i: u64, generation: u64) -> Vec<u8> {
+        let mut v = vec![0u8; VALUE_LEN as usize];
+        put_u64(&mut v, 0, i);
+        put_u64(&mut v, 8, generation);
+        v
+    }
+}
+
+impl Workload for KvsWorkload {
+    fn name(&self) -> &'static str {
+        "kvs"
+    }
+
+    fn table_specs(&self) -> Vec<TableSpec> {
+        vec![TableSpec {
+            id: TABLE,
+            name: "kv".into(),
+            record_len: VALUE_LEN,
+            ncells: 2, // overridden by the cluster builder to cfg.n_versions
+            assoc: 4,
+            expected_records: self.n_keys,
+        }]
+    }
+
+    fn load(&self, cluster: &SharedCluster) -> Result<()> {
+        let table = cluster.table(TABLE);
+        for i in 0..self.n_keys {
+            table.load_insert(&cluster.mns, Self::key(i), &Self::value_of(i, 0), 1)?;
+        }
+        Ok(())
+    }
+
+    fn run_one(&self, api: &mut dyn TxnApi, route: &RouteCtx<'_>) -> Result<()> {
+        let is_rw = api.rng().percent() < self.rw_pct;
+        if is_rw {
+            let key = route.draw_routed(|| Self::key(self.pattern.next(api.rng())));
+            let r = RecordRef::new(TABLE, key);
+            api.begin(false);
+            let txn = api.txn();
+            txn.add_rw(r);
+            txn.execute()?;
+            let generation = txn
+                .value(r)
+                .map(|v| crate::util::bytes::get_u64(v, 8))
+                .unwrap_or(0);
+            txn.stage_write(r, Self::value_of(key.unique(), generation + 1));
+            txn.commit()
+        } else {
+            let key = Self::key(self.pattern.next(api.rng()));
+            let r = RecordRef::new(TABLE, key);
+            api.begin(true);
+            let txn = api.txn();
+            txn.add_ro(r);
+            txn.execute()?;
+            txn.commit()
+        }
+    }
+
+    fn read_only_fraction(&self) -> f64 {
+        1.0 - self.rw_pct as f64 / 100.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_embeds_id_in_shard_and_unique() {
+        let k = KvsWorkload::key(0x1234);
+        assert_eq!(k.shard(), 0x234);
+        assert_eq!(k.unique(), 0x1234);
+    }
+
+    #[test]
+    fn specs_shape() {
+        let w = KvsWorkload::new(1000, 50, true);
+        let specs = w.table_specs();
+        assert_eq!(specs.len(), 1);
+        assert_eq!(specs[0].record_len, 40);
+        assert!((w.read_only_fraction() - 0.5).abs() < 1e-9);
+    }
+}

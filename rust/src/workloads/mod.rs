@@ -1,0 +1,196 @@
+//! Benchmark workloads (paper 8.1): KVS, SmallBank, TATP, TPC-C.
+//!
+//! Every workload is written once against [`crate::txn::api::TxnApi`] and
+//! runs unmodified on LOTUS and on every baseline system — exactly how
+//! the paper's evaluation drives all systems with the same benchmarks.
+//!
+//! **Routing emulation.** The paper's routing layer sends each read-write
+//! transaction to the CN owning its first record's shard and each
+//! read-only transaction to a uniform-random CN (§4.3). The simulator has
+//! no separate router process; instead each coordinator *conditions its
+//! generated stream on the routing rule*: a read-write transaction is
+//! accepted only if the routing layer would have delivered it to this CN
+//! ([`RouteCtx::accept_rw`] — rejection sampling implements exactly the
+//! conditional distribution). With hybrid routing disabled (the fig. 14
+//! "+Two-Level Load Balancing" ablation, or non-LOTUS systems), every
+//! draw is accepted, i.e. uniform routing.
+
+pub mod kvs;
+pub mod smallbank;
+pub mod tatp;
+pub mod tpcc;
+pub mod zipf;
+
+use std::sync::Arc;
+
+use crate::config::Config;
+use crate::sharding::key::LotusKey;
+use crate::sharding::router::Router;
+use crate::store::index::TableSpec;
+use crate::txn::api::TxnApi;
+use crate::txn::coordinator::SharedCluster;
+use crate::Result;
+
+pub use kvs::KvsWorkload;
+pub use smallbank::SmallBankWorkload;
+pub use tatp::TatpWorkload;
+pub use tpcc::{CriticalField, TpccWorkload};
+pub use zipf::{AccessPattern, Zipf};
+
+/// Routing context a coordinator passes to the workload.
+pub struct RouteCtx<'a> {
+    /// The routing layer.
+    pub router: &'a Router,
+    /// The executing coordinator's CN.
+    pub cn: usize,
+    /// Hybrid routing active (LOTUS with load balancing on)?
+    pub hybrid: bool,
+}
+
+/// Cap on rejection-sampling attempts: if a CN owns very few shards the
+/// conditional draw may be rare; after this many rejections the draw is
+/// accepted anyway (models routing-layer imprecision under resharding).
+const MAX_ROUTE_ATTEMPTS: usize = 64;
+
+impl<'a> RouteCtx<'a> {
+    /// Would the routing layer deliver a RW transaction whose first
+    /// record is `first_key` to this CN?
+    #[inline]
+    pub fn accept_rw(&self, first_key: LotusKey) -> bool {
+        !self.hybrid || self.router.owner_of_key(first_key) == self.cn
+    }
+
+    /// Draw keys from `gen` until one routes here (bounded attempts).
+    pub fn draw_routed<F: FnMut() -> LotusKey>(&self, mut gen: F) -> LotusKey {
+        for _ in 0..MAX_ROUTE_ATTEMPTS {
+            let k = gen();
+            if self.accept_rw(k) {
+                return k;
+            }
+        }
+        gen()
+    }
+}
+
+/// One benchmark workload.
+pub trait Workload: Send + Sync {
+    /// Display name.
+    fn name(&self) -> &'static str;
+    /// DB tables this workload needs (ids must be dense from 0).
+    fn table_specs(&self) -> Vec<TableSpec>;
+    /// Bulk-load initial data (init phase; MN CPU, uncharged).
+    fn load(&self, cluster: &SharedCluster) -> Result<()>;
+    /// Execute one transaction through the API. An `Err` that
+    /// `is_abort()` counts as an abort; other errors are fatal.
+    fn run_one(&self, api: &mut dyn TxnApi, route: &RouteCtx<'_>) -> Result<()>;
+    /// Fraction of read-only transactions in the mix (reporting).
+    fn read_only_fraction(&self) -> f64;
+}
+
+/// Which benchmark to run (CLI / bench selection).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WorkloadKind {
+    /// KVS microbenchmark: `rw_pct`% UpdateOne, rest ReadOne.
+    Kvs {
+        /// Percentage of read-write (UpdateOne) transactions.
+        rw_pct: u32,
+        /// Zipfian (theta=0.99) vs uniform access.
+        skewed: bool,
+    },
+    /// SmallBank banking benchmark (85% read-write).
+    SmallBank,
+    /// TATP telecom benchmark (80% read-only).
+    Tatp,
+    /// TPC-C ordering benchmark (92% read-write).
+    Tpcc,
+    /// TPC-C with a chosen critical field (fig. 22).
+    TpccCritical(CriticalField),
+}
+
+impl WorkloadKind {
+    /// Instantiate the workload at the configured scale.
+    pub fn instantiate(self, cfg: &Config) -> Arc<dyn Workload> {
+        match self {
+            WorkloadKind::Kvs { rw_pct, skewed } => {
+                Arc::new(KvsWorkload::new(cfg.scale.kvs_keys, rw_pct, skewed))
+            }
+            WorkloadKind::SmallBank => {
+                Arc::new(SmallBankWorkload::new(cfg.scale.smallbank_accounts))
+            }
+            WorkloadKind::Tatp => Arc::new(TatpWorkload::new(cfg.scale.tatp_subscribers)),
+            WorkloadKind::Tpcc => Arc::new(TpccWorkload::new(
+                cfg.scale.tpcc_warehouses,
+                CriticalField::Warehouse,
+            )),
+            WorkloadKind::TpccCritical(f) => {
+                Arc::new(TpccWorkload::new(cfg.scale.tpcc_warehouses, f))
+            }
+        }
+    }
+
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "kvs" => WorkloadKind::Kvs {
+                rw_pct: 50,
+                skewed: true,
+            },
+            "smallbank" => WorkloadKind::SmallBank,
+            "tatp" => WorkloadKind::Tatp,
+            "tpcc" => WorkloadKind::Tpcc,
+            other => {
+                return Err(crate::Error::Config(format!(
+                    "unknown workload '{other}' (kvs|smallbank|tatp|tpcc)"
+                )))
+            }
+        })
+    }
+
+    /// Display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            WorkloadKind::Kvs { .. } => "kvs",
+            WorkloadKind::SmallBank => "smallbank",
+            WorkloadKind::Tatp => "tatp",
+            WorkloadKind::Tpcc | WorkloadKind::TpccCritical(_) => "tpcc",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn route_ctx_hybrid_conditions_on_owner() {
+        let router = Router::new(3);
+        let ctx = RouteCtx {
+            router: &router,
+            cn: 1,
+            hybrid: true,
+        };
+        let mut uid = 0u64;
+        let k = ctx.draw_routed(|| {
+            uid += 313; // step through the shard space
+            LotusKey::compose(uid, uid)
+        });
+        assert_eq!(router.owner_of_key(k), 1);
+    }
+
+    #[test]
+    fn route_ctx_uniform_accepts_everything() {
+        let router = Router::new(3);
+        let ctx = RouteCtx {
+            router: &router,
+            cn: 0,
+            hybrid: false,
+        };
+        assert!(ctx.accept_rw(LotusKey::compose(4095, 1)));
+    }
+
+    #[test]
+    fn workload_kind_parse() {
+        assert_eq!(WorkloadKind::parse("tatp").unwrap(), WorkloadKind::Tatp);
+        assert!(WorkloadKind::parse("bogus").is_err());
+    }
+}

@@ -1,0 +1,291 @@
+//! SmallBank banking benchmark (paper 8.1: 2 tables, 16B records, 85%
+//! read-write; the workload where LOTUS gains most — small records make
+//! it IOPS-bound, the regime lock disaggregation helps most).
+//!
+//! Standard H-Store mix:
+//!   Amalgamate 15%, Balance 15% (read-only), DepositChecking 15%,
+//!   SendPayment 25%, TransactSavings 15%, WriteCheck 15%.
+//! => 85% read-write.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::sharding::key::LotusKey;
+use crate::store::index::TableSpec;
+use crate::txn::api::{RecordRef, TxnApi};
+use crate::txn::coordinator::SharedCluster;
+use crate::util::bytes::{get_u64, put_u64};
+use crate::workloads::{RouteCtx, Workload};
+use crate::Result;
+
+/// Savings table id.
+pub const SAVINGS: u16 = 0;
+/// Checking table id.
+pub const CHECKING: u16 = 1;
+/// Record: 8B balance + 8B pad = 16B (paper: "the record size is 16B").
+pub const RECORD_LEN: u32 = 16;
+/// Initial balance per account.
+pub const INIT_BALANCE: u64 = 10_000;
+
+/// The SmallBank workload.
+pub struct SmallBankWorkload {
+    n_accounts: u64,
+    /// Money created by committed deposits (audit bookkeeping).
+    injected: AtomicU64,
+    /// Money destroyed by committed withdrawals (audit bookkeeping).
+    burned: AtomicU64,
+}
+
+impl SmallBankWorkload {
+    /// Bank with `n_accounts` accounts.
+    pub fn new(n_accounts: u64) -> Self {
+        Self {
+            n_accounts,
+            injected: AtomicU64::new(0),
+            burned: AtomicU64::new(0),
+        }
+    }
+
+    /// Net money committed deposits created minus withdrawals destroyed —
+    /// the conservation audit: `sum(balances) == initial + net_injected`.
+    pub fn net_injected(&self) -> i128 {
+        self.injected.load(Ordering::Relaxed) as i128
+            - self.burned.load(Ordering::Relaxed) as i128
+    }
+
+    /// Initial total balance for `n` accounts.
+    pub fn initial_total(n_accounts: u64) -> u128 {
+        n_accounts as u128 * 2 * INIT_BALANCE as u128
+    }
+
+    /// Account id -> LOTUS key (account id is the critical field — the
+    /// paper's "payment system users transact within a small set of
+    /// friend accounts" locality). The table id is folded into the unique
+    /// bits so keys are globally unique across the two tables (both rows
+    /// of one account still share a shard).
+    #[inline]
+    pub fn key(table: u16, account: u64) -> LotusKey {
+        LotusKey::compose(account, account | ((table as u64 + 1) << 44))
+    }
+
+    fn balance_of(buf: &[u8]) -> u64 {
+        get_u64(buf, 0)
+    }
+
+    fn encode_balance(balance: u64) -> Vec<u8> {
+        let mut v = vec![0u8; RECORD_LEN as usize];
+        put_u64(&mut v, 0, balance);
+        v
+    }
+
+    /// A pair whose *first* account routes to the executing CN under
+    /// hybrid routing (bounded rejection sampling, see module docs of
+    /// [`crate::workloads`]).
+    fn routed_pair(&self, api: &mut dyn TxnApi, route: &RouteCtx<'_>) -> (u64, u64) {
+        let mut pair = self.two_accounts(api);
+        for _ in 0..64 {
+            if route.accept_rw(Self::key(CHECKING, pair.0)) {
+                break;
+            }
+            pair = self.two_accounts(api);
+        }
+        pair
+    }
+
+    /// Two distinct accounts; the second is drawn near the first with
+    /// high probability (the "friend set" locality of payment systems).
+    fn two_accounts(&self, api: &mut dyn TxnApi) -> (u64, u64) {
+        let rng = api.rng();
+        let a = rng.below(self.n_accounts);
+        let b = if rng.chance(0.9) {
+            // Friend: within a window of 16 accounts around `a`.
+            let off = rng.below(16) + 1;
+            (a + off) % self.n_accounts
+        } else {
+            let mut b = rng.below(self.n_accounts);
+            if b == a {
+                b = (b + 1) % self.n_accounts;
+            }
+            b
+        };
+        (a, b)
+    }
+}
+
+impl Workload for SmallBankWorkload {
+    fn name(&self) -> &'static str {
+        "smallbank"
+    }
+
+    fn table_specs(&self) -> Vec<TableSpec> {
+        let mk = |id: u16, name: &str| TableSpec {
+            id,
+            name: name.into(),
+            record_len: RECORD_LEN,
+            ncells: 2,
+            assoc: 4,
+            expected_records: self.n_accounts,
+        };
+        vec![mk(SAVINGS, "savings"), mk(CHECKING, "checking")]
+    }
+
+    fn load(&self, cluster: &SharedCluster) -> Result<()> {
+        let bal = Self::encode_balance(INIT_BALANCE);
+        for acc in 0..self.n_accounts {
+            cluster
+                .table(SAVINGS)
+                .load_insert(&cluster.mns, Self::key(SAVINGS, acc), &bal, 1)?;
+            cluster
+                .table(CHECKING)
+                .load_insert(&cluster.mns, Self::key(CHECKING, acc), &bal, 1)?;
+        }
+        Ok(())
+    }
+
+    fn run_one(&self, api: &mut dyn TxnApi, route: &RouteCtx<'_>) -> Result<()> {
+        let dice = api.rng().percent();
+        match dice {
+            // Balance (read-only, 15%): read both balances of one account.
+            0..=14 => {
+                let acc = api.rng().below(self.n_accounts);
+                let (s, c) = (
+                    RecordRef::new(SAVINGS, Self::key(SAVINGS, acc)),
+                    RecordRef::new(CHECKING, Self::key(CHECKING, acc)),
+                );
+                api.begin(true);
+                let txn = api.txn();
+                txn.add_ro(s);
+                txn.add_ro(c);
+                txn.execute()?;
+                let _total = Self::balance_of(txn.value(s).unwrap_or(&[0; 16]))
+                    + Self::balance_of(txn.value(c).unwrap_or(&[0; 16]));
+                txn.commit()
+            }
+            // DepositChecking (15%).
+            15..=29 => {
+                let key =
+                    route.draw_routed(|| Self::key(CHECKING, api.rng().below(self.n_accounts)));
+                let c = RecordRef::new(CHECKING, key);
+                api.begin(false);
+                let txn = api.txn();
+                txn.add_rw(c);
+                txn.execute()?;
+                let bal = Self::balance_of(txn.value(c).unwrap());
+                txn.stage_write(c, Self::encode_balance(bal + 130));
+                txn.commit()?;
+                self.injected.fetch_add(130, Ordering::Relaxed);
+                Ok(())
+            }
+            // TransactSavings (15%).
+            30..=44 => {
+                let key =
+                    route.draw_routed(|| Self::key(SAVINGS, api.rng().below(self.n_accounts)));
+                let s = RecordRef::new(SAVINGS, key);
+                api.begin(false);
+                let txn = api.txn();
+                txn.add_rw(s);
+                txn.execute()?;
+                let bal = Self::balance_of(txn.value(s).unwrap());
+                txn.stage_write(s, Self::encode_balance(bal.saturating_add(20)));
+                txn.commit()?;
+                self.injected.fetch_add(20, Ordering::Relaxed);
+                Ok(())
+            }
+            // Amalgamate (15%): move everything from a's savings+checking
+            // into b's checking.
+            45..=59 => {
+                let (a, b) = self.routed_pair(api, route);
+                let sa = RecordRef::new(SAVINGS, Self::key(SAVINGS, a));
+                let ca = RecordRef::new(CHECKING, Self::key(CHECKING, a));
+                let cb = RecordRef::new(CHECKING, Self::key(CHECKING, b));
+                api.begin(false);
+                let txn = api.txn();
+                txn.add_rw(sa);
+                txn.add_rw(ca);
+                txn.add_rw(cb);
+                txn.execute()?;
+                let total = Self::balance_of(txn.value(sa).unwrap())
+                    + Self::balance_of(txn.value(ca).unwrap());
+                let bb = Self::balance_of(txn.value(cb).unwrap());
+                txn.stage_write(sa, Self::encode_balance(0));
+                txn.stage_write(ca, Self::encode_balance(0));
+                txn.stage_write(cb, Self::encode_balance(bb + total));
+                txn.commit()
+            }
+            // SendPayment (25%): checking a -> checking b.
+            60..=84 => {
+                let (a, b) = self.routed_pair(api, route);
+                let ca = RecordRef::new(CHECKING, Self::key(CHECKING, a));
+                let cb = RecordRef::new(CHECKING, Self::key(CHECKING, b));
+                api.begin(false);
+                let txn = api.txn();
+                txn.add_rw(ca);
+                txn.add_rw(cb);
+                txn.execute()?;
+                let ba = Self::balance_of(txn.value(ca).unwrap());
+                let bb = Self::balance_of(txn.value(cb).unwrap());
+                let amount = 5.min(ba);
+                txn.stage_write(ca, Self::encode_balance(ba - amount));
+                txn.stage_write(cb, Self::encode_balance(bb + amount));
+                txn.commit()
+            }
+            // WriteCheck (15%): read savings, debit checking.
+            _ => {
+                let acc = {
+                    let mut a = api.rng().below(self.n_accounts);
+                    for _ in 0..64 {
+                        if route.accept_rw(Self::key(CHECKING, a)) {
+                            break;
+                        }
+                        a = api.rng().below(self.n_accounts);
+                    }
+                    a
+                };
+                let s = RecordRef::new(SAVINGS, Self::key(SAVINGS, acc));
+                let c = RecordRef::new(CHECKING, Self::key(CHECKING, acc));
+                api.begin(false);
+                let txn = api.txn();
+                txn.add_ro(s);
+                txn.add_rw(c);
+                txn.execute()?;
+                let total = Self::balance_of(txn.value(s).unwrap())
+                    + Self::balance_of(txn.value(c).unwrap());
+                let bal = Self::balance_of(txn.value(c).unwrap());
+                let amount = 18.min(total).min(bal);
+                txn.stage_write(c, Self::encode_balance(bal - amount));
+                txn.commit()?;
+                self.burned.fetch_add(amount, Ordering::Relaxed);
+                Ok(())
+            }
+        }
+    }
+
+    fn read_only_fraction(&self) -> f64 {
+        0.15
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_is_85_percent_rw() {
+        let w = SmallBankWorkload::new(100);
+        assert!((w.read_only_fraction() - 0.15).abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_tables_16b_records() {
+        let w = SmallBankWorkload::new(100);
+        let specs = w.table_specs();
+        assert_eq!(specs.len(), 2);
+        assert!(specs.iter().all(|s| s.record_len == 16));
+    }
+
+    #[test]
+    fn balance_encoding_roundtrip() {
+        let v = SmallBankWorkload::encode_balance(424242);
+        assert_eq!(SmallBankWorkload::balance_of(&v), 424242);
+        assert_eq!(v.len(), 16);
+    }
+}

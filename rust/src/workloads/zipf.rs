@@ -1,0 +1,177 @@
+//! Zipfian key-popularity generator (YCSB-style).
+//!
+//! The KVS microbenchmark's skewed mode uses a Zipfian distribution with
+//! theta = 0.99 (paper 8.1), the standard YCSB hot-key skew. This is the
+//! Gray et al. "quickly generating billion-record synthetic databases"
+//! algorithm: O(1) per draw after an O(N) zeta precomputation.
+
+use crate::util::Xoshiro256;
+
+/// Zipfian generator over `[0, n)`.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    n: u64,
+    theta: f64,
+    alpha: f64,
+    zetan: f64,
+    eta: f64,
+    zeta2: f64,
+}
+
+impl Zipf {
+    /// Generator over `n` items with skew `theta` (0 < theta < 1).
+    pub fn new(n: u64, theta: f64) -> Self {
+        assert!(n > 0);
+        assert!((0.0..1.0).contains(&theta));
+        let zetan = Self::zeta(n, theta);
+        let zeta2 = Self::zeta(2, theta);
+        let alpha = 1.0 / (1.0 - theta);
+        let eta = (1.0 - (2.0 / n as f64).powf(1.0 - theta)) / (1.0 - zeta2 / zetan);
+        Self {
+            n,
+            theta,
+            alpha,
+            zetan,
+            eta,
+            zeta2,
+        }
+    }
+
+    fn zeta(n: u64, theta: f64) -> f64 {
+        // Direct sum; O(n) once at construction. For very large n this is
+        // the dominant setup cost — benchmarks construct a Zipf per run.
+        (1..=n).map(|i| 1.0 / (i as f64).powf(theta)).sum()
+    }
+
+    /// Number of items.
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// Draw the next item (0 is the most popular).
+    pub fn next(&self, rng: &mut Xoshiro256) -> u64 {
+        let u = rng.next_f64();
+        let uz = u * self.zetan;
+        if uz < 1.0 {
+            return 0;
+        }
+        if uz < 1.0 + 0.5f64.powf(self.theta) {
+            return 1;
+        }
+        let v = ((self.eta * u - self.eta + 1.0).powf(self.alpha) * self.n as f64) as u64;
+        v.min(self.n - 1)
+    }
+
+    /// Skew parameter.
+    pub fn theta(&self) -> f64 {
+        self.theta
+    }
+
+    /// `zeta(2, theta)` — exposed for tests.
+    pub fn zeta2(&self) -> f64 {
+        self.zeta2
+    }
+}
+
+/// Uniform-or-zipfian access pattern.
+#[derive(Debug, Clone)]
+pub enum AccessPattern {
+    /// Uniform over `[0, n)`.
+    Uniform(u64),
+    /// Zipfian.
+    Zipf(Zipf),
+}
+
+impl AccessPattern {
+    /// Build from a skew flag (theta = 0.99, the paper default).
+    pub fn new(n: u64, skewed: bool) -> Self {
+        if skewed {
+            AccessPattern::Zipf(Zipf::new(n, 0.99))
+        } else {
+            AccessPattern::Uniform(n)
+        }
+    }
+
+    /// Draw the next item.
+    pub fn next(&self, rng: &mut Xoshiro256) -> u64 {
+        match self {
+            AccessPattern::Uniform(n) => rng.below(*n),
+            AccessPattern::Zipf(z) => z.next(rng),
+        }
+    }
+
+    /// Item count.
+    pub fn n(&self) -> u64 {
+        match self {
+            AccessPattern::Uniform(n) => *n,
+            AccessPattern::Zipf(z) => z.n(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn draws_in_range() {
+        let z = Zipf::new(1000, 0.99);
+        let mut rng = Xoshiro256::new(1);
+        for _ in 0..10_000 {
+            assert!(z.next(&mut rng) < 1000);
+        }
+    }
+
+    #[test]
+    fn skew_concentrates_on_head() {
+        let z = Zipf::new(10_000, 0.99);
+        let mut rng = Xoshiro256::new(2);
+        let mut head = 0u64;
+        let draws = 100_000;
+        for _ in 0..draws {
+            if z.next(&mut rng) < 100 {
+                head += 1;
+            }
+        }
+        // With theta=.99, the top 1% of keys should get far more than 1%
+        // of accesses (empirically ~60%+).
+        assert!(
+            head as f64 / draws as f64 > 0.4,
+            "head share {}",
+            head as f64 / draws as f64
+        );
+    }
+
+    #[test]
+    fn rank_popularity_monotone() {
+        let z = Zipf::new(100, 0.9);
+        let mut rng = Xoshiro256::new(3);
+        let mut counts = [0u64; 100];
+        for _ in 0..200_000 {
+            counts[z.next(&mut rng) as usize] += 1;
+        }
+        assert!(counts[0] > counts[10]);
+        assert!(counts[10] > counts[90]);
+    }
+
+    #[test]
+    fn uniform_pattern_spreads() {
+        let p = AccessPattern::new(10, false);
+        let mut rng = Xoshiro256::new(4);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            seen[p.next(&mut rng) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let z = Zipf::new(1000, 0.99);
+        let mut a = Xoshiro256::new(7);
+        let mut b = Xoshiro256::new(7);
+        for _ in 0..100 {
+            assert_eq!(z.next(&mut a), z.next(&mut b));
+        }
+    }
+}

@@ -1,0 +1,229 @@
+//! Cross-layer integration tests: cluster-level invariants, artifact
+//! pinning, ablation sanity, and serializability checking.
+
+use std::sync::Arc;
+
+use lotus::config::{Config, SystemKind};
+use lotus::sharding::key::LotusKey;
+use lotus::sim::{Cluster, CrashEvent};
+use lotus::txn::api::{RecordRef, TxnApi, TxnCtl};
+use lotus::txn::coordinator::LotusCoordinator;
+use lotus::workloads::smallbank::{CHECKING, SAVINGS};
+use lotus::workloads::{SmallBankWorkload, Workload, WorkloadKind};
+
+fn tiny() -> Config {
+    let mut cfg = Config::small();
+    cfg.mn_capacity = 1 << 30; // TPC-C's 9 tables need headroom
+    cfg.duration_ns = 4_000_000;
+    cfg.scale.kvs_keys = 5_000;
+    cfg.scale.smallbank_accounts = 5_000;
+    cfg.scale.tatp_subscribers = 3_000;
+    cfg.scale.tpcc_warehouses = 1;
+    cfg
+}
+
+
+/// Audit: sum of all balances must equal the initial total plus the net
+/// money committed deposits/withdrawals created/destroyed.
+fn audit_books(cluster: &Cluster, wl: &SmallBankWorkload, n_accounts: u64, label: &str) {
+    let expected =
+        (SmallBankWorkload::initial_total(n_accounts) as i128 + wl.net_injected()) as u128;
+    let mut total: u128 = 0;
+    for acc in 0..n_accounts {
+        for table in [SAVINGS, CHECKING] {
+            let key = SmallBankWorkload::key(table, acc);
+            let v = cluster.shared.tables[table as usize]
+                .load_get(&cluster.shared.mns, 0, key)
+                .unwrap_or_else(|| panic!("{label}: account {acc} table {table} lost"));
+            total += u64::from_le_bytes(v[..8].try_into().unwrap()) as u128;
+        }
+    }
+    assert_eq!(total, expected, "{label}: money created or destroyed");
+}
+/// SmallBank money audit under a full concurrent LOTUS benchmark: any
+/// lost update, torn write, or isolation violation shows up as drift.
+#[test]
+fn smallbank_conserves_total_balance_under_lotus() {
+    let cfg = tiny();
+    let wl = Arc::new(SmallBankWorkload::new(cfg.scale.smallbank_accounts));
+    let cluster = Cluster::build_with(&cfg, wl.clone() as Arc<dyn Workload>).unwrap();
+    let report = cluster.run(SystemKind::Lotus).unwrap();
+    assert!(report.commits > 100);
+    audit_books(&cluster, &wl, cfg.scale.smallbank_accounts, "lotus");
+}
+
+/// The same audit for Motor and FORD (their locking is MN-side CAS).
+/// Each system gets a fresh cluster: FORD is single-versioned (reads
+/// cell 0 only) and cannot inherit a store whose latest versions live in
+/// other cells after an MVCC run.
+#[test]
+fn smallbank_conserves_total_balance_under_baselines() {
+    let cfg = tiny();
+    for system in [SystemKind::Motor, SystemKind::Ford] {
+        let wl = Arc::new(SmallBankWorkload::new(cfg.scale.smallbank_accounts));
+        let cluster = Cluster::build_with(&cfg, wl.clone() as Arc<dyn Workload>).unwrap();
+        let report = cluster.run(system).unwrap();
+        assert!(report.commits > 50, "{}", system.name());
+        audit_books(&cluster, &wl, cfg.scale.smallbank_accounts, system.name());
+    }
+}
+
+/// Replicas converge: after a concurrent run, the primary and every
+/// backup serve identical latest values.
+#[test]
+fn replicas_converge_after_concurrent_run() {
+    let cfg = tiny();
+    let cluster = Cluster::build(
+        &cfg,
+        WorkloadKind::Kvs {
+            rw_pct: 80,
+            skewed: true,
+        },
+    )
+    .unwrap();
+    cluster.run(SystemKind::Lotus).unwrap();
+    let table = &cluster.shared.tables[0];
+    for uid in (0..cfg.scale.kvs_keys).step_by(97) {
+        let key = LotusKey::compose(uid, uid);
+        let primary = table.load_get(&cluster.shared.mns, 0, key);
+        for r in 1..table.replicas.len() {
+            assert_eq!(
+                primary,
+                table.load_get(&cluster.shared.mns, r, key),
+                "replica {r} diverged on key {uid}"
+            );
+        }
+    }
+}
+
+/// Every workload runs on every system without fatal errors.
+#[test]
+fn all_workloads_all_systems_smoke() {
+    let mut cfg = tiny();
+    cfg.duration_ns = 1_500_000;
+    for kind in [
+        WorkloadKind::Kvs {
+            rw_pct: 50,
+            skewed: false,
+        },
+        WorkloadKind::SmallBank,
+        WorkloadKind::Tatp,
+        WorkloadKind::Tpcc,
+    ] {
+        for system in [SystemKind::Lotus, SystemKind::Motor, SystemKind::Ford] {
+            let cluster = Cluster::build(&cfg, kind).unwrap();
+            let report = cluster.run(system).unwrap();
+            assert!(
+                report.commits > 0,
+                "{} on {} made no progress",
+                system.name(),
+                kind.name()
+            );
+        }
+    }
+}
+
+/// Ablation sanity (fig. 14 axes): every feature combination still passes
+/// the money-conservation audit.
+#[test]
+fn ablation_configurations_stay_correct() {
+    for (full, logv, lb, vt) in [
+        (false, false, true, false),
+        (true, false, true, false),
+        (true, true, false, false),
+        (true, true, true, true),
+    ] {
+        let mut cfg = tiny();
+        cfg.duration_ns = 2_000_000;
+        cfg.features.full_record_store = full;
+        cfg.features.log_and_visible = logv;
+        cfg.features.load_balancing = lb;
+        cfg.features.vt_cache = vt;
+        let wl = Arc::new(SmallBankWorkload::new(cfg.scale.smallbank_accounts));
+        let cluster = Cluster::build_with(&cfg, wl.clone() as Arc<dyn Workload>).unwrap();
+        cluster.run(SystemKind::Lotus).unwrap();
+        audit_books(
+            &cluster,
+            &wl,
+            cfg.scale.smallbank_accounts,
+            &format!("ablation ({full},{logv},{lb},{vt})"),
+        );
+    }
+}
+
+/// Crash mid-run, then audit the books: recovery must preserve atomicity
+/// (no half-applied transactions survive).
+#[test]
+fn crash_recovery_preserves_atomicity() {
+    let mut cfg = tiny();
+    cfg.duration_ns = 30_000_000;
+    cfg.timeline_interval_ns = 1_000_000;
+    let wl = Arc::new(SmallBankWorkload::new(cfg.scale.smallbank_accounts));
+    let cluster = Cluster::build_with(&cfg, wl.clone() as Arc<dyn Workload>).unwrap();
+    let report = cluster
+        .run_with_events(
+            SystemKind::Lotus,
+            &[CrashEvent {
+                at_ns: 10_000_000,
+                cns: vec![0],
+            }],
+        )
+        .unwrap();
+    assert!(report.commits > 100);
+    audit_books(&cluster, &wl, cfg.scale.smallbank_accounts, "crash-recovery");
+    let held: usize = cluster
+        .shared
+        .lock_services
+        .iter()
+        .map(|s| s.held_slots())
+        .sum();
+    assert_eq!(held, 0);
+}
+
+/// Snapshot isolation commits more under read-write contention than SR
+/// (it skips read locks), and both preserve the write-write audit.
+#[test]
+fn si_outperforms_sr_under_contention() {
+    let mut sr = tiny();
+    sr.duration_ns = 3_000_000;
+    sr.scale.smallbank_accounts = 200; // hot
+    let mut si = sr.clone();
+    si.isolation = lotus::txn::api::Isolation::SnapshotIsolation;
+    let c_sr = Cluster::build(&sr, WorkloadKind::SmallBank).unwrap();
+    let c_si = Cluster::build(&si, WorkloadKind::SmallBank).unwrap();
+    let r_sr = c_sr.run(SystemKind::Lotus).unwrap();
+    let r_si = c_si.run(SystemKind::Lotus).unwrap();
+    assert!(
+        r_si.commits as f64 >= r_sr.commits as f64 * 0.9,
+        "SI ({}) should not trail SR ({}) meaningfully",
+        r_si.commits,
+        r_sr.commits
+    );
+}
+
+/// Direct API use against a shared cluster (the library path a downstream
+/// user takes, mirroring the quickstart).
+#[test]
+fn manual_transactions_interleave_with_benchmark_state() {
+    let cfg = tiny();
+    let cluster = Cluster::build(
+        &cfg,
+        WorkloadKind::Kvs {
+            rw_pct: 50,
+            skewed: false,
+        },
+    )
+    .unwrap();
+    let shared: Arc<_> = cluster.shared.clone();
+    let mut co = LotusCoordinator::new(shared, 1, 0, 2);
+    let r = RecordRef::new(0, LotusKey::compose(7, 7));
+    co.begin(false);
+    co.txn().add_rw(r);
+    co.txn().execute().unwrap();
+    co.txn().stage_write(r, b"manual".to_vec());
+    co.txn().commit().unwrap();
+    co.begin(true);
+    co.txn().add_ro(r);
+    co.txn().execute().unwrap();
+    assert_eq!(co.txn().value(r).unwrap(), b"manual");
+}
