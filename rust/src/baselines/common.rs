@@ -11,7 +11,9 @@
 //! 2. *Lock + read*: doorbell-batched `CAS(lock) + READ(CVT)` per MN —
 //!    the paper's 1-RTT lock-and-read optimization. A failed CAS aborts
 //!    the transaction and releases every lock already acquired (the
-//!    wasted-work pattern §2.2 highlights).
+//!    wasted-work pattern §2.2 highlights). All one-sided batches are
+//!    planned through the shared [`crate::dm::OpBatch`] doorbell planner
+//!    (the same one the LOTUS phases use).
 //! 3. *Read data*: MVCC select (Motor) or single-version (FORD); the
 //!    delta store charges an extra READ for non-latest versions.
 //! 4. *Commit*: validate the read set (re-read version words), draw the
@@ -25,7 +27,8 @@
 use std::sync::Arc;
 
 use crate::dm::clock::VClock;
-use crate::dm::verbs::{Endpoint, VerbOp};
+use crate::dm::opbatch::{OpBatch, OpTag};
+use crate::dm::verbs::Endpoint;
 use crate::dm::NetConfig;
 use crate::store::cvt::{CellSnapshot, CvtSnapshot, INVISIBLE};
 use crate::store::{gc, record};
@@ -117,7 +120,12 @@ pub struct BaselineCoordinator {
 
 impl BaselineCoordinator {
     /// Coordinator on CN `cn` with a globally unique id (seeds the RNG).
-    pub fn new(cluster: Arc<SharedCluster>, cn: usize, global_id: usize, style: BaselineStyle) -> Self {
+    pub fn new(
+        cluster: Arc<SharedCluster>,
+        cn: usize,
+        global_id: usize,
+        style: BaselineStyle,
+    ) -> Self {
         let ep = Endpoint::new(cn, cluster.cn_nics[cn].clone(), cluster.net.clone());
         let seed = cluster.cfg.seed ^ (global_id as u64 + 1).wrapping_mul(0xD1B5_4A32_D192_ED03);
         Self {
@@ -168,37 +176,22 @@ impl BaselineCoordinator {
         if held.is_empty() {
             return;
         }
-        let mut by_mn: Vec<(usize, Vec<VerbOp>)> = Vec::new();
+        let mut batch = OpBatch::new();
         for h in held {
             // Really clear the word so other coordinators can lock.
             let _ = self.cluster.mns[h.mn].store_u64(h.addr, 0);
             if !self.style.use_cas {
                 continue;
             }
-            let op = if self.style.ideal_faa {
-                VerbOp::Faa {
-                    addr: h.addr,
-                    delta: 0,
-                    old: 0,
-                }
+            if self.style.ideal_faa {
+                batch.faa(h.mn, h.addr, 0);
             } else {
-                VerbOp::Write {
-                    addr: h.addr,
-                    data: 0u64.to_le_bytes().to_vec(),
-                }
-            };
-            match by_mn.iter_mut().find(|(mn, _)| *mn == h.mn) {
-                Some((_, v)) => v.push(op),
-                None => by_mn.push((h.mn, vec![op])),
+                batch.write(h.mn, h.addr, 0u64.to_le_bytes().to_vec());
             }
         }
-        for (mn_id, mut ops) in by_mn {
-            // Charge-only (the words were already cleared above; FAA of 0
-            // and rewriting 0 are idempotent).
-            let _ = self
-                .ep
-                .doorbell_async(&self.cluster.mns[mn_id], &mut ops, &mut self.clk);
-        }
+        // Charge-only, fire-and-forget (the words were already cleared
+        // above; FAA of 0 and rewriting 0 are idempotent).
+        let _ = batch.issue_async(&self.ep, &self.cluster.mns, &mut self.clk);
     }
 
     fn fail(&mut self, reason: AbortReason) -> crate::Error {
@@ -236,21 +229,22 @@ impl BaselineCoordinator {
                 0
             };
             let buckets: Vec<u64> = table.probe_buckets(r.key).collect();
-            let mn = self.cluster.mns[table.primary().mn].clone();
-            let mut ops: Vec<VerbOp> = buckets
+            let mn_id = table.primary().mn;
+            let mut batch = OpBatch::new();
+            let tags: Vec<OpTag> = buckets
                 .iter()
-                .map(|&b| VerbOp::Read {
-                    addr: table.bucket_addr(0, b),
-                    out: vec![0u8; table.layout.bucket_size() as usize + extra],
+                .map(|&b| {
+                    batch.read(
+                        mn_id,
+                        table.bucket_addr(0, b),
+                        table.layout.bucket_size() as usize + extra,
+                    )
                 })
                 .collect();
-            self.ep.doorbell(&mn, &mut ops, &mut self.clk)?;
-            let bufs: Vec<&[u8]> = ops
+            let res = batch.issue(&self.ep, &self.cluster.mns, &mut self.clk)?;
+            let bufs: Vec<&[u8]> = tags
                 .iter()
-                .map(|op| {
-                    let VerbOp::Read { out, .. } = op else { unreachable!() };
-                    &out[..table.layout.bucket_size() as usize]
-                })
+                .map(|&t| &res.read_buf(t)[..table.layout.bucket_size() as usize])
                 .collect();
             if is_insert {
                 let mut placed = None;
@@ -339,7 +333,8 @@ impl BaselineCoordinator {
                 read_cvt,
             });
         }
-        // Issue per-MN doorbells: CAS ops then READs.
+        // Plan one OpBatch per MN (CAS ops then the CVT READ, per record)
+        // and issue each as a single doorbell.
         let mut by_mn: Vec<usize> = Vec::new();
         for p in &plans {
             if !by_mn.contains(&p.mn) {
@@ -347,30 +342,22 @@ impl BaselineCoordinator {
             }
         }
         for mn_id in by_mn {
-            let mut ops: Vec<VerbOp> = Vec::new();
-            let mut op_map: Vec<(usize, bool)> = Vec::new(); // (plan idx, is_cas)
+            let mut batch = OpBatch::new();
+            // (plan idx, cas addr if atomic else None, tag)
+            let mut op_map: Vec<(usize, Option<u64>, OpTag)> = Vec::new();
             for (pi, p) in plans.iter().enumerate() {
                 if p.mn != mn_id {
                     continue;
                 }
                 for &a in &p.cas_addrs {
-                    ops.push(if self.style.ideal_faa {
+                    let tag = if self.style.ideal_faa {
                         // FAA-priced single-shot acquisition; the real
                         // mutual exclusion runs below.
-                        VerbOp::Faa {
-                            addr: a,
-                            delta: 0,
-                            old: 0,
-                        }
+                        batch.faa(mn_id, a, 0)
                     } else {
-                        VerbOp::Cas {
-                            addr: a,
-                            expect: 0,
-                            swap: self.txn_id,
-                            old: 0,
-                        }
-                    });
-                    op_map.push((pi, true));
+                        batch.cas(mn_id, a, 0, self.txn_id)
+                    };
+                    op_map.push((pi, Some(a), tag));
                 }
                 if let Some(addr) = p.read_cvt {
                     let table = self.cluster.table(self.records[p.rec_idx].r.table);
@@ -379,63 +366,49 @@ impl BaselineCoordinator {
                     } else {
                         0
                     };
-                    ops.push(VerbOp::Read {
-                        addr,
-                        out: vec![0u8; table.layout.cvt_size() as usize + extra],
-                    });
-                    op_map.push((pi, false));
+                    let tag = batch.read(mn_id, addr, table.layout.cvt_size() as usize + extra);
+                    op_map.push((pi, None, tag));
                 }
             }
-            if ops.is_empty() {
+            if batch.is_empty() {
                 continue;
             }
             // For the idealized model the FAA op above is cost-only; take
             // the real lock word by CAS through the MN directly.
             if self.style.ideal_faa {
-                for (op, &(pi, is_cas)) in ops.iter().zip(&op_map) {
-                    if !is_cas {
-                        continue;
+                for &(_pi, cas_addr, _tag) in &op_map {
+                    let Some(addr) = cas_addr else { continue };
+                    let got = self.cluster.mns[mn_id].cas_u64(addr, 0, self.txn_id)?;
+                    if got != 0 {
+                        // Conflict: charge the round, then abort.
+                        let mut cost_only = OpBatch::new();
+                        cost_only.faa(mn_id, addr, 0);
+                        cost_only.issue(&self.ep, &self.cluster.mns, &mut self.clk)?;
+                        return Err(self.fail(AbortReason::LockConflict));
                     }
-                    if let VerbOp::Faa { addr, .. } = op {
-                        let got = self.cluster.mns[mn_id].cas_u64(*addr, 0, self.txn_id)?;
-                        if got != 0 {
-                            // Conflict: charge the round, then abort.
-                            let mn = self.cluster.mns[mn_id].clone();
-                            let mut cost_only = vec![VerbOp::Faa {
-                                addr: *addr,
-                                delta: 0,
-                                old: 0,
-                            }];
-                            self.ep.doorbell(&mn, &mut cost_only, &mut self.clk)?;
-                            let _ = pi;
-                            return Err(self.fail(AbortReason::LockConflict));
-                        }
-                        self.held.push(HeldWord {
-                            mn: mn_id,
-                            addr: *addr,
-                        });
-                    }
+                    self.held.push(HeldWord { mn: mn_id, addr });
                 }
             }
-            let mn = self.cluster.mns[mn_id].clone();
-            self.ep.doorbell(&mn, &mut ops, &mut self.clk)?;
-            // Harvest results.
-            for (op, &(pi, is_cas)) in ops.iter().zip(&op_map) {
-                match op {
-                    VerbOp::Cas { addr, old, .. } if is_cas => {
-                        if *old != 0 {
+            let res = batch.issue(&self.ep, &self.cluster.mns, &mut self.clk)?;
+            // Harvest results in op order (CAS outcomes + CVT parses).
+            for &(pi, cas_addr, tag) in &op_map {
+                match cas_addr {
+                    Some(addr) => {
+                        if self.style.ideal_faa {
+                            continue; // lock taken in the pre-pass above
+                        }
+                        if res.old(tag) != 0 {
                             return Err(self.fail(AbortReason::LockConflict));
                         }
-                        self.held.push(HeldWord {
-                            mn: mn_id,
-                            addr: *addr,
-                        });
+                        self.held.push(HeldWord { mn: mn_id, addr });
                     }
-                    VerbOp::Read { out, .. } => {
+                    None => {
                         let i = plans[pi].rec_idx;
                         let table = self.cluster.tables[self.records[i].r.table as usize].clone();
-                        let cvt =
-                            CvtSnapshot::parse(&out[..table.layout.cvt_size() as usize], &table.layout);
+                        let cvt = CvtSnapshot::parse(
+                            &res.read_buf(tag)[..table.layout.cvt_size() as usize],
+                            &table.layout,
+                        );
                         if cvt.is_empty() || cvt.key != self.records[i].r.key.0 {
                             // Stale cached address.
                             self.cluster.addr_caches[self.cn].invalidate(self.records[i].r.key);
@@ -443,7 +416,6 @@ impl BaselineCoordinator {
                         }
                         self.records[i].cvt = Some(cvt);
                     }
-                    _ => {}
                 }
             }
         }
@@ -523,22 +495,16 @@ impl BaselineCoordinator {
         for (mn_id, idxs) in by_mn {
             let mn = self.cluster.mns[mn_id].clone();
             if !self.style.value_in_bucket {
-                let mut ops: Vec<VerbOp> = Vec::new();
+                let mut batch = OpBatch::new();
                 for &ri in &idxs {
                     let (_, _, addr, _, record_len, _, extra) = reads[ri];
-                    ops.push(VerbOp::Read {
-                        addr,
-                        out: vec![0u8; record::slot_size(record_len)],
-                    });
+                    batch.read(mn_id, addr, record::slot_size(record_len));
                     if extra {
                         // Delta reconstruction: base record read.
-                        ops.push(VerbOp::Read {
-                            addr,
-                            out: vec![0u8; record::slot_size(record_len)],
-                        });
+                        batch.read(mn_id, addr, record::slot_size(record_len));
                     }
                 }
-                self.ep.doorbell(&mn, &mut ops, &mut self.clk)?;
+                batch.issue(&self.ep, &self.cluster.mns, &mut self.clk)?;
             }
             for &ri in &idxs {
                 let (i, _, addr, payload_len, record_len, want_cv, _) = reads[ri];
@@ -582,31 +548,25 @@ impl BaselineCoordinator {
                 }
             }
             for (mn_id, idxs) in by_mn {
-                let mn = self.cluster.mns[mn_id].clone();
-                let mut ops: Vec<VerbOp> = idxs
+                let mut batch = OpBatch::new();
+                let tags: Vec<OpTag> = idxs
                     .iter()
                     .map(|&ci| {
                         let table = self.cluster.table(self.records[checks[ci].0].r.table);
-                        VerbOp::Read {
-                            addr: checks[ci].2,
-                            out: vec![0u8; table.layout.cvt_size() as usize],
-                        }
+                        batch.read(mn_id, checks[ci].2, table.layout.cvt_size() as usize)
                     })
                     .collect();
-                self.ep.doorbell(&mn, &mut ops, &mut self.clk)?;
-                for (&ci, op) in idxs.iter().zip(&ops) {
-                    if let VerbOp::Read { out, .. } = op {
-                        let i = checks[ci].0;
-                        let table =
-                            self.cluster.tables[self.records[i].r.table as usize].clone();
-                        let cvt = CvtSnapshot::parse(out, &table.layout);
-                        let (best, newer) = cvt.select_version(self.start_ts);
-                        let changed = best
-                            .map(|c| c.version != self.records[i].seen_version)
-                            .unwrap_or(true);
-                        if newer || changed {
-                            return Err(self.fail(AbortReason::VersionTooNew));
-                        }
+                let res = batch.issue(&self.ep, &self.cluster.mns, &mut self.clk)?;
+                for (&ci, &tag) in idxs.iter().zip(&tags) {
+                    let i = checks[ci].0;
+                    let table = self.cluster.tables[self.records[i].r.table as usize].clone();
+                    let cvt = CvtSnapshot::parse(res.read_buf(tag), &table.layout);
+                    let (best, newer) = cvt.select_version(self.start_ts);
+                    let changed = best
+                        .map(|c| c.version != self.records[i].seen_version)
+                        .unwrap_or(true);
+                    if newer || changed {
+                        return Err(self.fail(AbortReason::VersionTooNew));
                     }
                 }
             }
@@ -698,18 +658,11 @@ impl BaselineCoordinator {
                 writes.push((rep.mn, table.cvt_addr(r, rec.bucket, rec.slot), cvt_img.clone()));
             }
         }
-        let mut by_mn: Vec<(usize, Vec<VerbOp>)> = Vec::new();
+        let mut batch = OpBatch::new();
         for (mn, addr, data) in writes {
-            let op = VerbOp::Write { addr, data };
-            match by_mn.iter_mut().find(|(m, _)| *m == mn) {
-                Some((_, v)) => v.push(op),
-                None => by_mn.push((mn, vec![op])),
-            }
+            batch.write(mn, addr, data);
         }
-        for (mn_id, mut ops) in by_mn {
-            let mn = self.cluster.mns[mn_id].clone();
-            self.ep.doorbell(&mn, &mut ops, &mut self.clk)?;
-        }
+        batch.issue(&self.ep, &self.cluster.mns, &mut self.clk)?;
 
         // --- Unlock. ---
         self.release_locks();

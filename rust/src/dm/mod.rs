@@ -23,6 +23,7 @@
 pub mod clock;
 pub mod memnode;
 pub mod netconfig;
+pub mod opbatch;
 pub mod rnic;
 pub mod rpc;
 pub mod verbs;
@@ -30,6 +31,7 @@ pub mod verbs;
 pub use clock::{TimeGate, VClock};
 pub use memnode::{MemNode, MemRegion};
 pub use netconfig::NetConfig;
+pub use opbatch::{BatchResult, OpBatch, OpTag};
 pub use rnic::Rnic;
 pub use rpc::RpcFabric;
 pub use verbs::{Endpoint, VerbOp};

@@ -17,7 +17,12 @@
 //!   verbs (READ/WRITE/CAS/FAA, doorbell batching), CN-to-CN RPC, and
 //!   per-coordinator virtual clocks. All data operations execute against
 //!   real shared memory; all network operations are *also* charged against
-//!   the cost model, reproducing the paper's RNIC-IOPS bottleneck.
+//!   the cost model, reproducing the paper's RNIC-IOPS bottleneck. The
+//!   [`dm::OpBatch`] planner is the single entry point for one-sided
+//!   batches: callers enqueue READ/WRITE/CAS/FAA ops tagged by target MN
+//!   and the planner groups them into per-MN doorbell batches, each
+//!   charged one RTT — both the LOTUS commit path and every baseline
+//!   coordinator issue their batches through it.
 //! - [`store`] — MN-side data store: consecutive version tables (CVT),
 //!   hash index, seqlock cacheline versions, GC, primary-backup replication.
 //! - [`lock`] — CN-side distributed lock tables (8B fingerprint+counter
@@ -27,8 +32,15 @@
 //!   resharding.
 //! - [`cache`] — version-table cache (LRU sub-caches, zero-overhead
 //!   consistency) and CVT address cache.
-//! - [`txn`] — the lock-first transaction protocol (Execute/Commit, MVCC,
-//!   SR + SI isolation), HLC timestamp oracle, commit logs.
+//! - [`txn`] — the lock-first transaction protocol. The protocol is
+//!   **phase-structured**: each stage of the paper's pipeline (Lock →
+//!   Read CVT → Read Data → Write+Log → Timestamp → Visible → Unlock)
+//!   lives in its own module under [`txn::phases`], operating on a
+//!   [`txn::phases::TxnFrame`] that threads the read/write sets,
+//!   snapshots, and virtual clock through the pipeline. The
+//!   [`txn::coordinator::LotusCoordinator`] is a thin orchestration
+//!   shell over those phases. Plus the HLC timestamp oracle and commit
+//!   logs.
 //! - [`balance`] — two-level load balancing: metrics collection and the
 //!   rebalance planner (executes the AOT-compiled XLA artifact via
 //!   [`runtime`]).
@@ -70,38 +82,71 @@ pub mod util;
 pub mod workloads;
 
 /// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+///
+/// The crate is dependency-free (offline/vendored builds), so `Display`
+/// and `std::error::Error` are implemented by hand instead of through a
+/// derive crate.
+#[derive(Debug)]
 pub enum Error {
     /// Transaction aborted (lock conflict, validation failure, ...).
-    #[error("transaction aborted: {0}")]
     Abort(AbortReason),
     /// A memory-node address is out of range or misaligned.
-    #[error("bad address: {0:#x} ({1})")]
     BadAddress(u64, &'static str),
     /// Requested node does not exist or has failed.
-    #[error("node unavailable: {0}")]
     NodeUnavailable(String),
     /// Lock table bucket is full — the key cannot be locked.
-    #[error("lock bucket full")]
     LockBucketFull,
     /// Shard not managed by this CN (stale routing); retry with fresh map.
-    #[error("wrong shard owner: shard {shard} not owned by cn {cn}")]
-    WrongShardOwner { shard: u16, cn: usize },
+    WrongShardOwner {
+        /// The shard the request named.
+        shard: u16,
+        /// The CN that received (and rejected) the request.
+        cn: usize,
+    },
     /// Memory-pool allocation failed.
-    #[error("out of memory-pool space: {0}")]
     OutOfMemory(String),
     /// Configuration problem.
-    #[error("config error: {0}")]
     Config(String),
     /// Artifact loading / PJRT problems.
-    #[error("runtime error: {0}")]
     Runtime(String),
     /// XLA error bubbled up from the PJRT client.
-    #[error("xla: {0}")]
     Xla(String),
     /// I/O error.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Abort(r) => write!(f, "transaction aborted: {r}"),
+            Error::BadAddress(addr, why) => write!(f, "bad address: {addr:#x} ({why})"),
+            Error::NodeUnavailable(who) => write!(f, "node unavailable: {who}"),
+            Error::LockBucketFull => write!(f, "lock bucket full"),
+            Error::WrongShardOwner { shard, cn } => {
+                write!(f, "wrong shard owner: shard {shard} not owned by cn {cn}")
+            }
+            Error::OutOfMemory(what) => write!(f, "out of memory-pool space: {what}"),
+            Error::Config(what) => write!(f, "config error: {what}"),
+            Error::Runtime(what) => write!(f, "runtime error: {what}"),
+            Error::Xla(what) => write!(f, "xla: {what}"),
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Why a transaction aborted — recorded in metrics for abort-rate figures.

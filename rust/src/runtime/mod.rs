@@ -2,14 +2,22 @@
 //!
 //! `make artifacts` runs `python/compile/aot.py` once at build time,
 //! lowering the L2 JAX model (whose hot spots are the L1 Pallas kernels)
-//! to **HLO text** in `artifacts/*.hlo.txt`. This module loads that text
-//! with `HloModuleProto::from_text_file`, compiles it on the PJRT CPU
-//! client, and executes it from the rust hot path — python never runs at
+//! to **HLO text** in `artifacts/*.hlo.txt`. With the `xla` cargo feature
+//! enabled, this module loads that text with
+//! `HloModuleProto::from_text_file`, compiles it on the PJRT CPU client,
+//! and executes it from the rust hot path — python never runs at
 //! transaction time.
 //!
 //! HLO *text* (not `.serialize()`) is the interchange format because
 //! jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
 //! linked xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! **Offline builds.** The `xla` binding crate is not in the offline
+//! vendor set, so the feature is off by default and the types below
+//! degrade to stubs whose constructors return [`Error::Runtime`]. Every
+//! consumer already handles that path: [`crate::balance::XlaPlanner`]
+//! fails to load and the cluster harness falls back to the bit-equivalent
+//! [`crate::balance::RustPlanner`] mirror.
 
 pub mod manifest;
 
@@ -18,45 +26,6 @@ use std::path::Path;
 use crate::{Error, Result};
 
 pub use manifest::Manifest;
-
-fn xerr(e: xla::Error) -> Error {
-    Error::Xla(e.to_string())
-}
-
-/// A PJRT CPU client plus the compiled LOTUS artifacts.
-pub struct XlaRuntime {
-    client: xla::PjRtClient,
-}
-
-impl XlaRuntime {
-    /// Start a CPU PJRT client.
-    pub fn cpu() -> Result<Self> {
-        Ok(Self {
-            client: xla::PjRtClient::cpu().map_err(xerr)?,
-        })
-    }
-
-    /// PJRT platform name (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load an HLO-text artifact and compile it.
-    pub fn load_hlo_text<P: AsRef<Path>>(&self, path: P) -> Result<LoadedExec> {
-        let path = path.as_ref();
-        let proto = xla::HloModuleProto::from_text_file(path).map_err(|e| {
-            Error::Runtime(format!("loading {}: {e}", path.display()))
-        })?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).map_err(xerr)?;
-        Ok(LoadedExec { exe })
-    }
-}
-
-/// One compiled executable.
-pub struct LoadedExec {
-    exe: xla::PjRtLoadedExecutable,
-}
 
 /// A typed output extracted from an executed tuple.
 #[derive(Debug, Clone, PartialEq)]
@@ -103,6 +72,50 @@ pub enum InValue<'a> {
     U32(&'a [u32], &'a [i64]),
 }
 
+#[cfg(feature = "xla")]
+fn xerr(e: xla::Error) -> Error {
+    Error::Xla(e.to_string())
+}
+
+/// A PJRT CPU client plus the compiled LOTUS artifacts.
+#[cfg(feature = "xla")]
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+}
+
+#[cfg(feature = "xla")]
+impl XlaRuntime {
+    /// Start a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        Ok(Self {
+            client: xla::PjRtClient::cpu().map_err(xerr)?,
+        })
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text<P: AsRef<Path>>(&self, path: P) -> Result<LoadedExec> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(|e| {
+            Error::Runtime(format!("loading {}: {e}", path.display()))
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(xerr)?;
+        Ok(LoadedExec { exe })
+    }
+}
+
+/// One compiled executable.
+#[cfg(feature = "xla")]
+pub struct LoadedExec {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+#[cfg(feature = "xla")]
 impl LoadedExec {
     /// Execute with the given inputs; returns the artifact's output tuple
     /// decomposed into typed vectors.
@@ -149,15 +162,72 @@ impl LoadedExec {
     }
 }
 
+#[cfg(not(feature = "xla"))]
+fn unavailable() -> Error {
+    Error::Runtime(
+        "built without the `xla` feature: PJRT execution unavailable \
+         (the balance planner falls back to the rust mirror)"
+            .into(),
+    )
+}
+
+/// Stub PJRT client for builds without the `xla` feature (see module docs).
+#[cfg(not(feature = "xla"))]
+pub struct XlaRuntime {
+    _priv: (),
+}
+
+#[cfg(not(feature = "xla"))]
+impl XlaRuntime {
+    /// Always fails: the PJRT client needs the `xla` feature.
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable())
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        "unavailable".into()
+    }
+
+    /// Always fails: compilation needs the `xla` feature.
+    pub fn load_hlo_text<P: AsRef<Path>>(&self, _path: P) -> Result<LoadedExec> {
+        Err(unavailable())
+    }
+}
+
+/// Stub executable for builds without the `xla` feature.
+#[cfg(not(feature = "xla"))]
+pub struct LoadedExec {
+    _priv: (),
+}
+
+#[cfg(not(feature = "xla"))]
+impl LoadedExec {
+    /// Always fails: execution needs the `xla` feature.
+    pub fn run(&self, _inputs: &[InValue<'_>]) -> Result<Vec<OutValue>> {
+        Err(unavailable())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    #[cfg(feature = "xla")]
     fn artifacts_dir() -> Option<std::path::PathBuf> {
         let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         dir.join("manifest.json").exists().then_some(dir)
     }
 
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_runtime_reports_unavailable() {
+        let err = XlaRuntime::cpu().unwrap_err();
+        assert!(matches!(err, Error::Runtime(_)));
+        assert!(err.to_string().contains("xla"));
+    }
+
+    #[cfg(feature = "xla")]
     #[test]
     fn shard_hash_artifact_matches_rust_mix32() {
         let Some(dir) = artifacts_dir() else {
@@ -185,6 +255,7 @@ mod tests {
         }
     }
 
+    #[cfg(feature = "xla")]
     #[test]
     fn rebalance_artifact_loads_and_runs() {
         let Some(dir) = artifacts_dir() else {

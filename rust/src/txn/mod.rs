@@ -16,9 +16,15 @@
 //!   (Begin/AddRO/AddRW/Execute/Commit, paper section 7.3), implemented by
 //!   the LOTUS coordinator and by the baseline systems so every workload
 //!   runs unmodified on every system.
-//! - [`coordinator`] — the LOTUS coordinator: lock-first Execute
-//!   (lock -> read CVT -> read data) and Commit (write+log -> commit ts ->
-//!   write visible -> unlock), with SR and SI isolation.
+//! - [`phases`] — the protocol pipeline itself, one module per phase
+//!   (lock, read, write_log, commit, unlock): each phase is a function of
+//!   a [`phases::PhaseCtx`] (coordinator environment) and a
+//!   [`phases::TxnFrame`] (per-transaction state), with every one-sided
+//!   exchange planned through the shared [`crate::dm::OpBatch`] doorbell
+//!   planner.
+//! - [`coordinator`] — the LOTUS coordinator: a thin orchestration shell
+//!   mapping the [`api`] surface onto the phase pipeline, with SR and SI
+//!   isolation.
 //! - [`doomed`] — the doomed-transaction registry used by resharding and
 //!   recovery to proactively abort transactions that must not commit.
 
@@ -26,9 +32,11 @@ pub mod api;
 pub mod coordinator;
 pub mod doomed;
 pub mod log;
+pub mod phases;
 pub mod timestamp;
 
 pub use api::{Isolation, TxnApi, TxnCtl};
 pub use coordinator::{LotusCoordinator, SharedCluster};
 pub use doomed::DoomedSet;
+pub use phases::{PhaseCtx, TxnFrame};
 pub use timestamp::{compose_ts, logical_of, phys_of, TimestampOracle};

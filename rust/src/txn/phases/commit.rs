@@ -1,0 +1,82 @@
+//! Phase 5 + orchestration — the commit pipeline (paper §5.1).
+//!
+//! `commit_rw` drives a read-write transaction's commit end to end:
+//! doomed check, *Write Data & Log* ([`write_log`]), *Get Timestamp*,
+//! *Write Visible*, synchronous VT-cache update for locally owned keys
+//! (§4.4 — the write lock is still held, so the fill costs no extra
+//! consistency work), async log-slot clear, and *Unlock* ([`unlock`]).
+
+use crate::cache::vtcache::CachedCvt;
+use crate::dm::opbatch::OpBatch;
+use crate::txn::log::STATE_EMPTY;
+use crate::txn::phases::{unlock, write_log, PhaseCtx, TxnFrame};
+use crate::{abort, AbortReason, Result};
+
+/// Commit a read-write transaction. On `Err` the transaction has been
+/// rolled back (all locks released).
+pub fn commit_rw(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame) -> Result<()> {
+    // Doomed check: resharding/recovery may have force-released our
+    // locks; such a transaction must not enter the commit phase (§6).
+    if ctx.cluster.doomed.take(frame.txn_id) {
+        unlock::release(ctx, frame);
+        return Err(abort(AbortReason::OwnerFailed));
+    }
+    let log_and_visible = ctx.cluster.cfg.features.log_and_visible;
+    let ts_svc = ctx.net().ts_oracle_ns;
+    // Pre-draw the commit timestamp when running in the no-log mode
+    // (UPS-backed DRAM assumption, the "+Log & Visible" ablation off).
+    let early_ts = if log_and_visible {
+        0
+    } else {
+        ctx.cluster.oracle.timestamp(ctx.clk, ts_svc)
+    };
+
+    // --- Write Data (& Log) ---
+    let plans = write_log::write_data_and_log(ctx, frame, early_ts)?;
+
+    // --- Get Timestamp ---
+    let commit_ts = if log_and_visible {
+        ctx.cluster.oracle.timestamp(ctx.clk, ts_svc)
+    } else {
+        early_ts
+    };
+
+    // --- Write Visible ---
+    if log_and_visible {
+        write_log::write_visible(ctx, frame, &plans, commit_ts)?;
+    }
+
+    // Synchronous VT-cache update for locally owned keys (§4.4 "zero
+    // consistency overhead": we hold the write lock).
+    if ctx.cluster.cfg.features.vt_cache {
+        for plan in &plans {
+            let rec = &frame.records[plan.rec_idx];
+            if ctx.cluster.router.owner_of_key(rec.r.key) == ctx.cn {
+                let mut cvt = plan.new_cvt.clone();
+                cvt.cells[plan.cell as usize].version = commit_ts;
+                let addr = {
+                    let table = ctx.cluster.table(rec.r.table);
+                    table.cvt_addr(0, rec.bucket, rec.slot)
+                };
+                ctx.cluster.vt_caches[ctx.cn].put(rec.r.key, CachedCvt { cvt, addr });
+            }
+        }
+        for rec in &frame.records {
+            if rec.delete && ctx.cluster.router.owner_of_key(rec.r.key) == ctx.cn {
+                ctx.cluster.vt_caches[ctx.cn].invalidate(rec.r.key);
+            }
+        }
+    }
+
+    // Clear the log slot (async — not on the critical path).
+    if log_and_visible && !plans.is_empty() {
+        let (log_mn, log_addr) = ctx.cluster.log_slots[ctx.global_id];
+        let mut batch = OpBatch::new();
+        batch.write(log_mn, log_addr, STATE_EMPTY.to_le_bytes().to_vec());
+        batch.issue_async(ctx.ep, &ctx.cluster.mns, ctx.clk)?;
+    }
+
+    // --- Unlock ---
+    unlock::release(ctx, frame);
+    Ok(())
+}

@@ -1,0 +1,125 @@
+//! Phase 1 — *Lock Data* (lock-first, paper §5.1 + Algorithm 1).
+//!
+//! Write locks for the read-write set, read locks for the read-only set
+//! (SR only); inserts and deletes also lock the index bucket's probe
+//! chain (§4.1). Locally owned keys are CPU CAS on the local lock table;
+//! remote keys are batched **per owner CN** into one RPC each. Any
+//! failure releases everything already acquired and aborts — before a
+//! single byte is read from the memory pool.
+
+use crate::lock::table::LockMode;
+use crate::sharding::key::LotusKey;
+use crate::txn::api::Isolation;
+use crate::txn::coordinator::SharedCluster;
+use crate::txn::phases::{unlock, Held, PhaseCtx, TxnFrame};
+use crate::{abort, AbortReason, Error, Result};
+
+/// The lock set for `frame.records[from..]`: `(key, mode)` per request.
+pub fn requests(
+    cluster: &SharedCluster,
+    frame: &TxnFrame,
+    from: usize,
+) -> Vec<(LotusKey, LockMode)> {
+    let mut reqs = Vec::with_capacity(frame.records.len() - from + 2);
+    for rec in &frame.records[from..] {
+        if rec.write {
+            reqs.push((rec.r.key, LockMode::Write));
+            if rec.insert || rec.delete {
+                // Inserts/deletes also lock the index bucket (§4.1) —
+                // the whole probe chain, since placement (insert) or
+                // residence (delete) may be any bucket in it and the
+                // lock-first protocol locks before reading.
+                let table = cluster.table(rec.r.table);
+                for b in table.probe_buckets(rec.r.key) {
+                    reqs.push((table.bucket_lock_key(b), LockMode::Write));
+                }
+            }
+        } else if cluster.cfg.isolation == Isolation::Serializable {
+            reqs.push((rec.r.key, LockMode::Read));
+        }
+    }
+    reqs
+}
+
+/// Acquire all locks for `frame.records[from..]` (the lock-first step).
+/// On failure, everything already acquired is released and the
+/// transaction aborts.
+pub fn acquire(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame, from: usize) -> Result<()> {
+    let reqs = requests(ctx.cluster, frame, from);
+    if reqs.is_empty() {
+        return Ok(());
+    }
+    let router = ctx.cluster.router.clone();
+    let holder = frame.holder(ctx.cn);
+    // Partition into local and per-remote-CN batches.
+    let mut local: Vec<(LotusKey, LockMode)> = Vec::new();
+    let mut remote: Vec<(usize, Vec<(LotusKey, LockMode)>)> = Vec::new();
+    for (key, mode) in reqs {
+        let owner = router.owner_of_key(key);
+        ctx.cluster.metrics.record_request(owner, key.shard());
+        if owner == ctx.cn {
+            local.push((key, mode));
+        } else {
+            match remote.iter_mut().find(|(cn, _)| *cn == owner) {
+                Some((_, v)) => v.push((key, mode)),
+                None => remote.push((owner, vec![(key, mode)])),
+            }
+        }
+    }
+    // Local locks: CPU CAS (Algorithm 1).
+    for &(key, mode) in &local {
+        ctx.clk.advance(ctx.net().local_lock_ns);
+        match ctx.cluster.lock_services[ctx.cn].try_acquire(&router, key, mode, holder, false) {
+            Ok(true) => frame.held.push(Held {
+                key,
+                mode,
+                owner_cn: ctx.cn,
+            }),
+            Ok(false) => {
+                unlock::release(ctx, frame);
+                return Err(abort(AbortReason::LockConflict));
+            }
+            Err(Error::LockBucketFull) => {
+                unlock::release(ctx, frame);
+                return Err(abort(AbortReason::LockConflict));
+            }
+            Err(Error::WrongShardOwner { .. }) => {
+                // Stale route (shard migrating) — abort; the retry will
+                // see the fresh map.
+                unlock::release(ctx, frame);
+                return Err(abort(AbortReason::LockConflict));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    // Remote locks: one batched RPC per target CN (§4.1).
+    for (target, batch) in remote {
+        ctx.ep.gate_sync(ctx.clk);
+        if let Err(e) = ctx
+            .cluster
+            .rpc
+            .call(ctx.cn, target, ctx.slot, batch.len(), ctx.clk)
+        {
+            // CN failed: the paper aborts transactions waiting on the
+            // failed CN's locks (§6).
+            let _ = e;
+            unlock::release(ctx, frame);
+            return Err(abort(AbortReason::OwnerFailed));
+        }
+        for &(key, mode) in &batch {
+            match ctx.cluster.lock_services[target].try_acquire(&router, key, mode, holder, true) {
+                Ok(true) => frame.held.push(Held {
+                    key,
+                    mode,
+                    owner_cn: target,
+                }),
+                Ok(false) | Err(Error::LockBucketFull) | Err(Error::WrongShardOwner { .. }) => {
+                    unlock::release(ctx, frame);
+                    return Err(abort(AbortReason::LockConflict));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,218 @@
+//! The LOTUS protocol pipeline, one module per phase (paper fig. 10).
+//!
+//! The paper's protocol is explicitly staged:
+//!
+//! ```text
+//! Execution:  Lock  ->  Read CVT  ->  Read Data
+//! Commit:     Write Data & Log  ->  Timestamp  ->  Visible  ->  Unlock
+//! ```
+//!
+//! Each stage lives in its own module —
+//!
+//! - [`lock`] — the lock-first step: CPU CAS for locally owned keys, one
+//!   batched RPC per remote owner CN; any failure aborts before a single
+//!   byte is read from the memory pool.
+//! - [`read`] — CVT resolution (VT cache / address cache / bucket probe)
+//!   and MVCC record reads, doorbell-batched per MN.
+//! - [`write_log`] — new versions (INVISIBLE) + the metadata commit log,
+//!   planned into one [`crate::dm::OpBatch`] covering primaries and
+//!   backups; also the commit-timestamp *Write Visible* sweep.
+//! - [`commit`] — the commit orchestration: doomed check, timestamp
+//!   draw, VT-cache synchronization, async log clear, unlock.
+//! - [`unlock`] — release of all held locks: local CPU ops, remote
+//!   fire-and-forget RPCs (the coordinator does not wait, paper 5.1).
+//!
+//! — and operates on a [`TxnFrame`] (the per-transaction state: read and
+//! write sets, CVT snapshots, held locks) through a [`PhaseCtx`] (the
+//! coordinator's environment: cluster state, endpoint, virtual clock).
+//! The split is what later work batches and pipelines across: a phase is
+//! a function of `(ctx, frame)`, so frames from different transactions
+//! can be staged through the same phase back to back.
+
+pub mod commit;
+pub mod lock;
+pub mod read;
+pub mod unlock;
+pub mod write_log;
+
+#[cfg(test)]
+mod tests;
+
+use crate::dm::clock::VClock;
+use crate::dm::verbs::Endpoint;
+use crate::dm::NetConfig;
+use crate::lock::state::HolderId;
+use crate::lock::table::LockMode;
+use crate::sharding::key::LotusKey;
+use crate::store::cvt::CvtSnapshot;
+use crate::txn::api::{Isolation, RecordRef};
+use crate::txn::coordinator::SharedCluster;
+
+/// Per-record transaction state (one entry of the read/write set).
+#[derive(Debug, Clone)]
+pub struct TxnRecord {
+    /// The record reference.
+    pub r: RecordRef,
+    /// Write intent (vs read-lock only).
+    pub write: bool,
+    /// Insert (vs update of an existing record).
+    pub insert: bool,
+    /// Delete (clears the CVT at commit).
+    pub delete: bool,
+    /// Value read by `execute` (update/read paths).
+    pub value: Option<Vec<u8>>,
+    /// Staged new value.
+    pub new_value: Option<Vec<u8>>,
+    /// The CVT observed at execute (fresh template for inserts).
+    pub cvt: Option<CvtSnapshot>,
+    /// Primary CVT address.
+    pub cvt_addr: u64,
+    /// Index bucket.
+    pub bucket: u64,
+    /// CVT slot within the bucket.
+    pub slot: u8,
+    /// True if the CVT came from this CN's VT cache.
+    pub from_cache: bool,
+    /// VT-cache epoch captured before a lock-free CVT read (RO fills).
+    pub fill_epoch: Option<u64>,
+}
+
+impl TxnRecord {
+    /// A fresh set entry for `r` with the given write intent.
+    pub fn new(r: RecordRef, write: bool) -> Self {
+        Self {
+            r,
+            write,
+            insert: false,
+            delete: false,
+            value: None,
+            new_value: None,
+            cvt: None,
+            cvt_addr: 0,
+            bucket: 0,
+            slot: 0,
+            from_cache: false,
+            fill_epoch: None,
+        }
+    }
+}
+
+/// A held lock (everything needed to release it).
+#[derive(Debug, Clone, Copy)]
+pub struct Held {
+    /// Locked key.
+    pub key: LotusKey,
+    /// Held mode.
+    pub mode: LockMode,
+    /// CN whose lock table holds the lock.
+    pub owner_cn: usize,
+}
+
+/// The per-transaction state threaded through the phase pipeline.
+///
+/// A frame is reused across transactions (a coordinator runs one at a
+/// time); [`TxnFrame::reset`] rearms it at `begin`.
+#[derive(Debug, Default)]
+pub struct TxnFrame {
+    /// Transaction id (globally unique; 0 before the first `begin`).
+    pub txn_id: u64,
+    /// Read-only transaction (no locks, snapshot reads)?
+    pub read_only: bool,
+    /// Start timestamp (HLC).
+    pub start_ts: u64,
+    /// The read/write set in declaration order.
+    pub records: Vec<TxnRecord>,
+    /// Records below this index were handled by a previous `execute`
+    /// round (the paper: "execution may occur multiple times, dynamically
+    /// adding new data to the read/write sets").
+    pub executed_upto: usize,
+    /// Locks currently held by this transaction.
+    pub held: Vec<Held>,
+}
+
+impl TxnFrame {
+    /// An empty frame (no transaction in flight).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Rearm for a new transaction.
+    pub fn reset(&mut self, txn_id: u64, read_only: bool, start_ts: u64) {
+        self.records.clear();
+        self.held.clear();
+        self.executed_upto = 0;
+        self.read_only = read_only;
+        self.txn_id = txn_id;
+        self.start_ts = start_ts;
+    }
+
+    /// Drop all in-flight state **without releasing locks** (fail-stop
+    /// crash; recovery owns the locks, paper §6).
+    pub fn crash(&mut self) {
+        self.records.clear();
+        self.held.clear();
+        self.executed_upto = 0;
+    }
+
+    /// Index of `r` in the set, if present.
+    pub fn find(&self, r: RecordRef) -> Option<usize> {
+        self.records.iter().position(|rec| rec.r == r)
+    }
+
+    /// This transaction's lock-holder identity on CN `cn`.
+    #[inline]
+    pub fn holder(&self, cn: usize) -> HolderId {
+        HolderId {
+            cn,
+            txn: self.txn_id,
+        }
+    }
+}
+
+/// The coordinator-side environment a phase executes in.
+///
+/// Borrowed fresh from the coordinator for each phase call; separate from
+/// [`TxnFrame`] so a phase can mutate the frame and charge the clock at
+/// the same time.
+pub struct PhaseCtx<'a> {
+    /// Cluster-wide shared state.
+    pub cluster: &'a SharedCluster,
+    /// The executing coordinator's CN.
+    pub cn: usize,
+    /// Coordinator slot within the CN (RPC pairing, §4.1).
+    pub slot: usize,
+    /// Global coordinator id (log-slot index).
+    pub global_id: usize,
+    /// The coordinator's verb endpoint.
+    pub ep: &'a Endpoint,
+    /// The coordinator's virtual clock.
+    pub clk: &'a mut VClock,
+}
+
+impl PhaseCtx<'_> {
+    /// Cost model shorthand.
+    #[inline]
+    pub fn net(&self) -> &NetConfig {
+        &self.cluster.net
+    }
+
+    /// Effective isolation level.
+    #[inline]
+    pub fn isolation(&self) -> Isolation {
+        self.cluster.cfg.isolation
+    }
+}
+
+/// One full execution round over `frame.records[frame.executed_upto..]`:
+/// lock-first (read-write transactions only), then Read CVT, then Read
+/// Data. On `Err` the transaction is already rolled back (locks freed).
+pub fn execute(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame) -> crate::Result<()> {
+    let from = frame.executed_upto;
+    if !frame.read_only {
+        lock::acquire(ctx, frame, from)?;
+    }
+    read::read_cvt(ctx, frame, from)?;
+    read::read_data(ctx, frame, from)?;
+    frame.executed_upto = frame.records.len();
+    Ok(())
+}

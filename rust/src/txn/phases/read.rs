@@ -1,0 +1,294 @@
+//! Phases 2 + 3 — *Read CVT* and *Read Data* (paper §5.1).
+//!
+//! CVT resolution is served from the version table cache (locally owned
+//! keys), the address cache (one CVT READ), or a bucket READ + probe
+//! search; all memory-pool READs of a round are planned into one
+//! [`OpBatch`] and issued as per-MN doorbell batches. Record reads MVCC-
+//! select the largest version `<= T_start`; a newer visible version
+//! aborts an SR read-write transaction.
+
+use std::sync::Arc;
+
+use crate::cache::vtcache::CachedCvt;
+use crate::dm::opbatch::{OpBatch, OpTag};
+use crate::store::cvt::CvtSnapshot;
+use crate::store::index::TableStore;
+use crate::store::record;
+use crate::txn::api::Isolation;
+use crate::txn::phases::{unlock, PhaseCtx, TxnFrame};
+use crate::{abort, AbortReason, Error, Result};
+
+/// Probe a key's bucket chain with charged READs; `skip` leading buckets
+/// are assumed already searched. Returns `(bucket, slot, cvt)`.
+///
+/// Reads are sequential single-op doorbells on purpose: the chain stops
+/// at the first hit, and almost every lookup hits the home bucket.
+fn probe_find(
+    ctx: &mut PhaseCtx<'_>,
+    table: &Arc<TableStore>,
+    key: crate::sharding::key::LotusKey,
+    skip: usize,
+) -> Result<Option<(u64, u8, CvtSnapshot)>> {
+    let buckets: Vec<u64> = table.probe_buckets(key).skip(skip).collect();
+    let mn = ctx.cluster.mns[table.primary().mn].clone();
+    for b in buckets {
+        let buf = ctx.ep.read(
+            &mn,
+            table.bucket_addr(0, b),
+            table.layout.bucket_size() as usize,
+            ctx.clk,
+        )?;
+        if let Some((slot, cvt)) = table.find_in_bucket(&buf, key) {
+            return Ok(Some((b, slot, cvt)));
+        }
+    }
+    Ok(None)
+}
+
+/// Insert placement: read the whole probe chain in one doorbell, reject
+/// duplicates anywhere in it, pick the first empty slot.
+fn probe_place_insert(
+    ctx: &mut PhaseCtx<'_>,
+    frame: &mut TxnFrame,
+    table: &Arc<TableStore>,
+    key: crate::sharding::key::LotusKey,
+) -> Result<(u64, u8)> {
+    let buckets: Vec<u64> = table.probe_buckets(key).collect();
+    let mn_id = table.primary().mn;
+    let mut batch = OpBatch::new();
+    let tags: Vec<OpTag> = buckets
+        .iter()
+        .map(|&b| {
+            batch.read(
+                mn_id,
+                table.bucket_addr(0, b),
+                table.layout.bucket_size() as usize,
+            )
+        })
+        .collect();
+    let res = batch.issue(ctx.ep, &ctx.cluster.mns, ctx.clk)?;
+    let mut placed = None;
+    for (&b, &tag) in buckets.iter().zip(&tags) {
+        let out = res.read_buf(tag);
+        if table.find_in_bucket(out, key).is_some() {
+            unlock::release(ctx, frame);
+            return Err(abort(AbortReason::Duplicate));
+        }
+        if placed.is_none() {
+            if let Some(slot) = table.find_empty_in_bucket(out) {
+                placed = Some((b, slot));
+            }
+        }
+    }
+    match placed {
+        Some(p) => Ok(p),
+        None => {
+            unlock::release(ctx, frame);
+            Err(Error::OutOfMemory(format!(
+                "table {} probe chain of key {:#x} full",
+                table.spec.name, key.0
+            )))
+        }
+    }
+}
+
+/// Phase 2: obtain every record's CVT (cache / addr cache / bucket).
+pub fn read_cvt(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame, from: usize) -> Result<()> {
+    let use_vt_cache = ctx.cluster.cfg.features.vt_cache;
+    let vt_cache = ctx.cluster.vt_caches[ctx.cn].clone();
+    let addr_cache = ctx.cluster.addr_caches[ctx.cn].clone();
+    let router = ctx.cluster.router.clone();
+
+    // Pass 1: cache hits + collect the reads we must issue.
+    // reads: (record idx, mn, addr, len, whole_bucket)
+    let mut reads: Vec<(usize, usize, u64, usize, bool)> = Vec::new();
+    for i in from..frame.records.len() {
+        let (r, is_insert) = {
+            let rec = &frame.records[i];
+            (rec.r, rec.insert)
+        };
+        let table = ctx.cluster.tables[r.table as usize].clone();
+        let bucket = table.bucket_of(r.key);
+        let local = router.owner_of_key(r.key) == ctx.cn;
+        if use_vt_cache && local && !is_insert {
+            ctx.clk.advance(ctx.net().cache_op_ns);
+            if let Some(hit) = vt_cache.get(r.key) {
+                let (b, s) = table.locate_cvt(hit.addr)?;
+                let rec = &mut frame.records[i];
+                rec.cvt = Some(hit.cvt);
+                rec.cvt_addr = hit.addr;
+                rec.bucket = b;
+                rec.slot = s;
+                rec.from_cache = true;
+                continue;
+            }
+        }
+        if is_insert {
+            // Placement reads the whole probe chain in one doorbell.
+            let (b, slot) = probe_place_insert(ctx, frame, &table, r.key)?;
+            let mut cvt = CvtSnapshot::empty(table.spec.ncells);
+            cvt.key = r.key.0;
+            cvt.occupied = true;
+            cvt.table_id = table.spec.id;
+            let rec = &mut frame.records[i];
+            rec.cvt_addr = table.cvt_addr(0, b, slot);
+            rec.bucket = b;
+            rec.slot = slot;
+            rec.cvt = Some(cvt);
+            continue;
+        }
+        if use_vt_cache && local && frame.read_only {
+            // Lock-free read: remember the invalidation epoch so the
+            // fill below can be rejected if a writer raced us.
+            frame.records[i].fill_epoch = Some(vt_cache.epoch(r.key));
+        }
+        ctx.clk.advance(ctx.net().cache_op_ns);
+        if let Some(addr) = addr_cache.get(r.key) {
+            reads.push((
+                i,
+                table.primary().mn,
+                addr,
+                table.layout.cvt_size() as usize,
+                false,
+            ));
+        } else {
+            reads.push((
+                i,
+                table.primary().mn,
+                table.bucket_addr(0, bucket),
+                table.layout.bucket_size() as usize,
+                true,
+            ));
+        }
+    }
+
+    // Pass 2: plan + issue per-MN doorbell batches through OpBatch.
+    let mut batch = OpBatch::new();
+    let tags: Vec<OpTag> = reads
+        .iter()
+        .map(|&(_, mn, addr, len, _)| batch.read(mn, addr, len))
+        .collect();
+    let mut results = batch.issue(ctx.ep, &ctx.cluster.mns, ctx.clk)?;
+
+    // Pass 3: parse, validate, retry stale addresses via bucket read.
+    for (ri, &(i, _mn_id, addr, _len, whole_bucket)) in reads.iter().enumerate() {
+        let buf = results.take_read(tags[ri]);
+        let table = ctx.cluster.tables[frame.records[i].r.table as usize].clone();
+        let key = frame.records[i].r.key;
+        let parsed = if whole_bucket {
+            // Home bucket was read in the batch; probe successors on miss.
+            let found = match table.find_in_bucket(&buf, key) {
+                Some((slot, cvt)) => Some((table.bucket_of(key), slot, cvt)),
+                None => probe_find(ctx, &table, key, 1)?,
+            };
+            let Some((b, slot, cvt)) = found else {
+                unlock::release(ctx, frame);
+                return Err(abort(AbortReason::NotFound));
+            };
+            let cvt_addr = table.cvt_addr(0, b, slot);
+            ctx.cluster.addr_caches[ctx.cn].put(key, cvt_addr);
+            (slot, cvt, cvt_addr)
+        } else {
+            let cvt = CvtSnapshot::parse(&buf, &table.layout);
+            if cvt.is_empty() || cvt.key != key.0 {
+                // Stale cached address: fall back to a probe search.
+                ctx.cluster.addr_caches[ctx.cn].invalidate(key);
+                let Some((b, slot, cvt)) = probe_find(ctx, &table, key, 0)? else {
+                    unlock::release(ctx, frame);
+                    return Err(abort(AbortReason::NotFound));
+                };
+                let cvt_addr = table.cvt_addr(0, b, slot);
+                ctx.cluster.addr_caches[ctx.cn].put(key, cvt_addr);
+                (slot, cvt, cvt_addr)
+            } else {
+                let (_b, s) = table.locate_cvt(addr)?;
+                (s, cvt, addr)
+            }
+        };
+        let local = ctx.cluster.router.owner_of_key(key) == ctx.cn;
+        let (slot, cvt, cvt_addr) = parsed;
+        if use_vt_cache && local {
+            let entry = CachedCvt {
+                cvt: cvt.clone(),
+                addr: cvt_addr,
+            };
+            if frame.read_only {
+                // Epoch-checked fill (no lock held).
+                if let Some(e0) = frame.records[i].fill_epoch {
+                    ctx.cluster.vt_caches[ctx.cn].put_if_epoch(key, entry, e0);
+                }
+            } else {
+                // Lock held: fill unconditionally.
+                ctx.cluster.vt_caches[ctx.cn].put(key, entry);
+            }
+        }
+        let (b, _s) = table.locate_cvt(cvt_addr)?;
+        let rec = &mut frame.records[i];
+        rec.cvt = Some(cvt);
+        rec.cvt_addr = cvt_addr;
+        rec.bucket = b;
+        rec.slot = slot;
+    }
+    Ok(())
+}
+
+/// Phase 3: MVCC version select + record reads.
+pub fn read_data(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame, from: usize) -> Result<()> {
+    // Collect reads: (record idx, mn, addr, payload_len, record_len, want_cv).
+    let mut reads: Vec<(usize, usize, u64, usize, u32, u8)> = Vec::new();
+    for i in from..frame.records.len() {
+        let (best, newer, table_id, record_len) = {
+            let rec = &frame.records[i];
+            if rec.insert {
+                continue; // nothing to read
+            }
+            let cvt = rec.cvt.as_ref().expect("read_cvt phase ran");
+            let (best, newer) = cvt.select_version(frame.start_ts);
+            let len = best.map(|c| c.len).unwrap_or(0);
+            (best.copied(), newer, rec.r.table, len)
+        };
+        if !frame.read_only && newer && ctx.isolation() == Isolation::Serializable {
+            // A committed version newer than T_start: abort (§5.1).
+            unlock::release(ctx, frame);
+            return Err(abort(AbortReason::VersionTooNew));
+        }
+        let Some(cell) = best else {
+            unlock::release(ctx, frame);
+            return Err(abort(AbortReason::NoVisibleVersion));
+        };
+        let table = ctx.cluster.table(table_id);
+        reads.push((
+            i,
+            table.primary().mn,
+            cell.addr,
+            record_len as usize,
+            table.spec.record_len,
+            cell.cv,
+        ));
+    }
+    // Per-MN doorbell batches through OpBatch.
+    let mut batch = OpBatch::new();
+    let tags: Vec<OpTag> = reads
+        .iter()
+        .map(|&(_, mn, addr, _, record_len, _)| {
+            batch.read(mn, addr, record::slot_size(record_len))
+        })
+        .collect();
+    let mut results = batch.issue(ctx.ep, &ctx.cluster.mns, ctx.clk)?;
+    for (ri, &(i, _mn, _addr, payload_len, record_len, want_cv)) in reads.iter().enumerate() {
+        let buf = results.take_read(tags[ri]);
+        let decoded = record::decode(&buf, payload_len, record_len);
+        match decoded {
+            Some((cv, payload)) if cv == want_cv => {
+                frame.records[i].value = Some(payload);
+            }
+            _ => {
+                // Torn slot or CV mismatch: a concurrent overwrite.
+                // Locked reads never hit this; lock-free RO reads abort.
+                unlock::release(ctx, frame);
+                return Err(abort(AbortReason::InconsistentRead));
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! Phase 7 — *Unlock* (paper §5.1).
+//!
+//! Local locks are CPU ops on the local lock table. Remote locks batch
+//! into **fire-and-forget** RPCs per owner CN: the coordinator "returns
+//! the result immediately after issuing remote unlock requests" — its
+//! clock advances only by the send cost, never a round trip. Failures
+//! are ignored; recovery releases the locks of failed CNs (§6). The same
+//! routine is the abort path's rollback.
+
+use crate::txn::phases::{PhaseCtx, TxnFrame};
+
+/// Release everything held by `frame` (post-commit unlock or abort).
+pub fn release(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame) {
+    if frame.held.is_empty() {
+        return;
+    }
+    let holder = frame.holder(ctx.cn);
+    let mut remote: Vec<(usize, usize)> = Vec::new(); // (cn, count)
+    for h in std::mem::take(&mut frame.held) {
+        if h.owner_cn == ctx.cn {
+            ctx.clk.advance(ctx.net().local_lock_ns);
+        } else {
+            match remote.iter_mut().find(|(cn, _)| *cn == h.owner_cn) {
+                Some((_, n)) => *n += 1,
+                None => remote.push((h.owner_cn, 1)),
+            }
+        }
+        ctx.cluster.lock_services[h.owner_cn].release(h.key, h.mode, holder);
+    }
+    for (target, n) in remote {
+        // Fire-and-forget (paper 5.1): failures are ignored — recovery
+        // releases the locks of failed CNs.
+        ctx.ep.gate_sync(ctx.clk);
+        let _ = ctx
+            .cluster
+            .rpc
+            .call_async(ctx.cn, target, ctx.slot, n, ctx.clk);
+    }
+}

@@ -1,0 +1,156 @@
+//! Phases 4 + 6 — *Write Data & Log* and *Write Visible* (paper §5.1).
+//!
+//! New versions go to the memory pool with version = INVISIBLE, primaries
+//! and backups planned into the **same** [`OpBatch`] (identical replica
+//! layout lets one doorbell batch per MN carry both); the metadata commit
+//! log rides in the same batch. After the commit timestamp is drawn,
+//! *Write Visible* overwrites INVISIBLE with the timestamp on every
+//! replica — again one `OpBatch`.
+
+use crate::dm::opbatch::OpBatch;
+use crate::store::cvt::{CellSnapshot, CvtSnapshot, INVISIBLE};
+use crate::store::{gc, record};
+use crate::txn::log::{LogEntry, LogRecord};
+use crate::txn::phases::{unlock, PhaseCtx, TxnFrame};
+use crate::txn::timestamp::phys_of;
+use crate::{abort, AbortReason, Result};
+
+/// One planned version write (needed again by *Write Visible* and the
+/// VT-cache synchronization).
+pub struct PlannedWrite {
+    /// Index into `frame.records`.
+    pub rec_idx: usize,
+    /// The CVT cell chosen for the new version.
+    pub cell: u8,
+    /// The cell's address on the primary MN.
+    pub cell_addr_primary: u64,
+    /// The CVT image as written (INVISIBLE version for the log mode).
+    pub new_cvt: CvtSnapshot,
+}
+
+/// Phase 4: plan and issue every data/CVT/log write of the commit in
+/// per-MN doorbell batches. `early_ts` is the pre-drawn commit timestamp
+/// of the no-log mode (UPS-backed DRAM, "+Log & Visible" ablation off);
+/// it is ignored when the log mode is on (versions start INVISIBLE).
+pub fn write_data_and_log(
+    ctx: &mut PhaseCtx<'_>,
+    frame: &mut TxnFrame,
+    early_ts: u64,
+) -> Result<Vec<PlannedWrite>> {
+    let log_and_visible = ctx.cluster.cfg.features.log_and_visible;
+    let now_phys = ctx.clk.now();
+    let gc_thresh = ctx.cluster.cfg.gc_threshold_ns;
+
+    let mut plans: Vec<PlannedWrite> = Vec::new();
+    let mut log_entries: Vec<LogEntry> = Vec::new();
+    let mut batch = OpBatch::new();
+    for i in 0..frame.records.len() {
+        let rec = frame.records[i].clone();
+        if !rec.write {
+            continue;
+        }
+        let table = ctx.cluster.tables[rec.r.table as usize].clone();
+        let mut cvt = rec.cvt.clone().expect("executed");
+        if rec.delete {
+            // Clear the whole CVT (key=0 frees the index slot).
+            let cleared = CvtSnapshot::empty(table.spec.ncells);
+            for (r, rep) in table.replicas.iter().enumerate() {
+                batch.write(
+                    rep.mn,
+                    table.cvt_addr(r, rec.bucket, rec.slot),
+                    cleared.serialize(&table.layout),
+                );
+            }
+            continue;
+        }
+        let Some(new_value) = rec.new_value.clone() else {
+            continue; // write-locked but not modified: nothing to write
+        };
+        // Choose the victim cell (free / oldest — §7.1 GC).
+        let Some(cell_idx) = gc::choose_victim(&cvt.cells, phys_of(now_phys), gc_thresh) else {
+            unlock::release(ctx, frame);
+            return Err(abort(AbortReason::LockConflict));
+        };
+        // Opportunistic reclamation of stale cells (§7.1).
+        for ridx in gc::reclaimable(&cvt.cells, phys_of(now_phys), gc_thresh) {
+            if ridx != cell_idx {
+                cvt.cells[ridx].valid = false;
+            }
+        }
+        let cell_idx = cell_idx as u8;
+        let old_cv = cvt.cells[cell_idx as usize].cv;
+        let new_cv = old_cv.wrapping_add(1);
+        let rec_addr_primary = table.record_addr(0, rec.bucket, rec.slot, cell_idx);
+        cvt.cells[cell_idx as usize] = CellSnapshot {
+            cv: new_cv,
+            valid: true,
+            len: new_value.len() as u16,
+            version: if log_and_visible { INVISIBLE } else { early_ts },
+            addr: rec_addr_primary,
+            consistent: true,
+        };
+        cvt.record_len = new_value.len() as u16;
+        if rec.insert {
+            cvt.key = rec.r.key.0;
+            cvt.occupied = true;
+            cvt.table_id = table.spec.id;
+        }
+        let slot_img = record::encode(new_cv, &new_value, table.spec.record_len);
+        let cvt_img = cvt.serialize(&table.layout);
+        let cell_addr_primary =
+            table.cvt_addr(0, rec.bucket, rec.slot) + table.layout.cell_off(cell_idx);
+        for (r, rep) in table.replicas.iter().enumerate() {
+            batch.write(
+                rep.mn,
+                table.record_addr(r, rec.bucket, rec.slot, cell_idx),
+                slot_img.clone(),
+            );
+            // Whole-CVT write (header may change for inserts; reclaimed
+            // cells must be cleared) — still one WRITE op.
+            batch.write(rep.mn, table.cvt_addr(r, rec.bucket, rec.slot), cvt_img.clone());
+        }
+        log_entries.push(LogEntry {
+            table: rec.r.table,
+            mn: table.primary().mn as u16,
+            cell_addr: cell_addr_primary,
+        });
+        plans.push(PlannedWrite {
+            rec_idx: i,
+            cell: cell_idx,
+            cell_addr_primary,
+            new_cvt: cvt,
+        });
+    }
+    if log_and_visible && !log_entries.is_empty() {
+        let (log_mn, log_addr) = ctx.cluster.log_slots[ctx.global_id];
+        let log_img = LogRecord::prepared(frame.txn_id, log_entries)?.serialize();
+        batch.write(log_mn, log_addr, log_img);
+    }
+    batch.issue(ctx.ep, &ctx.cluster.mns, ctx.clk)?;
+    Ok(plans)
+}
+
+/// Phase 6: overwrite INVISIBLE with the commit timestamp on every
+/// replica (one WRITE of the cell's version word each).
+pub fn write_visible(
+    ctx: &mut PhaseCtx<'_>,
+    frame: &TxnFrame,
+    plans: &[PlannedWrite],
+    commit_ts: u64,
+) -> Result<()> {
+    let mut batch = OpBatch::new();
+    for plan in plans {
+        let table = ctx.cluster.table(frame.records[plan.rec_idx].r.table);
+        // The version word is the second word of the cell.
+        for r in 0..table.replicas.len() {
+            let cell_addr = table.to_replica_addr(plan.cell_addr_primary, r);
+            batch.write(
+                table.replicas[r].mn,
+                cell_addr + 8,
+                commit_ts.to_le_bytes().to_vec(),
+            );
+        }
+    }
+    batch.issue(ctx.ep, &ctx.cluster.mns, ctx.clk)?;
+    Ok(())
+}

@@ -96,6 +96,34 @@ fn replicas_converge_after_concurrent_run() {
     }
 }
 
+/// Every `SystemKind` — LOTUS and all five baselines — completes a
+/// SmallBank run through the shared `OpBatch`-planned protocol paths and
+/// passes the money-conservation audit on its own fresh cluster.
+#[test]
+fn every_system_kind_runs_and_conserves_money() {
+    let mut cfg = tiny();
+    cfg.duration_ns = 2_000_000;
+    for system in [
+        SystemKind::Lotus,
+        SystemKind::Motor,
+        SystemKind::Ford,
+        SystemKind::MotorFullRecord,
+        SystemKind::MotorNoCas,
+        SystemKind::FordNoCas,
+        SystemKind::IdealLock,
+    ] {
+        let wl = Arc::new(SmallBankWorkload::new(cfg.scale.smallbank_accounts));
+        let cluster = Cluster::build_with(&cfg, wl.clone() as Arc<dyn Workload>).unwrap();
+        let report = cluster.run(system).unwrap();
+        assert!(report.commits > 0, "{} made no progress", system.name());
+        // The unsafe no-CAS modes deliberately skip mutual exclusion, so
+        // the money audit only holds for the locking systems.
+        if !matches!(system, SystemKind::MotorNoCas | SystemKind::FordNoCas) {
+            audit_books(&cluster, &wl, cfg.scale.smallbank_accounts, system.name());
+        }
+    }
+}
+
 /// Every workload runs on every system without fatal errors.
 #[test]
 fn all_workloads_all_systems_smoke() {
