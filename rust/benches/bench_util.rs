@@ -51,6 +51,80 @@ pub fn concurrency_points() -> Vec<usize> {
     }
 }
 
+/// Minimal JSON object builder (the crate is dependency-free, so benches
+/// hand-roll their machine-readable output). Values are emitted in
+/// insertion order; floats with 3 decimals.
+pub struct JsonObj {
+    buf: String,
+    first: bool,
+}
+
+impl Default for JsonObj {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl JsonObj {
+    /// Empty object.
+    pub fn new() -> Self {
+        Self {
+            buf: String::from("{"),
+            first: true,
+        }
+    }
+
+    fn key(&mut self, k: &str) {
+        if !self.first {
+            self.buf.push(',');
+        }
+        self.first = false;
+        self.buf.push('"');
+        self.buf.push_str(k);
+        self.buf.push_str("\":");
+    }
+
+    /// Add a float field (3 decimals; non-finite becomes null).
+    pub fn num(&mut self, k: &str, v: f64) -> &mut Self {
+        self.key(k);
+        if v.is_finite() {
+            self.buf.push_str(&format!("{v:.3}"));
+        } else {
+            self.buf.push_str("null");
+        }
+        self
+    }
+
+    /// Add an integer field.
+    pub fn int(&mut self, k: &str, v: u64) -> &mut Self {
+        self.key(k);
+        self.buf.push_str(&v.to_string());
+        self
+    }
+
+    /// Add a string field (caller guarantees no quotes/escapes needed).
+    pub fn str(&mut self, k: &str, v: &str) -> &mut Self {
+        self.key(k);
+        self.buf.push('"');
+        self.buf.push_str(v);
+        self.buf.push('"');
+        self
+    }
+
+    /// Add a nested object field.
+    pub fn obj(&mut self, k: &str, inner: JsonObj) -> &mut Self {
+        self.key(k);
+        self.buf.push_str(&inner.finish());
+        self
+    }
+
+    /// Close and return the JSON text.
+    pub fn finish(mut self) -> String {
+        self.buf.push('}');
+        self.buf
+    }
+}
+
 /// One formatted result row.
 pub fn row(label: &str, r: &RunReport) -> String {
     format!(

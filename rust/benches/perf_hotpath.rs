@@ -1,68 +1,91 @@
 //! §Perf: wall-clock microbenchmarks of the L3 hot paths (not a paper
 //! figure — the performance-optimization deliverable). Reports real
-//! nanoseconds per operation for the structures on the critical path:
-//! the lock-table CAS, the LOTUS key hash, the VT cache, the RNIC queue,
-//! and the end-to-end transaction rate the simulator sustains (virtual
-//! transactions per wall second — the simulator's own efficiency).
+//! nanoseconds per operation for the structures on the critical path
+//! (lock-table CAS, LOTUS key hash, VT cache, RNIC queue, `OpBatch`
+//! planning, `TxnFrame` record lookup), the virtual throughput the
+//! simulator sustains per system, and the pipelined coordinator's
+//! doorbell accounting (depth 1 vs depth 4).
+//!
+//! Besides the human-readable table, the bench writes a machine-readable
+//! **`BENCH_hotpath.json`** at the repository root (override the path
+//! with `LOTUS_BENCH_OUT`) — the perf-trajectory baseline future PRs
+//! compare against.
 
 #[path = "bench_util.rs"]
 mod bench_util;
 
 use std::time::Instant;
 
+use bench_util::JsonObj;
 use lotus::cache::vtcache::{CachedCvt, VtCache};
 use lotus::config::{Config, SystemKind};
 use lotus::dm::rnic::Rnic;
+use lotus::dm::OpBatch;
 use lotus::lock::table::{LockMode, LockTable};
+use lotus::metrics::RunReport;
 use lotus::sharding::key::LotusKey;
 use lotus::sim::Cluster;
 use lotus::store::cvt::CvtSnapshot;
+use lotus::txn::api::RecordRef;
+use lotus::txn::phases::{TxnFrame, TxnRecord};
 use lotus::workloads::WorkloadKind;
 
-fn time<F: FnMut()>(label: &str, iters: u64, mut f: F) {
+fn time<F: FnMut()>(label: &str, iters: u64, mut f: F) -> f64 {
     let t0 = Instant::now();
     for _ in 0..iters {
         f();
     }
     let el = t0.elapsed();
-    println!(
-        "{label:<44} {:>9.1} ns/op   ({iters} iters, {:?})",
-        el.as_nanos() as f64 / iters as f64,
-        el
-    );
+    let ns_per_op = el.as_nanos() as f64 / iters as f64;
+    println!("{label:<44} {ns_per_op:>9.1} ns/op   ({iters} iters, {el:?})");
+    ns_per_op
+}
+
+/// One timed SmallBank LOTUS run at the given pipeline depth.
+fn smallbank_run(depth: usize) -> lotus::Result<RunReport> {
+    let mut cfg = Config::small();
+    cfg.duration_ns = 8_000_000;
+    cfg.scale.smallbank_accounts = 20_000;
+    cfg.pipeline_depth = depth;
+    let cluster = Cluster::build(&cfg, WorkloadKind::SmallBank)?;
+    cluster.run(SystemKind::Lotus)
 }
 
 fn main() -> lotus::Result<()> {
     println!("== §Perf hot-path microbenchmarks (wall-clock) ==\n");
+    let mut structures = JsonObj::new();
 
     // L3: lock-table acquire/release cycle (paper target: local lock on
     // CN CPUs — the op LOTUS substitutes for a 400ns+RTT MN CAS).
     let table = LockTable::with_capacity_bytes(32 << 20);
     let keys: Vec<LotusKey> = (0..1024u64).map(|i| LotusKey::compose(i, i)).collect();
     let mut i = 0usize;
-    time("lock table: write acquire+release", 2_000_000, || {
+    let v = time("lock table: write acquire+release", 2_000_000, || {
         let k = keys[i & 1023];
         i += 1;
         let _ = table.acquire(k, LockMode::Write);
         table.release(k, LockMode::Write);
     });
+    structures.num("lock_table_write_cycle", v);
     i = 0;
-    time("lock table: read acquire+release", 2_000_000, || {
+    let v = time("lock table: read acquire+release", 2_000_000, || {
         let k = keys[i & 1023];
         i += 1;
         let _ = table.acquire(k, LockMode::Read);
         table.release(k, LockMode::Read);
     });
+    structures.num("lock_table_read_cycle", v);
 
     // L1-pinned hash.
     let mut acc = 0u64;
     i = 0;
-    time("lotus key: fingerprint56 + bucket", 10_000_000, || {
+    let v = time("lotus key: fingerprint56 + bucket", 10_000_000, || {
         let k = keys[i & 1023];
         i += 1;
         acc ^= k.fingerprint56() ^ k.lock_bucket(1 << 19) as u64;
     });
     std::hint::black_box(acc);
+    structures.num("key_fingerprint_bucket", v);
 
     // VT cache hit path.
     let cache = VtCache::new(64 * 1024);
@@ -76,40 +99,122 @@ fn main() -> lotus::Result<()> {
         );
     }
     i = 0;
-    time("vt cache: hit (get)", 2_000_000, || {
+    let v = time("vt cache: hit (get)", 2_000_000, || {
         let k = keys[i & 1023];
         i += 1;
         std::hint::black_box(cache.get(k));
     });
+    structures.num("vt_cache_hit", v);
 
     // RNIC queue charge (the per-verb accounting primitive).
     let rnic = Rnic::new();
     let mut t = 0u64;
-    time("rnic: charge", 5_000_000, || {
+    let v = time("rnic: charge", 5_000_000, || {
         t += 50;
         std::hint::black_box(rnic.charge(t, 29));
     });
+    structures.num("rnic_charge", v);
 
-    // End-to-end simulator efficiency: virtual txns per wall second.
-    let mut cfg = Config::small();
-    cfg.duration_ns = 10_000_000;
-    cfg.scale.kvs_keys = 20_000;
-    let cluster = Cluster::build(
-        &cfg,
-        WorkloadKind::Kvs {
-            rw_pct: 50,
-            skewed: true,
-        },
-    )?;
+    // OpBatch planning: 16 ops over 3 MNs per plan (the per-phase hot
+    // loop; push is O(1) via the per-MN group index).
+    let v = time("opbatch: plan 16 ops / 3 MNs", 200_000, || {
+        let mut b = OpBatch::new();
+        for j in 0..16u64 {
+            b.read((j % 3) as usize, 64 + j * 8, 8);
+        }
+        std::hint::black_box(b.n_groups());
+    });
+    structures.num("opbatch_plan_16ops", v / 16.0);
+
+    // TxnFrame record lookup at a TPC-C-sized read/write set (60
+    // records): the bounded hash lookup that replaced the O(n) scan.
+    let mut frame = TxnFrame::new();
+    frame.reset(1, false, 1);
+    let refs: Vec<RecordRef> = (0..60u64)
+        .map(|j| RecordRef::new((j % 9) as u16, LotusKey::compose(j, j)))
+        .collect();
+    for &r in &refs {
+        frame.records.push(TxnRecord::new(r, true));
+    }
+    i = 0;
+    let v = time("txn frame: find in 60-record set", 2_000_000, || {
+        let r = refs[i % 60];
+        i += 1;
+        std::hint::black_box(frame.find(r));
+    });
+    structures.num("frame_find_60rec", v);
+
+    // End-to-end simulator efficiency + the pipelining acceptance
+    // numbers: virtual Mtps and doorbells/txn at depth 1 vs depth 4.
+    println!();
     let t0 = Instant::now();
-    let report = cluster.run(SystemKind::Lotus)?;
-    let wall = t0.elapsed();
+    let d1 = smallbank_run(1)?;
+    let wall_d1 = t0.elapsed();
+    let t0 = Instant::now();
+    let d4 = smallbank_run(4)?;
+    let wall_d4 = t0.elapsed();
+    let motor = {
+        let mut cfg = Config::small();
+        cfg.duration_ns = 8_000_000;
+        cfg.scale.smallbank_accounts = 20_000;
+        let cluster = Cluster::build(&cfg, WorkloadKind::SmallBank)?;
+        cluster.run(SystemKind::Motor)?
+    };
     println!(
-        "\ne2e simulator: {} txns in {:?} wall = {:.0} txn/s wall ({:.3} Mtxn/s virtual)",
-        report.commits,
-        wall,
-        report.commits as f64 / wall.as_secs_f64(),
-        report.mtps()
+        "smallbank lotus depth=1: {:.3} Mtps virtual, {:.2} doorbells/txn ({} commits, {wall_d1:?} wall)",
+        d1.mtps(),
+        d1.doorbells_per_commit(),
+        d1.commits
     );
+    println!(
+        "smallbank lotus depth=4: {:.3} Mtps virtual, {:.2} doorbells/txn ({} commits, {wall_d4:?} wall)",
+        d4.mtps(),
+        d4.doorbells_per_commit(),
+        d4.commits
+    );
+    println!(
+        "smallbank motor        : {:.3} Mtps virtual, {:.2} doorbells/txn",
+        motor.mtps(),
+        motor.doorbells_per_commit()
+    );
+    println!(
+        "depth 4 / depth 1 speedup: {:.2}x; coalesced ops/doorbell at depth 4: {:.3}",
+        d4.mtps() / d1.mtps().max(1e-12),
+        d4.coalesced_ops as f64 / d4.doorbells.max(1) as f64
+    );
+
+    let mut systems = JsonObj::new();
+    systems
+        .num("lotus_smallbank_depth1", d1.mtps())
+        .num("lotus_smallbank_depth4", d4.mtps())
+        .num("motor_smallbank", motor.mtps());
+    let mut doorbells = JsonObj::new();
+    doorbells
+        .num("lotus_depth1_per_commit", d1.doorbells_per_commit())
+        .num("lotus_depth4_per_commit", d4.doorbells_per_commit())
+        .int("lotus_depth4_coalesced_ops", d4.coalesced_ops)
+        .num(
+            "lotus_depth4_ops_per_doorbell",
+            d4.ops_per_doorbell(),
+        )
+        .num(
+            "lotus_depth4_speedup_over_depth1",
+            d4.mtps() / d1.mtps().max(1e-12),
+        );
+
+    let mut root = JsonObj::new();
+    root.str("bench", "hotpath")
+        .str("workload", "smallbank-quick")
+        .obj("structures_ns_per_op", structures)
+        .obj("systems_virtual_mtps", systems)
+        .obj("doorbells", doorbells);
+    let json = root.finish();
+
+    let out = std::env::var("LOTUS_BENCH_OUT").unwrap_or_else(|_| {
+        format!("{}/../BENCH_hotpath.json", env!("CARGO_MANIFEST_DIR"))
+    });
+    std::fs::write(&out, format!("{json}\n"))
+        .map_err(|e| lotus::Error::Config(format!("write {out}: {e}")))?;
+    println!("\nwrote {out}");
     Ok(())
 }

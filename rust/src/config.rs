@@ -130,8 +130,22 @@ pub struct Config {
     /// Number of compute nodes (paper testbed: 9).
     pub n_cns: usize,
     /// Coordinator threads per CN ("threads x coroutines" in the paper;
-    /// each simulated coordinator is one concurrent transaction stream).
+    /// each simulated coordinator is one concurrent transaction stream
+    /// multiplied by `pipeline_depth` pipelined lanes).
     pub coordinators_per_cn: usize,
+    /// Concurrent transaction frames (lanes) per LOTUS coordinator
+    /// thread — the paper's coroutines. Each lane is a full transaction
+    /// stream; the [`crate::txn::scheduler::FrameScheduler`] overlaps
+    /// them in virtual time and coalesces their doorbells. `1` is the
+    /// exact sequential protocol; `0` selects the legacy sequential
+    /// coordinator shell (identical accounting to `1`, kept as the
+    /// equivalence baseline). Baselines are unaffected.
+    pub pipeline_depth: usize,
+    /// Virtual-time window within which two frames' doorbell plans to the
+    /// same MN coalesce into one ring, and a deferred fire-and-forget
+    /// plan (commit-log clear) may wait for a doorbell to ride. `0`
+    /// disables coalescing. Only meaningful with `pipeline_depth >= 2`.
+    pub coalesce_window_ns: u64,
     /// Memory per MN in bytes.
     pub mn_capacity: u64,
     /// Lock-table budget per CN in bytes (paper default 32 MB).
@@ -179,6 +193,8 @@ impl Config {
             n_mns: 3,
             n_cns: 9,
             coordinators_per_cn: 4,
+            pipeline_depth: 4,
+            coalesce_window_ns: 5_000,
             mn_capacity: 4 << 30,
             lock_table_bytes: 32 << 20,
             vt_cache_entries: 64 * 1024,
@@ -254,6 +270,8 @@ impl Config {
             "n_mns" => self.n_mns = p(key, value)?,
             "n_cns" => self.n_cns = p(key, value)?,
             "coordinators_per_cn" => self.coordinators_per_cn = p(key, value)?,
+            "pipeline_depth" => self.pipeline_depth = p(key, value)?,
+            "coalesce_window_ns" => self.coalesce_window_ns = p(key, value)?,
             "mn_capacity" => self.mn_capacity = p(key, value)?,
             "lock_table_bytes" => self.lock_table_bytes = p(key, value)?,
             "vt_cache_entries" => self.vt_cache_entries = p(key, value)?,
@@ -325,6 +343,19 @@ mod tests {
         let mut c = Config::small();
         c.n_cns = 0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn pipeline_knobs_default_and_override() {
+        let c = Config::paper();
+        assert_eq!(c.pipeline_depth, 4, "ISSUE 2 default depth");
+        assert!(c.coalesce_window_ns > 0);
+        let mut c = Config::small();
+        c.set("pipeline_depth", "1").unwrap();
+        c.set("coalesce_window_ns", "0").unwrap();
+        assert_eq!(c.pipeline_depth, 1);
+        assert_eq!(c.coalesce_window_ns, 0);
+        assert!(c.validate().is_ok(), "depth 1 / window 0 is the sequential mode");
     }
 
     #[test]

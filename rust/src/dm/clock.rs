@@ -78,8 +78,15 @@ impl TimeGate {
                 min = v;
             }
         }
-        // Publish so other coordinators can skip their own scans.
-        self.cached_min.fetch_max(min, Ordering::AcqRel);
+        // Publish so other coordinators can skip their own scans. A plain
+        // store (not fetch_max): the pipelined scheduler publishes its
+        // currently pumped lane's clock, which *regresses* when it
+        // switches to a slower lane — a sticky max would let the fast
+        // path run unboundedly far ahead of the true slowest clock.
+        // Racing stores are fine: every stored value is a genuinely
+        // scanned min from some recent instant, and the slow path
+        // rescans.
+        self.cached_min.store(min, Ordering::Release);
         min
     }
 

@@ -31,7 +31,7 @@ pub mod verbs;
 pub use clock::{TimeGate, VClock};
 pub use memnode::{MemNode, MemRegion};
 pub use netconfig::NetConfig;
-pub use opbatch::{BatchResult, OpBatch, OpTag};
+pub use opbatch::{BatchResult, MergedBatch, MergedResult, OpBatch, OpTag};
 pub use rnic::Rnic;
 pub use rpc::RpcFabric;
 pub use verbs::{Endpoint, VerbOp};

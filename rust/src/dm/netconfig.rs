@@ -29,8 +29,12 @@ pub struct NetConfig {
     pub rtt_ns: u64,
     /// CN->CN RPC round-trip time (UD QPs, ns).
     pub rpc_rtt_ns: u64,
-    /// CN-side NIC per-request issue cost (doorbell + DMA of the WQE, ns).
+    /// CN-side NIC per-request issue cost (DMA of one WQE, ns).
     pub cn_issue_ns: u64,
+    /// CN-side NIC per-*doorbell* overhead (one PCIe MMIO ring, ns).
+    /// Charged once per doorbell batch regardless of how many WQEs ride
+    /// in it — the cost cross-transaction coalescing amortizes.
+    pub doorbell_ns: u64,
     /// Remote-CN CPU time to process one lock/unlock request in an RPC (ns).
     pub rpc_handle_ns: u64,
     /// Local CPU time for one lock-table CAS on the local CN (ns).
@@ -55,6 +59,7 @@ impl Default for NetConfig {
             rtt_ns: 2_000,
             rpc_rtt_ns: 2_600,
             cn_issue_ns: 15,
+            doorbell_ns: 40,
             rpc_handle_ns: 250,
             local_lock_ns: 30,
             ts_oracle_ns: 1_200,

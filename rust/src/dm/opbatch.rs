@@ -52,6 +52,9 @@ use crate::Result;
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct OpTag(usize);
 
+/// Sentinel for "this MN has no group yet" in the per-MN group index.
+const NO_GROUP: u32 = u32::MAX;
+
 /// A planned set of one-sided ops, grouped per target MN.
 #[derive(Debug, Default)]
 pub struct OpBatch {
@@ -59,6 +62,9 @@ pub struct OpBatch {
     groups: Vec<(usize, Vec<VerbOp>)>,
     /// tag index -> (group index, op index within the group).
     index: Vec<(usize, usize)>,
+    /// MN id -> group index (`NO_GROUP` sentinel), grown on demand so
+    /// `push` is O(1) instead of a linear scan over the groups.
+    mn_to_group: Vec<u32>,
 }
 
 impl OpBatch {
@@ -68,12 +74,17 @@ impl OpBatch {
     }
 
     fn push(&mut self, mn: usize, op: VerbOp) -> OpTag {
-        let gi = match self.groups.iter().position(|(m, _)| *m == mn) {
-            Some(gi) => gi,
-            None => {
+        if mn >= self.mn_to_group.len() {
+            self.mn_to_group.resize(mn + 1, NO_GROUP);
+        }
+        let gi = match self.mn_to_group[mn] {
+            NO_GROUP => {
                 self.groups.push((mn, Vec::new()));
-                self.groups.len() - 1
+                let gi = self.groups.len() - 1;
+                self.mn_to_group[mn] = gi as u32;
+                gi
             }
+            gi => gi as usize,
         };
         let ops = &mut self.groups[gi].1;
         ops.push(op);
@@ -223,6 +234,187 @@ impl BatchResult {
     }
 }
 
+/// The *merge* half of the plan/merge/split API: several frames' planned
+/// [`OpBatch`]es coalesced into shared doorbells.
+///
+/// The pipelined coordinator works in three steps:
+///
+/// 1. **Plan** — each protocol phase builds an [`OpBatch`] describing the
+///    one-sided ops it needs, *without* issuing it.
+/// 2. **Merge** — the frame scheduler [`MergedBatch::absorb`]s the plans
+///    of every frame that reached an issue point inside the same
+///    coalescing window. Ops re-group per target MN across all absorbed
+///    plans, so `n` plans touching one MN ring **one** doorbell instead
+///    of `n`.
+/// 3. **Split** — [`MergedBatch::issue_timed`] issues each per-MN group
+///    once (completion-driven: per-op completion times, no shared clock),
+///    and [`MergedResult::take`] hands each owning frame its own
+///    [`BatchResult`] — resolvable by the frame's *original* [`OpTag`]s —
+///    plus the completion time of the frame's slowest op. A frame's
+///    virtual clock is charged only for its own ops, never for the other
+///    plans that shared the doorbell.
+///
+/// ```
+/// use std::sync::Arc;
+/// use lotus::dm::{Endpoint, MemNode, MergedBatch, NetConfig, OpBatch, Rnic};
+///
+/// let mn = Arc::new(MemNode::new(0, 4096));
+/// let region = mn.register(64).unwrap();
+/// let ep = Endpoint::new(0, Arc::new(Rnic::new()), Arc::new(NetConfig::default()));
+///
+/// // Two frames plan independently...
+/// let mut a = OpBatch::new();
+/// let ta = a.write(0, region.base, 7u64.to_le_bytes().to_vec());
+/// let mut b = OpBatch::new();
+/// let tb = b.read(0, region.base, 8);
+///
+/// // ...the scheduler merges them into one doorbell...
+/// let mut m = MergedBatch::new();
+/// let sa = m.absorb(a);
+/// let sb = m.absorb(b);
+/// assert_eq!(m.n_doorbells(), 1, "two plans, one MN, one doorbell");
+///
+/// // ...and each frame gets its own results + completion time back.
+/// let mut res = m.issue_timed(&ep, std::slice::from_ref(&mn), 0, |_| false).unwrap();
+/// let (_ra, t_a) = res.take(sa);
+/// let (rb, t_b) = res.take(sb);
+/// assert_eq!(rb.read_buf(tb), &7u64.to_le_bytes()[..]);
+/// assert!(t_a > 0 && t_b >= t_a);
+/// # let _ = ta;
+/// ```
+#[derive(Debug, Default)]
+pub struct MergedBatch {
+    /// The merged plan (per-MN grouping across all absorbed plans).
+    inner: OpBatch,
+    /// Per absorbed plan: original tag index -> merged tag index.
+    slices: Vec<Vec<usize>>,
+}
+
+impl MergedBatch {
+    /// An empty merged batch.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Absorb one frame's planned batch; returns the slice id used to
+    /// [`MergedResult::take`] that frame's results back out. Ops keep
+    /// their relative order within the plan and join the merged batch's
+    /// per-MN groups.
+    pub fn absorb(&mut self, plan: OpBatch) -> usize {
+        let OpBatch { groups, index, .. } = plan;
+        // Merged tag for each (src group, src op) position.
+        let mut pos_map: Vec<Vec<usize>> = Vec::with_capacity(groups.len());
+        for (mn, ops) in groups {
+            let mut row = Vec::with_capacity(ops.len());
+            for op in ops {
+                row.push(self.inner.push(mn, op).0);
+            }
+            pos_map.push(row);
+        }
+        let remap = index.iter().map(|&(gi, oi)| pos_map[gi][oi]).collect();
+        self.slices.push(remap);
+        self.slices.len() - 1
+    }
+
+    /// Absorbed plan count.
+    pub fn n_plans(&self) -> usize {
+        self.slices.len()
+    }
+
+    /// Doorbells an issue will ring (one per distinct target MN) —
+    /// strictly fewer than per-frame issue whenever two absorbed plans
+    /// share an MN.
+    pub fn n_doorbells(&self) -> usize {
+        self.inner.n_groups()
+    }
+
+    /// Total merged ops.
+    pub fn n_ops(&self) -> usize {
+        self.inner.len()
+    }
+
+    /// Is there anything to issue?
+    pub fn is_empty(&self) -> bool {
+        self.inner.is_empty()
+    }
+
+    /// Issue every per-MN group as one completion-driven doorbell starting
+    /// at virtual time `t_start` ([`Endpoint::doorbell_timed`]).
+    ///
+    /// `is_ride(mn)` lets the caller mark groups that extend a doorbell
+    /// already rung to `mn` within the coalescing window (skips the
+    /// per-doorbell overhead; see [`crate::txn::scheduler::Coalescer`]).
+    /// The caller is responsible for gate-syncing before the issue.
+    pub fn issue_timed<F: FnMut(usize) -> bool>(
+        mut self,
+        ep: &Endpoint,
+        mns: &[Arc<MemNode>],
+        t_start: u64,
+        mut is_ride: F,
+    ) -> Result<MergedResult> {
+        let mut per_group: Vec<Vec<u64>> = Vec::with_capacity(self.inner.groups.len());
+        for (mn_id, ops) in self.inner.groups.iter_mut() {
+            let ride = is_ride(*mn_id);
+            per_group.push(ep.doorbell_timed(&mns[*mn_id], ops, t_start, ride)?);
+        }
+        let completion = self
+            .inner
+            .index
+            .iter()
+            .map(|&(gi, oi)| per_group[gi][oi])
+            .collect();
+        Ok(MergedResult {
+            groups: self.inner.groups,
+            index: self.inner.index,
+            completion,
+            slices: self.slices,
+        })
+    }
+}
+
+/// The *split* half: a completed [`MergedBatch`], resolvable per owner.
+#[derive(Debug)]
+pub struct MergedResult {
+    groups: Vec<(usize, Vec<VerbOp>)>,
+    index: Vec<(usize, usize)>,
+    /// Per merged tag: op completion time (MN done + return half-RTT).
+    completion: Vec<u64>,
+    slices: Vec<Vec<usize>>,
+}
+
+impl MergedResult {
+    /// Extract one absorbed plan's results: a [`BatchResult`] addressed by
+    /// the plan's **original** [`OpTag`]s, plus the completion time of the
+    /// plan's slowest op (0 for an empty plan) — the only amount the
+    /// owning frame's clock must be advanced by. Each slice can be taken
+    /// once; taking it again yields an empty result.
+    pub fn take(&mut self, slice: usize) -> (BatchResult, u64) {
+        let remap = std::mem::take(&mut self.slices[slice]);
+        let mut ops = Vec::with_capacity(remap.len());
+        let mut done = 0u64;
+        for &m in &remap {
+            let (gi, oi) = self.index[m];
+            let op = std::mem::replace(
+                &mut self.groups[gi].1[oi],
+                VerbOp::Write {
+                    addr: 0,
+                    data: Vec::new(),
+                },
+            );
+            done = done.max(self.completion[m]);
+            ops.push(op);
+        }
+        let n = ops.len();
+        (
+            BatchResult {
+                groups: vec![(0, ops)],
+                index: (0..n).map(|i| (0, i)).collect(),
+            },
+            done,
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -325,6 +517,102 @@ mod tests {
         );
         // ...but the write really executed.
         assert_eq!(mns[0].load_u64(r.base).unwrap(), 9);
+    }
+
+    #[test]
+    fn merged_plans_ring_strictly_fewer_doorbells_than_per_frame_issue() {
+        // 3 frames, each planning 2 ops on each of 2 MNs. Per-frame issue
+        // rings 3 x 2 = 6 doorbells; merged, the same 12 ops ring 2.
+        let (mns, ep) = setup(2);
+        let r0 = mns[0].register(256).unwrap();
+        let r1 = mns[1].register(256).unwrap();
+        let plan = |fi: u64| {
+            let mut b = OpBatch::new();
+            b.read(0, r0.base + fi * 16, 8);
+            b.read(1, r1.base + fi * 16, 8);
+            b.write(0, r0.base + fi * 16 + 8, fi.to_le_bytes().to_vec());
+            b.write(1, r1.base + fi * 16 + 8, fi.to_le_bytes().to_vec());
+            b
+        };
+
+        let rung_before = ep.nic.doorbells();
+        let mut merged = MergedBatch::new();
+        let mut per_frame_doorbells = 0;
+        for fi in 0..3u64 {
+            let p = plan(fi);
+            per_frame_doorbells += p.n_groups();
+            merged.absorb(p);
+        }
+        assert_eq!(per_frame_doorbells, 6);
+        assert_eq!(merged.n_plans(), 3);
+        assert_eq!(merged.n_ops(), 12);
+        assert_eq!(merged.n_doorbells(), 2, "one doorbell per MN, not per frame");
+        assert!(merged.n_doorbells() < per_frame_doorbells);
+
+        let mut res = merged.issue_timed(&ep, &mns, 0, |_| false).unwrap();
+        assert_eq!(
+            ep.nic.doorbells() - rung_before,
+            2,
+            "the NIC saw exactly the merged doorbells"
+        );
+        for fi in (0..3usize).rev() {
+            let (_r, done) = res.take(fi);
+            assert!(done >= ep.net.rtt_ns, "frame {fi} completion {done}");
+        }
+        for fi in 0..3u64 {
+            assert_eq!(mns[0].load_u64(r0.base + fi * 16 + 8).unwrap(), fi);
+            assert_eq!(mns[1].load_u64(r1.base + fi * 16 + 8).unwrap(), fi);
+        }
+    }
+
+    #[test]
+    fn merged_results_route_back_to_owning_frames_by_original_tags() {
+        let (mns, ep) = setup(2);
+        let ra = mns[0].register(64).unwrap();
+        let rb = mns[1].register(64).unwrap();
+        mns[0].store_u64(ra.base, 111).unwrap();
+        mns[1].store_u64(rb.base, 222).unwrap();
+
+        // Frame A reads MN0 then MN1; frame B reads MN1 only.
+        let mut a = OpBatch::new();
+        let a0 = a.read(0, ra.base, 8);
+        let a1 = a.read(1, rb.base, 8);
+        let mut b = OpBatch::new();
+        let b0 = b.read(1, rb.base, 8);
+
+        let mut m = MergedBatch::new();
+        let sa = m.absorb(a);
+        let sb = m.absorb(b);
+        let mut res = m.issue_timed(&ep, &mns, 0, |_| false).unwrap();
+        let (mut res_b, done_b) = res.take(sb);
+        let (mut res_a, done_a) = res.take(sa);
+        assert_eq!(res_a.take_read(a0), 111u64.to_le_bytes().to_vec());
+        assert_eq!(res_a.take_read(a1), 222u64.to_le_bytes().to_vec());
+        assert_eq!(res_b.take_read(b0), 222u64.to_le_bytes().to_vec());
+        assert!(done_a > 0 && done_b > 0);
+    }
+
+    #[test]
+    fn completion_driven_issue_charges_each_frame_only_its_own_ops() {
+        // Frame A has one cheap 8B read; frame B drags a large read
+        // behind it on the same MN. A's completion must not include B's
+        // service time beyond queueing ahead of it.
+        let (mns, ep) = setup(1);
+        let r = mns[0].register(1 << 14).unwrap();
+        let mut a = OpBatch::new();
+        a.read(0, r.base, 8);
+        let mut b = OpBatch::new();
+        b.read(0, r.base, 1 << 13); // ~8 KiB: >1170ns of byte cost
+        let mut m = MergedBatch::new();
+        let sa = m.absorb(a);
+        let sb = m.absorb(b);
+        let mut res = m.issue_timed(&ep, &mns, 0, |_| false).unwrap();
+        let (_ra, done_a) = res.take(sa);
+        let (_rb, done_b) = res.take(sb);
+        assert!(
+            done_a + 1000 < done_b,
+            "A ({done_a}) must complete well before B ({done_b})"
+        );
     }
 
     #[test]

@@ -19,6 +19,13 @@ pub struct Rnic {
     busy_ns: AtomicU64,
     /// Cumulative queue-wait ns experienced by ops (diagnostics).
     wait_ns: AtomicU64,
+    /// Doorbells actually rung on this NIC (one PCIe MMIO each).
+    doorbells: AtomicU64,
+    /// WQEs carried by those doorbells.
+    doorbell_ops: AtomicU64,
+    /// WQEs that rode a doorbell rung for *another* frame's plan
+    /// (cross-transaction coalescing; subset of `doorbell_ops`).
+    coalesced_ops: AtomicU64,
 }
 
 impl Rnic {
@@ -57,6 +64,44 @@ impl Rnic {
         self.wait_ns.load(Ordering::Relaxed)
     }
 
+    /// Count one doorbell ring carrying `n_ops` WQEs.
+    #[inline]
+    pub fn ring(&self, n_ops: u64) {
+        self.doorbells.fetch_add(1, Ordering::Relaxed);
+        self.doorbell_ops.fetch_add(n_ops, Ordering::Relaxed);
+    }
+
+    /// Count `n_ops` WQEs that rode an already-rung doorbell instead of
+    /// ringing their own (cross-transaction coalescing). They still count
+    /// toward `doorbell_ops` — the rung doorbell carried them.
+    #[inline]
+    pub fn note_coalesced(&self, n_ops: u64) {
+        self.doorbell_ops.fetch_add(n_ops, Ordering::Relaxed);
+        self.coalesced_ops.fetch_add(n_ops, Ordering::Relaxed);
+    }
+
+    /// Count `n_ops` WQEs that joined a doorbell already counted by
+    /// [`Rnic::ring`] (merged riders; bumps only the coalesced counter).
+    #[inline]
+    pub fn note_riders(&self, n_ops: u64) {
+        self.coalesced_ops.fetch_add(n_ops, Ordering::Relaxed);
+    }
+
+    /// Doorbells rung on this NIC.
+    pub fn doorbells(&self) -> u64 {
+        self.doorbells.load(Ordering::Relaxed)
+    }
+
+    /// WQEs carried by rung doorbells.
+    pub fn doorbell_ops(&self) -> u64 {
+        self.doorbell_ops.load(Ordering::Relaxed)
+    }
+
+    /// WQEs that shared another frame's doorbell.
+    pub fn coalesced_ops(&self) -> u64 {
+        self.coalesced_ops.load(Ordering::Relaxed)
+    }
+
     /// Completion time if the verb were issued now, without enqueueing.
     pub fn peek(&self, t_arrive: u64, svc: u64) -> u64 {
         self.busy_until.load(Ordering::Relaxed).max(t_arrive) + svc
@@ -90,6 +135,9 @@ impl Rnic {
         self.ops.store(0, Ordering::Relaxed);
         self.busy_ns.store(0, Ordering::Relaxed);
         self.wait_ns.store(0, Ordering::Relaxed);
+        self.doorbells.store(0, Ordering::Relaxed);
+        self.doorbell_ops.store(0, Ordering::Relaxed);
+        self.coalesced_ops.store(0, Ordering::Relaxed);
     }
 
     /// Reset the queue to idle at time zero (between benchmark runs —

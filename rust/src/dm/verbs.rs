@@ -133,9 +133,11 @@ impl Endpoint {
             return Ok(());
         }
         self.gate_sync(clk);
-        let t_issue = self
-            .nic
-            .charge(clk.now(), self.net.cn_issue_ns * ops.len() as u64);
+        self.nic.ring(ops.len() as u64);
+        let t_issue = self.nic.charge(
+            clk.now(),
+            self.net.doorbell_ns + self.net.cn_issue_ns * ops.len() as u64,
+        );
         let t_arrive = t_issue + self.net.rtt_ns / 2;
         let mut t_done = t_arrive;
         for op in ops.iter_mut() {
@@ -144,6 +146,46 @@ impl Endpoint {
         }
         clk.catch_up(t_done + self.net.rtt_ns / 2);
         Ok(())
+    }
+
+    /// Completion-driven issue of one doorbell batch: like [`Self::doorbell`]
+    /// but starts at an explicit virtual time and returns *per-op*
+    /// completion times (MN service done + the return half-RTT) instead of
+    /// advancing a single clock. This is the primitive cross-transaction
+    /// coalescing builds on: several frames' ops share one doorbell, and
+    /// each owning frame's clock advances only to the completion of its
+    /// own ops (see [`crate::dm::opbatch::MergedBatch`]).
+    ///
+    /// `ride` marks a batch that extends a doorbell another plan already
+    /// rang within the same coalescing window: the per-doorbell MMIO
+    /// overhead is skipped and no new ring is counted.
+    pub fn doorbell_timed(
+        &self,
+        mn: &MemNode,
+        ops: &mut [VerbOp],
+        t_start: u64,
+        ride: bool,
+    ) -> Result<Vec<u64>> {
+        if ops.is_empty() {
+            return Ok(Vec::new());
+        }
+        if ride {
+            self.nic.note_coalesced(ops.len() as u64);
+        } else {
+            self.nic.ring(ops.len() as u64);
+        }
+        let overhead = if ride { 0 } else { self.net.doorbell_ns };
+        let t_issue = self
+            .nic
+            .charge(t_start, overhead + self.net.cn_issue_ns * ops.len() as u64);
+        let t_arrive = t_issue + self.net.rtt_ns / 2;
+        let mut completions = Vec::with_capacity(ops.len());
+        for op in ops.iter_mut() {
+            let t_done = mn.rnic.charge(t_arrive, op.svc(&self.net));
+            op.execute(mn)?;
+            completions.push(t_done + self.net.rtt_ns / 2);
+        }
+        Ok(completions)
     }
 
     /// Fire-and-forget batch: charges the NICs but advances the caller's
@@ -155,9 +197,11 @@ impl Endpoint {
             return Ok(());
         }
         self.gate_sync(clk);
-        let t_issue = self
-            .nic
-            .charge(clk.now(), self.net.cn_issue_ns * ops.len() as u64);
+        self.nic.ring(ops.len() as u64);
+        let t_issue = self.nic.charge(
+            clk.now(),
+            self.net.doorbell_ns + self.net.cn_issue_ns * ops.len() as u64,
+        );
         let t_arrive = t_issue + self.net.rtt_ns / 2;
         for op in ops.iter_mut() {
             mn.rnic.charge(t_arrive, op.svc(&self.net));

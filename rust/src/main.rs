@@ -91,11 +91,12 @@ fn build_config(args: &Args) -> Result<Config, lotus::Error> {
 
 fn print_report(label: &str, r: &RunReport) {
     println!(
-        "{label:<14} {:>9.3} Mtxn/s  p50 {:>7} us  p99 {:>7} us  abort {:>5.1}%  ({} commits)",
+        "{label:<14} {:>9.3} Mtxn/s  p50 {:>7} us  p99 {:>7} us  abort {:>5.1}%  {:>5.1} db/txn  ({} commits)",
         r.mtps(),
         r.p50_us(),
         r.p99_us(),
         r.abort_rate() * 100.0,
+        r.doorbells_per_commit(),
         r.commits
     );
 }
@@ -124,11 +125,12 @@ fn run(args: &Args) -> lotus::Result<()> {
             let system = SystemKind::parse(&args.system)?;
             let kind = WorkloadKind::parse(&args.workload)?;
             eprintln!(
-                "building {} cluster: {} MNs, {} CNs x {} coordinators ...",
+                "building {} cluster: {} MNs, {} CNs x {} coordinators x depth {} ...",
                 kind.name(),
                 cfg.n_mns,
                 cfg.n_cns,
-                cfg.coordinators_per_cn
+                cfg.coordinators_per_cn,
+                cfg.pipeline_depth
             );
             let cluster = Cluster::build(&cfg, kind)?;
             eprintln!("running {} for {} ms virtual ...", system.name(), cfg.duration_ns / 1_000_000);

@@ -163,6 +163,14 @@ pub struct RunReport {
     pub timeline: Vec<u64>,
     /// Timeline sampling interval (ns); 0 if no timeline.
     pub timeline_interval_ns: u64,
+    /// One-sided doorbells rung across all CN NICs during the run.
+    pub doorbells: u64,
+    /// WQEs those doorbells carried (coalesced riders included).
+    pub doorbell_ops: u64,
+    /// WQEs that rode another frame's doorbell instead of ringing their
+    /// own (cross-transaction coalescing; 0 without the pipelined
+    /// scheduler).
+    pub coalesced_ops: u64,
 }
 
 impl RunReport {
@@ -192,6 +200,25 @@ impl RunReport {
     /// P99 latency in microseconds.
     pub fn p99_us(&self) -> u64 {
         self.p99_ns / 1000
+    }
+
+    /// Doorbells rung per committed transaction (the coalescing win the
+    /// pipelined coordinator is measured by).
+    pub fn doorbells_per_commit(&self) -> f64 {
+        if self.commits == 0 {
+            0.0
+        } else {
+            self.doorbells as f64 / self.commits as f64
+        }
+    }
+
+    /// Mean WQEs per rung doorbell (riders included).
+    pub fn ops_per_doorbell(&self) -> f64 {
+        if self.doorbells == 0 {
+            0.0
+        } else {
+            self.doorbell_ops as f64 / self.doorbells as f64
+        }
     }
 }
 
@@ -302,8 +329,13 @@ mod tests {
             abort_reasons: HashMap::new(),
             timeline: vec![],
             timeline_interval_ns: 0,
+            doorbells: 4_000_000,
+            doorbell_ops: 10_000_000,
+            coalesced_ops: 2_000_000,
         };
         assert!((r.mtps() - 1.0).abs() < 1e-9);
+        assert!((r.doorbells_per_commit() - 4.0).abs() < 1e-9);
+        assert!((r.ops_per_doorbell() - 2.5).abs() < 1e-9);
     }
 
     #[test]

@@ -39,6 +39,7 @@ use crate::txn::api::TxnApi;
 use crate::txn::coordinator::{LotusCoordinator, SharedCluster};
 use crate::txn::doomed::DoomedSet;
 use crate::txn::log;
+use crate::txn::scheduler::FrameScheduler;
 use crate::txn::timestamp::TimestampOracle;
 use crate::workloads::{RouteCtx, Workload, WorkloadKind};
 use crate::{Error, Result};
@@ -234,17 +235,28 @@ impl Cluster {
             }
             for (i, nic) in self.shared.cn_nics.iter().enumerate() {
                 eprintln!(
-                    "cn{i} nic: ops={} busy={}ns wait={}ns util={:.2}",
+                    "cn{i} nic: ops={} busy={}ns wait={}ns util={:.2} doorbells={} db_ops={} coalesced={}",
                     nic.op_count(),
                     nic.busy_ns(),
                     nic.wait_ns(),
-                    nic.utilization(cfg.duration_ns)
+                    nic.utilization(cfg.duration_ns),
+                    nic.doorbells(),
+                    nic.doorbell_ops(),
+                    nic.coalesced_ops()
                 );
             }
         }
         let mut reasons = std::collections::HashMap::new();
         for (k, v) in stats.reasons.lock().unwrap().iter() {
             reasons.insert(k.to_string(), *v);
+        }
+        // One-sided doorbell accounting lives on the CN NICs (reset at
+        // the top of the run, so the sums are per-run).
+        let (mut doorbells, mut doorbell_ops, mut coalesced_ops) = (0u64, 0u64, 0u64);
+        for nic in &self.shared.cn_nics {
+            doorbells += nic.doorbells();
+            doorbell_ops += nic.doorbell_ops();
+            coalesced_ops += nic.coalesced_ops();
         }
         Ok(RunReport {
             commits: stats.commits.load(Ordering::Relaxed),
@@ -256,6 +268,9 @@ impl Cluster {
             abort_reasons: reasons,
             timeline: timeline.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
             timeline_interval_ns: cfg.timeline_interval_ns,
+            doorbells,
+            doorbell_ops,
+            coalesced_ops,
         })
     }
 
@@ -272,6 +287,68 @@ struct RunCtl {
     recovered: Vec<AtomicBool>,
     restart_at: Vec<AtomicU64>,
     last_interval: Vec<AtomicU64>,
+}
+
+/// How a coordinator thread drives transactions: the sequential
+/// [`TxnApi`] shell (all baselines; LOTUS with `pipeline_depth = 0`,
+/// kept as the equivalence baseline for the scheduler), or the pipelined
+/// [`FrameScheduler`] running `pipeline_depth` lanes.
+enum Driver {
+    Seq(Box<dyn TxnApi>),
+    Pipe(FrameScheduler),
+}
+
+impl Driver {
+    /// The thread's virtual frontier (slowest lane for the scheduler).
+    fn now(&self) -> u64 {
+        match self {
+            Driver::Seq(api) => api.now(),
+            Driver::Pipe(s) => s.now(),
+        }
+    }
+
+    fn attach_gate(&mut self, gate: Arc<TimeGate>, gid: usize) {
+        match self {
+            Driver::Seq(api) => api.attach_gate(gate, gid),
+            Driver::Pipe(s) => s.attach_gate(gate, gid),
+        }
+    }
+
+    fn crash(&mut self) {
+        match self {
+            Driver::Seq(api) => api.crash(),
+            Driver::Pipe(s) => s.crash(),
+        }
+    }
+
+    fn skip_to(&mut self, t_ns: u64) {
+        match self {
+            Driver::Seq(api) => api.skip_to(t_ns),
+            Driver::Pipe(s) => s.skip_to(t_ns),
+        }
+    }
+
+    /// Run one transaction; returns `(t_begin, t_end, outcome)` of the
+    /// stream (lane) that ran it.
+    fn step(&mut self, workload: &dyn Workload, route: &RouteCtx<'_>) -> (u64, u64, Result<()>) {
+        match self {
+            Driver::Seq(api) => {
+                let t0 = api.now();
+                let res = workload.run_one(api.as_mut(), route);
+                (t0, api.now(), res)
+            }
+            Driver::Pipe(s) => s.step(workload, route),
+        }
+    }
+
+    /// Orderly end of run: ring out any doorbell plans still parked with
+    /// the scheduler's coalescer.
+    fn finish(&mut self) -> Result<()> {
+        match self {
+            Driver::Seq(_) => Ok(()),
+            Driver::Pipe(s) => s.finish(),
+        }
+    }
 }
 
 /// The balancer planner lives on the thread that runs it (the PJRT
@@ -302,36 +379,55 @@ fn coordinator_thread(
     let cfg = shared.cfg.clone();
     let cn = gid / cfg.coordinators_per_cn;
     let slot = gid % cfg.coordinators_per_cn;
-    let mut api: Box<dyn TxnApi> = match system {
-        SystemKind::Lotus => Box::new(LotusCoordinator::new(shared.clone(), cn, slot, gid)),
-        SystemKind::Motor => Box::new(BaselineCoordinator::new(shared.clone(), cn, gid, motor::style())),
-        SystemKind::Ford => Box::new(BaselineCoordinator::new(shared.clone(), cn, gid, ford::style())),
-        SystemKind::MotorFullRecord => Box::new(BaselineCoordinator::new(
+    let mut driver: Driver = match system {
+        // LOTUS runs the pipelined frame scheduler (`pipeline_depth`
+        // lanes per thread); depth 0 selects the legacy sequential shell,
+        // kept as the exact-accounting baseline the depth-1 scheduler is
+        // tested against.
+        SystemKind::Lotus if cfg.pipeline_depth >= 1 => {
+            Driver::Pipe(FrameScheduler::new(shared.clone(), cn, slot, gid))
+        }
+        SystemKind::Lotus => {
+            Driver::Seq(Box::new(LotusCoordinator::new(shared.clone(), cn, slot, gid)))
+        }
+        SystemKind::Motor => Driver::Seq(Box::new(BaselineCoordinator::new(
+            shared.clone(),
+            cn,
+            gid,
+            motor::style(),
+        ))),
+        SystemKind::Ford => Driver::Seq(Box::new(BaselineCoordinator::new(
+            shared.clone(),
+            cn,
+            gid,
+            ford::style(),
+        ))),
+        SystemKind::MotorFullRecord => Driver::Seq(Box::new(BaselineCoordinator::new(
             shared.clone(),
             cn,
             gid,
             motor::full_record_style(),
-        )),
-        SystemKind::MotorNoCas => Box::new(BaselineCoordinator::new(
+        ))),
+        SystemKind::MotorNoCas => Driver::Seq(Box::new(BaselineCoordinator::new(
             shared.clone(),
             cn,
             gid,
             nolock::motor_nocas_style(),
-        )),
-        SystemKind::FordNoCas => Box::new(BaselineCoordinator::new(
+        ))),
+        SystemKind::FordNoCas => Driver::Seq(Box::new(BaselineCoordinator::new(
             shared.clone(),
             cn,
             gid,
             nolock::ford_nocas_style(),
-        )),
-        SystemKind::IdealLock => Box::new(BaselineCoordinator::new(
+        ))),
+        SystemKind::IdealLock => Driver::Seq(Box::new(BaselineCoordinator::new(
             shared.clone(),
             cn,
             gid,
             ideal_rdma_lock::style(),
-        )),
+        ))),
     };
-    api.attach_gate(gate.clone(), gid);
+    driver.attach_gate(gate.clone(), gid);
     let hybrid = system == SystemKind::Lotus && cfg.features.load_balancing;
     let mut balancer = if slot == 0 && gid == 0 {
         make_planner(&cfg, system).map(|planner| {
@@ -346,7 +442,7 @@ fn coordinator_thread(
     };
 
     loop {
-        let now = api.now();
+        let now = driver.now();
         if now >= cfg.duration_ns {
             break;
         }
@@ -390,12 +486,12 @@ fn coordinator_thread(
             {
                 let restart = run.restart_at[k].load(Ordering::Acquire);
                 if restart == u64::MAX || now < restart {
-                    api.crash();
+                    driver.crash();
                     gate.finish(gid);
                     loop {
                         let r = run.restart_at[k].load(Ordering::Acquire);
                         if r != u64::MAX {
-                            api.skip_to(r);
+                            driver.skip_to(r);
                             break;
                         }
                         if gate.min_clock() == u64::MAX {
@@ -428,9 +524,9 @@ fn coordinator_thread(
                                 && shared.membership.is_serving(from)
                                 && shared.membership.is_serving(to)
                             {
-                                let mut clk = VClock(api.now());
+                                let mut clk = VClock(driver.now());
                                 let _ = transfer_shard(&shared, shard, from, to, &mut clk);
-                                api.skip_to(clk.now());
+                                driver.skip_to(clk.now());
                             }
                         }
                     }
@@ -438,16 +534,15 @@ fn coordinator_thread(
             }
         }
 
-        // --- One transaction. ---
+        // --- One transaction (the scheduler pumps its slowest lane). ---
         let route = RouteCtx {
             router: &shared.router,
             cn,
             hybrid,
         };
-        let t0 = api.now();
-        match workload.run_one(api.as_mut(), &route) {
+        let (t0, t1, res) = driver.step(workload.as_ref(), &route);
+        match res {
             Ok(()) => {
-                let t1 = api.now();
                 stats.commit();
                 hist.record(t1 - t0);
                 shared.metrics.record_latency(cn, t1 - t0);
@@ -470,8 +565,9 @@ fn coordinator_thread(
             }
         }
     }
+    let fin = driver.finish();
     gate.finish(gid);
-    Ok(())
+    fin
 }
 
 #[cfg(test)]
@@ -549,6 +645,78 @@ mod tests {
             lotus.mtps(),
             motor.mtps()
         );
+    }
+
+    #[test]
+    fn pipeline_depth_one_matches_legacy_sequential_exactly() {
+        // The depth-1 scheduler must reproduce the sequential
+        // coordinator's commit/abort accounting exactly. A 1-CN,
+        // 1-coordinator topology makes the run fully deterministic
+        // (single thread, same RNG stream, same oracle order).
+        let mut cfg = tiny_cfg();
+        cfg.n_cns = 1;
+        cfg.coordinators_per_cn = 1;
+        cfg.duration_ns = 2_000_000;
+        let run = |depth: usize| {
+            let mut c = cfg.clone();
+            c.pipeline_depth = depth;
+            let cluster = Cluster::build(&c, WorkloadKind::SmallBank).unwrap();
+            cluster.run(SystemKind::Lotus).unwrap()
+        };
+        let legacy = run(0); // the pre-scheduler sequential shell
+        let pipe1 = run(1); // one lane through the scheduler
+        assert!(legacy.commits > 20, "commits={}", legacy.commits);
+        assert_eq!(legacy.commits, pipe1.commits, "commit accounting differs");
+        assert_eq!(legacy.aborts, pipe1.aborts, "abort accounting differs");
+        assert_eq!(legacy.p50_ns, pipe1.p50_ns, "latency accounting differs");
+        assert_eq!(legacy.doorbells, pipe1.doorbells, "doorbell accounting differs");
+    }
+
+    #[test]
+    fn deeper_pipeline_scales_throughput_and_coalesces_doorbells() {
+        // ISSUE 2 acceptance: depth 4 beats depth 1 by >= 20% virtual
+        // throughput on SmallBank at the same cluster config, and rings
+        // fewer doorbells per committed transaction (log clears ride
+        // sibling frames' doorbells instead of ringing their own).
+        let mut cfg = tiny_cfg();
+        cfg.duration_ns = 4_000_000;
+        let run = |depth: usize| {
+            let mut c = cfg.clone();
+            c.pipeline_depth = depth;
+            let cluster = Cluster::build(&c, WorkloadKind::SmallBank).unwrap();
+            cluster.run(SystemKind::Lotus).unwrap()
+        };
+        let d1 = run(1);
+        let d4 = run(4);
+        assert!(
+            d4.mtps() >= d1.mtps() * 1.2,
+            "depth 4 ({:.3} Mtps) must beat depth 1 ({:.3} Mtps) by >= 20%",
+            d4.mtps(),
+            d1.mtps()
+        );
+        assert!(
+            d4.doorbells_per_commit() < d1.doorbells_per_commit(),
+            "coalescing must cut doorbells/txn: d4 {:.2} vs d1 {:.2}",
+            d4.doorbells_per_commit(),
+            d1.doorbells_per_commit()
+        );
+        assert!(d4.coalesced_ops > 0, "no ops rode a shared doorbell");
+    }
+
+    #[test]
+    fn pipelined_run_releases_every_lock_slot() {
+        let mut cfg = tiny_cfg();
+        cfg.pipeline_depth = 4;
+        let cluster = Cluster::build(&cfg, WorkloadKind::SmallBank).unwrap();
+        let report = cluster.run(SystemKind::Lotus).unwrap();
+        assert!(report.commits > 100, "commits={}", report.commits);
+        let held: usize = cluster
+            .shared
+            .lock_services
+            .iter()
+            .map(|s| s.held_slots())
+            .sum();
+        assert_eq!(held, 0, "pipelined lanes must leave no held lock slots");
     }
 
     #[test]

@@ -142,6 +142,10 @@ impl LotusCoordinator {
                 global_id: self.global_id,
                 ep: &self.ep,
                 clk: &mut self.clk,
+                // Sequential coordinator: one frame, direct issue, no
+                // sibling frames to conflict with.
+                coalescer: None,
+                siblings: None,
             },
             &mut self.frame,
         )
@@ -216,13 +220,9 @@ impl TxnCtl for LotusCoordinator {
 
     fn commit(&mut self) -> Result<()> {
         debug_assert_eq!(self.phase, Phase::Executed);
-        // Application logic between execute and commit.
-        self.clk.advance(self.cluster.net.txn_logic_ns);
-        let res = if self.frame.read_only {
-            Ok(())
-        } else {
+        let res = {
             let (mut ctx, frame) = self.parts();
-            phases::commit::commit_rw(&mut ctx, frame)
+            phases::commit_txn(&mut ctx, frame)
         };
         self.phase = Phase::Idle;
         res
@@ -235,10 +235,7 @@ impl TxnCtl for LotusCoordinator {
 
 impl TxnApi for LotusCoordinator {
     fn begin(&mut self, read_only: bool) {
-        let txn_id = self.cluster.next_txn_id();
-        let ts_svc = self.cluster.net.ts_oracle_ns;
-        let start_ts = self.cluster.oracle.timestamp(&mut self.clk, ts_svc);
-        self.frame.reset(txn_id, read_only, start_ts);
+        phases::begin(&self.cluster, &mut self.clk, &mut self.frame, read_only);
         self.phase = Phase::Building;
     }
 

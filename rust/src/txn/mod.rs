@@ -33,10 +33,12 @@ pub mod coordinator;
 pub mod doomed;
 pub mod log;
 pub mod phases;
+pub mod scheduler;
 pub mod timestamp;
 
 pub use api::{Isolation, TxnApi, TxnCtl};
 pub use coordinator::{LotusCoordinator, SharedCluster};
 pub use doomed::DoomedSet;
 pub use phases::{PhaseCtx, TxnFrame};
+pub use scheduler::{Coalescer, FrameScheduler, SiblingLocks};
 pub use timestamp::{compose_ts, logical_of, phys_of, TimestampOracle};

@@ -68,12 +68,14 @@ pub fn commit_rw(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame) -> Result<()> {
         }
     }
 
-    // Clear the log slot (async — not on the critical path).
+    // Clear the log slot (async — not on the critical path). Under the
+    // pipelined scheduler the plan is parked with the coalescer and rides
+    // a sibling frame's next doorbell instead of ringing its own.
     if log_and_visible && !plans.is_empty() {
         let (log_mn, log_addr) = ctx.cluster.log_slots[ctx.global_id];
         let mut batch = OpBatch::new();
         batch.write(log_mn, log_addr, STATE_EMPTY.to_le_bytes().to_vec());
-        batch.issue_async(ctx.ep, &ctx.cluster.mns, ctx.clk)?;
+        ctx.issue_deferred(batch)?;
     }
 
     // --- Unlock ---

@@ -49,6 +49,21 @@ pub fn acquire(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame, from: usize) -> Res
     if reqs.is_empty() {
         return Ok(());
     }
+    // Pipelined scheduler: a sibling frame on this coordinator whose
+    // in-flight transaction overlaps this one in virtual time may hold a
+    // conflicting lock. That conflict is resolved *locally* — a CPU check
+    // against the sibling lock intervals — and aborts lock-first, before
+    // any bytes leave the CN (not even the remote-lock RPC is sent).
+    let now = ctx.clk.now();
+    let sibling_conflict = ctx
+        .siblings
+        .as_ref()
+        .map(|sib| reqs.iter().any(|&(k, m)| sib.conflicts(k, m, now)))
+        .unwrap_or(false);
+    if sibling_conflict {
+        unlock::release(ctx, frame);
+        return Err(abort(AbortReason::LockConflict));
+    }
     let router = ctx.cluster.router.clone();
     let holder = frame.holder(ctx.cn);
     // Partition into local and per-remote-CN batches.

@@ -25,9 +25,12 @@
 //! — and operates on a [`TxnFrame`] (the per-transaction state: read and
 //! write sets, CVT snapshots, held locks) through a [`PhaseCtx`] (the
 //! coordinator's environment: cluster state, endpoint, virtual clock).
-//! The split is what later work batches and pipelines across: a phase is
-//! a function of `(ctx, frame)`, so frames from different transactions
-//! can be staged through the same phase back to back.
+//! Phases **plan** their one-sided ops into [`crate::dm::OpBatch`]es and
+//! hand them to [`PhaseCtx::issue`] / [`PhaseCtx::issue_deferred`]: the
+//! sequential coordinator issues them directly, while the pipelined
+//! [`crate::txn::scheduler::FrameScheduler`] merges plans from multiple
+//! in-flight frames into shared doorbell rings and routes each frame its
+//! own results (cross-transaction doorbell coalescing).
 
 pub mod commit;
 pub mod lock;
@@ -38,7 +41,10 @@ pub mod write_log;
 #[cfg(test)]
 mod tests;
 
+use std::cell::RefCell;
+
 use crate::dm::clock::VClock;
+use crate::dm::opbatch::{BatchResult, OpBatch};
 use crate::dm::verbs::Endpoint;
 use crate::dm::NetConfig;
 use crate::lock::state::HolderId;
@@ -47,6 +53,7 @@ use crate::sharding::key::LotusKey;
 use crate::store::cvt::CvtSnapshot;
 use crate::txn::api::{Isolation, RecordRef};
 use crate::txn::coordinator::SharedCluster;
+use crate::txn::scheduler::{Coalescer, SiblingLocks};
 
 /// Per-record transaction state (one entry of the read/write set).
 #[derive(Debug, Clone)]
@@ -128,6 +135,93 @@ pub struct TxnFrame {
     pub executed_upto: usize,
     /// Locks currently held by this transaction.
     pub held: Vec<Held>,
+    /// Lazily built hash index over `records` backing [`TxnFrame::find`]
+    /// (a linear scan is quadratic over TPC-C-sized read/write sets).
+    index: RefCell<RecordIndex>,
+}
+
+/// Open-addressed `(hash, position+1)` index over a frame's records.
+/// Built lazily by [`TxnFrame::find`], so records may keep being pushed
+/// straight onto `TxnFrame::records`; `sync` indexes the new tail.
+#[derive(Debug, Default)]
+struct RecordIndex {
+    /// Power-of-two slot array; `(_, 0)` means empty.
+    slots: Vec<(u64, u32)>,
+    /// `records[..built]` are reflected in `slots`.
+    built: usize,
+}
+
+/// SplitMix64 over (table, key) — the record-set hash.
+#[inline]
+fn hash_ref(r: RecordRef) -> u64 {
+    let mut z = r.key.0 ^ ((r.table as u64) << 48) ^ 0x9E37_79B9_7F4A_7C15;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl RecordIndex {
+    fn clear(&mut self) {
+        self.slots.clear();
+        self.built = 0;
+    }
+
+    fn capacity_for(n: usize) -> usize {
+        (n.max(4) * 4).next_power_of_two()
+    }
+
+    /// Index any records appended since the last sync (rebuilding on
+    /// growth so the load factor stays below 1/2).
+    fn sync(&mut self, records: &[TxnRecord]) {
+        if records.len() == self.built {
+            return;
+        }
+        if self.slots.len() < Self::capacity_for(records.len()) {
+            self.slots = vec![(0, 0); Self::capacity_for(records.len())];
+            self.built = 0;
+        }
+        for i in self.built..records.len() {
+            self.insert(records, i);
+        }
+        self.built = records.len();
+    }
+
+    fn insert(&mut self, records: &[TxnRecord], i: usize) {
+        let r = records[i].r;
+        let h = hash_ref(r);
+        let mask = self.slots.len() - 1;
+        let mut pos = (h as usize) & mask;
+        loop {
+            let (sh, sp) = self.slots[pos];
+            if sp == 0 {
+                self.slots[pos] = (h, (i + 1) as u32);
+                return;
+            }
+            if sh == h && records[(sp - 1) as usize].r == r {
+                return; // keep the first occurrence (`position` semantics)
+            }
+            pos = (pos + 1) & mask;
+        }
+    }
+
+    fn get(&self, records: &[TxnRecord], r: RecordRef) -> Option<usize> {
+        if self.slots.is_empty() {
+            return None;
+        }
+        let h = hash_ref(r);
+        let mask = self.slots.len() - 1;
+        let mut pos = (h as usize) & mask;
+        loop {
+            let (sh, sp) = self.slots[pos];
+            if sp == 0 {
+                return None;
+            }
+            if sh == h && records[(sp - 1) as usize].r == r {
+                return Some((sp - 1) as usize);
+            }
+            pos = (pos + 1) & mask;
+        }
+    }
 }
 
 impl TxnFrame {
@@ -140,6 +234,7 @@ impl TxnFrame {
     pub fn reset(&mut self, txn_id: u64, read_only: bool, start_ts: u64) {
         self.records.clear();
         self.held.clear();
+        self.index.borrow_mut().clear();
         self.executed_upto = 0;
         self.read_only = read_only;
         self.txn_id = txn_id;
@@ -151,12 +246,16 @@ impl TxnFrame {
     pub fn crash(&mut self) {
         self.records.clear();
         self.held.clear();
+        self.index.borrow_mut().clear();
         self.executed_upto = 0;
     }
 
-    /// Index of `r` in the set, if present.
+    /// Index of `r` in the set, if present (first occurrence). O(1)
+    /// expected: served from a lazily synced hash index, not a scan.
     pub fn find(&self, r: RecordRef) -> Option<usize> {
-        self.records.iter().position(|rec| rec.r == r)
+        let mut ix = self.index.borrow_mut();
+        ix.sync(&self.records);
+        ix.get(&self.records, r)
     }
 
     /// This transaction's lock-holder identity on CN `cn`.
@@ -185,8 +284,17 @@ pub struct PhaseCtx<'a> {
     pub global_id: usize,
     /// The coordinator's verb endpoint.
     pub ep: &'a Endpoint,
-    /// The coordinator's virtual clock.
+    /// The executing frame's virtual clock (the lane clock under the
+    /// pipelined scheduler, the coordinator clock otherwise).
     pub clk: &'a mut VClock,
+    /// Cross-transaction doorbell coalescer — `Some` under the pipelined
+    /// [`crate::txn::scheduler::FrameScheduler`]; `None` issues planned
+    /// batches directly (sequential coordinator, recovery, baselines).
+    pub coalescer: Option<&'a Coalescer>,
+    /// Lock intervals of sibling frames on the same scheduler, used by
+    /// the lock phase to abort lock-first conflicts between pipelined
+    /// frames locally — before any bytes leave the CN.
+    pub siblings: Option<SiblingLocks<'a>>,
 }
 
 impl PhaseCtx<'_> {
@@ -200,6 +308,53 @@ impl PhaseCtx<'_> {
     #[inline]
     pub fn isolation(&self) -> Isolation {
         self.cluster.cfg.isolation
+    }
+
+    /// Issue a phase's planned batch and wait for this frame's results:
+    /// through the [`Coalescer`] when pipelined (the plan merges into a
+    /// shared doorbell ring with sibling frames' plans and only this
+    /// frame's op completions charge `clk`), directly otherwise.
+    pub fn issue(&mut self, batch: OpBatch) -> crate::Result<BatchResult> {
+        match self.coalescer {
+            Some(c) => c.issue(batch, self.ep, &self.cluster.mns, self.clk),
+            None => batch.issue(self.ep, &self.cluster.mns, self.clk),
+        }
+    }
+
+    /// Issue a fire-and-forget plan off the critical path (remote log
+    /// clears): parked with the [`Coalescer`] to ride a sibling frame's
+    /// next doorbell when pipelined, `issue_async` otherwise.
+    pub fn issue_deferred(&mut self, batch: OpBatch) -> crate::Result<()> {
+        match self.coalescer {
+            Some(c) => {
+                c.defer(batch, self.clk.now());
+                Ok(())
+            }
+            None => batch.issue_async(self.ep, &self.cluster.mns, self.clk),
+        }
+    }
+}
+
+/// Shared *Begin*: draw the transaction id and start timestamp (charging
+/// the oracle access to `clk`) and rearm the frame. One implementation
+/// for the sequential coordinator and every scheduler lane, so their
+/// accounting cannot drift.
+pub fn begin(cluster: &SharedCluster, clk: &mut VClock, frame: &mut TxnFrame, read_only: bool) {
+    let txn_id = cluster.next_txn_id();
+    let start_ts = cluster.oracle.timestamp(clk, cluster.net.ts_oracle_ns);
+    frame.reset(txn_id, read_only, start_ts);
+}
+
+/// Shared *Commit* entry: charge the application-logic CPU window, then
+/// run the read-write commit pipeline (read-only transactions have
+/// nothing to write). Same single-implementation rationale as [`begin`].
+pub fn commit_txn(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame) -> crate::Result<()> {
+    // Application logic between execute and commit.
+    ctx.clk.advance(ctx.net().txn_logic_ns);
+    if frame.read_only {
+        Ok(())
+    } else {
+        commit::commit_rw(ctx, frame)
     }
 }
 

@@ -66,7 +66,7 @@ fn probe_place_insert(
             )
         })
         .collect();
-    let res = batch.issue(ctx.ep, &ctx.cluster.mns, ctx.clk)?;
+    let res = ctx.issue(batch)?;
     let mut placed = None;
     for (&b, &tag) in buckets.iter().zip(&tags) {
         let out = res.read_buf(tag);
@@ -162,13 +162,14 @@ pub fn read_cvt(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame, from: usize) -> Re
         }
     }
 
-    // Pass 2: plan + issue per-MN doorbell batches through OpBatch.
+    // Pass 2: plan per-MN doorbell batches through OpBatch; the conduit
+    // issues them (possibly merged with sibling frames' plans).
     let mut batch = OpBatch::new();
     let tags: Vec<OpTag> = reads
         .iter()
         .map(|&(_, mn, addr, len, _)| batch.read(mn, addr, len))
         .collect();
-    let mut results = batch.issue(ctx.ep, &ctx.cluster.mns, ctx.clk)?;
+    let mut results = ctx.issue(batch)?;
 
     // Pass 3: parse, validate, retry stale addresses via bucket read.
     for (ri, &(i, _mn_id, addr, _len, whole_bucket)) in reads.iter().enumerate() {
@@ -266,7 +267,7 @@ pub fn read_data(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame, from: usize) -> R
             cell.cv,
         ));
     }
-    // Per-MN doorbell batches through OpBatch.
+    // Per-MN doorbell batches through OpBatch, issued via the conduit.
     let mut batch = OpBatch::new();
     let tags: Vec<OpTag> = reads
         .iter()
@@ -274,7 +275,7 @@ pub fn read_data(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame, from: usize) -> R
             batch.read(mn, addr, record::slot_size(record_len))
         })
         .collect();
-    let mut results = batch.issue(ctx.ep, &ctx.cluster.mns, ctx.clk)?;
+    let mut results = ctx.issue(batch)?;
     for (ri, &(i, _mn, _addr, payload_len, record_len, want_cv)) in reads.iter().enumerate() {
         let buf = results.take_read(tags[ri]);
         let decoded = record::decode(&buf, payload_len, record_len);

@@ -126,7 +126,7 @@ pub fn write_data_and_log(
         let log_img = LogRecord::prepared(frame.txn_id, log_entries)?.serialize();
         batch.write(log_mn, log_addr, log_img);
     }
-    batch.issue(ctx.ep, &ctx.cluster.mns, ctx.clk)?;
+    ctx.issue(batch)?;
     Ok(plans)
 }
 
@@ -151,6 +151,6 @@ pub fn write_visible(
             );
         }
     }
-    batch.issue(ctx.ep, &ctx.cluster.mns, ctx.clk)?;
+    ctx.issue(batch)?;
     Ok(())
 }

@@ -1,0 +1,742 @@
+//! The pipelined frame scheduler: `pipeline_depth` concurrent
+//! [`TxnFrame`]s per coordinator thread, with cross-transaction doorbell
+//! coalescing.
+//!
+//! The sequential [`crate::txn::coordinator::LotusCoordinator`] runs one
+//! transaction at a time and stalls a full RTT at every phase boundary.
+//! The paper's CNs keep their RNICs busy by overlapping many in-flight
+//! requests ("threads x coroutines"); the [`FrameScheduler`] models that:
+//! one OS thread owns `depth` **lanes**, each a full transaction stream
+//! (frame + virtual clock) sharing the coordinator's endpoint, RNG and
+//! RPC slot. The scheduler always pumps the lane with the smallest
+//! virtual clock, so lane transactions *overlap in virtual time* — while
+//! lane A's Read Data phase occupies `[t, t+RTT]`, lane B's Lock phase
+//! runs at `t+δ` — and all lanes charge the same simulated NICs, so
+//! saturation effects of the deeper pipeline are faithful.
+//!
+//! Three mechanisms fall out of the lane model:
+//!
+//! - **Cross-transaction doorbell coalescing** ([`Coalescer`]): phases
+//!   *plan* their one-sided ops into [`OpBatch`]es and hand them to the
+//!   scheduler's conduit ([`crate::txn::phases::PhaseCtx::issue`]). The
+//!   coalescer merges plans that reach an issue point within
+//!   `coalesce_window_ns` of each other into one [`MergedBatch`] —
+//!   deferred fire-and-forget plans (commit-log clears) park and ride a
+//!   later frame's doorbell — and issues each per-MN group as **one**
+//!   doorbell via the completion-driven
+//!   [`Endpoint::doorbell_timed`][crate::dm::Endpoint::doorbell_timed]
+//!   mode, so each frame's clock is charged only for its own ops'
+//!   completions.
+//! - **Sibling lock-first aborts** ([`SiblingLocks`]): lanes are pumped
+//!   one transaction at a time (wall-clock), so a conflict between two
+//!   lanes whose transactions overlap in *virtual* time would not be
+//!   visible in the shared lock table. The scheduler therefore keeps the
+//!   lock intervals of recently pumped lane transactions; the lock phase
+//!   checks them first and aborts conflicting siblings locally — a CPU
+//!   compare on the CN, before a single byte (or remote-lock RPC) leaves
+//!   the node.
+//! - **Parallel per-MN doorbells**: the merged issue rings every target
+//!   MN at the same virtual instant (a coordinator posts to all QPs and
+//!   then polls completions), where the sequential path issues per-MN
+//!   groups back to back. This is part of the pipelined coordinator's
+//!   latency win and is exactly what "the RNIC stays busy" means.
+//!
+//! With `depth == 1` there are no siblings and no coalescer: the
+//! scheduler degenerates to the sequential coordinator's exact issue
+//! order, clock charges and RNG stream (asserted by the
+//! `pipeline_depth=1` invariant test in [`crate::sim`]).
+
+use std::cell::RefCell;
+use std::sync::Arc;
+
+use crate::dm::clock::{TimeGate, VClock};
+use crate::dm::memnode::MemNode;
+use crate::dm::opbatch::{BatchResult, MergedBatch, OpBatch};
+use crate::dm::verbs::Endpoint;
+use crate::lock::table::LockMode;
+use crate::sharding::key::LotusKey;
+use crate::txn::api::{RecordRef, TxnApi, TxnCtl};
+use crate::txn::coordinator::SharedCluster;
+use crate::txn::phases::{self, PhaseCtx, TxnFrame, TxnRecord};
+use crate::util::Xoshiro256;
+use crate::workloads::{RouteCtx, Workload};
+use crate::Result;
+
+/// Decide whether a doorbell to `mn` at virtual time `t` can ride the
+/// last doorbell rung to that MN (within `window`), or must ring its own
+/// (recording `t` as the new ring anchor).
+fn ride_or_ring(last_ring: &mut Vec<u64>, mn: usize, t: u64, window: u64) -> bool {
+    if mn >= last_ring.len() {
+        last_ring.resize(mn + 1, u64::MAX);
+    }
+    let last = last_ring[mn];
+    if last != u64::MAX && t.abs_diff(last) <= window {
+        true
+    } else {
+        last_ring[mn] = t;
+        false
+    }
+}
+
+/// Per-scheduler doorbell coalescer: merges the planned [`OpBatch`]es of
+/// frames that reach an issue point within `coalesce_window_ns` of each
+/// other into shared doorbell rings (see the module docs). One instance
+/// per [`FrameScheduler`]; single-threaded by construction (interior
+/// mutability only so the shared-reference [`PhaseCtx`] can reach it).
+pub struct Coalescer {
+    window_ns: u64,
+    state: RefCell<CoalesceState>,
+}
+
+#[derive(Default)]
+struct CoalesceState {
+    /// Parked fire-and-forget plans: `(plan, park virtual time)`.
+    pending: Vec<(OpBatch, u64)>,
+    /// Per MN: virtual time of the last doorbell rung (`u64::MAX` never).
+    last_ring: Vec<u64>,
+}
+
+impl Coalescer {
+    /// Coalescer with the given pairing window (virtual ns).
+    pub fn new(window_ns: u64) -> Self {
+        Self {
+            window_ns,
+            state: RefCell::new(CoalesceState::default()),
+        }
+    }
+
+    /// The pairing window (virtual ns).
+    pub fn window_ns(&self) -> u64 {
+        self.window_ns
+    }
+
+    /// Parked fire-and-forget plans not yet flushed.
+    pub fn pending_plans(&self) -> usize {
+        self.state.borrow().pending.len()
+    }
+
+    /// Park a fire-and-forget plan to ride a later doorbell. The plan
+    /// waits at most `coalesce_window_ns` past the scheduler's slowest
+    /// lane before [`Coalescer::flush_stale`] rings it out.
+    pub fn defer(&self, plan: OpBatch, now: u64) {
+        if plan.is_empty() {
+            return;
+        }
+        self.state.borrow_mut().pending.push((plan, now));
+    }
+
+    /// Issue a frame's planned batch, merged with every parked plan that
+    /// is not in this frame's virtual future (beyond the window). The
+    /// caller's clock advances only to the completion of **its own** ops;
+    /// parked riders are fire-and-forget.
+    pub fn issue(
+        &self,
+        batch: OpBatch,
+        ep: &Endpoint,
+        mns: &[Arc<MemNode>],
+        clk: &mut VClock,
+    ) -> Result<BatchResult> {
+        let t = clk.now();
+        let mut st = self.state.borrow_mut();
+        let mut merged = MergedBatch::new();
+        // Per-MN op counts of absorbed riders (metrics only).
+        let mut rider_mns: Vec<(usize, u64)> = Vec::new();
+        let mut kept: Vec<(OpBatch, u64)> = Vec::new();
+        for (plan, pt) in st.pending.drain(..) {
+            if pt <= t.saturating_add(self.window_ns) {
+                for mn in plan.mns() {
+                    let n = plan.group_len(mn) as u64;
+                    match rider_mns.iter_mut().find(|(m, _)| *m == mn) {
+                        Some((_, c)) => *c += n,
+                        None => rider_mns.push((mn, n)),
+                    }
+                }
+                merged.absorb(plan);
+            } else {
+                kept.push((plan, pt));
+            }
+        }
+        st.pending = kept;
+        if batch.is_empty() && merged.n_plans() == 0 {
+            // Nothing to do at all: stay free like the direct path.
+            drop(st);
+            return batch.issue(ep, mns, clk);
+        }
+        let me = merged.absorb(batch);
+        ep.gate_sync(clk);
+        let window = self.window_ns;
+        let st_ref = &mut *st;
+        let last_ring = &mut st_ref.last_ring;
+        let mut rode: Vec<usize> = Vec::new();
+        let mut res = merged.issue_timed(ep, mns, t, |mn| {
+            let ride = ride_or_ring(last_ring, mn, t, window);
+            if ride {
+                rode.push(mn);
+            }
+            ride
+        })?;
+        // Parked ops that joined a doorbell rung *for this frame's plan*
+        // are coalesced riders; ride-groups were already counted by the
+        // endpoint itself.
+        let rider_ops: u64 = rider_mns
+            .iter()
+            .filter(|(mn, _)| !rode.contains(mn))
+            .map(|&(_, n)| n)
+            .sum();
+        if rider_ops > 0 {
+            ep.nic.note_riders(rider_ops);
+        }
+        let (mine, done) = res.take(me);
+        clk.catch_up(done);
+        Ok(mine)
+    }
+
+    /// Ring out parked plans whose window expired before `horizon` (the
+    /// scheduler's slowest lane): no doorbell came along to ride, so they
+    /// ring their own, charged fire-and-forget at their park times.
+    pub fn flush_stale(&self, ep: &Endpoint, mns: &[Arc<MemNode>], horizon: u64) -> Result<()> {
+        self.flush_inner(ep, mns, Some(horizon))
+    }
+
+    /// Ring out every parked plan (orderly scheduler shutdown).
+    pub fn flush_all(&self, ep: &Endpoint, mns: &[Arc<MemNode>]) -> Result<()> {
+        self.flush_inner(ep, mns, None)
+    }
+
+    /// Drop every parked plan without issuing it (fail-stop crash: WQEs
+    /// posted but not yet rung die with the CN; recovery completes or
+    /// rolls back the affected transactions from their commit logs).
+    pub fn discard_pending(&self) {
+        self.state.borrow_mut().pending.clear();
+    }
+
+    fn flush_inner(&self, ep: &Endpoint, mns: &[Arc<MemNode>], horizon: Option<u64>) -> Result<()> {
+        let mut st = self.state.borrow_mut();
+        if st.pending.is_empty() {
+            return Ok(());
+        }
+        let mut merged = MergedBatch::new();
+        let mut t0 = u64::MAX;
+        let mut kept: Vec<(OpBatch, u64)> = Vec::new();
+        for (plan, pt) in st.pending.drain(..) {
+            let stale = match horizon {
+                Some(h) => pt.saturating_add(self.window_ns) < h,
+                None => true,
+            };
+            if stale {
+                t0 = t0.min(pt);
+                merged.absorb(plan);
+            } else {
+                kept.push((plan, pt));
+            }
+        }
+        st.pending = kept;
+        if merged.n_plans() == 0 {
+            return Ok(());
+        }
+        let window = self.window_ns;
+        let st_ref = &mut *st;
+        let last_ring = &mut st_ref.last_ring;
+        // Fire-and-forget: completions and results are discarded.
+        merged.issue_timed(ep, mns, t0, |mn| ride_or_ring(last_ring, mn, t0, window))?;
+        Ok(())
+    }
+}
+
+/// One lock held by a recently pumped sibling transaction, with its
+/// virtual release time.
+#[derive(Debug, Clone, Copy)]
+pub struct LockStamp {
+    /// Locked key.
+    pub key: LotusKey,
+    /// Held mode.
+    pub mode: LockMode,
+    /// Virtual time the holding transaction released it.
+    pub until: u64,
+}
+
+/// Read view over all lanes' recent lock intervals, excluding the asking
+/// lane — the lock phase's local sibling-conflict check.
+pub struct SiblingLocks<'a> {
+    logs: &'a [Vec<LockStamp>],
+    me: usize,
+}
+
+impl<'a> SiblingLocks<'a> {
+    /// View for lane `me` over `logs` (one entry per lane).
+    pub fn new(logs: &'a [Vec<LockStamp>], me: usize) -> Self {
+        Self { logs, me }
+    }
+
+    /// Would acquiring `mode` on `key` at virtual time `now` conflict
+    /// with a sibling lane's transaction that still holds the key then?
+    pub fn conflicts(&self, key: LotusKey, mode: LockMode, now: u64) -> bool {
+        self.logs.iter().enumerate().any(|(i, log)| {
+            i != self.me
+                && log.iter().any(|s| {
+                    s.key == key
+                        && s.until > now
+                        && (mode == LockMode::Write || s.mode == LockMode::Write)
+                })
+        })
+    }
+}
+
+/// Transaction state machine of one lane (mirrors the sequential
+/// coordinator's assertion states).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum LanePhase {
+    Idle,
+    Building,
+    Executed,
+}
+
+/// One concurrent transaction stream within a scheduler.
+struct Lane {
+    frame: TxnFrame,
+    clk: VClock,
+    phase: LanePhase,
+}
+
+/// `pipeline_depth` concurrent transaction streams multiplexed onto one
+/// coordinator thread (see the module docs). Replaces the sequential
+/// coordinator inside [`crate::sim`]'s `coordinator_thread` for LOTUS
+/// runs with `pipeline_depth >= 1`.
+pub struct FrameScheduler {
+    cluster: Arc<SharedCluster>,
+    cn: usize,
+    slot: usize,
+    global_id: usize,
+    ep: Endpoint,
+    rng: Xoshiro256,
+    lanes: Vec<Lane>,
+    /// Per lane: lock intervals of its recently pumped transactions
+    /// (pruned once every lane's clock has passed them).
+    lock_logs: Vec<Vec<LockStamp>>,
+    coalescer: Option<Coalescer>,
+}
+
+impl FrameScheduler {
+    /// Scheduler for coordinator `slot` on CN `cn` with `depth` lanes.
+    /// Coalescing activates for `depth >= 2` when `coalesce_window_ns`
+    /// is non-zero; `depth == 1` reproduces the sequential coordinator.
+    pub fn new(cluster: Arc<SharedCluster>, cn: usize, slot: usize, global_id: usize) -> Self {
+        let depth = cluster.cfg.pipeline_depth.max(1);
+        let window = cluster.cfg.coalesce_window_ns;
+        let ep = Endpoint::new(cn, cluster.cn_nics[cn].clone(), cluster.net.clone());
+        let seed = cluster.cfg.seed ^ (global_id as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        Self {
+            cn,
+            slot,
+            global_id,
+            ep,
+            rng: Xoshiro256::new(seed),
+            lanes: (0..depth)
+                .map(|_| Lane {
+                    frame: TxnFrame::new(),
+                    clk: VClock::zero(),
+                    phase: LanePhase::Idle,
+                })
+                .collect(),
+            lock_logs: (0..depth).map(|_| Vec::new()).collect(),
+            coalescer: (depth > 1 && window > 0).then(|| Coalescer::new(window)),
+            cluster,
+        }
+    }
+
+    /// Number of lanes (the configured pipeline depth).
+    pub fn depth(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// The scheduler's frontier: the slowest lane's virtual clock. This
+    /// is what the run loop compares against the duration and publishes
+    /// to the [`TimeGate`] between transactions.
+    pub fn now(&self) -> u64 {
+        self.lanes
+            .iter()
+            .map(|l| l.clk.now())
+            .min()
+            .unwrap_or(u64::MAX)
+    }
+
+    /// Attach the run's time gate to the shared endpoint.
+    pub fn attach_gate(&mut self, gate: Arc<TimeGate>, gid: usize) {
+        self.ep.attach_gate(gate, gid);
+    }
+
+    /// Fail-stop: every lane drops its in-flight state without releasing
+    /// locks (recovery owns them, paper §6). Parked fire-and-forget
+    /// plans are WQEs posted but never rung — they die with the CN; a
+    /// committed transaction's un-cleared log slot is completed
+    /// idempotently by recovery's log scan.
+    pub fn crash(&mut self) {
+        if let Some(c) = &self.coalescer {
+            c.discard_pending();
+        }
+        for lane in &mut self.lanes {
+            lane.frame.crash();
+            lane.phase = LanePhase::Idle;
+        }
+        for log in &mut self.lock_logs {
+            log.clear();
+        }
+    }
+
+    /// Orderly end of run: ring out every parked plan so no planned op
+    /// (or its NIC charge) is silently dropped at the duration boundary.
+    pub fn finish(&mut self) -> Result<()> {
+        if let Some(c) = &self.coalescer {
+            c.flush_all(&self.ep, &self.cluster.mns)?;
+        }
+        Ok(())
+    }
+
+    /// Jump every lane's clock forward (crash restart).
+    pub fn skip_to(&mut self, t_ns: u64) {
+        for lane in &mut self.lanes {
+            lane.clk.catch_up(t_ns);
+        }
+    }
+
+    fn min_lane(&self) -> usize {
+        let mut li = 0;
+        for i in 1..self.lanes.len() {
+            if self.lanes[i].clk.now() < self.lanes[li].clk.now() {
+                li = i;
+            }
+        }
+        li
+    }
+
+    /// Pump the slowest lane through one transaction. Returns the lane's
+    /// clock before and after, plus the transaction outcome — exactly the
+    /// accounting the run loop needs for latency/commit bookkeeping.
+    pub fn step(
+        &mut self,
+        workload: &dyn Workload,
+        route: &RouteCtx<'_>,
+    ) -> (u64, u64, Result<()>) {
+        let li = self.min_lane();
+        let t0 = self.lanes[li].clk.now();
+        // Ring out parked plans no doorbell came along for, and drop
+        // sibling lock intervals every lane has virtually passed.
+        if let Some(c) = &self.coalescer {
+            if let Err(e) = c.flush_stale(&self.ep, &self.cluster.mns, t0) {
+                return (t0, t0, Err(e));
+            }
+        }
+        for log in &mut self.lock_logs {
+            log.retain(|s| s.until > t0);
+        }
+        let res = {
+            let Self {
+                cluster,
+                ep,
+                rng,
+                lanes,
+                lock_logs,
+                coalescer,
+                cn,
+                slot,
+                global_id,
+            } = self;
+            let mut api = LaneApi {
+                cluster: &*cluster,
+                ep: &*ep,
+                rng,
+                lane: &mut lanes[li],
+                lane_idx: li,
+                logs: &*lock_logs,
+                coalescer: coalescer.as_ref(),
+                cn: *cn,
+                slot: *slot,
+                global_id: *global_id,
+            };
+            workload.run_one(&mut api, route)
+        };
+        let t1 = self.lanes[li].clk.now();
+        // Remember a *committed* transaction's lock set for the sibling
+        // conflict check: any lane pumped later but virtually overlapping
+        // `[t0, t1]` must see these as held (the lock set is a pure
+        // function of the still-intact record set). Aborted transactions
+        // are not stamped — they released whatever they briefly held, and
+        // stamping them would cascade phantom aborts between siblings.
+        if self.lanes.len() > 1 && res.is_ok() {
+            let frame = &self.lanes[li].frame;
+            if !frame.read_only && !frame.records.is_empty() {
+                for (key, mode) in phases::lock::requests(&self.cluster, frame, 0) {
+                    self.lock_logs[li].push(LockStamp {
+                        key,
+                        mode,
+                        until: t1,
+                    });
+                }
+            }
+        }
+        (t0, t1, res)
+    }
+}
+
+/// The [`TxnApi`]/[`TxnCtl`] view the workload drives for one pumped
+/// lane: the lane's frame and clock, the scheduler's shared endpoint,
+/// RNG, coalescer and sibling lock intervals.
+struct LaneApi<'a> {
+    cluster: &'a Arc<SharedCluster>,
+    ep: &'a Endpoint,
+    rng: &'a mut Xoshiro256,
+    lane: &'a mut Lane,
+    lane_idx: usize,
+    logs: &'a [Vec<LockStamp>],
+    coalescer: Option<&'a Coalescer>,
+    cn: usize,
+    slot: usize,
+    global_id: usize,
+}
+
+impl LaneApi<'_> {
+    /// Split-borrow into a phase context + the lane's frame.
+    fn parts(&mut self) -> (PhaseCtx<'_>, &mut TxnFrame) {
+        let lane = &mut *self.lane;
+        (
+            PhaseCtx {
+                cluster: self.cluster,
+                cn: self.cn,
+                slot: self.slot,
+                global_id: self.global_id,
+                ep: self.ep,
+                clk: &mut lane.clk,
+                coalescer: self.coalescer,
+                siblings: if self.logs.len() > 1 {
+                    Some(SiblingLocks::new(self.logs, self.lane_idx))
+                } else {
+                    None
+                },
+            },
+            &mut lane.frame,
+        )
+    }
+}
+
+impl TxnCtl for LaneApi<'_> {
+    fn add_ro(&mut self, r: RecordRef) {
+        debug_assert_ne!(self.lane.phase, LanePhase::Idle);
+        self.lane.frame.records.push(TxnRecord::new(r, false));
+    }
+
+    fn add_rw(&mut self, r: RecordRef) {
+        debug_assert_ne!(self.lane.phase, LanePhase::Idle);
+        debug_assert!(!self.lane.frame.read_only, "read-only txn cannot AddRW");
+        self.lane.frame.records.push(TxnRecord::new(r, true));
+    }
+
+    fn add_insert(&mut self, r: RecordRef, payload: Vec<u8>) {
+        debug_assert_ne!(self.lane.phase, LanePhase::Idle);
+        debug_assert!(!self.lane.frame.read_only);
+        let mut rec = TxnRecord::new(r, true);
+        rec.insert = true;
+        rec.new_value = Some(payload);
+        self.lane.frame.records.push(rec);
+    }
+
+    fn add_delete(&mut self, r: RecordRef) {
+        debug_assert_ne!(self.lane.phase, LanePhase::Idle);
+        let mut rec = TxnRecord::new(r, true);
+        rec.delete = true;
+        self.lane.frame.records.push(rec);
+    }
+
+    fn execute(&mut self) -> Result<()> {
+        debug_assert_ne!(self.lane.phase, LanePhase::Idle);
+        let res = {
+            let (mut ctx, frame) = self.parts();
+            phases::execute(&mut ctx, frame)
+        };
+        match res {
+            Ok(()) => {
+                self.lane.phase = LanePhase::Executed;
+                Ok(())
+            }
+            Err(e) => {
+                // The failing phase already released every held lock.
+                self.lane.phase = LanePhase::Idle;
+                Err(e)
+            }
+        }
+    }
+
+    fn value(&self, r: RecordRef) -> Option<&[u8]> {
+        self.lane
+            .frame
+            .find(r)
+            .and_then(|i| self.lane.frame.records[i].value.as_deref())
+    }
+
+    fn stage_write(&mut self, r: RecordRef, payload: Vec<u8>) {
+        let i = self
+            .lane
+            .frame
+            .find(r)
+            .expect("stage_write on unknown record");
+        debug_assert!(self.lane.frame.records[i].write, "stage_write needs AddRW");
+        self.lane.frame.records[i].new_value = Some(payload);
+    }
+
+    fn commit(&mut self) -> Result<()> {
+        debug_assert_eq!(self.lane.phase, LanePhase::Executed);
+        let res = {
+            let (mut ctx, frame) = self.parts();
+            phases::commit_txn(&mut ctx, frame)
+        };
+        self.lane.phase = LanePhase::Idle;
+        res
+    }
+
+    fn rollback(&mut self) {
+        let (mut ctx, frame) = self.parts();
+        phases::unlock::release(&mut ctx, frame);
+        self.lane.phase = LanePhase::Idle;
+    }
+}
+
+impl TxnApi for LaneApi<'_> {
+    fn begin(&mut self, read_only: bool) {
+        phases::begin(
+            self.cluster,
+            &mut self.lane.clk,
+            &mut self.lane.frame,
+            read_only,
+        );
+        self.lane.phase = LanePhase::Building;
+    }
+
+    fn txn(&mut self) -> &mut dyn TxnCtl {
+        self
+    }
+
+    fn now(&self) -> u64 {
+        self.lane.clk.now()
+    }
+
+    fn rng(&mut self) -> &mut Xoshiro256 {
+        self.rng
+    }
+
+    fn cn(&self) -> usize {
+        self.cn
+    }
+
+    fn attach_gate(&mut self, _gate: Arc<TimeGate>, _gid: usize) {
+        // The gate is attached at scheduler level (shared endpoint).
+    }
+
+    fn crash(&mut self) {
+        self.lane.frame.crash();
+        self.lane.phase = LanePhase::Idle;
+    }
+
+    fn skip_to(&mut self, t_ns: u64) {
+        self.lane.clk.catch_up(t_ns);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dm::netconfig::NetConfig;
+    use crate::dm::rnic::Rnic;
+
+    fn setup() -> (Vec<Arc<MemNode>>, Endpoint) {
+        let mns = vec![Arc::new(MemNode::new(0, 1 << 16))];
+        let ep = Endpoint::new(0, Arc::new(Rnic::new()), Arc::new(NetConfig::default()));
+        (mns, ep)
+    }
+
+    #[test]
+    fn deferred_plan_rides_the_next_sync_doorbell() {
+        let (mns, ep) = setup();
+        let r = mns[0].register(64).unwrap();
+        let c = Coalescer::new(5_000);
+
+        // A frame parks a fire-and-forget write...
+        let mut park = OpBatch::new();
+        park.write(0, r.base, 7u64.to_le_bytes().to_vec());
+        c.defer(park, 100);
+        assert_eq!(c.pending_plans(), 1);
+
+        // ...and another frame's read batch comes along within the window.
+        let mut clk = VClock(600);
+        let mut sync = OpBatch::new();
+        let tag = sync.read(0, r.base, 8);
+        let res = c.issue(sync, &ep, &mns, &mut clk).unwrap();
+
+        assert_eq!(c.pending_plans(), 0, "the parked plan rode along");
+        assert_eq!(ep.nic.doorbells(), 1, "one merged ring, not two");
+        assert_eq!(ep.nic.coalesced_ops(), 1, "the parked write was a rider");
+        // The parked write executed before the rider's read in the same
+        // doorbell group.
+        assert_eq!(res.read_buf(tag), &7u64.to_le_bytes()[..]);
+        assert_eq!(mns[0].load_u64(r.base).unwrap(), 7);
+        assert!(clk.now() >= 600 + ep.net.rtt_ns, "sync caller waited its RTT");
+    }
+
+    #[test]
+    fn stale_deferred_plan_rings_its_own_doorbell_on_flush() {
+        let (mns, ep) = setup();
+        let r = mns[0].register(64).unwrap();
+        let c = Coalescer::new(1_000);
+        let mut park = OpBatch::new();
+        park.write(0, r.base, 9u64.to_le_bytes().to_vec());
+        c.defer(park, 100);
+
+        // Horizon still inside the window: nothing flushes.
+        c.flush_stale(&ep, &mns, 900).unwrap();
+        assert_eq!(c.pending_plans(), 1);
+        assert_eq!(ep.nic.doorbells(), 0);
+
+        // Window expired: the plan rings out fire-and-forget.
+        c.flush_stale(&ep, &mns, 5_000).unwrap();
+        assert_eq!(c.pending_plans(), 0);
+        assert_eq!(ep.nic.doorbells(), 1);
+        assert_eq!(mns[0].load_u64(r.base).unwrap(), 9);
+    }
+
+    #[test]
+    fn sibling_lock_intervals_conflict_by_mode_and_time() {
+        let k = LotusKey::compose(5, 5);
+        let other = LotusKey::compose(6, 6);
+        let logs = vec![
+            vec![LockStamp {
+                key: k,
+                mode: LockMode::Write,
+                until: 1_000,
+            }],
+            Vec::new(),
+        ];
+        let sib = SiblingLocks::new(&logs, 1);
+        // Overlapping write-write and read-write conflict...
+        assert!(sib.conflicts(k, LockMode::Write, 500));
+        assert!(sib.conflicts(k, LockMode::Read, 500));
+        // ...a different key, the past, or my own lane's locks don't.
+        assert!(!sib.conflicts(other, LockMode::Write, 500));
+        assert!(!sib.conflicts(k, LockMode::Write, 1_000));
+        let mine = SiblingLocks::new(&logs, 0);
+        assert!(!mine.conflicts(k, LockMode::Write, 500));
+    }
+
+    #[test]
+    fn read_read_siblings_do_not_conflict() {
+        let k = LotusKey::compose(7, 7);
+        let logs = vec![
+            vec![LockStamp {
+                key: k,
+                mode: LockMode::Read,
+                until: 1_000,
+            }],
+            Vec::new(),
+        ];
+        let sib = SiblingLocks::new(&logs, 1);
+        assert!(!sib.conflicts(k, LockMode::Read, 500));
+        assert!(sib.conflicts(k, LockMode::Write, 500));
+    }
+}

@@ -52,6 +52,32 @@ fn smallbank_conserves_total_balance_under_lotus() {
     audit_books(&cluster, &wl, cfg.scale.smallbank_accounts, "lotus");
 }
 
+/// The pipelined scheduler (`pipeline_depth > 1`) must preserve the
+/// money audit too: sibling-frame conflicts abort lock-first, deferred
+/// log clears ride other frames' doorbells, and no lane may leave a
+/// held lock slot behind.
+#[test]
+fn smallbank_conserves_total_balance_under_pipelined_lotus() {
+    let mut cfg = tiny();
+    cfg.pipeline_depth = 4;
+    let wl = Arc::new(SmallBankWorkload::new(cfg.scale.smallbank_accounts));
+    let cluster = Cluster::build_with(&cfg, wl.clone() as Arc<dyn Workload>).unwrap();
+    let report = cluster.run(SystemKind::Lotus).unwrap();
+    assert!(report.commits > 100);
+    assert!(
+        report.coalesced_ops > 0,
+        "pipelined run should coalesce some doorbell ops"
+    );
+    audit_books(&cluster, &wl, cfg.scale.smallbank_accounts, "lotus-pipelined");
+    let held: usize = cluster
+        .shared
+        .lock_services
+        .iter()
+        .map(|s| s.held_slots())
+        .sum();
+    assert_eq!(held, 0, "pipelined lanes left held lock slots");
+}
+
 /// The same audit for Motor and FORD (their locking is MN-side CAS).
 /// Each system gets a fresh cluster: FORD is single-versioned (reads
 /// cell 0 only) and cannot inherit a store whose latest versions live in
