@@ -182,6 +182,14 @@ fn main() -> lotus::Result<()> {
         d4.mtps() / d1.mtps().max(1e-12),
         d4.coalesced_ops as f64 / d4.doorbells.max(1) as f64
     );
+    println!(
+        "depth 4 step-machine: {} staged plans, {} overlap rings ({:.2} plans/ring, {:.0}% of stages), in-flight WQE hwm {}",
+        d4.staged_plans,
+        d4.overlap_rings,
+        d4.mean_overlap_plans(),
+        d4.overlap_rate() * 100.0,
+        d4.inflight_wqes_hwm
+    );
 
     let mut systems = JsonObj::new();
     systems
@@ -201,13 +209,22 @@ fn main() -> lotus::Result<()> {
             "lotus_depth4_speedup_over_depth1",
             d4.mtps() / d1.mtps().max(1e-12),
         );
+    let mut overlap = JsonObj::new();
+    overlap
+        .int("lotus_depth4_staged_plans", d4.staged_plans)
+        .int("lotus_depth4_overlap_rings", d4.overlap_rings)
+        .int("lotus_depth4_overlap_plans", d4.overlap_plans)
+        .num("lotus_depth4_mean_overlap_plans", d4.mean_overlap_plans())
+        .num("lotus_depth4_overlap_rate", d4.overlap_rate())
+        .int("lotus_depth4_inflight_wqes_hwm", d4.inflight_wqes_hwm);
 
     let mut root = JsonObj::new();
     root.str("bench", "hotpath")
         .str("workload", "smallbank-quick")
         .obj("structures_ns_per_op", structures)
         .obj("systems_virtual_mtps", systems)
-        .obj("doorbells", doorbells);
+        .obj("doorbells", doorbells)
+        .obj("step_machine", overlap);
     let json = root.finish();
 
     let out = std::env::var("LOTUS_BENCH_OUT").unwrap_or_else(|_| {

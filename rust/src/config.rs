@@ -141,10 +141,13 @@ pub struct Config {
     /// coordinator shell (identical accounting to `1`, kept as the
     /// equivalence baseline). Baselines are unaffected.
     pub pipeline_depth: usize,
-    /// Virtual-time window within which two frames' doorbell plans to the
-    /// same MN coalesce into one ring, and a deferred fire-and-forget
-    /// plan (commit-log clear) may wait for a doorbell to ride. `0`
-    /// disables coalescing. Only meaningful with `pipeline_depth >= 2`.
+    /// Virtual-time window of the step-machine: how far apart (virtual
+    /// ns) two frames' issue points may be and still share one doorbell
+    /// ring. A staged plan waits at most this long for sibling lanes'
+    /// plans to merge with it; a deferred fire-and-forget plan
+    /// (commit-log clear) may wait this long for a doorbell to ride. `0`
+    /// disables staging and coalescing entirely (every issue is direct).
+    /// Only meaningful with `pipeline_depth >= 2`.
     pub coalesce_window_ns: u64,
     /// Memory per MN in bytes.
     pub mn_capacity: u64,

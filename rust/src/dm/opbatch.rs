@@ -203,6 +203,14 @@ pub struct BatchResult {
 }
 
 impl BatchResult {
+    /// A completed result with no ops (an empty plan resumed for free).
+    pub fn empty() -> Self {
+        Self {
+            groups: Vec::new(),
+            index: Vec::new(),
+        }
+    }
+
     fn op(&self, tag: OpTag) -> &VerbOp {
         let (gi, oi) = self.index[tag.0];
         &self.groups[gi].1[oi]

@@ -26,6 +26,19 @@ pub struct Rnic {
     /// WQEs that rode a doorbell rung for *another* frame's plan
     /// (cross-transaction coalescing; subset of `doorbell_ops`).
     coalesced_ops: AtomicU64,
+    /// WQEs posted to a send queue whose doorbell has not yet been rung
+    /// (split-phase post/ring; gauge, returns to 0 when every staged
+    /// plan has rung or died with a crashed CN).
+    posted_wqes: AtomicU64,
+    /// High-water mark of `posted_wqes` — the in-flight depth the
+    /// step-machine reached on this NIC.
+    posted_wqes_hwm: AtomicU64,
+    /// Sync doorbell plans staged in-flight (each is one lane yield).
+    staged_plans: AtomicU64,
+    /// Merged doorbell issues that carried >= 2 frames' staged plans.
+    overlap_rings: AtomicU64,
+    /// Frames' staged plans carried by those merged issues.
+    overlap_plans: AtomicU64,
 }
 
 impl Rnic {
@@ -102,6 +115,67 @@ impl Rnic {
         self.coalesced_ops.load(Ordering::Relaxed)
     }
 
+    /// One staged plan of `n_ops` WQEs was posted to the send queue with
+    /// its doorbell deferred (the step-machine's yield point).
+    #[inline]
+    pub fn note_posted(&self, n_ops: u64) {
+        self.staged_plans.fetch_add(1, Ordering::Relaxed);
+        let cur = self.posted_wqes.fetch_add(n_ops, Ordering::Relaxed) + n_ops;
+        self.posted_wqes_hwm.fetch_max(cur, Ordering::Relaxed);
+    }
+
+    /// `n_ops` previously posted WQEs were covered by a doorbell ring (or
+    /// died with a crashed CN): drop them from the posted gauge.
+    #[inline]
+    pub fn note_rung_posted(&self, n_ops: u64) {
+        let mut cur = self.posted_wqes.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_sub(n_ops);
+            match self.posted_wqes.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(v) => cur = v,
+            }
+        }
+    }
+
+    /// A merged doorbell issue carried the staged plans of `n_plans`
+    /// distinct in-flight frames (intra-transaction stage overlap).
+    #[inline]
+    pub fn note_overlap(&self, n_plans: u64) {
+        self.overlap_rings.fetch_add(1, Ordering::Relaxed);
+        self.overlap_plans.fetch_add(n_plans, Ordering::Relaxed);
+    }
+
+    /// WQEs currently posted but not yet rung (0 when nothing in flight).
+    pub fn posted_wqes(&self) -> u64 {
+        self.posted_wqes.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of posted-but-unrung WQEs.
+    pub fn posted_wqes_hwm(&self) -> u64 {
+        self.posted_wqes_hwm.load(Ordering::Relaxed)
+    }
+
+    /// Staged sync plans (lane yields) posted through this NIC.
+    pub fn staged_plans(&self) -> u64 {
+        self.staged_plans.load(Ordering::Relaxed)
+    }
+
+    /// Merged doorbell issues carrying >= 2 frames' staged plans.
+    pub fn overlap_rings(&self) -> u64 {
+        self.overlap_rings.load(Ordering::Relaxed)
+    }
+
+    /// Staged plans carried by those merged issues.
+    pub fn overlap_plans(&self) -> u64 {
+        self.overlap_plans.load(Ordering::Relaxed)
+    }
+
     /// Completion time if the verb were issued now, without enqueueing.
     pub fn peek(&self, t_arrive: u64, svc: u64) -> u64 {
         self.busy_until.load(Ordering::Relaxed).max(t_arrive) + svc
@@ -138,6 +212,11 @@ impl Rnic {
         self.doorbells.store(0, Ordering::Relaxed);
         self.doorbell_ops.store(0, Ordering::Relaxed);
         self.coalesced_ops.store(0, Ordering::Relaxed);
+        self.posted_wqes.store(0, Ordering::Relaxed);
+        self.posted_wqes_hwm.store(0, Ordering::Relaxed);
+        self.staged_plans.store(0, Ordering::Relaxed);
+        self.overlap_rings.store(0, Ordering::Relaxed);
+        self.overlap_plans.store(0, Ordering::Relaxed);
     }
 
     /// Reset the queue to idle at time zero (between benchmark runs —
@@ -223,6 +302,30 @@ mod tests {
         }
         let u = n.utilization(1000);
         assert!((u - 0.5).abs() < 1e-9, "u={u}");
+    }
+
+    #[test]
+    fn posted_gauge_tracks_split_phase_post_and_ring() {
+        let n = Rnic::new();
+        assert_eq!(n.posted_wqes(), 0);
+        n.note_posted(3);
+        n.note_posted(2);
+        assert_eq!(n.posted_wqes(), 5);
+        assert_eq!(n.posted_wqes_hwm(), 5);
+        assert_eq!(n.staged_plans(), 2);
+        n.note_rung_posted(5);
+        assert_eq!(n.posted_wqes(), 0, "all posted WQEs rung");
+        assert_eq!(n.posted_wqes_hwm(), 5, "high-water mark sticks");
+        // Over-release saturates instead of wrapping.
+        n.note_rung_posted(1);
+        assert_eq!(n.posted_wqes(), 0);
+        n.note_overlap(3);
+        assert_eq!(n.overlap_rings(), 1);
+        assert_eq!(n.overlap_plans(), 3);
+        n.reset_counters();
+        assert_eq!(n.posted_wqes_hwm(), 0);
+        assert_eq!(n.staged_plans(), 0);
+        assert_eq!(n.overlap_rings(), 0);
     }
 
     #[test]

@@ -125,6 +125,22 @@ impl Endpoint {
         }
     }
 
+    /// Split-phase issue, post half: `n_ops` WQEs written to the send
+    /// queue with the doorbell deferred. The step-machine calls this when
+    /// a frame stages a plan and yields; the NIC tracks the
+    /// posted-but-unrung depth (see [`Rnic::posted_wqes`]).
+    #[inline]
+    pub fn post_wqes(&self, n_ops: u64) {
+        self.nic.note_posted(n_ops);
+    }
+
+    /// Split-phase issue, ring half: a doorbell (set) covering `n_ops`
+    /// previously posted WQEs rang — or the WQEs died with a crashed CN.
+    #[inline]
+    pub fn ring_posted(&self, n_ops: u64) {
+        self.nic.note_rung_posted(n_ops);
+    }
+
     /// Issue a doorbell batch of verbs to one MN; returns at batch
     /// completion (one RTT + queued service of every op). Results are in
     /// the mutated `ops`.

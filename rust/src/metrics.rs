@@ -171,6 +171,19 @@ pub struct RunReport {
     /// own (cross-transaction coalescing; 0 without the pipelined
     /// scheduler).
     pub coalesced_ops: u64,
+    /// Sync doorbell plans the step-machine staged in-flight (posted with
+    /// the doorbell deferred while the lane yielded); 0 without the
+    /// pipelined scheduler.
+    pub staged_plans: u64,
+    /// High-water mark of WQEs posted but not yet rung on any single CN
+    /// NIC — the in-flight depth the step-machine reached.
+    pub inflight_wqes_hwm: u64,
+    /// Merged doorbell issues that carried >= 2 frames' staged plans
+    /// (intra-transaction stage overlap events).
+    pub overlap_rings: u64,
+    /// Frames' staged plans carried by those merged issues
+    /// (>= 2 x `overlap_rings` whenever any overlap happened).
+    pub overlap_plans: u64,
 }
 
 impl RunReport {
@@ -218,6 +231,26 @@ impl RunReport {
             0.0
         } else {
             self.doorbell_ops as f64 / self.doorbells as f64
+        }
+    }
+
+    /// Mean staged plans per overlap ring (0 when nothing overlapped) —
+    /// how deeply sibling frames' issue points merged.
+    pub fn mean_overlap_plans(&self) -> f64 {
+        if self.overlap_rings == 0 {
+            0.0
+        } else {
+            self.overlap_plans as f64 / self.overlap_rings as f64
+        }
+    }
+
+    /// Fraction of staged plans that shared a merged doorbell issue with
+    /// at least one sibling frame's plan.
+    pub fn overlap_rate(&self) -> f64 {
+        if self.staged_plans == 0 {
+            0.0
+        } else {
+            self.overlap_plans as f64 / self.staged_plans as f64
         }
     }
 }
@@ -332,10 +365,16 @@ mod tests {
             doorbells: 4_000_000,
             doorbell_ops: 10_000_000,
             coalesced_ops: 2_000_000,
+            staged_plans: 1_000_000,
+            inflight_wqes_hwm: 12,
+            overlap_rings: 200_000,
+            overlap_plans: 600_000,
         };
         assert!((r.mtps() - 1.0).abs() < 1e-9);
         assert!((r.doorbells_per_commit() - 4.0).abs() < 1e-9);
         assert!((r.ops_per_doorbell() - 2.5).abs() < 1e-9);
+        assert!((r.mean_overlap_plans() - 3.0).abs() < 1e-9);
+        assert!((r.overlap_rate() - 0.6).abs() < 1e-9);
     }
 
     #[test]

@@ -39,7 +39,7 @@ use crate::txn::api::TxnApi;
 use crate::txn::coordinator::{LotusCoordinator, SharedCluster};
 use crate::txn::doomed::DoomedSet;
 use crate::txn::log;
-use crate::txn::scheduler::FrameScheduler;
+use crate::txn::scheduler::{FrameScheduler, LaneOutcome};
 use crate::txn::timestamp::TimestampOracle;
 use crate::workloads::{RouteCtx, Workload, WorkloadKind};
 use crate::{Error, Result};
@@ -235,14 +235,18 @@ impl Cluster {
             }
             for (i, nic) in self.shared.cn_nics.iter().enumerate() {
                 eprintln!(
-                    "cn{i} nic: ops={} busy={}ns wait={}ns util={:.2} doorbells={} db_ops={} coalesced={}",
+                    "cn{i} nic: ops={} busy={}ns wait={}ns util={:.2} doorbells={} db_ops={} coalesced={} staged={} inflight_hwm={} overlap_rings={} overlap_plans={}",
                     nic.op_count(),
                     nic.busy_ns(),
                     nic.wait_ns(),
                     nic.utilization(cfg.duration_ns),
                     nic.doorbells(),
                     nic.doorbell_ops(),
-                    nic.coalesced_ops()
+                    nic.coalesced_ops(),
+                    nic.staged_plans(),
+                    nic.posted_wqes_hwm(),
+                    nic.overlap_rings(),
+                    nic.overlap_plans()
                 );
             }
         }
@@ -250,13 +254,19 @@ impl Cluster {
         for (k, v) in stats.reasons.lock().unwrap().iter() {
             reasons.insert(k.to_string(), *v);
         }
-        // One-sided doorbell accounting lives on the CN NICs (reset at
-        // the top of the run, so the sums are per-run).
+        // One-sided doorbell + in-flight accounting lives on the CN NICs
+        // (reset at the top of the run, so the sums are per-run).
         let (mut doorbells, mut doorbell_ops, mut coalesced_ops) = (0u64, 0u64, 0u64);
+        let (mut staged_plans, mut overlap_rings, mut overlap_plans) = (0u64, 0u64, 0u64);
+        let mut inflight_wqes_hwm = 0u64;
         for nic in &self.shared.cn_nics {
             doorbells += nic.doorbells();
             doorbell_ops += nic.doorbell_ops();
             coalesced_ops += nic.coalesced_ops();
+            staged_plans += nic.staged_plans();
+            overlap_rings += nic.overlap_rings();
+            overlap_plans += nic.overlap_plans();
+            inflight_wqes_hwm = inflight_wqes_hwm.max(nic.posted_wqes_hwm());
         }
         Ok(RunReport {
             commits: stats.commits.load(Ordering::Relaxed),
@@ -271,6 +281,10 @@ impl Cluster {
             doorbells,
             doorbell_ops,
             coalesced_ops,
+            staged_plans,
+            inflight_wqes_hwm,
+            overlap_rings,
+            overlap_plans,
         })
     }
 
@@ -328,16 +342,31 @@ impl Driver {
         }
     }
 
-    /// Run one transaction; returns `(t_begin, t_end, outcome)` of the
-    /// stream (lane) that ran it.
-    fn step(&mut self, workload: &dyn Workload, route: &RouteCtx<'_>) -> (u64, u64, Result<()>) {
+    /// Pump one transaction on the slowest stream. The step-machine may
+    /// complete several sibling transactions while a lane is yielded at
+    /// an issue point, so every finished transaction's `(t_begin, t_end,
+    /// outcome)` is appended to `out`; the returned `Err` is a fatal
+    /// (run-ending) error only.
+    fn step(
+        &mut self,
+        workload: &dyn Workload,
+        route: &RouteCtx<'_>,
+        out: &mut Vec<LaneOutcome>,
+    ) -> Result<()> {
         match self {
             Driver::Seq(api) => {
                 let t0 = api.now();
                 let res = workload.run_one(api.as_mut(), route);
-                (t0, api.now(), res)
+                let t1 = api.now();
+                match res {
+                    Err(e) if !(e.is_abort() || matches!(e, Error::NodeUnavailable(_))) => Err(e),
+                    r => {
+                        out.push((t0, t1, r));
+                        Ok(())
+                    }
+                }
             }
-            Driver::Pipe(s) => s.step(workload, route),
+            Driver::Pipe(s) => s.step(workload, route, out),
         }
     }
 
@@ -441,6 +470,7 @@ fn coordinator_thread(
         None
     };
 
+    let mut outcomes: Vec<LaneOutcome> = Vec::new();
     loop {
         let now = driver.now();
         if now >= cfg.duration_ns {
@@ -534,34 +564,42 @@ fn coordinator_thread(
             }
         }
 
-        // --- One transaction (the scheduler pumps its slowest lane). ---
+        // --- One pump of the slowest stream (the step-machine may finish
+        // several sibling transactions while lanes yield at issue
+        // points); account every completed transaction. ---
         let route = RouteCtx {
             router: &shared.router,
             cn,
             hybrid,
         };
-        let (t0, t1, res) = driver.step(workload.as_ref(), &route);
-        match res {
-            Ok(()) => {
-                stats.commit();
-                hist.record(t1 - t0);
-                shared.metrics.record_latency(cn, t1 - t0);
-                if cfg.timeline_interval_ns > 0 {
-                    let bucket = (t1 / cfg.timeline_interval_ns) as usize;
-                    if bucket < timeline.len() {
-                        timeline[bucket].fetch_add(1, Ordering::Relaxed);
+        outcomes.clear();
+        if let Err(e) = driver.step(workload.as_ref(), &route, &mut outcomes) {
+            gate.finish(gid);
+            return Err(e);
+        }
+        for (t0, t1, res) in outcomes.drain(..) {
+            match res {
+                Ok(()) => {
+                    stats.commit();
+                    hist.record(t1 - t0);
+                    shared.metrics.record_latency(cn, t1 - t0);
+                    if cfg.timeline_interval_ns > 0 {
+                        let bucket = (t1 / cfg.timeline_interval_ns) as usize;
+                        if bucket < timeline.len() {
+                            timeline[bucket].fetch_add(1, Ordering::Relaxed);
+                        }
                     }
                 }
-            }
-            Err(e) if e.is_abort() => {
-                stats.abort(e.abort_reason().unwrap());
-            }
-            Err(Error::NodeUnavailable(_)) => {
-                stats.abort(crate::AbortReason::OwnerFailed);
-            }
-            Err(e) => {
-                gate.finish(gid);
-                return Err(e);
+                Err(e) if e.is_abort() => {
+                    stats.abort(e.abort_reason().unwrap());
+                }
+                Err(Error::NodeUnavailable(_)) => {
+                    stats.abort(crate::AbortReason::OwnerFailed);
+                }
+                Err(e) => {
+                    gate.finish(gid);
+                    return Err(e);
+                }
             }
         }
     }
@@ -669,7 +707,51 @@ mod tests {
         assert_eq!(legacy.commits, pipe1.commits, "commit accounting differs");
         assert_eq!(legacy.aborts, pipe1.aborts, "abort accounting differs");
         assert_eq!(legacy.p50_ns, pipe1.p50_ns, "latency accounting differs");
+        assert_eq!(legacy.p99_ns, pipe1.p99_ns, "tail accounting differs");
         assert_eq!(legacy.doorbells, pipe1.doorbells, "doorbell accounting differs");
+        assert_eq!(
+            legacy.doorbell_ops, pipe1.doorbell_ops,
+            "doorbell op accounting differs"
+        );
+        // Depth 1 has no siblings: the step-machine must never stage.
+        assert_eq!(pipe1.staged_plans, 0, "depth 1 must not stage plans");
+        assert_eq!(pipe1.overlap_rings, 0);
+    }
+
+    #[test]
+    fn step_machine_overlaps_staged_plans_at_depth_4() {
+        // ISSUE 3: lanes yield at issue points and sibling frames' staged
+        // sync plans merge into shared doorbell rings. By the end of the
+        // run every posted WQE must have been rung (the in-flight gauge
+        // drains to zero).
+        let mut cfg = tiny_cfg();
+        cfg.pipeline_depth = 4;
+        let cluster = Cluster::build(&cfg, WorkloadKind::SmallBank).unwrap();
+        let report = cluster.run(SystemKind::Lotus).unwrap();
+        assert!(report.commits > 100, "commits={}", report.commits);
+        assert!(report.staged_plans > 0, "no plan was ever staged");
+        assert!(
+            report.overlap_rings > 0,
+            "no sibling frames shared a doorbell ring"
+        );
+        assert!(
+            report.overlap_plans >= 2 * report.overlap_rings,
+            "an overlap ring carries at least two staged plans: {} rings / {} plans",
+            report.overlap_rings,
+            report.overlap_plans
+        );
+        assert!(
+            report.inflight_wqes_hwm >= 2,
+            "staging never overlapped WQEs in flight (hwm={})",
+            report.inflight_wqes_hwm
+        );
+        for (i, nic) in cluster.shared.cn_nics.iter().enumerate() {
+            assert_eq!(
+                nic.posted_wqes(),
+                0,
+                "cn{i}: posted-but-unrung WQEs left at end of run"
+            );
+        }
     }
 
     #[test]

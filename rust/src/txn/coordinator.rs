@@ -144,8 +144,8 @@ impl LotusCoordinator {
                 clk: &mut self.clk,
                 // Sequential coordinator: one frame, direct issue, no
                 // sibling frames to conflict with.
-                coalescer: None,
-                siblings: None,
+                lane: 0,
+                sink: None,
             },
             &mut self.frame,
         )

@@ -39,6 +39,6 @@ pub mod timestamp;
 pub use api::{Isolation, TxnApi, TxnCtl};
 pub use coordinator::{LotusCoordinator, SharedCluster};
 pub use doomed::DoomedSet;
-pub use phases::{PhaseCtx, TxnFrame};
-pub use scheduler::{Coalescer, FrameScheduler, SiblingLocks};
+pub use phases::{PhaseCtx, StepSink, TxnFrame};
+pub use scheduler::{Coalescer, FrameScheduler, LaneOutcome, SiblingLocks};
 pub use timestamp::{compose_ts, logical_of, phys_of, TimestampOracle};

@@ -69,8 +69,9 @@ pub fn commit_rw(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame) -> Result<()> {
     }
 
     // Clear the log slot (async — not on the critical path). Under the
-    // pipelined scheduler the plan is parked with the coalescer and rides
-    // a sibling frame's next doorbell instead of ringing its own.
+    // pipelined scheduler the plan is parked with the step-machine's
+    // coalescer and rides a sibling frame's next doorbell ring instead
+    // of ringing its own.
     if log_and_visible && !plans.is_empty() {
         let (log_mn, log_addr) = ctx.cluster.log_slots[ctx.global_id];
         let mut batch = OpBatch::new();

@@ -52,14 +52,10 @@ pub fn acquire(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame, from: usize) -> Res
     // Pipelined scheduler: a sibling frame on this coordinator whose
     // in-flight transaction overlaps this one in virtual time may hold a
     // conflicting lock. That conflict is resolved *locally* — a CPU check
-    // against the sibling lock intervals — and aborts lock-first, before
-    // any bytes leave the CN (not even the remote-lock RPC is sent).
-    let now = ctx.clk.now();
-    let sibling_conflict = ctx
-        .siblings
-        .as_ref()
-        .map(|sib| reqs.iter().any(|&(k, m)| sib.conflicts(k, m, now)))
-        .unwrap_or(false);
+    // through the scheduler sink against the sibling lock intervals —
+    // and aborts lock-first, before any bytes leave the CN (not even the
+    // remote-lock RPC is sent).
+    let sibling_conflict = reqs.iter().any(|&(k, m)| ctx.sibling_conflict(k, m));
     if sibling_conflict {
         unlock::release(ctx, frame);
         return Err(abort(AbortReason::LockConflict));

@@ -25,12 +25,41 @@
 //! — and operates on a [`TxnFrame`] (the per-transaction state: read and
 //! write sets, CVT snapshots, held locks) through a [`PhaseCtx`] (the
 //! coordinator's environment: cluster state, endpoint, virtual clock).
+//!
+//! # The step / yield / resume contract
+//!
 //! Phases **plan** their one-sided ops into [`crate::dm::OpBatch`]es and
-//! hand them to [`PhaseCtx::issue`] / [`PhaseCtx::issue_deferred`]: the
-//! sequential coordinator issues them directly, while the pipelined
-//! [`crate::txn::scheduler::FrameScheduler`] merges plans from multiple
-//! in-flight frames into shared doorbell rings and routes each frame its
-//! own results (cross-transaction doorbell coalescing).
+//! hand them to [`PhaseCtx::issue`] / [`PhaseCtx::issue_deferred`] — the
+//! only points at which a phase touches the fabric. Each phase is
+//! therefore a sequence of *steps* separated by issue points, and the
+//! conduit behind the issue point decides how execution proceeds:
+//!
+//! - **Direct** (`sink: None` — the sequential coordinator, recovery,
+//!   baselines): the planned batch is issued immediately and the call
+//!   returns at the batch's completion, exactly the classic blocking
+//!   behaviour.
+//! - **Step-machine** ([`StepSink`], implemented by the pipelined
+//!   [`crate::txn::scheduler::FrameScheduler`]): the plan's WQEs are
+//!   *posted* to an in-flight table but the doorbell is **not** rung; the
+//!   frame *yields* and the scheduler pumps the next-smallest-clock
+//!   sibling lane. Sibling plans that reach their own issue points inside
+//!   `coalesce_window_ns` of the posted plan join it, and whichever lane
+//!   stops pumping *rings* one merged doorbell set for every compatible
+//!   staged plan. The yielded frame then *resumes*: it receives its own
+//!   ops' results and completion times (never a sibling's), and its
+//!   virtual clock is charged only to its own slowest completion.
+//!
+//! The phase code is identical under both conduits — yield/resume is
+//! entirely the sink's concern — which is what keeps the
+//! `pipeline_depth=0` legacy shell and the depth-1 exact-equivalence
+//! invariant alive as correctness anchors.
+//!
+//! Knobs: `pipeline_depth` (lanes per coordinator thread; 0 = legacy
+//! sequential shell, 1 = scheduler with direct issue — bit-for-bit equal
+//! accounting to the shell — and >= 2 enables the step-machine) and
+//! `coalesce_window_ns` (how far apart, in virtual ns, two frames' issue
+//! points may be and still share a doorbell ring; 0 disables staging and
+//! coalescing entirely).
 
 pub mod commit;
 pub mod lock;
@@ -53,7 +82,29 @@ use crate::sharding::key::LotusKey;
 use crate::store::cvt::CvtSnapshot;
 use crate::txn::api::{Isolation, RecordRef};
 use crate::txn::coordinator::SharedCluster;
-use crate::txn::scheduler::{Coalescer, SiblingLocks};
+
+/// The conduit behind a phase's issue points (see the module docs).
+///
+/// Implemented by the pipelined scheduler's pump context: `issue` may
+/// park the calling frame's plan in an in-flight table and hand the
+/// thread to sibling lanes before the doorbell rings (stage overlap);
+/// `issue_deferred` parks fire-and-forget plans to ride a later ring;
+/// `sibling_conflict` is the lock phase's local check against other
+/// lanes' recent lock intervals.
+pub trait StepSink {
+    /// Issue `batch` on behalf of lane `lane`. Returns the lane's own
+    /// results; `clk` is advanced to the completion of the lane's own
+    /// slowest op (never a merged sibling's).
+    fn issue(&self, lane: usize, batch: OpBatch, clk: &mut VClock) -> crate::Result<BatchResult>;
+
+    /// Park a fire-and-forget plan (commit-log clears) to ride a later
+    /// doorbell; `clk` advances only if the plan is issued inline.
+    fn issue_deferred(&self, lane: usize, batch: OpBatch, clk: &mut VClock) -> crate::Result<()>;
+
+    /// Would acquiring `mode` on `key` at virtual time `now` conflict
+    /// with a sibling lane's transaction that still holds the key then?
+    fn sibling_conflict(&self, lane: usize, key: LotusKey, mode: LockMode, now: u64) -> bool;
+}
 
 /// Per-record transaction state (one entry of the read/write set).
 #[derive(Debug, Clone)]
@@ -287,14 +338,12 @@ pub struct PhaseCtx<'a> {
     /// The executing frame's virtual clock (the lane clock under the
     /// pipelined scheduler, the coordinator clock otherwise).
     pub clk: &'a mut VClock,
-    /// Cross-transaction doorbell coalescer — `Some` under the pipelined
+    /// Lane index within the owning scheduler (0 when sequential).
+    pub lane: usize,
+    /// The step-machine conduit — `Some` under the pipelined
     /// [`crate::txn::scheduler::FrameScheduler`]; `None` issues planned
     /// batches directly (sequential coordinator, recovery, baselines).
-    pub coalescer: Option<&'a Coalescer>,
-    /// Lock intervals of sibling frames on the same scheduler, used by
-    /// the lock phase to abort lock-first conflicts between pipelined
-    /// frames locally — before any bytes leave the CN.
-    pub siblings: Option<SiblingLocks<'a>>,
+    pub sink: Option<&'a dyn StepSink>,
 }
 
 impl PhaseCtx<'_> {
@@ -310,27 +359,36 @@ impl PhaseCtx<'_> {
         self.cluster.cfg.isolation
     }
 
-    /// Issue a phase's planned batch and wait for this frame's results:
-    /// through the [`Coalescer`] when pipelined (the plan merges into a
-    /// shared doorbell ring with sibling frames' plans and only this
-    /// frame's op completions charge `clk`), directly otherwise.
+    /// Issue a phase's planned batch and wait for this frame's results.
+    /// Under the step-machine sink the plan may be *staged* (posted, the
+    /// lane yields, sibling frames pump and merge into the same doorbell
+    /// ring) before the call resumes; only this frame's own op
+    /// completions charge `clk`. Without a sink the batch issues
+    /// directly — the classic blocking phase call.
     pub fn issue(&mut self, batch: OpBatch) -> crate::Result<BatchResult> {
-        match self.coalescer {
-            Some(c) => c.issue(batch, self.ep, &self.cluster.mns, self.clk),
+        match self.sink {
+            Some(sink) => sink.issue(self.lane, batch, self.clk),
             None => batch.issue(self.ep, &self.cluster.mns, self.clk),
         }
     }
 
     /// Issue a fire-and-forget plan off the critical path (remote log
-    /// clears): parked with the [`Coalescer`] to ride a sibling frame's
-    /// next doorbell when pipelined, `issue_async` otherwise.
+    /// clears): parked with the sink to ride a later doorbell when
+    /// pipelined, `issue_async` otherwise.
     pub fn issue_deferred(&mut self, batch: OpBatch) -> crate::Result<()> {
-        match self.coalescer {
-            Some(c) => {
-                c.defer(batch, self.clk.now());
-                Ok(())
-            }
+        match self.sink {
+            Some(sink) => sink.issue_deferred(self.lane, batch, self.clk),
             None => batch.issue_async(self.ep, &self.cluster.mns, self.clk),
+        }
+    }
+
+    /// Lock-phase sibling check: would acquiring `mode` on `key` now
+    /// conflict with another lane's in-flight transaction? Always false
+    /// without a scheduler sink.
+    pub fn sibling_conflict(&self, key: LotusKey, mode: LockMode) -> bool {
+        match self.sink {
+            Some(sink) => sink.sibling_conflict(self.lane, key, mode, self.clk.now()),
+            None => false,
         }
     }
 }

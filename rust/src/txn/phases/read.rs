@@ -6,6 +6,11 @@
 //! [`OpBatch`] and issued as per-MN doorbell batches. Record reads MVCC-
 //! select the largest version `<= T_start`; a newer visible version
 //! aborts an SR read-write transaction.
+//!
+//! Both phases are two-step under the step-machine contract: plan the
+//! round's READs, then hand the plan to [`PhaseCtx::issue`] — under the
+//! pipelined scheduler the frame yields there and sibling frames' plans
+//! may share the doorbell ring (see [`crate::txn::phases`] docs).
 
 use std::sync::Arc;
 

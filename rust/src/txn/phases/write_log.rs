@@ -5,7 +5,10 @@
 //! layout lets one doorbell batch per MN carry both); the metadata commit
 //! log rides in the same batch. After the commit timestamp is drawn,
 //! *Write Visible* overwrites INVISIBLE with the timestamp on every
-//! replica — again one `OpBatch`.
+//! replica — again one `OpBatch`. Each phase issues exactly once through
+//! [`PhaseCtx::issue`] — the step-machine's yield point, where the
+//! pipelined scheduler may merge the plan with sibling frames' doorbell
+//! rings before it rings.
 
 use crate::dm::opbatch::OpBatch;
 use crate::store::cvt::{CellSnapshot, CvtSnapshot, INVISIBLE};

@@ -1,50 +1,72 @@
 //! The pipelined frame scheduler: `pipeline_depth` concurrent
-//! [`TxnFrame`]s per coordinator thread, with cross-transaction doorbell
-//! coalescing.
+//! [`TxnFrame`]s per coordinator thread, with a split-phase **step-machine**
+//! that overlaps sibling frames' protocol stages and coalesces their
+//! doorbells.
 //!
 //! The sequential [`crate::txn::coordinator::LotusCoordinator`] runs one
 //! transaction at a time and stalls a full RTT at every phase boundary.
 //! The paper's CNs keep their RNICs busy by overlapping many in-flight
 //! requests ("threads x coroutines"); the [`FrameScheduler`] models that:
 //! one OS thread owns `depth` **lanes**, each a full transaction stream
-//! (frame + virtual clock) sharing the coordinator's endpoint, RNG and
+//! (frame + virtual clock + RNG) sharing the coordinator's endpoint and
 //! RPC slot. The scheduler always pumps the lane with the smallest
-//! virtual clock, so lane transactions *overlap in virtual time* — while
-//! lane A's Read Data phase occupies `[t, t+RTT]`, lane B's Lock phase
-//! runs at `t+δ` — and all lanes charge the same simulated NICs, so
-//! saturation effects of the deeper pipeline are faithful.
+//! virtual clock, so lane transactions *overlap in virtual time* — and
+//! all lanes charge the same simulated NICs, so saturation effects of the
+//! deeper pipeline are faithful.
 //!
-//! Three mechanisms fall out of the lane model:
+//! # The step-machine (intra-transaction stage overlap)
 //!
-//! - **Cross-transaction doorbell coalescing** ([`Coalescer`]): phases
-//!   *plan* their one-sided ops into [`OpBatch`]es and hand them to the
-//!   scheduler's conduit ([`crate::txn::phases::PhaseCtx::issue`]). The
-//!   coalescer merges plans that reach an issue point within
-//!   `coalesce_window_ns` of each other into one [`MergedBatch`] —
-//!   deferred fire-and-forget plans (commit-log clears) park and ride a
-//!   later frame's doorbell — and issues each per-MN group as **one**
-//!   doorbell via the completion-driven
-//!   [`Endpoint::doorbell_timed`][crate::dm::Endpoint::doorbell_timed]
-//!   mode, so each frame's clock is charged only for its own ops'
-//!   completions.
-//! - **Sibling lock-first aborts** ([`SiblingLocks`]): lanes are pumped
-//!   one transaction at a time (wall-clock), so a conflict between two
-//!   lanes whose transactions overlap in *virtual* time would not be
-//!   visible in the shared lock table. The scheduler therefore keeps the
-//!   lock intervals of recently pumped lane transactions; the lock phase
-//!   checks them first and aborts conflicting siblings locally — a CPU
-//!   compare on the CN, before a single byte (or remote-lock RPC) leaves
-//!   the node.
-//! - **Parallel per-MN doorbells**: the merged issue rings every target
-//!   MN at the same virtual instant (a coordinator posts to all QPs and
-//!   then polls completions), where the sequential path issues per-MN
-//!   groups back to back. This is part of the pipelined coordinator's
-//!   latency win and is exactly what "the RNIC stays busy" means.
+//! Phases *plan* their one-sided ops into [`OpBatch`]es and hand them to
+//! the conduit ([`crate::txn::phases::PhaseCtx::issue`], backed here by
+//! [`StepSink`]). Where the transaction-granular scheduler of PR 2
+//! blocked a lane from its doorbell ring to the last completion, the
+//! step-machine splits every issue point into **post** and **ring**
+//! halves:
 //!
-//! With `depth == 1` there are no siblings and no coalescer: the
-//! scheduler degenerates to the sequential coordinator's exact issue
-//! order, clock charges and RNG stream (asserted by the
-//! `pipeline_depth=1` invariant test in [`crate::sim`]).
+//! 1. **Post / yield** — the plan's WQEs are staged in the scheduler's
+//!    in-flight table ([`Flight::Staged`]; the CN NIC tracks the
+//!    posted-but-unrung depth) and the lane *yields*.
+//! 2. **Pump** — the scheduler immediately pumps the next-smallest-clock
+//!    idle lane. That lane runs until *its* first issue point, stages its
+//!    own plan, and pumps in turn — so a frame's lock RPC, CVT read and
+//!    log write overlap in virtual time with sibling frames' phases, and
+//!    more plans land inside `coalesce_window_ns` than transaction-level
+//!    pumping could ever pair.
+//! 3. **Ring / resume** — whichever lane finds no sibling left inside its
+//!    window rings **one merged doorbell set** for every staged plan
+//!    within `coalesce_window_ns` of its own post time (plus every parked
+//!    fire-and-forget plan riding along). Per-op completion times are
+//!    routed back through the in-flight table ([`Flight::Done`], keyed by
+//!    doorbell completion time); each suspended lane resumes with *its
+//!    own* results and charges its clock only to its own slowest
+//!    completion.
+//!
+//! Staged plans outside the initiator's window stay staged and ring at
+//! their own post times when their owner resumes — a lane's merge wait is
+//! bounded by the window, never by a sibling's whole transaction.
+//!
+//! Two further mechanisms ride on the lane model:
+//!
+//! - **Fire-and-forget parking** ([`Coalescer`]): deferred plans
+//!   (commit-log clears) park and ride a later ring; stale ones are
+//!   rung out by [`Coalescer::flush_stale`] / [`FrameScheduler::finish`]
+//!   exactly once.
+//! - **Sibling lock-first aborts** ([`SiblingLocks`]): conflicts between
+//!   lanes whose transactions overlap in *virtual* time are detected
+//!   against recorded lock intervals and abort locally — a CPU compare on
+//!   the CN, before a single byte (or the remote-lock RPC) leaves the
+//!   node. A *suspended* lane additionally holds its real lock-table
+//!   locks while siblings pump, so a nested lane can also abort on a
+//!   physical conflict whose virtual-time order is inverted (the holder
+//!   acquired "later" in virtual time). That abort is conservative —
+//!   real shared memory needs real mutual exclusion while the holder is
+//!   suspended — and the inversion window is bounded by the pump chain
+//!   (~`coalesce_window_ns` + one lock phase).
+//!
+//! With `depth == 1` there are no siblings, no coalescer and no staging:
+//! every issue takes the direct path, reproducing the sequential
+//! coordinator's exact issue order, clock charges and RNG stream
+//! (asserted by the `pipeline_depth=1` invariant test in [`crate::sim`]).
 
 use std::cell::RefCell;
 use std::sync::Arc;
@@ -57,10 +79,28 @@ use crate::lock::table::LockMode;
 use crate::sharding::key::LotusKey;
 use crate::txn::api::{RecordRef, TxnApi, TxnCtl};
 use crate::txn::coordinator::SharedCluster;
-use crate::txn::phases::{self, PhaseCtx, TxnFrame, TxnRecord};
+use crate::txn::phases::{self, PhaseCtx, StepSink, TxnFrame, TxnRecord};
 use crate::util::Xoshiro256;
 use crate::workloads::{RouteCtx, Workload};
-use crate::Result;
+use crate::{Error, Result};
+
+/// One pumped transaction's accounting: `(t_begin, t_end, outcome)` on
+/// the lane clock that ran it. A fatal (non-abort) error never appears
+/// here — it fails the whole run instead.
+pub type LaneOutcome = (u64, u64, Result<()>);
+
+/// Defensive bound on nested pumps per yield point: a yield may pump the
+/// same sibling several times (short transactions inside one window), but
+/// a failure of virtual time to advance must not spin the thread.
+const MAX_PUMPS_PER_YIELD: usize = 64;
+
+/// Add `n` ops to `mn`'s tally in a small per-MN count list.
+fn bump_mn(tally: &mut Vec<(usize, u64)>, mn: usize, n: u64) {
+    match tally.iter_mut().find(|(m, _)| *m == mn) {
+        Some((_, c)) => *c += n,
+        None => tally.push((mn, n)),
+    }
+}
 
 /// Decide whether a doorbell to `mn` at virtual time `t` can ride the
 /// last doorbell rung to that MN (within `window`), or must ring its own
@@ -78,11 +118,11 @@ fn ride_or_ring(last_ring: &mut Vec<u64>, mn: usize, t: u64, window: u64) -> boo
     }
 }
 
-/// Per-scheduler doorbell coalescer: merges the planned [`OpBatch`]es of
-/// frames that reach an issue point within `coalesce_window_ns` of each
-/// other into shared doorbell rings (see the module docs). One instance
-/// per [`FrameScheduler`]; single-threaded by construction (interior
-/// mutability only so the shared-reference [`PhaseCtx`] can reach it).
+/// Per-scheduler doorbell coalescer: merges staged sync plans and parked
+/// fire-and-forget plans into shared doorbell rings (see the module
+/// docs). One instance per [`FrameScheduler`]; single-threaded by
+/// construction (interior mutability only so the shared-reference
+/// [`StepSink`] can reach it).
 pub struct Coalescer {
     window_ns: u64,
     state: RefCell<CoalesceState>,
@@ -125,31 +165,34 @@ impl Coalescer {
         self.state.borrow_mut().pending.push((plan, now));
     }
 
-    /// Issue a frame's planned batch, merged with every parked plan that
-    /// is not in this frame's virtual future (beyond the window). The
-    /// caller's clock advances only to the completion of **its own** ops;
-    /// parked riders are fire-and-forget.
-    pub fn issue(
+    /// Ring one merged doorbell set carrying every staged sync plan in
+    /// `plans` (`(owner tag, plan, post time)`) plus every parked
+    /// fire-and-forget plan that is not in the ring's virtual future
+    /// beyond the window. The ring fires at the latest post time; per-MN
+    /// groups are issued completion-driven, and each owner gets back its
+    /// own [`BatchResult`] plus the completion time of its slowest op —
+    /// the only amount its clock must advance by.
+    pub fn ring(
         &self,
-        batch: OpBatch,
+        mut plans: Vec<(usize, OpBatch, u64)>,
         ep: &Endpoint,
         mns: &[Arc<MemNode>],
-        clk: &mut VClock,
-    ) -> Result<BatchResult> {
-        let t = clk.now();
+    ) -> Result<Vec<(usize, BatchResult, u64)>> {
+        // Earlier posts execute first within shared doorbell groups.
+        plans.sort_by_key(|p| (p.2, p.0));
+        let t_ring = plans.iter().map(|p| p.2).max().unwrap_or(0);
+        let n_sync = plans.iter().filter(|p| !p.1.is_empty()).count() as u64;
         let mut st = self.state.borrow_mut();
         let mut merged = MergedBatch::new();
-        // Per-MN op counts of absorbed riders (metrics only).
+        // Parked riders first: their WQEs were posted earlier, so they
+        // execute ahead of the sync plans in shared groups.
         let mut rider_mns: Vec<(usize, u64)> = Vec::new();
         let mut kept: Vec<(OpBatch, u64)> = Vec::new();
         for (plan, pt) in st.pending.drain(..) {
-            if pt <= t.saturating_add(self.window_ns) {
+            if pt <= t_ring.saturating_add(self.window_ns) {
                 for mn in plan.mns() {
                     let n = plan.group_len(mn) as u64;
-                    match rider_mns.iter_mut().find(|(m, _)| *m == mn) {
-                        Some((_, c)) => *c += n,
-                        None => rider_mns.push((mn, n)),
-                    }
+                    bump_mn(&mut rider_mns, mn, n);
                 }
                 merged.absorb(plan);
             } else {
@@ -157,38 +200,63 @@ impl Coalescer {
             }
         }
         st.pending = kept;
-        if batch.is_empty() && merged.n_plans() == 0 {
-            // Nothing to do at all: stay free like the direct path.
-            drop(st);
-            return batch.issue(ep, mns, clk);
+        // Sync plans in post order. The first plan touching an MN "pays"
+        // that MN's doorbell; later plans' ops on it are coalesced riders.
+        let mut payer_mns: Vec<usize> = Vec::new();
+        let mut extra_mns: Vec<(usize, u64)> = Vec::new();
+        let mut slices: Vec<(usize, usize)> = Vec::with_capacity(plans.len());
+        for (owner, plan, _t) in plans {
+            for mn in plan.mns() {
+                let n = plan.group_len(mn) as u64;
+                if payer_mns.contains(&mn) {
+                    bump_mn(&mut extra_mns, mn, n);
+                } else {
+                    payer_mns.push(mn);
+                }
+            }
+            slices.push((owner, merged.absorb(plan)));
         }
-        let me = merged.absorb(batch);
-        ep.gate_sync(clk);
+        if merged.is_empty() {
+            return Ok(slices
+                .into_iter()
+                .map(|(owner, _)| (owner, BatchResult::empty(), 0))
+                .collect());
+        }
+        if n_sync >= 2 {
+            ep.nic.note_overlap(n_sync);
+        }
+        ep.gate_sync(&VClock(t_ring));
         let window = self.window_ns;
         let st_ref = &mut *st;
         let last_ring = &mut st_ref.last_ring;
         let mut rode: Vec<usize> = Vec::new();
-        let mut res = merged.issue_timed(ep, mns, t, |mn| {
-            let ride = ride_or_ring(last_ring, mn, t, window);
+        let mut res = merged.issue_timed(ep, mns, t_ring, |mn| {
+            let ride = ride_or_ring(last_ring, mn, t_ring, window);
             if ride {
                 rode.push(mn);
             }
             ride
         })?;
-        // Parked ops that joined a doorbell rung *for this frame's plan*
-        // are coalesced riders; ride-groups were already counted by the
+        // Ops that joined a doorbell rung for a payer plan without paying
+        // the ring themselves are coalesced riders; whole groups that
+        // extended an earlier doorbell were already counted by the
         // endpoint itself.
-        let rider_ops: u64 = rider_mns
+        let extra: u64 = rider_mns
             .iter()
-            .filter(|(mn, _)| !rode.contains(mn))
+            .chain(extra_mns.iter())
+            .filter(|(mn, _)| payer_mns.contains(mn) && !rode.contains(mn))
             .map(|&(_, n)| n)
             .sum();
-        if rider_ops > 0 {
-            ep.nic.note_riders(rider_ops);
+        if extra > 0 {
+            ep.nic.note_riders(extra);
         }
-        let (mine, done) = res.take(me);
-        clk.catch_up(done);
-        Ok(mine)
+        Ok(slices
+            .into_iter()
+            .map(|(owner, s)| {
+                let (r, t) = res.take(s);
+                (owner, r, t)
+            })
+            .collect())
     }
 
     /// Ring out parked plans whose window expired before `horizon` (the
@@ -198,7 +266,10 @@ impl Coalescer {
         self.flush_inner(ep, mns, Some(horizon))
     }
 
-    /// Ring out every parked plan (orderly scheduler shutdown).
+    /// Ring out every parked plan (orderly scheduler shutdown). A plan
+    /// leaves `pending` the moment it is drained into the merged flush
+    /// batch, so end-of-run flushes issue each parked plan exactly once
+    /// no matter how often the flush paths run afterwards.
     pub fn flush_all(&self, ep: &Endpoint, mns: &[Arc<MemNode>]) -> Result<()> {
         self.flush_inner(ep, mns, None)
     }
@@ -291,11 +362,26 @@ enum LanePhase {
     Executed,
 }
 
-/// One concurrent transaction stream within a scheduler.
+/// One concurrent transaction stream within a scheduler. Each lane owns
+/// its frame, virtual clock and workload RNG so a suspended lane's state
+/// is untouched while siblings pump (lane 0's RNG stream equals the
+/// sequential coordinator's, anchoring the depth-1 equivalence).
 struct Lane {
     frame: TxnFrame,
     clk: VClock,
+    rng: Xoshiro256,
     phase: LanePhase,
+}
+
+/// In-flight state of one lane's issue point (the step-machine's table).
+enum Flight {
+    /// No plan in flight.
+    Idle,
+    /// WQEs posted, doorbell not yet rung: `(plan, post virtual time)`.
+    Staged(OpBatch, u64),
+    /// Doorbell rung; results await the owner's resume:
+    /// `(results, completion time of the owner's slowest op)`.
+    Done(BatchResult, u64),
 }
 
 /// `pipeline_depth` concurrent transaction streams multiplexed onto one
@@ -308,18 +394,25 @@ pub struct FrameScheduler {
     slot: usize,
     global_id: usize,
     ep: Endpoint,
-    rng: Xoshiro256,
-    lanes: Vec<Lane>,
+    /// Lanes behind `RefCell`s: a lane suspended at an issue point keeps
+    /// its borrow on the pump stack, which is exactly what excludes it
+    /// from the idle-lane scan.
+    lanes: Vec<RefCell<Lane>>,
     /// Per lane: lock intervals of its recently pumped transactions
     /// (pruned once every lane's clock has passed them).
-    lock_logs: Vec<Vec<LockStamp>>,
+    lock_logs: RefCell<Vec<Vec<LockStamp>>>,
+    /// The step-machine's in-flight table, one slot per lane.
+    inflight: RefCell<Vec<Flight>>,
+    /// Transactions completed by nested pumps inside the current step.
+    done: RefCell<Vec<LaneOutcome>>,
     coalescer: Option<Coalescer>,
 }
 
 impl FrameScheduler {
     /// Scheduler for coordinator `slot` on CN `cn` with `depth` lanes.
-    /// Coalescing activates for `depth >= 2` when `coalesce_window_ns`
-    /// is non-zero; `depth == 1` reproduces the sequential coordinator.
+    /// The step-machine (staging + coalescing) activates for `depth >= 2`
+    /// when `coalesce_window_ns` is non-zero; `depth == 1` reproduces the
+    /// sequential coordinator exactly.
     pub fn new(cluster: Arc<SharedCluster>, cn: usize, slot: usize, global_id: usize) -> Self {
         let depth = cluster.cfg.pipeline_depth.max(1);
         let window = cluster.cfg.coalesce_window_ns;
@@ -330,15 +423,22 @@ impl FrameScheduler {
             slot,
             global_id,
             ep,
-            rng: Xoshiro256::new(seed),
             lanes: (0..depth)
-                .map(|_| Lane {
-                    frame: TxnFrame::new(),
-                    clk: VClock::zero(),
-                    phase: LanePhase::Idle,
+                .map(|i| {
+                    RefCell::new(Lane {
+                        frame: TxnFrame::new(),
+                        clk: VClock::zero(),
+                        // Lane 0 keeps the sequential coordinator's seed.
+                        rng: Xoshiro256::new(
+                            seed ^ (i as u64).wrapping_mul(0xA076_1D64_78BD_642F),
+                        ),
+                        phase: LanePhase::Idle,
+                    })
                 })
                 .collect(),
-            lock_logs: (0..depth).map(|_| Vec::new()).collect(),
+            lock_logs: RefCell::new((0..depth).map(|_| Vec::new()).collect()),
+            inflight: RefCell::new((0..depth).map(|_| Flight::Idle).collect()),
+            done: RefCell::new(Vec::new()),
             coalescer: (depth > 1 && window > 0).then(|| Coalescer::new(window)),
             cluster,
         }
@@ -355,7 +455,7 @@ impl FrameScheduler {
     pub fn now(&self) -> u64 {
         self.lanes
             .iter()
-            .map(|l| l.clk.now())
+            .map(|l| l.borrow().clk.now())
             .min()
             .unwrap_or(u64::MAX)
     }
@@ -366,21 +466,28 @@ impl FrameScheduler {
     }
 
     /// Fail-stop: every lane drops its in-flight state without releasing
-    /// locks (recovery owns them, paper §6). Parked fire-and-forget
-    /// plans are WQEs posted but never rung — they die with the CN; a
-    /// committed transaction's un-cleared log slot is completed
-    /// idempotently by recovery's log scan.
+    /// locks (recovery owns them, paper §6). Staged plans are WQEs posted
+    /// but never rung — they die with the CN (the posted gauge is
+    /// drained); a committed transaction's un-cleared log slot is
+    /// completed idempotently by recovery's log scan.
     pub fn crash(&mut self) {
         if let Some(c) = &self.coalescer {
             c.discard_pending();
         }
-        for lane in &mut self.lanes {
-            lane.frame.crash();
-            lane.phase = LanePhase::Idle;
+        for f in self.inflight.borrow_mut().iter_mut() {
+            if let Flight::Staged(b, _) = std::mem::replace(f, Flight::Idle) {
+                self.ep.ring_posted(b.len() as u64);
+            }
         }
-        for log in &mut self.lock_logs {
+        for lane in &self.lanes {
+            let mut l = lane.borrow_mut();
+            l.frame.crash();
+            l.phase = LanePhase::Idle;
+        }
+        for log in self.lock_logs.borrow_mut().iter_mut() {
             log.clear();
         }
+        self.done.borrow_mut().clear();
     }
 
     /// Orderly end of run: ring out every parked plan so no planned op
@@ -394,79 +501,156 @@ impl FrameScheduler {
 
     /// Jump every lane's clock forward (crash restart).
     pub fn skip_to(&mut self, t_ns: u64) {
-        for lane in &mut self.lanes {
-            lane.clk.catch_up(t_ns);
+        for lane in &self.lanes {
+            lane.borrow_mut().clk.catch_up(t_ns);
         }
     }
 
-    fn min_lane(&self) -> usize {
-        let mut li = 0;
-        for i in 1..self.lanes.len() {
-            if self.lanes[i].clk.now() < self.lanes[li].clk.now() {
-                li = i;
+    /// The idle (not currently pumping) lane with the smallest clock.
+    /// Lanes suspended at an issue point hold their `RefCell` borrow on
+    /// the pump stack and are skipped automatically.
+    fn idle_min_lane(&self) -> Option<(usize, u64)> {
+        let mut best: Option<(usize, u64)> = None;
+        for (i, cell) in self.lanes.iter().enumerate() {
+            if let Ok(l) = cell.try_borrow() {
+                let t = l.clk.now();
+                let better = match best {
+                    None => true,
+                    Some((_, bt)) => t < bt,
+                };
+                if better {
+                    best = Some((i, t));
+                }
             }
         }
-        li
+        best
     }
 
-    /// Pump the slowest lane through one transaction. Returns the lane's
-    /// clock before and after, plus the transaction outcome — exactly the
-    /// accounting the run loop needs for latency/commit bookkeeping.
+    /// Post a lane's plan: WQEs staged, doorbell deferred (yield point).
+    fn stage(&self, lane: usize, batch: OpBatch, t_post: u64) {
+        self.ep.post_wqes(batch.len() as u64);
+        self.inflight.borrow_mut()[lane] = Flight::Staged(batch, t_post);
+    }
+
+    /// Has some sibling's ring already completed this lane's plan?
+    fn is_done(&self, lane: usize) -> bool {
+        matches!(self.inflight.borrow()[lane], Flight::Done(..))
+    }
+
+    /// Take a resumed lane's results out of the in-flight table.
+    fn take_done(&self, lane: usize) -> (BatchResult, u64) {
+        match std::mem::replace(&mut self.inflight.borrow_mut()[lane], Flight::Idle) {
+            Flight::Done(res, t_done) => (res, t_done),
+            _ => unreachable!("lane resumed without a completed doorbell"),
+        }
+    }
+
+    /// Ring every staged plan within `coalesce_window_ns` of the
+    /// initiator's post time `t_init` as one merged doorbell set (plus
+    /// parked riders), and file each owner's results as [`Flight::Done`].
+    /// Staged plans outside the window stay staged — their owners ring
+    /// them at their own post times when they resume.
+    fn ring_staged(&self, c: &Coalescer, t_init: u64) -> Result<()> {
+        let window = c.window_ns();
+        let mut plans: Vec<(usize, OpBatch, u64)> = Vec::new();
+        {
+            let mut infl = self.inflight.borrow_mut();
+            for (i, f) in infl.iter_mut().enumerate() {
+                let take = matches!(*f, Flight::Staged(_, t) if t.abs_diff(t_init) <= window);
+                if take {
+                    if let Flight::Staged(b, t) = std::mem::replace(f, Flight::Idle) {
+                        plans.push((i, b, t));
+                    }
+                }
+            }
+        }
+        if plans.is_empty() {
+            return Ok(());
+        }
+        let posted: u64 = plans.iter().map(|(_, b, _)| b.len() as u64).sum();
+        let results = c.ring(plans, &self.ep, &self.cluster.mns)?;
+        self.ep.ring_posted(posted);
+        let mut infl = self.inflight.borrow_mut();
+        for (lane, res, t_done) in results {
+            infl[lane] = Flight::Done(res, t_done);
+        }
+        Ok(())
+    }
+
+    /// Pump the slowest lane through one transaction (nested pumps may
+    /// complete sibling transactions along the way). Outcomes of every
+    /// transaction finished during the step — `(t_begin, t_end, result)`
+    /// per transaction — are appended to `out`; the returned `Err` is a
+    /// fatal (non-abort) error only.
     pub fn step(
         &mut self,
         workload: &dyn Workload,
         route: &RouteCtx<'_>,
-    ) -> (u64, u64, Result<()>) {
-        let li = self.min_lane();
-        let t0 = self.lanes[li].clk.now();
+        out: &mut Vec<LaneOutcome>,
+    ) -> Result<()> {
+        let (li, t0) = self
+            .idle_min_lane()
+            .expect("scheduler has at least one lane");
         // Ring out parked plans no doorbell came along for, and drop
         // sibling lock intervals every lane has virtually passed.
         if let Some(c) = &self.coalescer {
-            if let Err(e) = c.flush_stale(&self.ep, &self.cluster.mns, t0) {
-                return (t0, t0, Err(e));
-            }
+            c.flush_stale(&self.ep, &self.cluster.mns, t0)?;
         }
-        for log in &mut self.lock_logs {
+        for log in self.lock_logs.borrow_mut().iter_mut() {
             log.retain(|s| s.until > t0);
         }
         let res = {
-            let Self {
-                cluster,
-                ep,
-                rng,
-                lanes,
-                lock_logs,
-                coalescer,
-                cn,
-                slot,
-                global_id,
-            } = self;
-            let mut api = LaneApi {
-                cluster: &*cluster,
-                ep: &*ep,
-                rng,
-                lane: &mut lanes[li],
-                lane_idx: li,
-                logs: &*lock_logs,
-                coalescer: coalescer.as_ref(),
-                cn: *cn,
-                slot: *slot,
-                global_id: *global_id,
+            let pump = PumpCtx {
+                sched: &*self,
+                workload,
+                route,
             };
-            workload.run_one(&mut api, route)
+            pump.pump_lane(li)
         };
-        let t1 = self.lanes[li].clk.now();
+        out.append(&mut self.done.borrow_mut());
+        res
+    }
+}
+
+/// One [`FrameScheduler::step`] invocation's pump context: the conduit
+/// lanes issue through, carrying the workload reference so a yielding
+/// lane can hand the thread to a sibling.
+struct PumpCtx<'a> {
+    sched: &'a FrameScheduler,
+    workload: &'a dyn Workload,
+    route: &'a RouteCtx<'a>,
+}
+
+impl PumpCtx<'_> {
+    /// Run lane `li` through one full transaction and record its outcome.
+    /// Returns `Err` only for fatal (run-ending) errors.
+    fn pump_lane(&self, li: usize) -> Result<()> {
+        let sched = self.sched;
+        let mut lane = sched.lanes[li]
+            .try_borrow_mut()
+            .expect("pumped lane is already on the pump stack");
+        let t0 = lane.clk.now();
+        let res = {
+            let mut api = LaneApi {
+                pump: self,
+                lane: &mut *lane,
+                li,
+            };
+            self.workload.run_one(&mut api, self.route)
+        };
+        let t1 = lane.clk.now();
         // Remember a *committed* transaction's lock set for the sibling
         // conflict check: any lane pumped later but virtually overlapping
         // `[t0, t1]` must see these as held (the lock set is a pure
         // function of the still-intact record set). Aborted transactions
         // are not stamped — they released whatever they briefly held, and
         // stamping them would cascade phantom aborts between siblings.
-        if self.lanes.len() > 1 && res.is_ok() {
-            let frame = &self.lanes[li].frame;
+        if sched.lanes.len() > 1 && res.is_ok() {
+            let frame = &lane.frame;
             if !frame.read_only && !frame.records.is_empty() {
-                for (key, mode) in phases::lock::requests(&self.cluster, frame, 0) {
-                    self.lock_logs[li].push(LockStamp {
+                let mut logs = sched.lock_logs.borrow_mut();
+                for (key, mode) in phases::lock::requests(&sched.cluster, frame, 0) {
+                    logs[li].push(LockStamp {
                         key,
                         mode,
                         until: t1,
@@ -474,46 +658,112 @@ impl FrameScheduler {
                 }
             }
         }
-        (t0, t1, res)
+        drop(lane);
+        match res {
+            Err(e) if !(e.is_abort() || matches!(e, Error::NodeUnavailable(_))) => Err(e),
+            r => {
+                sched.done.borrow_mut().push((t0, t1, r));
+                Ok(())
+            }
+        }
+    }
+}
+
+impl StepSink for PumpCtx<'_> {
+    fn issue(&self, lane: usize, batch: OpBatch, clk: &mut VClock) -> Result<BatchResult> {
+        let sched = self.sched;
+        let mns = &sched.cluster.mns;
+        // Depth 1 or coalescing disabled: the exact sequential path.
+        let Some(c) = &sched.coalescer else {
+            return batch.issue(&sched.ep, mns, clk);
+        };
+        if batch.is_empty() {
+            if c.pending_plans() == 0 {
+                return batch.issue(&sched.ep, mns, clk); // free
+            }
+            // Ring parked riders out now; the empty caller stays free
+            // (its own completion time is zero).
+            let mut rung = c.ring(vec![(lane, batch, clk.now())], &sched.ep, mns)?;
+            let (_, res, t_done) = rung.pop().expect("ring returns the caller's slice");
+            clk.catch_up(t_done);
+            return Ok(res);
+        }
+        // Post / yield.
+        let t_post = clk.now();
+        sched.stage(lane, batch, t_post);
+        // Pump siblings that are behind this frame's window; one of them
+        // may ring our plan as part of its own merged issue.
+        let window = c.window_ns();
+        let mut pumps = 0usize;
+        while !sched.is_done(lane) {
+            let Some((j, tj)) = sched.idle_min_lane() else {
+                break;
+            };
+            if tj > t_post.saturating_add(window) {
+                break;
+            }
+            self.pump_lane(j)?;
+            pumps += 1;
+            if pumps >= MAX_PUMPS_PER_YIELD {
+                break;
+            }
+        }
+        // Nobody rang our doorbell: ring now, merging every staged plan
+        // within the window plus parked fire-and-forget riders.
+        if !sched.is_done(lane) {
+            sched.ring_staged(c, t_post)?;
+        }
+        // Resume.
+        let (res, t_done) = sched.take_done(lane);
+        clk.catch_up(t_done);
+        Ok(res)
+    }
+
+    fn issue_deferred(&self, _lane: usize, batch: OpBatch, clk: &mut VClock) -> Result<()> {
+        match &self.sched.coalescer {
+            Some(c) => {
+                c.defer(batch, clk.now());
+                Ok(())
+            }
+            None => batch.issue_async(&self.sched.ep, &self.sched.cluster.mns, clk),
+        }
+    }
+
+    fn sibling_conflict(&self, lane: usize, key: LotusKey, mode: LockMode, now: u64) -> bool {
+        let logs = self.sched.lock_logs.borrow();
+        if logs.len() <= 1 {
+            return false;
+        }
+        SiblingLocks::new(&logs, lane).conflicts(key, mode, now)
     }
 }
 
 /// The [`TxnApi`]/[`TxnCtl`] view the workload drives for one pumped
-/// lane: the lane's frame and clock, the scheduler's shared endpoint,
-/// RNG, coalescer and sibling lock intervals.
+/// lane: the lane's frame, clock and RNG, plus the pump context the
+/// lane's issue points yield through.
 struct LaneApi<'a> {
-    cluster: &'a Arc<SharedCluster>,
-    ep: &'a Endpoint,
-    rng: &'a mut Xoshiro256,
+    pump: &'a PumpCtx<'a>,
     lane: &'a mut Lane,
-    lane_idx: usize,
-    logs: &'a [Vec<LockStamp>],
-    coalescer: Option<&'a Coalescer>,
-    cn: usize,
-    slot: usize,
-    global_id: usize,
+    li: usize,
 }
 
 impl LaneApi<'_> {
     /// Split-borrow into a phase context + the lane's frame.
     fn parts(&mut self) -> (PhaseCtx<'_>, &mut TxnFrame) {
-        let lane = &mut *self.lane;
+        let sched = self.pump.sched;
+        let Lane { frame, clk, .. } = &mut *self.lane;
         (
             PhaseCtx {
-                cluster: self.cluster,
-                cn: self.cn,
-                slot: self.slot,
-                global_id: self.global_id,
-                ep: self.ep,
-                clk: &mut lane.clk,
-                coalescer: self.coalescer,
-                siblings: if self.logs.len() > 1 {
-                    Some(SiblingLocks::new(self.logs, self.lane_idx))
-                } else {
-                    None
-                },
+                cluster: &*sched.cluster,
+                cn: sched.cn,
+                slot: sched.slot,
+                global_id: sched.global_id,
+                ep: &sched.ep,
+                clk,
+                lane: self.li,
+                sink: Some(self.pump),
             },
-            &mut lane.frame,
+            frame,
         )
     }
 }
@@ -601,12 +851,9 @@ impl TxnCtl for LaneApi<'_> {
 
 impl TxnApi for LaneApi<'_> {
     fn begin(&mut self, read_only: bool) {
-        phases::begin(
-            self.cluster,
-            &mut self.lane.clk,
-            &mut self.lane.frame,
-            read_only,
-        );
+        let sched = self.pump.sched;
+        let Lane { frame, clk, .. } = &mut *self.lane;
+        phases::begin(&sched.cluster, clk, frame, read_only);
         self.lane.phase = LanePhase::Building;
     }
 
@@ -619,11 +866,11 @@ impl TxnApi for LaneApi<'_> {
     }
 
     fn rng(&mut self) -> &mut Xoshiro256 {
-        self.rng
+        &mut self.lane.rng
     }
 
     fn cn(&self) -> usize {
-        self.cn
+        self.pump.sched.cn
     }
 
     fn attach_gate(&mut self, _gate: Arc<TimeGate>, _gid: usize) {
@@ -653,7 +900,7 @@ mod tests {
     }
 
     #[test]
-    fn deferred_plan_rides_the_next_sync_doorbell() {
+    fn deferred_plan_rides_the_next_staged_ring() {
         let (mns, ep) = setup();
         let r = mns[0].register(64).unwrap();
         let c = Coalescer::new(5_000);
@@ -664,12 +911,13 @@ mod tests {
         c.defer(park, 100);
         assert_eq!(c.pending_plans(), 1);
 
-        // ...and another frame's read batch comes along within the window.
-        let mut clk = VClock(600);
+        // ...and another frame's staged read rings within the window.
         let mut sync = OpBatch::new();
         let tag = sync.read(0, r.base, 8);
-        let res = c.issue(sync, &ep, &mns, &mut clk).unwrap();
+        let mut out = c.ring(vec![(0, sync, 600)], &ep, &mns).unwrap();
+        let (owner, res, done) = out.pop().unwrap();
 
+        assert_eq!(owner, 0);
         assert_eq!(c.pending_plans(), 0, "the parked plan rode along");
         assert_eq!(ep.nic.doorbells(), 1, "one merged ring, not two");
         assert_eq!(ep.nic.coalesced_ops(), 1, "the parked write was a rider");
@@ -677,7 +925,40 @@ mod tests {
         // doorbell group.
         assert_eq!(res.read_buf(tag), &7u64.to_le_bytes()[..]);
         assert_eq!(mns[0].load_u64(r.base).unwrap(), 7);
-        assert!(clk.now() >= 600 + ep.net.rtt_ns, "sync caller waited its RTT");
+        assert!(done >= 600 + ep.net.rtt_ns, "sync caller waited its RTT");
+    }
+
+    #[test]
+    fn staged_sibling_plans_share_one_doorbell_ring() {
+        // The step-machine's payoff in miniature: two lanes' staged sync
+        // plans to one MN ring a single doorbell, each lane gets its own
+        // results, and the overlap counters see the merge.
+        let (mns, ep) = setup();
+        let r = mns[0].register(128).unwrap();
+        mns[0].store_u64(r.base, 11).unwrap();
+        mns[0].store_u64(r.base + 8, 22).unwrap();
+        let c = Coalescer::new(5_000);
+        let mut a = OpBatch::new();
+        let ta = a.read(0, r.base, 8);
+        let mut b = OpBatch::new();
+        let tb = b.read(0, r.base + 8, 8);
+
+        let mut out = c
+            .ring(vec![(0, a, 1_000), (1, b, 1_400)], &ep, &mns)
+            .unwrap();
+        assert_eq!(ep.nic.doorbells(), 1, "two frames, one MN, one doorbell");
+        assert_eq!(ep.nic.overlap_rings(), 1);
+        assert_eq!(ep.nic.overlap_plans(), 2);
+        assert_eq!(ep.nic.coalesced_ops(), 1, "the later plan's op rode");
+        let (l1, r1, d1) = out.pop().unwrap();
+        let (l0, r0, d0) = out.pop().unwrap();
+        assert_eq!((l0, l1), (0, 1), "results route back per owner");
+        assert_eq!(r0.read_buf(ta), &11u64.to_le_bytes()[..]);
+        assert_eq!(r1.read_buf(tb), &22u64.to_le_bytes()[..]);
+        // The ring fires at the latest post time; the earlier-posted
+        // plan's op is served first.
+        assert!(d0 >= 1_400 + ep.net.rtt_ns, "d0={d0}");
+        assert!(d1 >= d0, "FIFO completions: d0={d0} d1={d1}");
     }
 
     #[test]
@@ -699,6 +980,34 @@ mod tests {
         assert_eq!(c.pending_plans(), 0);
         assert_eq!(ep.nic.doorbells(), 1);
         assert_eq!(mns[0].load_u64(r.base).unwrap(), 9);
+    }
+
+    #[test]
+    fn parked_plan_just_before_finish_flushes_exactly_once() {
+        // ISSUE 3 regression: a fire-and-forget plan parked right before
+        // `finish()` must be flushed exactly once and charged to the
+        // right NIC counters — later flush calls must not re-issue it.
+        let (mns, ep) = setup();
+        let r = mns[0].register(64).unwrap();
+        let c = Coalescer::new(5_000);
+        let mut park = OpBatch::new();
+        // Non-idempotent op: a double flush would be visible in memory.
+        park.faa(0, r.base, 1);
+        c.defer(park, 4_900);
+
+        // End-of-run flush (what `FrameScheduler::finish` runs).
+        c.flush_all(&ep, &mns).unwrap();
+        assert_eq!(c.pending_plans(), 0);
+        assert_eq!(mns[0].load_u64(r.base).unwrap(), 1, "applied exactly once");
+        assert_eq!(ep.nic.doorbells(), 1, "one doorbell for the flush");
+        assert_eq!(ep.nic.doorbell_ops(), 1);
+        assert_eq!(ep.nic.coalesced_ops(), 0, "own ring, not a rider");
+
+        // Any further flush — stale-horizon or full — is a no-op.
+        c.flush_stale(&ep, &mns, u64::MAX).unwrap();
+        c.flush_all(&ep, &mns).unwrap();
+        assert_eq!(mns[0].load_u64(r.base).unwrap(), 1, "no double flush");
+        assert_eq!(ep.nic.doorbells(), 1, "no extra doorbell charged");
     }
 
     #[test]

@@ -234,6 +234,54 @@ fn crash_recovery_preserves_atomicity() {
     assert_eq!(held, 0);
 }
 
+/// ISSUE 3 step-machine audit: a depth-4 pipelined run with a mid-run CN
+/// crash must conserve money and leave zero held lock slots — staged
+/// (posted-but-unrung) plans die with the crashed CN, recovery completes
+/// or rolls back from the commit logs, and the surviving lanes' merged
+/// doorbell rings must not leak or duplicate any write.
+#[test]
+fn pipelined_crash_recovery_conserves_money_and_locks() {
+    let mut cfg = tiny();
+    cfg.duration_ns = 30_000_000;
+    cfg.pipeline_depth = 4;
+    let wl = Arc::new(SmallBankWorkload::new(cfg.scale.smallbank_accounts));
+    let cluster = Cluster::build_with(&cfg, wl.clone() as Arc<dyn Workload>).unwrap();
+    let report = cluster
+        .run_with_events(
+            SystemKind::Lotus,
+            &[CrashEvent {
+                at_ns: 10_000_000,
+                cns: vec![0],
+            }],
+        )
+        .unwrap();
+    assert!(report.commits > 100);
+    assert!(
+        report.overlap_rings > 0,
+        "depth-4 lanes should overlap staged plans even across a crash"
+    );
+    audit_books(
+        &cluster,
+        &wl,
+        cfg.scale.smallbank_accounts,
+        "pipelined-crash-recovery",
+    );
+    let held: usize = cluster
+        .shared
+        .lock_services
+        .iter()
+        .map(|s| s.held_slots())
+        .sum();
+    assert_eq!(held, 0, "crash + recovery left held lock slots");
+    for (i, nic) in cluster.shared.cn_nics.iter().enumerate() {
+        assert_eq!(
+            nic.posted_wqes(),
+            0,
+            "cn{i}: staged WQEs neither rung nor discarded by the crash"
+        );
+    }
+}
+
 /// Snapshot isolation commits more under read-write contention than SR
 /// (it skips read locks), and both preserve the write-write audit.
 #[test]
