@@ -47,6 +47,7 @@ fn smallbank_run(depth: usize) -> lotus::Result<RunReport> {
     cfg.duration_ns = 8_000_000;
     cfg.scale.smallbank_accounts = 20_000;
     cfg.pipeline_depth = depth;
+    cfg.coalesce_window_ns = 5_000;
     let cluster = Cluster::build(&cfg, WorkloadKind::SmallBank)?;
     cluster.run(SystemKind::Lotus)
 }
@@ -190,6 +191,13 @@ fn main() -> lotus::Result<()> {
         d4.overlap_rate() * 100.0,
         d4.inflight_wqes_hwm
     );
+    println!(
+        "depth 4 continuations: {} resume rings, {} lane resumes ({:.2} lanes/ring), mean ring gap {:.0} ns",
+        d4.resumed_rings,
+        d4.resumed_plans,
+        d4.mean_resumed_lanes(),
+        d4.mean_ring_gap_ns()
+    );
 
     let mut systems = JsonObj::new();
     systems
@@ -216,7 +224,11 @@ fn main() -> lotus::Result<()> {
         .int("lotus_depth4_overlap_plans", d4.overlap_plans)
         .num("lotus_depth4_mean_overlap_plans", d4.mean_overlap_plans())
         .num("lotus_depth4_overlap_rate", d4.overlap_rate())
-        .int("lotus_depth4_inflight_wqes_hwm", d4.inflight_wqes_hwm);
+        .int("lotus_depth4_inflight_wqes_hwm", d4.inflight_wqes_hwm)
+        .int("lotus_depth4_resumed_rings", d4.resumed_rings)
+        .int("lotus_depth4_resumed_plans", d4.resumed_plans)
+        .num("lotus_depth4_mean_resumed_lanes", d4.mean_resumed_lanes())
+        .num("lotus_depth4_mean_ring_gap_ns", d4.mean_ring_gap_ns());
 
     let mut root = JsonObj::new();
     root.str("bench", "hotpath")

@@ -238,6 +238,29 @@ impl Config {
         }
     }
 
+    /// Apply the CI test-matrix env overrides, if set:
+    /// `LOTUS_TEST_PIPELINE_DEPTH` and `LOTUS_TEST_COALESCE_WINDOW_NS`.
+    /// Invalid values are ignored (the defaults stand).
+    ///
+    /// Called by the *test suites'* config helpers (never by library
+    /// constructors — a downstream user of [`Config::small`] must not be
+    /// affected by ambient CI variables). Tests that assert a specific
+    /// depth/window behavior pin those fields explicitly after applying
+    /// this; everything else must hold at every point of the
+    /// `{0, 1, 4} x {0, 5000}` matrix.
+    pub fn apply_test_env(&mut self) {
+        if let Ok(v) = std::env::var("LOTUS_TEST_PIPELINE_DEPTH") {
+            if let Ok(d) = v.parse() {
+                self.pipeline_depth = d;
+            }
+        }
+        if let Ok(v) = std::env::var("LOTUS_TEST_COALESCE_WINDOW_NS") {
+            if let Ok(w) = v.parse() {
+                self.coalesce_window_ns = w;
+            }
+        }
+    }
+
     /// Total coordinator count across the cluster.
     pub fn total_coordinators(&self) -> usize {
         self.n_cns * self.coordinators_per_cn

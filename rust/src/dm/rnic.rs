@@ -33,12 +33,23 @@ pub struct Rnic {
     /// High-water mark of `posted_wqes` — the in-flight depth the
     /// step-machine reached on this NIC.
     posted_wqes_hwm: AtomicU64,
-    /// Sync doorbell plans staged in-flight (each is one lane yield).
+    /// Sync doorbell plans staged in-flight (each is one lane park).
     staged_plans: AtomicU64,
     /// Merged doorbell issues that carried >= 2 frames' staged plans.
     overlap_rings: AtomicU64,
     /// Frames' staged plans carried by those merged issues.
     overlap_plans: AtomicU64,
+    /// Ring events that completed >= 1 staged plan and re-enqueued its
+    /// parked lane into the scheduler's ready queue (the continuation
+    /// model's resume events; 0 without staging).
+    resumed_rings: AtomicU64,
+    /// Staged plans completed by those ring events (parked lanes
+    /// resumed).
+    resumed_plans: AtomicU64,
+    /// Cumulative virtual ns staged plans waited between their post time
+    /// and the ring that carried them (`mean = ring_gap_ns /
+    /// resumed_plans`).
+    ring_gap_ns: AtomicU64,
 }
 
 impl Rnic {
@@ -151,6 +162,16 @@ impl Rnic {
         self.overlap_plans.fetch_add(n_plans, Ordering::Relaxed);
     }
 
+    /// A ring event completed `n_plans` staged plans (re-enqueueing their
+    /// parked lanes), which together waited `gap_ns` virtual ns between
+    /// posting and the ring.
+    #[inline]
+    pub fn note_resumed(&self, n_plans: u64, gap_ns: u64) {
+        self.resumed_rings.fetch_add(1, Ordering::Relaxed);
+        self.resumed_plans.fetch_add(n_plans, Ordering::Relaxed);
+        self.ring_gap_ns.fetch_add(gap_ns, Ordering::Relaxed);
+    }
+
     /// WQEs currently posted but not yet rung (0 when nothing in flight).
     pub fn posted_wqes(&self) -> u64 {
         self.posted_wqes.load(Ordering::Relaxed)
@@ -174,6 +195,21 @@ impl Rnic {
     /// Staged plans carried by those merged issues.
     pub fn overlap_plans(&self) -> u64 {
         self.overlap_plans.load(Ordering::Relaxed)
+    }
+
+    /// Ring events that resumed parked lanes.
+    pub fn resumed_rings(&self) -> u64 {
+        self.resumed_rings.load(Ordering::Relaxed)
+    }
+
+    /// Staged plans completed by those ring events.
+    pub fn resumed_plans(&self) -> u64 {
+        self.resumed_plans.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative post-to-ring wait of rung staged plans (virtual ns).
+    pub fn ring_gap_ns(&self) -> u64 {
+        self.ring_gap_ns.load(Ordering::Relaxed)
     }
 
     /// Completion time if the verb were issued now, without enqueueing.
@@ -217,6 +253,9 @@ impl Rnic {
         self.staged_plans.store(0, Ordering::Relaxed);
         self.overlap_rings.store(0, Ordering::Relaxed);
         self.overlap_plans.store(0, Ordering::Relaxed);
+        self.resumed_rings.store(0, Ordering::Relaxed);
+        self.resumed_plans.store(0, Ordering::Relaxed);
+        self.ring_gap_ns.store(0, Ordering::Relaxed);
     }
 
     /// Reset the queue to idle at time zero (between benchmark runs —
@@ -322,10 +361,16 @@ mod tests {
         n.note_overlap(3);
         assert_eq!(n.overlap_rings(), 1);
         assert_eq!(n.overlap_plans(), 3);
+        n.note_resumed(3, 4_200);
+        assert_eq!(n.resumed_rings(), 1);
+        assert_eq!(n.resumed_plans(), 3);
+        assert_eq!(n.ring_gap_ns(), 4_200);
         n.reset_counters();
         assert_eq!(n.posted_wqes_hwm(), 0);
         assert_eq!(n.staged_plans(), 0);
         assert_eq!(n.overlap_rings(), 0);
+        assert_eq!(n.resumed_rings(), 0);
+        assert_eq!(n.ring_gap_ns(), 0);
     }
 
     #[test]

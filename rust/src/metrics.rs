@@ -184,6 +184,15 @@ pub struct RunReport {
     /// Frames' staged plans carried by those merged issues
     /// (>= 2 x `overlap_rings` whenever any overlap happened).
     pub overlap_plans: u64,
+    /// Ring events that completed >= 1 staged plan, re-enqueueing its
+    /// parked lane into the scheduler's ready queue (the continuation
+    /// model's resume events; 0 at depth 1 — nothing stages).
+    pub resumed_rings: u64,
+    /// Staged plans completed by those ring events (lane resumptions).
+    pub resumed_plans: u64,
+    /// Cumulative virtual ns staged plans waited between posting and the
+    /// ring that carried them (see [`RunReport::mean_ring_gap_ns`]).
+    pub ring_gap_ns: u64,
 }
 
 impl RunReport {
@@ -251,6 +260,27 @@ impl RunReport {
             0.0
         } else {
             self.overlap_plans as f64 / self.staged_plans as f64
+        }
+    }
+
+    /// Mean virtual ns a staged plan waited between its post and the
+    /// merged ring that carried it (0 when nothing staged) — how long
+    /// parked lane continuations sat in the in-flight table before being
+    /// re-enqueued.
+    pub fn mean_ring_gap_ns(&self) -> f64 {
+        if self.resumed_plans == 0 {
+            0.0
+        } else {
+            self.ring_gap_ns as f64 / self.resumed_plans as f64
+        }
+    }
+
+    /// Mean parked lanes resumed per ring event (0 without staging).
+    pub fn mean_resumed_lanes(&self) -> f64 {
+        if self.resumed_rings == 0 {
+            0.0
+        } else {
+            self.resumed_plans as f64 / self.resumed_rings as f64
         }
     }
 }
@@ -369,12 +399,17 @@ mod tests {
             inflight_wqes_hwm: 12,
             overlap_rings: 200_000,
             overlap_plans: 600_000,
+            resumed_rings: 250_000,
+            resumed_plans: 1_000_000,
+            ring_gap_ns: 2_000_000_000,
         };
         assert!((r.mtps() - 1.0).abs() < 1e-9);
         assert!((r.doorbells_per_commit() - 4.0).abs() < 1e-9);
         assert!((r.ops_per_doorbell() - 2.5).abs() < 1e-9);
         assert!((r.mean_overlap_plans() - 3.0).abs() < 1e-9);
         assert!((r.overlap_rate() - 0.6).abs() < 1e-9);
+        assert!((r.mean_ring_gap_ns() - 2_000.0).abs() < 1e-9);
+        assert!((r.mean_resumed_lanes() - 4.0).abs() < 1e-9);
     }
 
     #[test]

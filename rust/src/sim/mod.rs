@@ -40,6 +40,7 @@ use crate::txn::coordinator::{LotusCoordinator, SharedCluster};
 use crate::txn::doomed::DoomedSet;
 use crate::txn::log;
 use crate::txn::scheduler::{FrameScheduler, LaneOutcome};
+use crate::txn::step::expect_ready;
 use crate::txn::timestamp::TimestampOracle;
 use crate::workloads::{RouteCtx, Workload, WorkloadKind};
 use crate::{Error, Result};
@@ -235,7 +236,7 @@ impl Cluster {
             }
             for (i, nic) in self.shared.cn_nics.iter().enumerate() {
                 eprintln!(
-                    "cn{i} nic: ops={} busy={}ns wait={}ns util={:.2} doorbells={} db_ops={} coalesced={} staged={} inflight_hwm={} overlap_rings={} overlap_plans={}",
+                    "cn{i} nic: ops={} busy={}ns wait={}ns util={:.2} doorbells={} db_ops={} coalesced={} staged={} inflight_hwm={} overlap_rings={} overlap_plans={} resumed_rings={} resumed_plans={} ring_gap={}ns",
                     nic.op_count(),
                     nic.busy_ns(),
                     nic.wait_ns(),
@@ -246,7 +247,10 @@ impl Cluster {
                     nic.staged_plans(),
                     nic.posted_wqes_hwm(),
                     nic.overlap_rings(),
-                    nic.overlap_plans()
+                    nic.overlap_plans(),
+                    nic.resumed_rings(),
+                    nic.resumed_plans(),
+                    nic.ring_gap_ns()
                 );
             }
         }
@@ -258,6 +262,7 @@ impl Cluster {
         // (reset at the top of the run, so the sums are per-run).
         let (mut doorbells, mut doorbell_ops, mut coalesced_ops) = (0u64, 0u64, 0u64);
         let (mut staged_plans, mut overlap_rings, mut overlap_plans) = (0u64, 0u64, 0u64);
+        let (mut resumed_rings, mut resumed_plans, mut ring_gap_ns) = (0u64, 0u64, 0u64);
         let mut inflight_wqes_hwm = 0u64;
         for nic in &self.shared.cn_nics {
             doorbells += nic.doorbells();
@@ -266,6 +271,9 @@ impl Cluster {
             staged_plans += nic.staged_plans();
             overlap_rings += nic.overlap_rings();
             overlap_plans += nic.overlap_plans();
+            resumed_rings += nic.resumed_rings();
+            resumed_plans += nic.resumed_plans();
+            ring_gap_ns += nic.ring_gap_ns();
             inflight_wqes_hwm = inflight_wqes_hwm.max(nic.posted_wqes_hwm());
         }
         Ok(RunReport {
@@ -285,6 +293,9 @@ impl Cluster {
             inflight_wqes_hwm,
             overlap_rings,
             overlap_plans,
+            resumed_rings,
+            resumed_plans,
+            ring_gap_ns,
         })
     }
 
@@ -342,26 +353,33 @@ impl Driver {
         }
     }
 
-    /// Pump one transaction on the slowest stream. The step-machine may
-    /// complete several sibling transactions while a lane is yielded at
-    /// an issue point, so every finished transaction's `(t_begin, t_end,
-    /// outcome)` is appended to `out`; the returned `Err` is a fatal
-    /// (run-ending) error only.
+    /// Pump the ready-queue event loop until at least one transaction
+    /// completes (the scheduler may resume lane machines parked by
+    /// earlier steps and park new ones), appending every finished
+    /// transaction's [`LaneOutcome`] to `out`; the returned `Err` is a
+    /// fatal (run-ending) error only.
     fn step(
         &mut self,
-        workload: &dyn Workload,
+        workload: &Arc<dyn Workload>,
         route: &RouteCtx<'_>,
         out: &mut Vec<LaneOutcome>,
     ) -> Result<()> {
         match self {
             Driver::Seq(api) => {
                 let t0 = api.now();
-                let res = workload.run_one(api.as_mut(), route);
+                // Sequential conduit: the transaction machine never
+                // parks, one poll runs it end to end.
+                let res = expect_ready(workload.run_one(api.as_mut(), route));
                 let t1 = api.now();
                 match res {
                     Err(e) if !(e.is_abort() || matches!(e, Error::NodeUnavailable(_))) => Err(e),
                     r => {
-                        out.push((t0, t1, r));
+                        out.push(LaneOutcome {
+                            lane: 0,
+                            t_begin: t0,
+                            t_end: t1,
+                            result: r,
+                        });
                         Ok(())
                     }
                 }
@@ -370,12 +388,14 @@ impl Driver {
         }
     }
 
-    /// Orderly end of run: ring out any doorbell plans still parked with
-    /// the scheduler's coalescer.
-    fn finish(&mut self) -> Result<()> {
+    /// Orderly end of run: drain in-flight lane machines to completion
+    /// (their outcomes are appended to `out` and accounted like any
+    /// other) and ring out any doorbell plans still parked with the
+    /// scheduler's coalescer.
+    fn finish(&mut self, out: &mut Vec<LaneOutcome>) -> Result<()> {
         match self {
             Driver::Seq(_) => Ok(()),
-            Driver::Pipe(s) => s.finish(),
+            Driver::Pipe(s) => s.finish(out),
         }
     }
 }
@@ -564,48 +584,71 @@ fn coordinator_thread(
             }
         }
 
-        // --- One pump of the slowest stream (the step-machine may finish
-        // several sibling transactions while lanes yield at issue
-        // points); account every completed transaction. ---
+        // --- One pump of the ready-queue event loop (lane machines may
+        // park at issue points and resume in later steps); account every
+        // completed transaction. ---
         let route = RouteCtx {
             router: &shared.router,
             cn,
             hybrid,
         };
         outcomes.clear();
-        if let Err(e) = driver.step(workload.as_ref(), &route, &mut outcomes) {
+        if let Err(e) = driver.step(&workload, &route, &mut outcomes) {
             gate.finish(gid);
             return Err(e);
         }
-        for (t0, t1, res) in outcomes.drain(..) {
-            match res {
-                Ok(()) => {
-                    stats.commit();
-                    hist.record(t1 - t0);
-                    shared.metrics.record_latency(cn, t1 - t0);
-                    if cfg.timeline_interval_ns > 0 {
-                        let bucket = (t1 / cfg.timeline_interval_ns) as usize;
-                        if bucket < timeline.len() {
-                            timeline[bucket].fetch_add(1, Ordering::Relaxed);
-                        }
+        if let Err(e) = account(&mut outcomes, &stats, &hist, &shared, cn, &cfg, &timeline) {
+            gate.finish(gid);
+            return Err(e);
+        }
+    }
+    // Orderly shutdown: in-flight lane machines run to completion and
+    // their transactions are accounted like any other.
+    outcomes.clear();
+    let fin = driver
+        .finish(&mut outcomes)
+        .and_then(|()| account(&mut outcomes, &stats, &hist, &shared, cn, &cfg, &timeline));
+    gate.finish(gid);
+    fin
+}
+
+/// Fold a batch of completed transactions into the run statistics
+/// (draining the batch). A fatal error ends the run immediately.
+fn account(
+    outcomes: &mut Vec<LaneOutcome>,
+    stats: &TxnStats,
+    hist: &Histogram,
+    shared: &SharedCluster,
+    cn: usize,
+    cfg: &Config,
+    timeline: &[AtomicU64],
+) -> Result<()> {
+    for o in outcomes.drain(..) {
+        let (t0, t1) = (o.t_begin, o.t_end);
+        match o.result {
+            Ok(()) => {
+                stats.commit();
+                hist.record(t1 - t0);
+                shared.metrics.record_latency(cn, t1 - t0);
+                if cfg.timeline_interval_ns > 0 {
+                    let bucket = (t1 / cfg.timeline_interval_ns) as usize;
+                    if bucket < timeline.len() {
+                        timeline[bucket].fetch_add(1, Ordering::Relaxed);
                     }
                 }
-                Err(e) if e.is_abort() => {
-                    stats.abort(e.abort_reason().unwrap());
-                }
-                Err(Error::NodeUnavailable(_)) => {
-                    stats.abort(crate::AbortReason::OwnerFailed);
-                }
-                Err(e) => {
-                    gate.finish(gid);
-                    return Err(e);
-                }
+            }
+            Err(e) if e.is_abort() => {
+                stats.abort(e.abort_reason().unwrap());
+            }
+            Err(Error::NodeUnavailable(_)) => {
+                stats.abort(crate::AbortReason::OwnerFailed);
+            }
+            Err(e) => {
+                return Err(e);
             }
         }
     }
-    let fin = driver.finish();
-    gate.finish(gid);
-    fin
+    Ok(())
 }
 
 #[cfg(test)]
@@ -617,6 +660,8 @@ mod tests {
         cfg.duration_ns = 3_000_000; // 3 ms virtual
         cfg.scale.kvs_keys = 2_000;
         cfg.scale.smallbank_accounts = 2_000;
+        // CI matrix hook: pipeline_depth x coalesce_window_ns overrides.
+        cfg.apply_test_env();
         cfg
     }
 
@@ -713,19 +758,23 @@ mod tests {
             legacy.doorbell_ops, pipe1.doorbell_ops,
             "doorbell op accounting differs"
         );
-        // Depth 1 has no siblings: the step-machine must never stage.
+        // Depth 1 has no siblings: nothing stages, nothing resumes.
         assert_eq!(pipe1.staged_plans, 0, "depth 1 must not stage plans");
         assert_eq!(pipe1.overlap_rings, 0);
+        assert_eq!(pipe1.resumed_rings, 0, "depth 1 must never park a lane");
+        assert_eq!(pipe1.resumed_plans, 0);
     }
 
     #[test]
     fn step_machine_overlaps_staged_plans_at_depth_4() {
-        // ISSUE 3: lanes yield at issue points and sibling frames' staged
-        // sync plans merge into shared doorbell rings. By the end of the
-        // run every posted WQE must have been rung (the in-flight gauge
-        // drains to zero).
+        // ISSUE 3 + ISSUE 4: lane machines park at issue points and
+        // sibling frames' staged sync plans merge into shared doorbell
+        // rings; every ring re-enqueues its parked lanes (resumed_rings)
+        // in completion-clock order. By the end of the run every posted
+        // WQE must have been rung (the in-flight gauge drains to zero).
         let mut cfg = tiny_cfg();
         cfg.pipeline_depth = 4;
+        cfg.coalesce_window_ns = 5_000;
         let cluster = Cluster::build(&cfg, WorkloadKind::SmallBank).unwrap();
         let report = cluster.run(SystemKind::Lotus).unwrap();
         assert!(report.commits > 100, "commits={}", report.commits);
@@ -745,6 +794,24 @@ mod tests {
             "staging never overlapped WQEs in flight (hwm={})",
             report.inflight_wqes_hwm
         );
+        assert!(
+            report.resumed_rings > 0,
+            "no ring ever re-enqueued a parked lane continuation"
+        );
+        assert_eq!(
+            report.resumed_plans, report.staged_plans,
+            "every staged plan must be rung by a resume ring in a crash-free run"
+        );
+        assert!(
+            report.mean_overlap_plans() >= 2.0,
+            "merged rings should carry >= 2 plans on average: {:.2}",
+            report.mean_overlap_plans()
+        );
+        assert!(
+            report.mean_ring_gap_ns() <= cfg.coalesce_window_ns as f64,
+            "a staged plan waited past the window: {:.0}ns",
+            report.mean_ring_gap_ns()
+        );
         for (i, nic) in cluster.shared.cn_nics.iter().enumerate() {
             assert_eq!(
                 nic.posted_wqes(),
@@ -762,6 +829,7 @@ mod tests {
         // sibling frames' doorbells instead of ringing their own).
         let mut cfg = tiny_cfg();
         cfg.duration_ns = 4_000_000;
+        cfg.coalesce_window_ns = 5_000;
         let run = |depth: usize| {
             let mut c = cfg.clone();
             c.pipeline_depth = depth;

@@ -21,6 +21,7 @@
 //! `begin()` a retry.
 
 use crate::sharding::key::LotusKey;
+use crate::txn::step::StepFut;
 use crate::util::Xoshiro256;
 use crate::Result;
 
@@ -64,14 +65,39 @@ pub trait TxnCtl {
     fn add_delete(&mut self, r: RecordRef);
     /// Lock-first execution: acquire all locks, then read all data.
     /// On `Err` the transaction is already rolled back.
+    ///
+    /// Blocking form — valid only on direct conduits (the sequential
+    /// coordinator, baselines, recovery); pipelined lanes must drive
+    /// [`TxnCtl::execute_step`] instead.
     fn execute(&mut self) -> Result<()>;
+    /// Resumable execution: the same lock-first round as
+    /// [`TxnCtl::execute`], reified as a step machine that parks
+    /// (`Poll::Pending`) at its issue points under the pipelined
+    /// scheduler. Workloads drive this form exclusively, so the same
+    /// workload code runs blocking on sequential conduits (every await
+    /// completes within one poll) and parking on pipelined lanes.
+    ///
+    /// The default wraps the blocking [`TxnCtl::execute`] in an
+    /// immediately-ready machine (sequential implementors need only the
+    /// blocking form).
+    fn execute_step(&mut self) -> StepFut<'_, Result<()>> {
+        let r = self.execute();
+        Box::pin(std::future::ready(r))
+    }
     /// Read a record's bytes fetched by `execute`.
     fn value(&self, r: RecordRef) -> Option<&[u8]>;
     /// Stage the new bytes for a read-write record (before `commit`).
     fn stage_write(&mut self, r: RecordRef, payload: Vec<u8>);
     /// Commit: write data + log, draw the commit timestamp, make data
     /// visible, unlock. On `Err` the transaction is already rolled back.
+    ///
+    /// Blocking form — direct conduits only (see [`TxnCtl::execute`]).
     fn commit(&mut self) -> Result<()>;
+    /// Resumable commit (see [`TxnCtl::execute_step`] for the contract).
+    fn commit_step(&mut self) -> StepFut<'_, Result<()>> {
+        let r = self.commit();
+        Box::pin(std::future::ready(r))
+    }
     /// Abort voluntarily (releases all locks; always succeeds).
     fn rollback(&mut self);
 }

@@ -31,6 +31,7 @@ use crate::store::index::TableStore;
 use crate::txn::api::{RecordRef, TxnApi, TxnCtl};
 use crate::txn::doomed::DoomedSet;
 use crate::txn::phases::{self, PhaseCtx, TxnFrame, TxnRecord};
+use crate::txn::step::expect_ready;
 use crate::txn::timestamp::TimestampOracle;
 use crate::Result;
 
@@ -191,7 +192,9 @@ impl TxnCtl for LotusCoordinator {
         debug_assert_ne!(self.phase, Phase::Idle);
         let res = {
             let (mut ctx, frame) = self.parts();
-            phases::execute(&mut ctx, frame)
+            // Direct conduit (no sink): the phase machine never parks,
+            // one poll is the classic blocking call.
+            expect_ready(phases::execute(&mut ctx, frame))
         };
         match res {
             Ok(()) => {
@@ -222,7 +225,7 @@ impl TxnCtl for LotusCoordinator {
         debug_assert_eq!(self.phase, Phase::Executed);
         let res = {
             let (mut ctx, frame) = self.parts();
-            phases::commit_txn(&mut ctx, frame)
+            expect_ready(phases::commit_txn(&mut ctx, frame))
         };
         self.phase = Phase::Idle;
         res

@@ -17,11 +17,14 @@
 //!   the LOTUS coordinator and by the baseline systems so every workload
 //!   runs unmodified on every system.
 //! - [`phases`] — the protocol pipeline itself, one module per phase
-//!   (lock, read, write_log, commit, unlock): each phase is a function of
-//!   a [`phases::PhaseCtx`] (coordinator environment) and a
-//!   [`phases::TxnFrame`] (per-transaction state), with every one-sided
-//!   exchange planned through the shared [`crate::dm::OpBatch`] doorbell
-//!   planner.
+//!   (lock, read, write_log, commit, unlock): each phase is a resumable
+//!   step machine over a [`phases::PhaseCtx`] (coordinator environment)
+//!   and a [`phases::TxnFrame`] (per-transaction state), cut at its issue
+//!   points, with every one-sided exchange planned through the shared
+//!   [`crate::dm::OpBatch`] doorbell planner.
+//! - [`step`] — the continuation plumbing: [`step::StepFut`] (the
+//!   heap-reified machine type), the no-op waker, and the blocking-path
+//!   driver [`step::expect_ready`].
 //! - [`coordinator`] — the LOTUS coordinator: a thin orchestration shell
 //!   mapping the [`api`] surface onto the phase pipeline, with SR and SI
 //!   isolation.
@@ -34,11 +37,13 @@ pub mod doomed;
 pub mod log;
 pub mod phases;
 pub mod scheduler;
+pub mod step;
 pub mod timestamp;
 
 pub use api::{Isolation, TxnApi, TxnCtl};
 pub use coordinator::{LotusCoordinator, SharedCluster};
 pub use doomed::DoomedSet;
 pub use phases::{PhaseCtx, StepSink, TxnFrame};
+pub use step::{expect_ready, StepFut};
 pub use scheduler::{Coalescer, FrameScheduler, LaneOutcome, SiblingLocks};
 pub use timestamp::{compose_ts, logical_of, phys_of, TimestampOracle};

@@ -14,7 +14,7 @@ use crate::{abort, AbortReason, Result};
 
 /// Commit a read-write transaction. On `Err` the transaction has been
 /// rolled back (all locks released).
-pub fn commit_rw(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame) -> Result<()> {
+pub async fn commit_rw(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame) -> Result<()> {
     // Doomed check: resharding/recovery may have force-released our
     // locks; such a transaction must not enter the commit phase (§6).
     if ctx.cluster.doomed.take(frame.txn_id) {
@@ -32,7 +32,7 @@ pub fn commit_rw(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame) -> Result<()> {
     };
 
     // --- Write Data (& Log) ---
-    let plans = write_log::write_data_and_log(ctx, frame, early_ts)?;
+    let plans = write_log::write_data_and_log(ctx, frame, early_ts).await?;
 
     // --- Get Timestamp ---
     let commit_ts = if log_and_visible {
@@ -43,7 +43,7 @@ pub fn commit_rw(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame) -> Result<()> {
 
     // --- Write Visible ---
     if log_and_visible {
-        write_log::write_visible(ctx, frame, &plans, commit_ts)?;
+        write_log::write_visible(ctx, frame, &plans, commit_ts).await?;
     }
 
     // Synchronous VT-cache update for locally owned keys (§4.4 "zero

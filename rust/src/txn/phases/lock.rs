@@ -6,13 +6,35 @@
 //! remote keys are batched **per owner CN** into one RPC each. Any
 //! failure releases everything already acquired and aborts — before a
 //! single byte is read from the memory pool.
+//!
+//! # Virtual-interval conflict triage (pipelined lanes)
+//!
+//! Under the pipelined scheduler a suspended sibling lane keeps its real
+//! lock-table locks while this lane runs, so a *physical* acquisition
+//! failure is not automatically a conflict of the modeled timeline: the
+//! holder may have acquired the lock at a virtual time **after** the
+//! requester's clock (the scheduler executed its segment first). Such an
+//! anachronistic failure is triaged through the sink's recorded lock
+//! intervals ([`crate::txn::phases::StepSink::wait_verdict`]): the
+//! requester **parks** until the sibling releases and then retries at
+//! its *unchanged* virtual time — in the modeled timeline the lock was
+//! free at that instant, so neither transaction aborts. Genuine overlaps
+//! (the holder's interval covers the requester's now) abort lock-first
+//! exactly as before, and a holder that is itself wait-parked is never
+//! waited on (the wait graph stays acyclic).
 
 use crate::lock::table::LockMode;
 use crate::sharding::key::LotusKey;
 use crate::txn::api::Isolation;
 use crate::txn::coordinator::SharedCluster;
-use crate::txn::phases::{unlock, Held, PhaseCtx, TxnFrame};
+use crate::txn::phases::{unlock, Held, PhaseCtx, TxnFrame, WaitVerdict};
 use crate::{abort, AbortReason, Error, Result};
+
+/// Bound on wait-park/retry rounds per lock request: spurious wakeups
+/// (the woken key was re-taken by another anachronistic sibling) are
+/// harmless, but a pathological re-lock storm must degrade to the abort
+/// path rather than loop.
+const MAX_LOCK_WAITS: usize = 16;
 
 /// The lock set for `frame.records[from..]`: `(key, mode)` per request.
 pub fn requests(
@@ -41,10 +63,59 @@ pub fn requests(
     reqs
 }
 
+/// One physical acquisition with wait-park triage. `Ok(true)` acquired,
+/// `Ok(false)` conflict (abort), `Err` fatal.
+async fn acquire_one(
+    ctx: &mut PhaseCtx<'_>,
+    key: LotusKey,
+    mode: LockMode,
+    holder: crate::lock::state::HolderId,
+    target: usize,
+    from_remote: bool,
+) -> Result<bool> {
+    let router = ctx.cluster.router.clone();
+    let mut waits = 0usize;
+    loop {
+        // Interval check per acquisition attempt, not just once per
+        // phase: the lane's clock advances between acquisitions, and
+        // whole sibling transactions may run while this lane is parked
+        // at a wait — either can move a recorded interval over `now`.
+        if ctx.sibling_conflict(key, mode) {
+            return Ok(false);
+        }
+        match ctx.cluster.lock_services[target].try_acquire(&router, key, mode, holder, from_remote)
+        {
+            Ok(true) => {
+                ctx.note_lock(key, mode);
+                return Ok(true);
+            }
+            Ok(false) => {
+                if waits < MAX_LOCK_WAITS && ctx.wait_verdict(key, mode) == WaitVerdict::Wait {
+                    // Anachronistic holder (a suspended sibling that
+                    // acquired in our virtual future): park until it
+                    // releases, retry at the unchanged virtual time.
+                    // The loop head re-runs the interval check before
+                    // the retry touches the lock table.
+                    waits += 1;
+                    ctx.wait_unlock(key).await;
+                    continue;
+                }
+                return Ok(false);
+            }
+            Err(Error::LockBucketFull) | Err(Error::WrongShardOwner { .. }) => {
+                // Bucket-full or stale route (shard migrating) — abort;
+                // the retry will see the fresh map.
+                return Ok(false);
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
 /// Acquire all locks for `frame.records[from..]` (the lock-first step).
 /// On failure, everything already acquired is released and the
 /// transaction aborts.
-pub fn acquire(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame, from: usize) -> Result<()> {
+pub async fn acquire(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame, from: usize) -> Result<()> {
     let reqs = requests(ctx.cluster, frame, from);
     if reqs.is_empty() {
         return Ok(());
@@ -52,9 +123,11 @@ pub fn acquire(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame, from: usize) -> Res
     // Pipelined scheduler: a sibling frame on this coordinator whose
     // in-flight transaction overlaps this one in virtual time may hold a
     // conflicting lock. That conflict is resolved *locally* — a CPU check
-    // through the scheduler sink against the sibling lock intervals —
-    // and aborts lock-first, before any bytes leave the CN (not even the
-    // remote-lock RPC is sent).
+    // through the scheduler sink against the recorded lock intervals
+    // (committed stamps and suspended lanes' live holdings) — and aborts
+    // lock-first, before any bytes leave the CN (not even the remote-lock
+    // RPC is sent). Interval-aware: a sibling holding only in this
+    // frame's virtual future does not conflict.
     let sibling_conflict = reqs.iter().any(|&(k, m)| ctx.sibling_conflict(k, m));
     if sibling_conflict {
         unlock::release(ctx, frame);
@@ -80,23 +153,14 @@ pub fn acquire(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame, from: usize) -> Res
     // Local locks: CPU CAS (Algorithm 1).
     for &(key, mode) in &local {
         ctx.clk.advance(ctx.net().local_lock_ns);
-        match ctx.cluster.lock_services[ctx.cn].try_acquire(&router, key, mode, holder, false) {
+        let cn = ctx.cn;
+        match acquire_one(ctx, key, mode, holder, cn, false).await {
             Ok(true) => frame.held.push(Held {
                 key,
                 mode,
-                owner_cn: ctx.cn,
+                owner_cn: cn,
             }),
             Ok(false) => {
-                unlock::release(ctx, frame);
-                return Err(abort(AbortReason::LockConflict));
-            }
-            Err(Error::LockBucketFull) => {
-                unlock::release(ctx, frame);
-                return Err(abort(AbortReason::LockConflict));
-            }
-            Err(Error::WrongShardOwner { .. }) => {
-                // Stale route (shard migrating) — abort; the retry will
-                // see the fresh map.
                 unlock::release(ctx, frame);
                 return Err(abort(AbortReason::LockConflict));
             }
@@ -118,13 +182,13 @@ pub fn acquire(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame, from: usize) -> Res
             return Err(abort(AbortReason::OwnerFailed));
         }
         for &(key, mode) in &batch {
-            match ctx.cluster.lock_services[target].try_acquire(&router, key, mode, holder, true) {
+            match acquire_one(ctx, key, mode, holder, target, true).await {
                 Ok(true) => frame.held.push(Held {
                     key,
                     mode,
                     owner_cn: target,
                 }),
-                Ok(false) | Err(Error::LockBucketFull) | Err(Error::WrongShardOwner { .. }) => {
+                Ok(false) => {
                     unlock::release(ctx, frame);
                     return Err(abort(AbortReason::LockConflict));
                 }

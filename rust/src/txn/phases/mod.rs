@@ -26,40 +26,53 @@
 //! write sets, CVT snapshots, held locks) through a [`PhaseCtx`] (the
 //! coordinator's environment: cluster state, endpoint, virtual clock).
 //!
-//! # The step / yield / resume contract
+//! # The reified continuation contract (ISSUE 4)
 //!
 //! Phases **plan** their one-sided ops into [`crate::dm::OpBatch`]es and
 //! hand them to [`PhaseCtx::issue`] / [`PhaseCtx::issue_deferred`] — the
-//! only points at which a phase touches the fabric. Each phase is
-//! therefore a sequence of *steps* separated by issue points, and the
+//! only points at which a phase touches the fabric. Every phase (and the
+//! workload driver above it) is a **resumable step machine**
+//! ([`crate::txn::step::StepFut`]), cut at exactly those issue points;
+//! `Poll::Pending` is the *Issued* state, `Poll::Ready` is *Done*. The
 //! conduit behind the issue point decides how execution proceeds:
 //!
-//! - **Direct** (`sink: None` — the sequential coordinator, recovery,
-//!   baselines): the planned batch is issued immediately and the call
-//!   returns at the batch's completion, exactly the classic blocking
-//!   behaviour.
-//! - **Step-machine** ([`StepSink`], implemented by the pipelined
-//!   [`crate::txn::scheduler::FrameScheduler`]): the plan's WQEs are
-//!   *posted* to an in-flight table but the doorbell is **not** rung; the
-//!   frame *yields* and the scheduler pumps the next-smallest-clock
-//!   sibling lane. Sibling plans that reach their own issue points inside
-//!   `coalesce_window_ns` of the posted plan join it, and whichever lane
-//!   stops pumping *rings* one merged doorbell set for every compatible
-//!   staged plan. The yielded frame then *resumes*: it receives its own
-//!   ops' results and completion times (never a sibling's), and its
-//!   virtual clock is charged only to its own slowest completion.
+//! - **Direct** (`sink: None`, or a non-staging sink — the sequential
+//!   coordinator, recovery, baselines, `pipeline_depth == 1`,
+//!   `coalesce_window_ns == 0`): the planned batch is issued immediately
+//!   and the machine runs straight through the await — a single poll is
+//!   the classic blocking phase call ([`crate::txn::step::expect_ready`]).
+//! - **Staging** ([`StepSink`] with [`StepSink::stages`] true — the
+//!   pipelined [`crate::txn::scheduler::FrameScheduler`]): the plan's
+//!   WQEs are *posted* to the scheduler's in-flight table
+//!   (`Flight::Staged`), the doorbell is **not** rung, and the machine
+//!   returns `Poll::Pending` — the lane is parked on the heap with no OS
+//!   stack frame pinning it. The scheduler's ready-queue loop keeps
+//!   polling other runnable lanes; when it rings a merged doorbell set,
+//!   every covered lane's in-flight slot flips to `Flight::Done` and the
+//!   lane re-enters the ready queue at its own completion time, to be
+//!   resumed in completion-clock order — in *any* interleaving, not the
+//!   stack-unwind (LIFO) order of the old nested-pump design. On resume
+//!   the machine receives its own ops' results (never a sibling's), and
+//!   its virtual clock is charged only to its own slowest completion.
 //!
-//! The phase code is identical under both conduits — yield/resume is
+//! The phase code is identical under every conduit — park/resume is
 //! entirely the sink's concern — which is what keeps the
 //! `pipeline_depth=0` legacy shell and the depth-1 exact-equivalence
 //! invariant alive as correctness anchors.
 //!
+//! The sink also carries the lock phase's sibling-conflict machinery:
+//! recorded **virtual lock intervals** (committed transactions' `[from,
+//! until)` stamps plus suspended lanes' live `[from, ..)` holdings), so
+//! conflicts between lanes are decided by virtual-time overlap, never by
+//! raw physical holder state (see [`crate::txn::scheduler`] docs).
+//!
 //! Knobs: `pipeline_depth` (lanes per coordinator thread; 0 = legacy
 //! sequential shell, 1 = scheduler with direct issue — bit-for-bit equal
-//! accounting to the shell — and >= 2 enables the step-machine) and
+//! accounting to the shell — and >= 2 enables staging) and
 //! `coalesce_window_ns` (how far apart, in virtual ns, two frames' issue
 //! points may be and still share a doorbell ring; 0 disables staging and
-//! coalescing entirely).
+//! coalescing entirely — deferred fire-and-forget plans then issue
+//! immediately instead of parking).
 
 pub mod commit;
 pub mod lock;
@@ -71,6 +84,9 @@ pub mod write_log;
 mod tests;
 
 use std::cell::RefCell;
+use std::future::Future;
+use std::pin::Pin;
+use std::task::{Context, Poll};
 
 use crate::dm::clock::VClock;
 use crate::dm::opbatch::{BatchResult, OpBatch};
@@ -83,27 +99,130 @@ use crate::store::cvt::CvtSnapshot;
 use crate::txn::api::{Isolation, RecordRef};
 use crate::txn::coordinator::SharedCluster;
 
-/// The conduit behind a phase's issue points (see the module docs).
-///
-/// Implemented by the pipelined scheduler's pump context: `issue` may
-/// park the calling frame's plan in an in-flight table and hand the
-/// thread to sibling lanes before the doorbell rings (stage overlap);
-/// `issue_deferred` parks fire-and-forget plans to ride a later ring;
-/// `sibling_conflict` is the lock phase's local check against other
-/// lanes' recent lock intervals.
+/// The lock phase's triage when a *physical* acquisition fails (see
+/// [`StepSink::wait_verdict`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WaitVerdict {
+    /// Genuine conflict in virtual time: abort lock-first.
+    Abort,
+    /// The physical holder is a suspended sibling lane that acquired the
+    /// lock in the requester's virtual *future* (an anachronism of the
+    /// simulation, not a conflict of the modeled timeline): park until
+    /// the sibling releases, then retry at the unchanged virtual time.
+    Wait,
+}
+
+/// The conduit behind a phase machine's issue points (see the module
+/// docs). Implemented by the pipelined scheduler's shared state; poll
+/// driven — no method ever blocks or pumps sibling lanes, the machine
+/// parks (`Poll::Pending`) and the scheduler's ready-queue loop resumes
+/// it.
 pub trait StepSink {
-    /// Issue `batch` on behalf of lane `lane`. Returns the lane's own
-    /// results; `clk` is advanced to the completion of the lane's own
-    /// slowest op (never a merged sibling's).
-    fn issue(&self, lane: usize, batch: OpBatch, clk: &mut VClock) -> crate::Result<BatchResult>;
+    /// Does this conduit stage plans (`pipeline_depth >= 2` with a
+    /// nonzero coalescing window)? When false, every issue is direct and
+    /// phase machines never park.
+    fn stages(&self) -> bool;
+
+    /// Ring out any parked fire-and-forget riders at virtual time `now`
+    /// (an empty sync plan reached an issue point: it costs nothing
+    /// itself but gives waiting riders their doorbell). No-op without
+    /// riders.
+    fn flush_riders(&self, lane: usize, now: u64) -> crate::Result<()>;
+
+    /// Post a plan's WQEs into the in-flight table (`Flight::Staged`)
+    /// with the doorbell deferred. The machine returns `Poll::Pending`
+    /// right after.
+    fn post(&self, lane: usize, batch: OpBatch, t_post: u64);
+
+    /// Take the lane's results if its doorbell has completed
+    /// (`Flight::Done`): `(results, completion time of the lane's
+    /// slowest op)`.
+    fn try_take(&self, lane: usize) -> Option<(BatchResult, u64)>;
 
     /// Park a fire-and-forget plan (commit-log clears) to ride a later
-    /// doorbell; `clk` advances only if the plan is issued inline.
+    /// doorbell; `clk` advances only if the plan is issued inline (no
+    /// coalescer: immediate fire-and-forget issue).
     fn issue_deferred(&self, lane: usize, batch: OpBatch, clk: &mut VClock) -> crate::Result<()>;
 
     /// Would acquiring `mode` on `key` at virtual time `now` conflict
-    /// with a sibling lane's transaction that still holds the key then?
+    /// with a sibling lane's transaction whose recorded lock interval
+    /// (committed or live) *covers* `now`? Interval-aware: a sibling
+    /// holding only in the requester's virtual future does not conflict.
     fn sibling_conflict(&self, lane: usize, key: LotusKey, mode: LockMode, now: u64) -> bool;
+
+    /// Record a physical lock acquisition (live interval `[now, ..)`).
+    fn note_lock(&self, lane: usize, key: LotusKey, mode: LockMode, now: u64);
+
+    /// All of `lane`'s locks were physically released: drop its live
+    /// intervals and wake lanes parked waiting on them.
+    fn note_unlock_all(&self, lane: usize);
+
+    /// Triage a failed physical acquisition of `key` (requested in
+    /// `mode`) at time `now`.
+    fn wait_verdict(&self, lane: usize, key: LotusKey, mode: LockMode, now: u64) -> WaitVerdict;
+
+    /// Virtual-time floor the owning coordinator has skipped to (shard
+    /// transfers charge their time here while lanes are parked); resumed
+    /// machines catch their clocks up to it.
+    fn clk_floor(&self) -> u64;
+
+    /// Park the lane until the sibling holding `key` releases
+    /// (`Flight::WaitLock`); `t` is the lane's (unchanged) virtual time.
+    fn park_wait(&self, lane: usize, key: LotusKey, t: u64);
+
+    /// Consume a completed wait (`Flight::WaitOver`): true once the
+    /// holder released and the lane may retry its acquisition.
+    fn try_wait_over(&self, lane: usize) -> bool;
+}
+
+/// The *Issued -> Done* machine step behind [`PhaseCtx::issue`]: first
+/// poll parks the machine (the plan was just posted), every later poll
+/// checks the in-flight table for the rung results.
+struct TakeIssue<'a> {
+    sink: &'a dyn StepSink,
+    lane: usize,
+    parked: bool,
+}
+
+impl Future for TakeIssue<'_> {
+    type Output = (BatchResult, u64);
+
+    fn poll(mut self: Pin<&mut Self>, _cx: &mut Context<'_>) -> Poll<Self::Output> {
+        if !self.parked {
+            self.parked = true;
+            return Poll::Pending;
+        }
+        match self.sink.try_take(self.lane) {
+            Some(done) => Poll::Ready(done),
+            None => Poll::Pending,
+        }
+    }
+}
+
+/// The *wait for a sibling's unlock* step behind [`PhaseCtx::wait_unlock`].
+struct WaitUnlock<'a> {
+    sink: &'a dyn StepSink,
+    lane: usize,
+    key: LotusKey,
+    t: u64,
+    parked: bool,
+}
+
+impl Future for WaitUnlock<'_> {
+    type Output = ();
+
+    fn poll(mut self: Pin<&mut Self>, _cx: &mut Context<'_>) -> Poll<()> {
+        if !self.parked {
+            self.parked = true;
+            self.sink.park_wait(self.lane, self.key, self.t);
+            return Poll::Pending;
+        }
+        if self.sink.try_wait_over(self.lane) {
+            Poll::Ready(())
+        } else {
+            Poll::Pending
+        }
+    }
 }
 
 /// Per-record transaction state (one entry of the read/write set).
@@ -359,22 +478,44 @@ impl PhaseCtx<'_> {
         self.cluster.cfg.isolation
     }
 
-    /// Issue a phase's planned batch and wait for this frame's results.
-    /// Under the step-machine sink the plan may be *staged* (posted, the
-    /// lane yields, sibling frames pump and merge into the same doorbell
-    /// ring) before the call resumes; only this frame's own op
-    /// completions charge `clk`. Without a sink the batch issues
-    /// directly — the classic blocking phase call.
-    pub fn issue(&mut self, batch: OpBatch) -> crate::Result<BatchResult> {
-        match self.sink {
-            Some(sink) => sink.issue(self.lane, batch, self.clk),
-            None => batch.issue(self.ep, &self.cluster.mns, self.clk),
+    /// Issue a phase's planned batch and wait for this frame's results —
+    /// the machine's *issue point*. Under a staging sink the plan is
+    /// *posted* (`Flight::Staged`) and the machine **parks**
+    /// (`Poll::Pending`); the scheduler's ready-queue loop rings a merged
+    /// doorbell set and resumes the machine at `Flight::Done`, charging
+    /// `clk` only to this frame's own slowest op completion. Under a
+    /// direct conduit (no sink, depth 1, window 0) the batch issues
+    /// immediately and the await completes within the same poll — the
+    /// classic blocking phase call.
+    pub async fn issue(&mut self, batch: OpBatch) -> crate::Result<BatchResult> {
+        // No sink and a non-staging sink are contractually the same
+        // direct conduit.
+        let Some(sink) = self.sink.filter(|s| s.stages()) else {
+            return batch.issue(self.ep, &self.cluster.mns, self.clk);
+        };
+        if batch.is_empty() {
+            // Nothing to post; give any parked riders their doorbell.
+            // The empty caller itself stays free.
+            sink.flush_riders(self.lane, self.clk.now())?;
+            return Ok(BatchResult::empty());
         }
+        sink.post(self.lane, batch, self.clk.now());
+        let (res, t_done) = TakeIssue {
+            sink,
+            lane: self.lane,
+            parked: false,
+        }
+        .await;
+        // The owning coordinator may have skipped time forward (shard
+        // transfer) while this machine was parked.
+        self.clk.catch_up(t_done.max(sink.clk_floor()));
+        Ok(res)
     }
 
     /// Issue a fire-and-forget plan off the critical path (remote log
     /// clears): parked with the sink to ride a later doorbell when
-    /// pipelined, `issue_async` otherwise.
+    /// staging, issued immediately (`issue_async`) otherwise — including
+    /// under `coalesce_window_ns == 0`, where nothing may park.
     pub fn issue_deferred(&mut self, batch: OpBatch) -> crate::Result<()> {
         match self.sink {
             Some(sink) => sink.issue_deferred(self.lane, batch, self.clk),
@@ -383,13 +524,53 @@ impl PhaseCtx<'_> {
     }
 
     /// Lock-phase sibling check: would acquiring `mode` on `key` now
-    /// conflict with another lane's in-flight transaction? Always false
-    /// without a scheduler sink.
+    /// conflict with another lane's transaction whose recorded lock
+    /// interval covers now? Always false without a scheduler sink.
     pub fn sibling_conflict(&self, key: LotusKey, mode: LockMode) -> bool {
         match self.sink {
             Some(sink) => sink.sibling_conflict(self.lane, key, mode, self.clk.now()),
             None => false,
         }
+    }
+
+    /// Record a physical lock acquisition with the sink (live interval).
+    pub fn note_lock(&self, key: LotusKey, mode: LockMode) {
+        if let Some(sink) = self.sink {
+            sink.note_lock(self.lane, key, mode, self.clk.now());
+        }
+    }
+
+    /// All locks released: drop live intervals, wake waiting siblings.
+    pub fn note_unlock_all(&self) {
+        if let Some(sink) = self.sink {
+            sink.note_unlock_all(self.lane);
+        }
+    }
+
+    /// Triage a failed physical acquisition (see [`WaitVerdict`]).
+    pub fn wait_verdict(&self, key: LotusKey, mode: LockMode) -> WaitVerdict {
+        match self.sink {
+            Some(sink) => sink.wait_verdict(self.lane, key, mode, self.clk.now()),
+            None => WaitVerdict::Abort,
+        }
+    }
+
+    /// Park until the sibling holding `key` releases, then resume at the
+    /// *unchanged* virtual time (the wait is a scheduling artifact; in
+    /// the modeled timeline the lock was free at `now`) — except for
+    /// coordinator-level time skips (shard transfers), which apply as a
+    /// floor.
+    pub async fn wait_unlock(&mut self, key: LotusKey) {
+        let sink = self.sink.expect("wait_unlock requires a scheduler sink");
+        WaitUnlock {
+            sink,
+            lane: self.lane,
+            key,
+            t: self.clk.now(),
+            parked: false,
+        }
+        .await;
+        self.clk.catch_up(sink.clk_floor());
     }
 }
 
@@ -406,26 +587,26 @@ pub fn begin(cluster: &SharedCluster, clk: &mut VClock, frame: &mut TxnFrame, re
 /// Shared *Commit* entry: charge the application-logic CPU window, then
 /// run the read-write commit pipeline (read-only transactions have
 /// nothing to write). Same single-implementation rationale as [`begin`].
-pub fn commit_txn(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame) -> crate::Result<()> {
+pub async fn commit_txn(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame) -> crate::Result<()> {
     // Application logic between execute and commit.
     ctx.clk.advance(ctx.net().txn_logic_ns);
     if frame.read_only {
         Ok(())
     } else {
-        commit::commit_rw(ctx, frame)
+        commit::commit_rw(ctx, frame).await
     }
 }
 
 /// One full execution round over `frame.records[frame.executed_upto..]`:
 /// lock-first (read-write transactions only), then Read CVT, then Read
 /// Data. On `Err` the transaction is already rolled back (locks freed).
-pub fn execute(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame) -> crate::Result<()> {
+pub async fn execute(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame) -> crate::Result<()> {
     let from = frame.executed_upto;
     if !frame.read_only {
-        lock::acquire(ctx, frame, from)?;
+        lock::acquire(ctx, frame, from).await?;
     }
-    read::read_cvt(ctx, frame, from)?;
-    read::read_data(ctx, frame, from)?;
+    read::read_cvt(ctx, frame, from).await?;
+    read::read_data(ctx, frame, from).await?;
     frame.executed_upto = frame.records.len();
     Ok(())
 }

@@ -7,10 +7,11 @@
 //! select the largest version `<= T_start`; a newer visible version
 //! aborts an SR read-write transaction.
 //!
-//! Both phases are two-step under the step-machine contract: plan the
-//! round's READs, then hand the plan to [`PhaseCtx::issue`] — under the
-//! pipelined scheduler the frame yields there and sibling frames' plans
-//! may share the doorbell ring (see [`crate::txn::phases`] docs).
+//! Both phases are resumable machines cut at their issue points: plan
+//! the round's READs, then hand the plan to [`PhaseCtx::issue`] — under
+//! the pipelined scheduler the machine parks there (`Poll::Pending`) and
+//! sibling frames' plans may share the doorbell ring (see
+//! [`crate::txn::phases`] docs).
 
 use std::sync::Arc;
 
@@ -52,7 +53,7 @@ fn probe_find(
 
 /// Insert placement: read the whole probe chain in one doorbell, reject
 /// duplicates anywhere in it, pick the first empty slot.
-fn probe_place_insert(
+async fn probe_place_insert(
     ctx: &mut PhaseCtx<'_>,
     frame: &mut TxnFrame,
     table: &Arc<TableStore>,
@@ -71,7 +72,7 @@ fn probe_place_insert(
             )
         })
         .collect();
-    let res = ctx.issue(batch)?;
+    let res = ctx.issue(batch).await?;
     let mut placed = None;
     for (&b, &tag) in buckets.iter().zip(&tags) {
         let out = res.read_buf(tag);
@@ -98,7 +99,7 @@ fn probe_place_insert(
 }
 
 /// Phase 2: obtain every record's CVT (cache / addr cache / bucket).
-pub fn read_cvt(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame, from: usize) -> Result<()> {
+pub async fn read_cvt(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame, from: usize) -> Result<()> {
     let use_vt_cache = ctx.cluster.cfg.features.vt_cache;
     let vt_cache = ctx.cluster.vt_caches[ctx.cn].clone();
     let addr_cache = ctx.cluster.addr_caches[ctx.cn].clone();
@@ -130,7 +131,7 @@ pub fn read_cvt(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame, from: usize) -> Re
         }
         if is_insert {
             // Placement reads the whole probe chain in one doorbell.
-            let (b, slot) = probe_place_insert(ctx, frame, &table, r.key)?;
+            let (b, slot) = probe_place_insert(ctx, frame, &table, r.key).await?;
             let mut cvt = CvtSnapshot::empty(table.spec.ncells);
             cvt.key = r.key.0;
             cvt.occupied = true;
@@ -174,7 +175,7 @@ pub fn read_cvt(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame, from: usize) -> Re
         .iter()
         .map(|&(_, mn, addr, len, _)| batch.read(mn, addr, len))
         .collect();
-    let mut results = ctx.issue(batch)?;
+    let mut results = ctx.issue(batch).await?;
 
     // Pass 3: parse, validate, retry stale addresses via bucket read.
     for (ri, &(i, _mn_id, addr, _len, whole_bucket)) in reads.iter().enumerate() {
@@ -239,7 +240,7 @@ pub fn read_cvt(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame, from: usize) -> Re
 }
 
 /// Phase 3: MVCC version select + record reads.
-pub fn read_data(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame, from: usize) -> Result<()> {
+pub async fn read_data(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame, from: usize) -> Result<()> {
     // Collect reads: (record idx, mn, addr, payload_len, record_len, want_cv).
     let mut reads: Vec<(usize, usize, u64, usize, u32, u8)> = Vec::new();
     for i in from..frame.records.len() {
@@ -280,7 +281,7 @@ pub fn read_data(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame, from: usize) -> R
             batch.read(mn, addr, record::slot_size(record_len))
         })
         .collect();
-    let mut results = ctx.issue(batch)?;
+    let mut results = ctx.issue(batch).await?;
     for (ri, &(i, _mn, _addr, payload_len, record_len, want_cv)) in reads.iter().enumerate() {
         let buf = results.take_read(tags[ri]);
         let decoded = record::decode(&buf, payload_len, record_len);

@@ -36,4 +36,8 @@ pub fn release(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame) {
             .rpc
             .call_async(ctx.cn, target, ctx.slot, n, ctx.clk);
     }
+    // Drop this lane's live lock intervals with the scheduler sink and
+    // wake sibling lanes parked waiting on them (anachronistic-holder
+    // triage, see the lock phase docs).
+    ctx.note_unlock_all();
 }

@@ -5,10 +5,10 @@
 //! layout lets one doorbell batch per MN carry both); the metadata commit
 //! log rides in the same batch. After the commit timestamp is drawn,
 //! *Write Visible* overwrites INVISIBLE with the timestamp on every
-//! replica — again one `OpBatch`. Each phase issues exactly once through
-//! [`PhaseCtx::issue`] — the step-machine's yield point, where the
-//! pipelined scheduler may merge the plan with sibling frames' doorbell
-//! rings before it rings.
+//! replica — again one `OpBatch`. Each phase is a resumable machine
+//! issuing exactly once through [`PhaseCtx::issue`] — the park point
+//! where the pipelined scheduler may merge the plan with sibling
+//! frames' doorbell rings before it rings.
 
 use crate::dm::opbatch::OpBatch;
 use crate::store::cvt::{CellSnapshot, CvtSnapshot, INVISIBLE};
@@ -35,7 +35,7 @@ pub struct PlannedWrite {
 /// per-MN doorbell batches. `early_ts` is the pre-drawn commit timestamp
 /// of the no-log mode (UPS-backed DRAM, "+Log & Visible" ablation off);
 /// it is ignored when the log mode is on (versions start INVISIBLE).
-pub fn write_data_and_log(
+pub async fn write_data_and_log(
     ctx: &mut PhaseCtx<'_>,
     frame: &mut TxnFrame,
     early_ts: u64,
@@ -129,13 +129,13 @@ pub fn write_data_and_log(
         let log_img = LogRecord::prepared(frame.txn_id, log_entries)?.serialize();
         batch.write(log_mn, log_addr, log_img);
     }
-    ctx.issue(batch)?;
+    ctx.issue(batch).await?;
     Ok(plans)
 }
 
 /// Phase 6: overwrite INVISIBLE with the commit timestamp on every
 /// replica (one WRITE of the cell's version word each).
-pub fn write_visible(
+pub async fn write_visible(
     ctx: &mut PhaseCtx<'_>,
     frame: &TxnFrame,
     plans: &[PlannedWrite],
@@ -154,6 +154,6 @@ pub fn write_visible(
             );
         }
     }
-    ctx.issue(batch)?;
+    ctx.issue(batch).await?;
     Ok(())
 }

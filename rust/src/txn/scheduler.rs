@@ -1,7 +1,8 @@
 //! The pipelined frame scheduler: `pipeline_depth` concurrent
-//! [`TxnFrame`]s per coordinator thread, with a split-phase **step-machine**
-//! that overlaps sibling frames' protocol stages and coalesces their
-//! doorbells.
+//! [`TxnFrame`]s per coordinator thread, each reified as a poll-driven
+//! **lane continuation** and multiplexed by a flat **ready-queue event
+//! loop** that overlaps sibling frames' protocol stages and coalesces
+//! their doorbells.
 //!
 //! The sequential [`crate::txn::coordinator::LotusCoordinator`] runs one
 //! transaction at a time and stalls a full RTT at every phase boundary.
@@ -9,67 +10,87 @@
 //! requests ("threads x coroutines"); the [`FrameScheduler`] models that:
 //! one OS thread owns `depth` **lanes**, each a full transaction stream
 //! (frame + virtual clock + RNG) sharing the coordinator's endpoint and
-//! RPC slot. The scheduler always pumps the lane with the smallest
-//! virtual clock, so lane transactions *overlap in virtual time* — and
-//! all lanes charge the same simulated NICs, so saturation effects of the
-//! deeper pipeline are faithful.
+//! RPC slot. All lanes charge the same simulated NICs, so saturation
+//! effects of the deeper pipeline are faithful.
 //!
-//! # The step-machine (intra-transaction stage overlap)
+//! # Reified lane continuations (ISSUE 4)
 //!
-//! Phases *plan* their one-sided ops into [`OpBatch`]es and hand them to
-//! the conduit ([`crate::txn::phases::PhaseCtx::issue`], backed here by
-//! [`StepSink`]). Where the transaction-granular scheduler of PR 2
-//! blocked a lane from its doorbell ring to the last completion, the
-//! step-machine splits every issue point into **post** and **ring**
-//! halves:
+//! A lane's whole transaction — the workload driver plus every protocol
+//! phase — is one heap-allocated step machine
+//! ([`crate::txn::step::StepFut`]), cut at its issue points. Phases
+//! *plan* their one-sided ops into [`OpBatch`]es and hand them to the
+//! conduit ([`crate::txn::phases::PhaseCtx::issue`], backed here by the
+//! scheduler's [`StepSink`] implementation):
 //!
-//! 1. **Post / yield** — the plan's WQEs are staged in the scheduler's
-//!    in-flight table ([`Flight::Staged`]; the CN NIC tracks the
-//!    posted-but-unrung depth) and the lane *yields*.
-//! 2. **Pump** — the scheduler immediately pumps the next-smallest-clock
-//!    idle lane. That lane runs until *its* first issue point, stages its
-//!    own plan, and pumps in turn — so a frame's lock RPC, CVT read and
-//!    log write overlap in virtual time with sibling frames' phases, and
-//!    more plans land inside `coalesce_window_ns` than transaction-level
-//!    pumping could ever pair.
-//! 3. **Ring / resume** — whichever lane finds no sibling left inside its
-//!    window rings **one merged doorbell set** for every staged plan
-//!    within `coalesce_window_ns` of its own post time (plus every parked
-//!    fire-and-forget plan riding along). Per-op completion times are
-//!    routed back through the in-flight table ([`Flight::Done`], keyed by
-//!    doorbell completion time); each suspended lane resumes with *its
-//!    own* results and charges its clock only to its own slowest
-//!    completion.
+//! 1. **Post / park** — the plan's WQEs are staged in the scheduler's
+//!    in-flight table (`Flight::Staged`; the CN NIC tracks the
+//!    posted-but-unrung depth) and the machine returns `Poll::Pending`.
+//!    Nothing on the OS stack pins the lane: its entire state lives in
+//!    the machine, so *any* lane can run next.
+//! 2. **Pump** — the event loop polls the runnable lane with the
+//!    smallest virtual clock: a lane whose doorbell completed
+//!    (`Flight::Done`, ready at its own completion time), a lane whose
+//!    lock wait ended (`Flight::WaitOver`), or an idle lane starting a
+//!    fresh transaction. Each pumped lane runs to its own next issue
+//!    point and parks in turn — so a frame's lock RPC, CVT read and log
+//!    write overlap in virtual time with sibling frames' phases, at
+//!    *every* issue point of every round, not just the innermost one.
+//! 3. **Ring / re-enqueue** — when no runnable lane remains at or below
+//!    `staged_min + coalesce_window_ns` (every lane is parked, or the
+//!    next runnable lane lies beyond the oldest staged plan's window),
+//!    the loop rings **one merged doorbell set** for every staged plan
+//!    within the window of the oldest post time (plus parked
+//!    fire-and-forget riders). Per-op completion times are routed back
+//!    through the in-flight table (`Flight::Done`), and each completed
+//!    lane re-enters the ready queue at its own completion time — lanes
+//!    resume in **completion-clock order**, in any interleaving. Staged
+//!    plans outside the window stay staged and ring in a later round, so
+//!    a lane's merge wait is bounded by the window.
 //!
-//! Staged plans outside the initiator's window stay staged and ring at
-//! their own post times when their owner resumes — a lane's merge wait is
-//! bounded by the window, never by a sibling's whole transaction.
+//! The old step-machine (PR 3) suspended lanes by *stack unwind*: a
+//! parked lane held an OS stack frame (and a `RefCell` borrow), so after
+//! a merged ring only the innermost lane could keep issuing; ancestors
+//! resumed LIFO and their later issue points mostly rang alone. The
+//! continuation model deletes that shape entirely — there is no nested
+//! pumping, no `MAX_PUMPS_PER_YIELD` bound, no per-lane `RefCell`
+//! suspension trick; the scheduler pump is a flat loop. The new
+//! [`crate::metrics::RunReport`] stats `resumed_rings` /
+//! `mean_ring_gap_ns()` report how many rings re-enqueued parked lanes
+//! and how long staged plans waited to merge.
 //!
 //! Two further mechanisms ride on the lane model:
 //!
 //! - **Fire-and-forget parking** ([`Coalescer`]): deferred plans
-//!   (commit-log clears) park and ride a later ring; stale ones are
-//!   rung out by [`Coalescer::flush_stale`] / [`FrameScheduler::finish`]
-//!   exactly once.
-//! - **Sibling lock-first aborts** ([`SiblingLocks`]): conflicts between
-//!   lanes whose transactions overlap in *virtual* time are detected
-//!   against recorded lock intervals and abort locally — a CPU compare on
-//!   the CN, before a single byte (or the remote-lock RPC) leaves the
-//!   node. A *suspended* lane additionally holds its real lock-table
-//!   locks while siblings pump, so a nested lane can also abort on a
-//!   physical conflict whose virtual-time order is inverted (the holder
-//!   acquired "later" in virtual time). That abort is conservative —
-//!   real shared memory needs real mutual exclusion while the holder is
-//!   suspended — and the inversion window is bounded by the pump chain
-//!   (~`coalesce_window_ns` + one lock phase).
+//!   (commit-log clears) park and ride a later ring; stale ones are rung
+//!   out by [`Coalescer::flush_stale`] / [`FrameScheduler::finish`]
+//!   exactly once. With `coalesce_window_ns == 0` there is no coalescer
+//!   and deferred plans issue immediately (fire-and-forget) instead of
+//!   parking.
+//! - **Sibling lock conflicts by virtual interval** ([`SiblingLocks`] +
+//!   the live holdings of parked lanes): conflicts between lanes are
+//!   decided against *recorded lock intervals* — a committed
+//!   transaction's `[from, until)` stamps and a parked lane's live
+//!   `[from, ..)` holdings — never against raw physical holder state. A
+//!   requester whose clock precedes a suspended sibling's acquisition
+//!   time is not in conflict in the modeled timeline: it *parks*
+//!   (`Flight::WaitLock`) until the sibling releases and then retries at
+//!   its unchanged virtual time, instead of taking the anachronistic
+//!   abort the stack-unwind design had to take. Genuine interval
+//!   overlaps abort lock-first, before any bytes leave the CN. Waits
+//!   never target a lane that is itself waiting, so the wait graph is
+//!   acyclic and the loop always progresses.
 //!
 //! With `depth == 1` there are no siblings, no coalescer and no staging:
-//! every issue takes the direct path, reproducing the sequential
-//! coordinator's exact issue order, clock charges and RNG stream
-//! (asserted by the `pipeline_depth=1` invariant test in [`crate::sim`]).
+//! every issue takes the direct path and a lane machine completes within
+//! a single poll, reproducing the sequential coordinator's exact issue
+//! order, clock charges and RNG stream (asserted by the
+//! `pipeline_depth=1` invariant test in [`crate::sim`]).
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
+use std::future::Future;
+use std::rc::Rc;
 use std::sync::Arc;
+use std::task::{Context, Poll, Waker};
 
 use crate::dm::clock::{TimeGate, VClock};
 use crate::dm::memnode::MemNode;
@@ -79,20 +100,26 @@ use crate::lock::table::LockMode;
 use crate::sharding::key::LotusKey;
 use crate::txn::api::{RecordRef, TxnApi, TxnCtl};
 use crate::txn::coordinator::SharedCluster;
-use crate::txn::phases::{self, PhaseCtx, StepSink, TxnFrame, TxnRecord};
+use crate::txn::phases::{self, PhaseCtx, StepSink, TxnFrame, TxnRecord, WaitVerdict};
+use crate::txn::step::{noop_waker, StepFut};
 use crate::util::Xoshiro256;
 use crate::workloads::{RouteCtx, Workload};
 use crate::{Error, Result};
 
-/// One pumped transaction's accounting: `(t_begin, t_end, outcome)` on
-/// the lane clock that ran it. A fatal (non-abort) error never appears
-/// here — it fails the whole run instead.
-pub type LaneOutcome = (u64, u64, Result<()>);
-
-/// Defensive bound on nested pumps per yield point: a yield may pump the
-/// same sibling several times (short transactions inside one window), but
-/// a failure of virtual time to advance must not spin the thread.
-const MAX_PUMPS_PER_YIELD: usize = 64;
+/// One completed transaction's accounting on the lane clock that ran it.
+/// A fatal (non-abort) error never appears here — it fails the whole run
+/// instead.
+#[derive(Debug)]
+pub struct LaneOutcome {
+    /// The lane that ran the transaction.
+    pub lane: usize,
+    /// Lane clock at `begin`.
+    pub t_begin: u64,
+    /// Lane clock at completion (commit or abort).
+    pub t_end: u64,
+    /// Commit (`Ok`) or abort (`Err` with an abort reason).
+    pub result: Result<()>,
+}
 
 /// Add `n` ops to `mn`'s tally in a small per-MN count list.
 fn bump_mn(tally: &mut Vec<(usize, u64)>, mn: usize, n: u64) {
@@ -314,20 +341,26 @@ impl Coalescer {
     }
 }
 
-/// One lock held by a recently pumped sibling transaction, with its
-/// virtual release time.
+/// One lock held by a sibling transaction over a recorded **virtual
+/// interval** `[from, until)`.
 #[derive(Debug, Clone, Copy)]
 pub struct LockStamp {
     /// Locked key.
     pub key: LotusKey,
     /// Held mode.
     pub mode: LockMode,
-    /// Virtual time the holding transaction released it.
+    /// Virtual time the holding transaction acquired it (live holdings
+    /// record the exact acquisition; committed stamps inherit it through
+    /// the unlock hand-off, falling back to the transaction's begin).
+    pub from: u64,
+    /// Virtual time the holding transaction released it (`u64::MAX` for
+    /// a live holding still held by an in-flight lane).
     pub until: u64,
 }
 
 /// Read view over all lanes' recent lock intervals, excluding the asking
-/// lane — the lock phase's local sibling-conflict check.
+/// lane — the lock phase's local sibling-conflict check. Interval-aware:
+/// a stamp conflicts only if its `[from, until)` interval covers `now`.
 pub struct SiblingLocks<'a> {
     logs: &'a [Vec<LockStamp>],
     me: usize,
@@ -340,12 +373,14 @@ impl<'a> SiblingLocks<'a> {
     }
 
     /// Would acquiring `mode` on `key` at virtual time `now` conflict
-    /// with a sibling lane's transaction that still holds the key then?
+    /// with a sibling lane's transaction whose recorded holding interval
+    /// covers `now`?
     pub fn conflicts(&self, key: LotusKey, mode: LockMode, now: u64) -> bool {
         self.logs.iter().enumerate().any(|(i, log)| {
             i != self.me
                 && log.iter().any(|s| {
                     s.key == key
+                        && s.from <= now
                         && s.until > now
                         && (mode == LockMode::Write || s.mode == LockMode::Write)
                 })
@@ -362,85 +397,571 @@ enum LanePhase {
     Executed,
 }
 
-/// One concurrent transaction stream within a scheduler. Each lane owns
-/// its frame, virtual clock and workload RNG so a suspended lane's state
-/// is untouched while siblings pump (lane 0's RNG stream equals the
-/// sequential coordinator's, anchoring the depth-1 equivalence).
-struct Lane {
-    frame: TxnFrame,
-    clk: VClock,
-    rng: Xoshiro256,
-    phase: LanePhase,
-}
-
-/// In-flight state of one lane's issue point (the step-machine's table).
+/// In-flight state of one lane (the continuation model's parking table):
+/// the *only* channel between a parked lane machine and the event loop.
 enum Flight {
-    /// No plan in flight.
+    /// No plan in flight (lane idle, or machine mid-poll).
     Idle,
     /// WQEs posted, doorbell not yet rung: `(plan, post virtual time)`.
+    /// The lane machine is parked (`Poll::Pending`).
     Staged(OpBatch, u64),
-    /// Doorbell rung; results await the owner's resume:
-    /// `(results, completion time of the owner's slowest op)`.
-    Done(BatchResult, u64),
+    /// Doorbell rung; the lane is in the ready queue at `t_done`.
+    Done {
+        /// The lane's own results.
+        res: BatchResult,
+        /// Completion time of the lane's slowest op (its resume time).
+        t_done: u64,
+        /// The lane's clock while parked (its post time) — the frontier
+        /// value until the machine resumes and catches up.
+        t_post: u64,
+        /// Ring event that completed this plan (resume-order tracing).
+        ring: u64,
+    },
+    /// Parked waiting for the sibling holding `key` to release (the
+    /// anachronistic-holder triage; `t` is the unchanged virtual time).
+    WaitLock(LotusKey, u64),
+    /// The wait ended: ready to retry the acquisition at time `t`.
+    WaitOver(u64),
 }
 
-/// `pipeline_depth` concurrent transaction streams multiplexed onto one
-/// coordinator thread (see the module docs). Replaces the sequential
-/// coordinator inside [`crate::sim`]'s `coordinator_thread` for LOTUS
-/// runs with `pipeline_depth >= 1`.
-pub struct FrameScheduler {
+/// One resume-trace entry: `(ring event id, lane, completion time)` —
+/// recorded when a `Flight::Done` lane is actually re-polled.
+pub type ResumeTrace = (u64, usize, u64);
+
+/// State shared between the event loop and the lane machines (via `Rc`):
+/// the machines reach it as their [`StepSink`] conduit, the loop as
+/// plain scheduler state. Single-threaded by construction; `RefCell`
+/// borrows are confined to single calls and never held across polls.
+struct SchedShared {
     cluster: Arc<SharedCluster>,
     cn: usize,
     slot: usize,
     global_id: usize,
+    depth: usize,
     ep: Endpoint,
-    /// Lanes behind `RefCell`s: a lane suspended at an issue point keeps
-    /// its borrow on the pump stack, which is exactly what excludes it
-    /// from the idle-lane scan.
-    lanes: Vec<RefCell<Lane>>,
-    /// Per lane: lock intervals of its recently pumped transactions
+    coalescer: Option<Coalescer>,
+    /// The parking table, one slot per lane.
+    flights: RefCell<Vec<Flight>>,
+    /// Per lane: lock intervals of its recently *committed* transactions
     /// (pruned once every lane's clock has passed them).
     lock_logs: RefCell<Vec<Vec<LockStamp>>>,
-    /// The step-machine's in-flight table, one slot per lane.
-    inflight: RefCell<Vec<Flight>>,
-    /// Transactions completed by nested pumps inside the current step.
-    done: RefCell<Vec<LaneOutcome>>,
-    coalescer: Option<Coalescer>,
+    /// Per lane: locks its in-flight transaction currently holds, as
+    /// open intervals (`until == u64::MAX`).
+    live_locks: RefCell<Vec<Vec<LockStamp>>>,
+    /// Per lane: the live set of the lane's most recently released
+    /// transaction (moved out of `live_locks` at unlock) — the per-key
+    /// acquisition times the committed stamps are built from.
+    released: RefCell<Vec<Vec<LockStamp>>>,
+    /// Per lane: the machine's final clock, written just before it
+    /// completes (explicit hand-back; never derived from outcomes).
+    lane_end: RefCell<Vec<u64>>,
+    /// Transactions completed by lane machines, drained by the loop.
+    outcomes: RefCell<Vec<LaneOutcome>>,
+    /// A fatal (run-ending) error raised inside a lane machine.
+    fatal: RefCell<Option<Error>>,
+    /// Virtual-time floor from coordinator-level skips (shard transfers
+    /// charged while lanes are parked); resumed machines catch up to it.
+    clk_floor: Cell<u64>,
+}
+
+impl StepSink for SchedShared {
+    fn stages(&self) -> bool {
+        self.coalescer.is_some()
+    }
+
+    fn flush_riders(&self, lane: usize, now: u64) -> Result<()> {
+        let Some(c) = &self.coalescer else {
+            return Ok(());
+        };
+        if c.pending_plans() == 0 {
+            return Ok(());
+        }
+        // Ring parked riders out anchored at the (empty) caller's time;
+        // the caller's own slice is empty and free.
+        let mut rung = c.ring(vec![(lane, OpBatch::new(), now)], &self.ep, &self.cluster.mns)?;
+        let _ = rung.pop();
+        Ok(())
+    }
+
+    fn post(&self, lane: usize, batch: OpBatch, t_post: u64) {
+        self.ep.post_wqes(batch.len() as u64);
+        self.flights.borrow_mut()[lane] = Flight::Staged(batch, t_post);
+    }
+
+    fn try_take(&self, lane: usize) -> Option<(BatchResult, u64)> {
+        let mut fl = self.flights.borrow_mut();
+        if !matches!(fl[lane], Flight::Done { .. }) {
+            return None;
+        }
+        match std::mem::replace(&mut fl[lane], Flight::Idle) {
+            Flight::Done { res, t_done, .. } => Some((res, t_done)),
+            _ => unreachable!(),
+        }
+    }
+
+    fn issue_deferred(&self, _lane: usize, batch: OpBatch, clk: &mut VClock) -> Result<()> {
+        match &self.coalescer {
+            Some(c) => {
+                c.defer(batch, clk.now());
+                Ok(())
+            }
+            // No coalescer (depth 1 or window 0): nothing may park — the
+            // fire-and-forget plan issues immediately.
+            None => batch.issue_async(&self.ep, &self.cluster.mns, clk),
+        }
+    }
+
+    fn sibling_conflict(&self, lane: usize, key: LotusKey, mode: LockMode, now: u64) -> bool {
+        if self.depth <= 1 {
+            return false;
+        }
+        // Committed siblings' recorded intervals, plus parked siblings'
+        // live holdings (open intervals, `until == u64::MAX`) — one
+        // predicate for both, so the overlap rule cannot diverge. A
+        // sibling that acquired only in this lane's virtual future is an
+        // anachronism, not a conflict.
+        let logs = self.lock_logs.borrow();
+        if SiblingLocks::new(&logs, lane).conflicts(key, mode, now) {
+            return true;
+        }
+        let live = self.live_locks.borrow();
+        SiblingLocks::new(&live, lane).conflicts(key, mode, now)
+    }
+
+    fn note_lock(&self, lane: usize, key: LotusKey, mode: LockMode, now: u64) {
+        if self.depth > 1 {
+            self.live_locks.borrow_mut()[lane].push(LockStamp {
+                key,
+                mode,
+                from: now,
+                until: u64::MAX,
+            });
+        }
+    }
+
+    fn note_unlock_all(&self, lane: usize) {
+        if self.depth <= 1 {
+            return;
+        }
+        let released: Vec<LotusKey> = {
+            let mut live = self.live_locks.borrow_mut();
+            let set = std::mem::take(&mut live[lane]);
+            if set.is_empty() {
+                // A later no-op release (e.g. a rollback after an abort
+                // path already released) must not clobber the saved set.
+                return;
+            }
+            let keys = set.iter().map(|s| s.key).collect();
+            // Keep the per-key acquisition times for the committed
+            // stamping at transaction end.
+            self.released.borrow_mut()[lane] = set;
+            keys
+        };
+        // Wake lanes parked on any of the released keys: they re-check
+        // the (now free) lock at their unchanged virtual time.
+        let mut fl = self.flights.borrow_mut();
+        for f in fl.iter_mut() {
+            if let Flight::WaitLock(k, t) = *f {
+                if released.contains(&k) {
+                    *f = Flight::WaitOver(t);
+                }
+            }
+        }
+    }
+
+    fn wait_verdict(&self, lane: usize, key: LotusKey, mode: LockMode, now: u64) -> WaitVerdict {
+        if self.depth <= 1 {
+            return WaitVerdict::Abort;
+        }
+        // Wait only if (a) some sibling lane holds `key` in a conflicting
+        // mode, (b) *every* such holding lies in our virtual future (one
+        // genuine interval overlap means lock-first abort), and (c)
+        // every conflicting holder is parked making progress — staged,
+        // ready to resume, or woken from its own wait (`WaitOver` is in
+        // the ready queue, not blocked) — never a lane that is itself
+        // still blocked on a lock, which keeps the wait graph acyclic
+        // and the event loop deadlock-free.
+        let live = self.live_locks.borrow();
+        let fl = self.flights.borrow();
+        let mut any_holder = false;
+        for (i, holdings) in live.iter().enumerate() {
+            if i == lane {
+                continue;
+            }
+            let mut holds_key = false;
+            for s in holdings.iter().filter(|s| {
+                s.key == key && (mode == LockMode::Write || s.mode == LockMode::Write)
+            }) {
+                holds_key = true;
+                if s.from <= now {
+                    return WaitVerdict::Abort; // genuine overlap
+                }
+            }
+            if holds_key {
+                any_holder = true;
+                if !matches!(
+                    fl[i],
+                    Flight::Staged(..) | Flight::Done { .. } | Flight::WaitOver(..)
+                ) {
+                    return WaitVerdict::Abort;
+                }
+            }
+        }
+        if any_holder {
+            WaitVerdict::Wait
+        } else {
+            WaitVerdict::Abort
+        }
+    }
+
+    fn park_wait(&self, lane: usize, key: LotusKey, t: u64) {
+        self.flights.borrow_mut()[lane] = Flight::WaitLock(key, t);
+    }
+
+    fn try_wait_over(&self, lane: usize) -> bool {
+        let mut fl = self.flights.borrow_mut();
+        if matches!(fl[lane], Flight::WaitOver(_)) {
+            fl[lane] = Flight::Idle;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn clk_floor(&self) -> u64 {
+        self.clk_floor.get()
+    }
+}
+
+/// Hands the lane's RNG back to the scheduler-side slot when the machine
+/// ends — including when a fail-stop crash *drops* the machine mid-poll,
+/// so the lane's RNG stream survives crashes exactly as it did when the
+/// scheduler owned it directly.
+struct RngReturn {
+    rng: Option<Xoshiro256>,
+    slot: Rc<RefCell<Option<Xoshiro256>>>,
+}
+
+impl Drop for RngReturn {
+    fn drop(&mut self) {
+        if let Some(rng) = self.rng.take() {
+            *self.slot.borrow_mut() = Some(rng);
+        }
+    }
+}
+
+/// The [`TxnApi`]/[`TxnCtl`] view a lane machine drives for one
+/// transaction: the frame, clock and RNG live *inside the machine*, and
+/// every issue point parks through the shared conduit.
+struct LaneApi<'s> {
+    shared: &'s SchedShared,
+    lane: usize,
+    frame: TxnFrame,
+    clk: VClock,
+    rng: RngReturn,
+    phase: LanePhase,
+}
+
+impl<'s> LaneApi<'s> {
+    /// Split-borrow into a phase context + the lane's frame.
+    fn parts(&mut self) -> (PhaseCtx<'_>, &mut TxnFrame) {
+        let lane = self.lane;
+        let shared = self.shared;
+        let LaneApi { frame, clk, .. } = self;
+        (
+            PhaseCtx {
+                cluster: &shared.cluster,
+                cn: shared.cn,
+                slot: shared.slot,
+                global_id: shared.global_id,
+                ep: &shared.ep,
+                clk,
+                lane,
+                sink: Some(shared),
+            },
+            frame,
+        )
+    }
+}
+
+impl TxnCtl for LaneApi<'_> {
+    fn add_ro(&mut self, r: RecordRef) {
+        debug_assert_ne!(self.phase, LanePhase::Idle);
+        self.frame.records.push(TxnRecord::new(r, false));
+    }
+
+    fn add_rw(&mut self, r: RecordRef) {
+        debug_assert_ne!(self.phase, LanePhase::Idle);
+        debug_assert!(!self.frame.read_only, "read-only txn cannot AddRW");
+        self.frame.records.push(TxnRecord::new(r, true));
+    }
+
+    fn add_insert(&mut self, r: RecordRef, payload: Vec<u8>) {
+        debug_assert_ne!(self.phase, LanePhase::Idle);
+        debug_assert!(!self.frame.read_only);
+        let mut rec = TxnRecord::new(r, true);
+        rec.insert = true;
+        rec.new_value = Some(payload);
+        self.frame.records.push(rec);
+    }
+
+    fn add_delete(&mut self, r: RecordRef) {
+        debug_assert_ne!(self.phase, LanePhase::Idle);
+        let mut rec = TxnRecord::new(r, true);
+        rec.delete = true;
+        self.frame.records.push(rec);
+    }
+
+    fn execute(&mut self) -> Result<()> {
+        unreachable!("pipelined lanes drive execute_step, never the blocking form")
+    }
+
+    fn execute_step(&mut self) -> StepFut<'_, Result<()>> {
+        Box::pin(async move {
+            debug_assert_ne!(self.phase, LanePhase::Idle);
+            let res = {
+                let (mut ctx, frame) = self.parts();
+                phases::execute(&mut ctx, frame).await
+            };
+            match res {
+                Ok(()) => {
+                    self.phase = LanePhase::Executed;
+                    Ok(())
+                }
+                Err(e) => {
+                    // The failing phase already released every held lock.
+                    self.phase = LanePhase::Idle;
+                    Err(e)
+                }
+            }
+        })
+    }
+
+    fn value(&self, r: RecordRef) -> Option<&[u8]> {
+        self.frame
+            .find(r)
+            .and_then(|i| self.frame.records[i].value.as_deref())
+    }
+
+    fn stage_write(&mut self, r: RecordRef, payload: Vec<u8>) {
+        let i = self.frame.find(r).expect("stage_write on unknown record");
+        debug_assert!(self.frame.records[i].write, "stage_write needs AddRW");
+        self.frame.records[i].new_value = Some(payload);
+    }
+
+    fn commit(&mut self) -> Result<()> {
+        unreachable!("pipelined lanes drive commit_step, never the blocking form")
+    }
+
+    fn commit_step(&mut self) -> StepFut<'_, Result<()>> {
+        Box::pin(async move {
+            debug_assert_eq!(self.phase, LanePhase::Executed);
+            let res = {
+                let (mut ctx, frame) = self.parts();
+                phases::commit_txn(&mut ctx, frame).await
+            };
+            self.phase = LanePhase::Idle;
+            res
+        })
+    }
+
+    fn rollback(&mut self) {
+        let (mut ctx, frame) = self.parts();
+        phases::unlock::release(&mut ctx, frame);
+        self.phase = LanePhase::Idle;
+    }
+}
+
+impl TxnApi for LaneApi<'_> {
+    fn begin(&mut self, read_only: bool) {
+        let shared = self.shared;
+        phases::begin(&shared.cluster, &mut self.clk, &mut self.frame, read_only);
+        self.phase = LanePhase::Building;
+    }
+
+    fn txn(&mut self) -> &mut dyn TxnCtl {
+        self
+    }
+
+    fn now(&self) -> u64 {
+        self.clk.now()
+    }
+
+    fn rng(&mut self) -> &mut Xoshiro256 {
+        self.rng.rng.as_mut().expect("lane RNG present while running")
+    }
+
+    fn cn(&self) -> usize {
+        self.shared.cn
+    }
+
+    fn attach_gate(&mut self, _gate: Arc<TimeGate>, _gid: usize) {
+        // The gate is attached at scheduler level (shared endpoint).
+    }
+
+    fn crash(&mut self) {
+        self.frame.crash();
+        self.phase = LanePhase::Idle;
+    }
+
+    fn skip_to(&mut self, t_ns: u64) {
+        self.clk.catch_up(t_ns);
+    }
+}
+
+/// One lane transaction, reified: begin-to-end workload + protocol
+/// execution as a single heap-allocated machine. All effects (outcome,
+/// committed lock stamps, fatal errors) flow through the shared state;
+/// the machine's output is `()`.
+async fn lane_txn(
+    shared: Rc<SchedShared>,
+    lane: usize,
+    clk0: u64,
+    rng_slot: Rc<RefCell<Option<Xoshiro256>>>,
+    workload: Arc<dyn Workload>,
+    hybrid: bool,
+) {
+    let rng = rng_slot
+        .borrow_mut()
+        .take()
+        .expect("lane RNG free at machine start");
+    let mut api = LaneApi {
+        shared: &shared,
+        lane,
+        frame: TxnFrame::new(),
+        clk: VClock(clk0),
+        rng: RngReturn {
+            rng: Some(rng),
+            slot: rng_slot,
+        },
+        phase: LanePhase::Idle,
+    };
+    let route = RouteCtx {
+        router: &shared.cluster.router,
+        cn: shared.cn,
+        hybrid,
+    };
+    let res = workload.run_one(&mut api, &route).await;
+    let t_end = api.clk.now();
+    // Explicit clock hand-back: the scheduler reads this on completion
+    // instead of deriving it from the outcome queue.
+    shared.lane_end.borrow_mut()[lane] = t_end;
+    // Remember a *committed* transaction's lock set for the sibling
+    // conflict check: any lane pumped later whose virtual time falls
+    // inside a lock's actual holding interval `[acquired, t_end)` must
+    // see it as held (the lock set is a pure function of the still-
+    // intact record set; acquisition times were preserved by the unlock
+    // hand-off). Aborted transactions are not stamped — they released
+    // whatever they briefly held, and stamping them would cascade
+    // phantom aborts between siblings.
+    let released = std::mem::take(&mut shared.released.borrow_mut()[lane]);
+    if shared.depth > 1 && res.is_ok() {
+        let frame = &api.frame;
+        if !frame.read_only && !frame.records.is_empty() {
+            let mut logs = shared.lock_logs.borrow_mut();
+            for (key, mode) in phases::lock::requests(&shared.cluster, frame, 0) {
+                let from = released
+                    .iter()
+                    .filter(|s| s.key == key)
+                    .map(|s| s.from)
+                    .min()
+                    .unwrap_or(clk0);
+                logs[lane].push(LockStamp {
+                    key,
+                    mode,
+                    from,
+                    until: t_end,
+                });
+            }
+        }
+    }
+    match res {
+        Err(e) if !(e.is_abort() || matches!(e, Error::NodeUnavailable(_))) => {
+            *shared.fatal.borrow_mut() = Some(e);
+        }
+        result => shared.outcomes.borrow_mut().push(LaneOutcome {
+            lane,
+            t_begin: clk0,
+            t_end,
+            result,
+        }),
+    }
+}
+
+/// One concurrent transaction stream within a scheduler: the (possibly
+/// parked) machine plus the state that outlives machines — the clock
+/// snapshot between transactions and the RNG slot (lane 0's RNG stream
+/// equals the sequential coordinator's, anchoring the depth-1
+/// equivalence).
+struct Lane {
+    task: Option<StepFut<'static, ()>>,
+    /// Virtual clock between transactions (valid while `task` is None).
+    clk: u64,
+    /// RNG slot: `Some` between transactions, taken by a running
+    /// machine, handed back on machine end or drop ([`RngReturn`]).
+    rng: Rc<RefCell<Option<Xoshiro256>>>,
+}
+
+/// `pipeline_depth` concurrent transaction streams multiplexed onto one
+/// coordinator thread by a flat ready-queue event loop (see the module
+/// docs). Replaces the sequential coordinator inside [`crate::sim`]'s
+/// `coordinator_thread` for LOTUS runs with `pipeline_depth >= 1`.
+pub struct FrameScheduler {
+    shared: Rc<SchedShared>,
+    lanes: Vec<Lane>,
+    /// Monotone ring-event counter (resume-order tracing).
+    ring_seq: u64,
+    trace_on: bool,
+    trace: Vec<ResumeTrace>,
+    /// The no-op waker, built once — machine readiness lives in the
+    /// in-flight table, never in a reactor.
+    waker: Waker,
 }
 
 impl FrameScheduler {
     /// Scheduler for coordinator `slot` on CN `cn` with `depth` lanes.
-    /// The step-machine (staging + coalescing) activates for `depth >= 2`
-    /// when `coalesce_window_ns` is non-zero; `depth == 1` reproduces the
+    /// Staging + coalescing activate for `depth >= 2` when
+    /// `coalesce_window_ns` is non-zero; `depth == 1` reproduces the
     /// sequential coordinator exactly.
     pub fn new(cluster: Arc<SharedCluster>, cn: usize, slot: usize, global_id: usize) -> Self {
         let depth = cluster.cfg.pipeline_depth.max(1);
         let window = cluster.cfg.coalesce_window_ns;
         let ep = Endpoint::new(cn, cluster.cn_nics[cn].clone(), cluster.net.clone());
         let seed = cluster.cfg.seed ^ (global_id as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
-        Self {
+        let shared = Rc::new(SchedShared {
             cn,
             slot,
             global_id,
+            depth,
             ep,
-            lanes: (0..depth)
-                .map(|i| {
-                    RefCell::new(Lane {
-                        frame: TxnFrame::new(),
-                        clk: VClock::zero(),
-                        // Lane 0 keeps the sequential coordinator's seed.
-                        rng: Xoshiro256::new(
-                            seed ^ (i as u64).wrapping_mul(0xA076_1D64_78BD_642F),
-                        ),
-                        phase: LanePhase::Idle,
-                    })
-                })
-                .collect(),
-            lock_logs: RefCell::new((0..depth).map(|_| Vec::new()).collect()),
-            inflight: RefCell::new((0..depth).map(|_| Flight::Idle).collect()),
-            done: RefCell::new(Vec::new()),
             coalescer: (depth > 1 && window > 0).then(|| Coalescer::new(window)),
+            flights: RefCell::new((0..depth).map(|_| Flight::Idle).collect()),
+            lock_logs: RefCell::new((0..depth).map(|_| Vec::new()).collect()),
+            live_locks: RefCell::new((0..depth).map(|_| Vec::new()).collect()),
+            released: RefCell::new((0..depth).map(|_| Vec::new()).collect()),
+            lane_end: RefCell::new(vec![0; depth]),
+            outcomes: RefCell::new(Vec::new()),
+            fatal: RefCell::new(None),
+            clk_floor: Cell::new(0),
             cluster,
+        });
+        let lanes = (0..depth)
+            .map(|i| Lane {
+                task: None,
+                clk: 0,
+                // Lane 0 keeps the sequential coordinator's seed.
+                rng: Rc::new(RefCell::new(Some(Xoshiro256::new(
+                    seed ^ (i as u64).wrapping_mul(0xA076_1D64_78BD_642F),
+                )))),
+            })
+            .collect();
+        Self {
+            shared,
+            lanes,
+            ring_seq: 0,
+            trace_on: false,
+            trace: Vec::new(),
+            waker: noop_waker(),
         }
     }
 
@@ -449,113 +970,182 @@ impl FrameScheduler {
         self.lanes.len()
     }
 
-    /// The scheduler's frontier: the slowest lane's virtual clock. This
-    /// is what the run loop compares against the duration and publishes
-    /// to the [`TimeGate`] between transactions.
+    /// Record `(ring id, lane, completion time)` for every resumed lane
+    /// (test instrumentation for the completion-clock-order invariant).
+    pub fn enable_resume_trace(&mut self) {
+        self.trace_on = true;
+    }
+
+    /// The recorded resume trace (empty unless enabled).
+    pub fn resume_trace(&self) -> &[ResumeTrace] {
+        &self.trace
+    }
+
+    /// The scheduler's frontier: the slowest lane's virtual clock —
+    /// parked lanes count at their park time. This is what the run loop
+    /// compares against the duration and publishes to the [`TimeGate`]
+    /// between transactions.
     pub fn now(&self) -> u64 {
-        self.lanes
-            .iter()
-            .map(|l| l.borrow().clk.now())
+        let fl = self.shared.flights.borrow();
+        (0..self.lanes.len())
+            .map(|i| {
+                if self.lanes[i].task.is_none() {
+                    self.lanes[i].clk
+                } else {
+                    match &fl[i] {
+                        Flight::Staged(_, t) | Flight::WaitLock(_, t) | Flight::WaitOver(t) => *t,
+                        Flight::Done { t_post, .. } => *t_post,
+                        Flight::Idle => self.lanes[i].clk,
+                    }
+                }
+            })
             .min()
             .unwrap_or(u64::MAX)
     }
 
-    /// Attach the run's time gate to the shared endpoint.
+    /// Attach the run's time gate to the shared endpoint. Must run
+    /// before the first step (no lane machine may exist yet).
     pub fn attach_gate(&mut self, gate: Arc<TimeGate>, gid: usize) {
-        self.ep.attach_gate(gate, gid);
+        Rc::get_mut(&mut self.shared)
+            .expect("attach_gate before the first step")
+            .ep
+            .attach_gate(gate, gid);
     }
 
-    /// Fail-stop: every lane drops its in-flight state without releasing
-    /// locks (recovery owns them, paper §6). Staged plans are WQEs posted
-    /// but never rung — they die with the CN (the posted gauge is
-    /// drained); a committed transaction's un-cleared log slot is
-    /// completed idempotently by recovery's log scan.
+    /// Fail-stop: every lane machine is dropped without releasing locks
+    /// (recovery owns them, paper §6). Staged plans are WQEs posted but
+    /// never rung — they die with the CN (the posted gauge is drained); a
+    /// committed transaction's un-cleared log slot is completed
+    /// idempotently by recovery's log scan. Each dropped machine hands
+    /// its RNG stream back to the lane ([`RngReturn`]).
     pub fn crash(&mut self) {
-        if let Some(c) = &self.coalescer {
+        if let Some(c) = &self.shared.coalescer {
             c.discard_pending();
         }
-        for f in self.inflight.borrow_mut().iter_mut() {
+        for f in self.shared.flights.borrow_mut().iter_mut() {
             if let Flight::Staged(b, _) = std::mem::replace(f, Flight::Idle) {
-                self.ep.ring_posted(b.len() as u64);
+                self.shared.ep.ring_posted(b.len() as u64);
             }
         }
-        for lane in &self.lanes {
-            let mut l = lane.borrow_mut();
-            l.frame.crash();
-            l.phase = LanePhase::Idle;
+        for lane in &mut self.lanes {
+            lane.task = None; // drops the machine; RngReturn restores the RNG
+            debug_assert!(lane.rng.borrow().is_some(), "crashed lane lost its RNG");
         }
-        for log in self.lock_logs.borrow_mut().iter_mut() {
+        for log in self.shared.lock_logs.borrow_mut().iter_mut() {
             log.clear();
         }
-        self.done.borrow_mut().clear();
+        for live in self.shared.live_locks.borrow_mut().iter_mut() {
+            live.clear();
+        }
+        for rel in self.shared.released.borrow_mut().iter_mut() {
+            rel.clear();
+        }
+        self.shared.outcomes.borrow_mut().clear();
+        *self.shared.fatal.borrow_mut() = None;
     }
 
-    /// Orderly end of run: ring out every parked plan so no planned op
-    /// (or its NIC charge) is silently dropped at the duration boundary.
-    pub fn finish(&mut self) -> Result<()> {
-        if let Some(c) = &self.coalescer {
-            c.flush_all(&self.ep, &self.cluster.mns)?;
+    /// Orderly end of run: drain every in-flight lane machine to
+    /// completion (no new transactions start; staged plans ring as their
+    /// windows close), appending the finished transactions' outcomes to
+    /// `out`, then ring out every parked fire-and-forget plan so no
+    /// planned op (or its NIC charge) is silently dropped at the
+    /// duration boundary.
+    pub fn finish(&mut self, out: &mut Vec<LaneOutcome>) -> Result<()> {
+        while self.lanes.iter().any(|l| l.task.is_some()) {
+            if let Some((li, _, _)) = self.next_runnable(false) {
+                self.poll_lane(li)?;
+            } else if let Some(t_init) = self.staged_min() {
+                self.ring_staged(t_init)?;
+            } else {
+                unreachable!("scheduler drain stalled: in-flight lanes but nothing runnable");
+            }
+            out.append(&mut self.shared.outcomes.borrow_mut());
+        }
+        if let Some(c) = &self.shared.coalescer {
+            c.flush_all(&self.shared.ep, &self.shared.cluster.mns)?;
         }
         Ok(())
     }
 
-    /// Jump every lane's clock forward (crash restart).
+    /// Jump the scheduler's virtual time forward: idle lanes catch up
+    /// immediately; parked machines (whose clocks live inside the
+    /// machine) catch up to the recorded floor at their next resume
+    /// point. Used by the crash-restart path (all lanes idle after
+    /// `crash`) and by the load balancer to charge shard-transfer time.
     pub fn skip_to(&mut self, t_ns: u64) {
-        for lane in &self.lanes {
-            lane.borrow_mut().clk.catch_up(t_ns);
+        let floor = self.shared.clk_floor.get().max(t_ns);
+        self.shared.clk_floor.set(floor);
+        for lane in &mut self.lanes {
+            if lane.task.is_none() && lane.clk < t_ns {
+                lane.clk = t_ns;
+            }
         }
     }
 
-    /// The idle (not currently pumping) lane with the smallest clock.
-    /// Lanes suspended at an issue point hold their `RefCell` borrow on
-    /// the pump stack and are skipped automatically.
-    fn idle_min_lane(&self) -> Option<(usize, u64)> {
-        let mut best: Option<(usize, u64)> = None;
-        for (i, cell) in self.lanes.iter().enumerate() {
-            if let Ok(l) = cell.try_borrow() {
-                let t = l.clk.now();
+    /// The oldest staged plan's post time, if any plan is staged.
+    fn staged_min(&self) -> Option<u64> {
+        self.shared
+            .flights
+            .borrow()
+            .iter()
+            .filter_map(|f| match f {
+                Flight::Staged(_, t) => Some(*t),
+                _ => None,
+            })
+            .min()
+    }
+
+    /// The runnable lane with the smallest virtual time:
+    /// `(lane, time, starts_new_transaction)`. Ready (Done / WaitOver)
+    /// lanes win ties against idle lanes at the same time. With
+    /// `include_idle` false, idle lanes are not candidates at all (the
+    /// end-of-run drain must resume parked machines, never start new
+    /// transactions — an idle lane with the smallest clock must not mask
+    /// a resumable sibling).
+    fn next_runnable(&self, include_idle: bool) -> Option<(usize, u64, bool)> {
+        let fl = self.shared.flights.borrow();
+        let mut best: Option<(u64, u8, usize, bool)> = None;
+        for (i, lane) in self.lanes.iter().enumerate() {
+            let cand = if lane.task.is_some() {
+                match &fl[i] {
+                    Flight::Done { t_done, .. } => Some((*t_done, 0u8, false)),
+                    Flight::WaitOver(t) => Some((*t, 0, false)),
+                    _ => None,
+                }
+            } else if include_idle {
+                Some((lane.clk, 1, true))
+            } else {
+                None
+            };
+            if let Some((t, pref, start)) = cand {
                 let better = match best {
                     None => true,
-                    Some((_, bt)) => t < bt,
+                    Some((bt, bp, bi, _)) => (t, pref, i) < (bt, bp, bi),
                 };
                 if better {
-                    best = Some((i, t));
+                    best = Some((t, pref, i, start));
                 }
             }
         }
-        best
+        best.map(|(t, _, i, start)| (i, t, start))
     }
 
-    /// Post a lane's plan: WQEs staged, doorbell deferred (yield point).
-    fn stage(&self, lane: usize, batch: OpBatch, t_post: u64) {
-        self.ep.post_wqes(batch.len() as u64);
-        self.inflight.borrow_mut()[lane] = Flight::Staged(batch, t_post);
-    }
-
-    /// Has some sibling's ring already completed this lane's plan?
-    fn is_done(&self, lane: usize) -> bool {
-        matches!(self.inflight.borrow()[lane], Flight::Done(..))
-    }
-
-    /// Take a resumed lane's results out of the in-flight table.
-    fn take_done(&self, lane: usize) -> (BatchResult, u64) {
-        match std::mem::replace(&mut self.inflight.borrow_mut()[lane], Flight::Idle) {
-            Flight::Done(res, t_done) => (res, t_done),
-            _ => unreachable!("lane resumed without a completed doorbell"),
-        }
-    }
-
-    /// Ring every staged plan within `coalesce_window_ns` of the
-    /// initiator's post time `t_init` as one merged doorbell set (plus
-    /// parked riders), and file each owner's results as [`Flight::Done`].
-    /// Staged plans outside the window stay staged — their owners ring
-    /// them at their own post times when they resume.
-    fn ring_staged(&self, c: &Coalescer, t_init: u64) -> Result<()> {
+    /// Ring every staged plan within `coalesce_window_ns` of the oldest
+    /// post time `t_init` as one merged doorbell set (plus parked
+    /// riders), and file each owner's results as [`Flight::Done`] — the
+    /// owners re-enter the ready queue at their own completion times.
+    /// Staged plans outside the window stay staged for a later round.
+    fn ring_staged(&mut self, t_init: u64) -> Result<()> {
+        let shared = &self.shared;
+        let c = shared
+            .coalescer
+            .as_ref()
+            .expect("staged plans require a coalescer");
         let window = c.window_ns();
         let mut plans: Vec<(usize, OpBatch, u64)> = Vec::new();
         {
-            let mut infl = self.inflight.borrow_mut();
-            for (i, f) in infl.iter_mut().enumerate() {
+            let mut fl = shared.flights.borrow_mut();
+            for (i, f) in fl.iter_mut().enumerate() {
                 let take = matches!(*f, Flight::Staged(_, t) if t.abs_diff(t_init) <= window);
                 if take {
                     if let Flight::Staged(b, t) = std::mem::replace(f, Flight::Idle) {
@@ -568,330 +1158,158 @@ impl FrameScheduler {
             return Ok(());
         }
         let posted: u64 = plans.iter().map(|(_, b, _)| b.len() as u64).sum();
-        let results = c.ring(plans, &self.ep, &self.cluster.mns)?;
-        self.ep.ring_posted(posted);
-        let mut infl = self.inflight.borrow_mut();
+        let t_ring = plans.iter().map(|p| p.2).max().unwrap_or(t_init);
+        let gap: u64 = plans.iter().map(|p| t_ring - p.2).sum();
+        let posts: Vec<(usize, u64)> = plans.iter().map(|(i, _, t)| (*i, *t)).collect();
+        let n_plans = plans.len() as u64;
+        let results = c.ring(plans, &shared.ep, &shared.cluster.mns)?;
+        shared.ep.ring_posted(posted);
+        shared.ep.nic.note_resumed(n_plans, gap);
+        self.ring_seq += 1;
+        let ring = self.ring_seq;
+        let mut fl = shared.flights.borrow_mut();
         for (lane, res, t_done) in results {
-            infl[lane] = Flight::Done(res, t_done);
+            // Every result owner came from `plans`; a miss here is a
+            // routing bug and must not be papered over.
+            let t_post = posts
+                .iter()
+                .find(|(l, _)| *l == lane)
+                .map(|&(_, t)| t)
+                .expect("ring returned a result for a lane that staged no plan");
+            fl[lane] = Flight::Done {
+                res,
+                t_done,
+                t_post,
+                ring,
+            };
         }
         Ok(())
     }
 
-    /// Pump the slowest lane through one transaction (nested pumps may
-    /// complete sibling transactions along the way). Outcomes of every
-    /// transaction finished during the step — `(t_begin, t_end, result)`
-    /// per transaction — are appended to `out`; the returned `Err` is a
-    /// fatal (non-abort) error only.
+    /// Poll lane `li`'s machine once; harvest completion and fatal
+    /// errors.
+    fn poll_lane(&mut self, li: usize) -> Result<()> {
+        if self.trace_on {
+            let entry = match &self.shared.flights.borrow()[li] {
+                Flight::Done { t_done, ring, .. } => Some((*ring, li, *t_done)),
+                _ => None,
+            };
+            if let Some(e) = entry {
+                self.trace.push(e);
+            }
+        }
+        let mut cx = Context::from_waker(&self.waker);
+        let task = self.lanes[li].task.as_mut().expect("polled lane has a machine");
+        match task.as_mut().poll(&mut cx) {
+            Poll::Ready(()) => {
+                self.lanes[li].task = None;
+                self.lanes[li].clk = self.shared.lane_end.borrow()[li];
+                debug_assert!(
+                    matches!(self.shared.flights.borrow()[li], Flight::Idle),
+                    "finished lane left a parked flight"
+                );
+            }
+            Poll::Pending => {
+                debug_assert!(
+                    matches!(
+                        self.shared.flights.borrow()[li],
+                        Flight::Staged(..) | Flight::WaitLock(..)
+                    ),
+                    "a parked lane must be staged or lock-waiting"
+                );
+            }
+        }
+        if let Some(e) = self.shared.fatal.borrow_mut().take() {
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    /// Run the ready-queue event loop until at least one transaction
+    /// completes, appending every finished transaction's
+    /// [`LaneOutcome`] to `out`. The returned `Err` is a fatal
+    /// (run-ending) error only.
+    ///
+    /// Parked lanes persist across calls: a step may resume machines
+    /// parked by earlier steps, and may leave newly parked machines
+    /// behind for later steps (or [`FrameScheduler::finish`]).
     pub fn step(
         &mut self,
-        workload: &dyn Workload,
+        workload: &Arc<dyn Workload>,
         route: &RouteCtx<'_>,
         out: &mut Vec<LaneOutcome>,
     ) -> Result<()> {
-        let (li, t0) = self
-            .idle_min_lane()
-            .expect("scheduler has at least one lane");
+        debug_assert_eq!(route.cn, self.shared.cn, "route context for another CN");
+        // Lane machines build their own RouteCtx from the cluster router
+        // (they outlive this call); a caller passing a different router
+        // would be silently ignored — reject it loudly instead.
+        debug_assert!(
+            std::ptr::eq(route.router, &*self.shared.cluster.router),
+            "route context carries a router other than the cluster's"
+        );
+        let t0 = self.now();
         // Ring out parked plans no doorbell came along for, and drop
-        // sibling lock intervals every lane has virtually passed.
-        if let Some(c) = &self.coalescer {
-            c.flush_stale(&self.ep, &self.cluster.mns, t0)?;
+        // committed sibling lock intervals every lane has passed.
+        if let Some(c) = &self.shared.coalescer {
+            c.flush_stale(&self.shared.ep, &self.shared.cluster.mns, t0)?;
         }
-        for log in self.lock_logs.borrow_mut().iter_mut() {
+        for log in self.shared.lock_logs.borrow_mut().iter_mut() {
             log.retain(|s| s.until > t0);
         }
-        let res = {
-            let pump = PumpCtx {
-                sched: &*self,
-                workload,
-                route,
+        let window = self
+            .shared
+            .coalescer
+            .as_ref()
+            .map(|c| c.window_ns())
+            .unwrap_or(0);
+        loop {
+            let cand = self.next_runnable(true);
+            let staged_min = self.staged_min();
+            // Ring when the oldest staged plan cannot wait for the next
+            // runnable lane: either nothing is runnable, or the next
+            // runnable lane lies beyond the plan's coalescing window.
+            let ring_now = match (&cand, staged_min) {
+                (None, Some(_)) => true,
+                (Some((_, t, _)), Some(s)) => *t > s.saturating_add(window),
+                _ => false,
             };
-            pump.pump_lane(li)
-        };
-        out.append(&mut self.done.borrow_mut());
-        res
-    }
-}
-
-/// One [`FrameScheduler::step`] invocation's pump context: the conduit
-/// lanes issue through, carrying the workload reference so a yielding
-/// lane can hand the thread to a sibling.
-struct PumpCtx<'a> {
-    sched: &'a FrameScheduler,
-    workload: &'a dyn Workload,
-    route: &'a RouteCtx<'a>,
-}
-
-impl PumpCtx<'_> {
-    /// Run lane `li` through one full transaction and record its outcome.
-    /// Returns `Err` only for fatal (run-ending) errors.
-    fn pump_lane(&self, li: usize) -> Result<()> {
-        let sched = self.sched;
-        let mut lane = sched.lanes[li]
-            .try_borrow_mut()
-            .expect("pumped lane is already on the pump stack");
-        let t0 = lane.clk.now();
-        let res = {
-            let mut api = LaneApi {
-                pump: self,
-                lane: &mut *lane,
-                li,
+            if ring_now {
+                self.ring_staged(staged_min.expect("ring without staged plans"))?;
+                continue;
+            }
+            let Some((li, _t, start_new)) = cand else {
+                unreachable!("scheduler stalled: no runnable lane and nothing staged");
             };
-            self.workload.run_one(&mut api, self.route)
-        };
-        let t1 = lane.clk.now();
-        // Remember a *committed* transaction's lock set for the sibling
-        // conflict check: any lane pumped later but virtually overlapping
-        // `[t0, t1]` must see these as held (the lock set is a pure
-        // function of the still-intact record set). Aborted transactions
-        // are not stamped — they released whatever they briefly held, and
-        // stamping them would cascade phantom aborts between siblings.
-        if sched.lanes.len() > 1 && res.is_ok() {
-            let frame = &lane.frame;
-            if !frame.read_only && !frame.records.is_empty() {
-                let mut logs = sched.lock_logs.borrow_mut();
-                for (key, mode) in phases::lock::requests(&sched.cluster, frame, 0) {
-                    logs[li].push(LockStamp {
-                        key,
-                        mode,
-                        until: t1,
-                    });
-                }
+            if start_new {
+                let machine = lane_txn(
+                    self.shared.clone(),
+                    li,
+                    self.lanes[li].clk,
+                    self.lanes[li].rng.clone(),
+                    workload.clone(),
+                    route.hybrid,
+                );
+                self.lanes[li].task = Some(Box::pin(machine));
+            }
+            self.poll_lane(li)?;
+            let mut done = self.shared.outcomes.borrow_mut();
+            if !done.is_empty() {
+                out.append(&mut done);
+                return Ok(());
             }
         }
-        drop(lane);
-        match res {
-            Err(e) if !(e.is_abort() || matches!(e, Error::NodeUnavailable(_))) => Err(e),
-            r => {
-                sched.done.borrow_mut().push((t0, t1, r));
-                Ok(())
-            }
-        }
-    }
-}
-
-impl StepSink for PumpCtx<'_> {
-    fn issue(&self, lane: usize, batch: OpBatch, clk: &mut VClock) -> Result<BatchResult> {
-        let sched = self.sched;
-        let mns = &sched.cluster.mns;
-        // Depth 1 or coalescing disabled: the exact sequential path.
-        let Some(c) = &sched.coalescer else {
-            return batch.issue(&sched.ep, mns, clk);
-        };
-        if batch.is_empty() {
-            if c.pending_plans() == 0 {
-                return batch.issue(&sched.ep, mns, clk); // free
-            }
-            // Ring parked riders out now; the empty caller stays free
-            // (its own completion time is zero).
-            let mut rung = c.ring(vec![(lane, batch, clk.now())], &sched.ep, mns)?;
-            let (_, res, t_done) = rung.pop().expect("ring returns the caller's slice");
-            clk.catch_up(t_done);
-            return Ok(res);
-        }
-        // Post / yield.
-        let t_post = clk.now();
-        sched.stage(lane, batch, t_post);
-        // Pump siblings that are behind this frame's window; one of them
-        // may ring our plan as part of its own merged issue.
-        let window = c.window_ns();
-        let mut pumps = 0usize;
-        while !sched.is_done(lane) {
-            let Some((j, tj)) = sched.idle_min_lane() else {
-                break;
-            };
-            if tj > t_post.saturating_add(window) {
-                break;
-            }
-            self.pump_lane(j)?;
-            pumps += 1;
-            if pumps >= MAX_PUMPS_PER_YIELD {
-                break;
-            }
-        }
-        // Nobody rang our doorbell: ring now, merging every staged plan
-        // within the window plus parked fire-and-forget riders.
-        if !sched.is_done(lane) {
-            sched.ring_staged(c, t_post)?;
-        }
-        // Resume.
-        let (res, t_done) = sched.take_done(lane);
-        clk.catch_up(t_done);
-        Ok(res)
-    }
-
-    fn issue_deferred(&self, _lane: usize, batch: OpBatch, clk: &mut VClock) -> Result<()> {
-        match &self.sched.coalescer {
-            Some(c) => {
-                c.defer(batch, clk.now());
-                Ok(())
-            }
-            None => batch.issue_async(&self.sched.ep, &self.sched.cluster.mns, clk),
-        }
-    }
-
-    fn sibling_conflict(&self, lane: usize, key: LotusKey, mode: LockMode, now: u64) -> bool {
-        let logs = self.sched.lock_logs.borrow();
-        if logs.len() <= 1 {
-            return false;
-        }
-        SiblingLocks::new(&logs, lane).conflicts(key, mode, now)
-    }
-}
-
-/// The [`TxnApi`]/[`TxnCtl`] view the workload drives for one pumped
-/// lane: the lane's frame, clock and RNG, plus the pump context the
-/// lane's issue points yield through.
-struct LaneApi<'a> {
-    pump: &'a PumpCtx<'a>,
-    lane: &'a mut Lane,
-    li: usize,
-}
-
-impl LaneApi<'_> {
-    /// Split-borrow into a phase context + the lane's frame.
-    fn parts(&mut self) -> (PhaseCtx<'_>, &mut TxnFrame) {
-        let sched = self.pump.sched;
-        let Lane { frame, clk, .. } = &mut *self.lane;
-        (
-            PhaseCtx {
-                cluster: &*sched.cluster,
-                cn: sched.cn,
-                slot: sched.slot,
-                global_id: sched.global_id,
-                ep: &sched.ep,
-                clk,
-                lane: self.li,
-                sink: Some(self.pump),
-            },
-            frame,
-        )
-    }
-}
-
-impl TxnCtl for LaneApi<'_> {
-    fn add_ro(&mut self, r: RecordRef) {
-        debug_assert_ne!(self.lane.phase, LanePhase::Idle);
-        self.lane.frame.records.push(TxnRecord::new(r, false));
-    }
-
-    fn add_rw(&mut self, r: RecordRef) {
-        debug_assert_ne!(self.lane.phase, LanePhase::Idle);
-        debug_assert!(!self.lane.frame.read_only, "read-only txn cannot AddRW");
-        self.lane.frame.records.push(TxnRecord::new(r, true));
-    }
-
-    fn add_insert(&mut self, r: RecordRef, payload: Vec<u8>) {
-        debug_assert_ne!(self.lane.phase, LanePhase::Idle);
-        debug_assert!(!self.lane.frame.read_only);
-        let mut rec = TxnRecord::new(r, true);
-        rec.insert = true;
-        rec.new_value = Some(payload);
-        self.lane.frame.records.push(rec);
-    }
-
-    fn add_delete(&mut self, r: RecordRef) {
-        debug_assert_ne!(self.lane.phase, LanePhase::Idle);
-        let mut rec = TxnRecord::new(r, true);
-        rec.delete = true;
-        self.lane.frame.records.push(rec);
-    }
-
-    fn execute(&mut self) -> Result<()> {
-        debug_assert_ne!(self.lane.phase, LanePhase::Idle);
-        let res = {
-            let (mut ctx, frame) = self.parts();
-            phases::execute(&mut ctx, frame)
-        };
-        match res {
-            Ok(()) => {
-                self.lane.phase = LanePhase::Executed;
-                Ok(())
-            }
-            Err(e) => {
-                // The failing phase already released every held lock.
-                self.lane.phase = LanePhase::Idle;
-                Err(e)
-            }
-        }
-    }
-
-    fn value(&self, r: RecordRef) -> Option<&[u8]> {
-        self.lane
-            .frame
-            .find(r)
-            .and_then(|i| self.lane.frame.records[i].value.as_deref())
-    }
-
-    fn stage_write(&mut self, r: RecordRef, payload: Vec<u8>) {
-        let i = self
-            .lane
-            .frame
-            .find(r)
-            .expect("stage_write on unknown record");
-        debug_assert!(self.lane.frame.records[i].write, "stage_write needs AddRW");
-        self.lane.frame.records[i].new_value = Some(payload);
-    }
-
-    fn commit(&mut self) -> Result<()> {
-        debug_assert_eq!(self.lane.phase, LanePhase::Executed);
-        let res = {
-            let (mut ctx, frame) = self.parts();
-            phases::commit_txn(&mut ctx, frame)
-        };
-        self.lane.phase = LanePhase::Idle;
-        res
-    }
-
-    fn rollback(&mut self) {
-        let (mut ctx, frame) = self.parts();
-        phases::unlock::release(&mut ctx, frame);
-        self.lane.phase = LanePhase::Idle;
-    }
-}
-
-impl TxnApi for LaneApi<'_> {
-    fn begin(&mut self, read_only: bool) {
-        let sched = self.pump.sched;
-        let Lane { frame, clk, .. } = &mut *self.lane;
-        phases::begin(&sched.cluster, clk, frame, read_only);
-        self.lane.phase = LanePhase::Building;
-    }
-
-    fn txn(&mut self) -> &mut dyn TxnCtl {
-        self
-    }
-
-    fn now(&self) -> u64 {
-        self.lane.clk.now()
-    }
-
-    fn rng(&mut self) -> &mut Xoshiro256 {
-        &mut self.lane.rng
-    }
-
-    fn cn(&self) -> usize {
-        self.pump.sched.cn
-    }
-
-    fn attach_gate(&mut self, _gate: Arc<TimeGate>, _gid: usize) {
-        // The gate is attached at scheduler level (shared endpoint).
-    }
-
-    fn crash(&mut self) {
-        self.lane.frame.crash();
-        self.lane.phase = LanePhase::Idle;
-    }
-
-    fn skip_to(&mut self, t_ns: u64) {
-        self.lane.clk.catch_up(t_ns);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::Config;
     use crate::dm::netconfig::NetConfig;
     use crate::dm::rnic::Rnic;
+    use crate::sim::Cluster;
+    use crate::txn::log::LogRecord;
+    use crate::workloads::WorkloadKind;
 
     fn setup() -> (Vec<Arc<MemNode>>, Endpoint) {
         let mns = vec![Arc::new(MemNode::new(0, 1 << 16))];
@@ -930,9 +1348,9 @@ mod tests {
 
     #[test]
     fn staged_sibling_plans_share_one_doorbell_ring() {
-        // The step-machine's payoff in miniature: two lanes' staged sync
-        // plans to one MN ring a single doorbell, each lane gets its own
-        // results, and the overlap counters see the merge.
+        // The continuation model's payoff in miniature: two lanes' staged
+        // sync plans to one MN ring a single doorbell, each lane gets its
+        // own results, and the overlap counters see the merge.
         let (mns, ep) = setup();
         let r = mns[0].register(128).unwrap();
         mns[0].store_u64(r.base, 11).unwrap();
@@ -1011,13 +1429,64 @@ mod tests {
     }
 
     #[test]
-    fn sibling_lock_intervals_conflict_by_mode_and_time() {
+    fn window_zero_deferred_plans_issue_immediately() {
+        // ISSUE 4 regression (alongside the flushed-exactly-once test
+        // above): with `coalesce_window_ns = 0` and `pipeline_depth >= 2`
+        // there is no coalescer, so a committed transaction's deferred
+        // log-clear must issue immediately — the coordinator's log slot
+        // is already EMPTY before `finish()` runs, and nothing is parked
+        // that `finish()` would have to flush.
+        let mut cfg = Config::small();
+        cfg.pipeline_depth = 4;
+        cfg.coalesce_window_ns = 0;
+        cfg.duration_ns = 2_000_000;
+        cfg.n_cns = 1;
+        cfg.coordinators_per_cn = 1;
+        cfg.scale.kvs_keys = 2_000;
+        let cluster = Cluster::build(
+            &cfg,
+            WorkloadKind::Kvs {
+                rw_pct: 100,
+                skewed: false,
+            },
+        )
+        .unwrap();
+        let workload = cluster.workload.clone();
+        let mut sched = FrameScheduler::new(cluster.shared.clone(), 0, 0, 0);
+        let route = RouteCtx {
+            router: &cluster.shared.router,
+            cn: 0,
+            hybrid: false,
+        };
+        let mut out = Vec::new();
+        while !out.iter().any(|o: &LaneOutcome| o.result.is_ok()) {
+            sched.step(&workload, &route, &mut out).unwrap();
+        }
+        // The committed update wrote its log slot and must have cleared
+        // it already — WITHOUT finish() having run.
+        let (mn, addr) = cluster.shared.log_slots[0];
+        let mut buf = vec![0u8; crate::txn::log::slot_size() as usize];
+        cluster.shared.mns[mn].read_bytes(addr, &mut buf).unwrap();
+        assert!(
+            !LogRecord::parse(&buf).is_prepared(),
+            "window 0: the deferred log clear parked instead of issuing"
+        );
+        // Nothing staged, nothing parked, posted gauge drained.
+        assert_eq!(cluster.shared.cn_nics[0].staged_plans(), 0);
+        assert_eq!(cluster.shared.cn_nics[0].posted_wqes(), 0);
+        let mut fin = Vec::new();
+        sched.finish(&mut fin).unwrap();
+    }
+
+    #[test]
+    fn sibling_lock_intervals_conflict_by_mode_and_interval() {
         let k = LotusKey::compose(5, 5);
         let other = LotusKey::compose(6, 6);
         let logs = vec![
             vec![LockStamp {
                 key: k,
                 mode: LockMode::Write,
+                from: 200,
                 until: 1_000,
             }],
             Vec::new(),
@@ -1026,9 +1495,14 @@ mod tests {
         // Overlapping write-write and read-write conflict...
         assert!(sib.conflicts(k, LockMode::Write, 500));
         assert!(sib.conflicts(k, LockMode::Read, 500));
-        // ...a different key, the past, or my own lane's locks don't.
+        // ...a different key, the past, the future (anachronism!), or my
+        // own lane's locks don't.
         assert!(!sib.conflicts(other, LockMode::Write, 500));
         assert!(!sib.conflicts(k, LockMode::Write, 1_000));
+        assert!(
+            !sib.conflicts(k, LockMode::Write, 100),
+            "a holder that acquires only in the requester's virtual future must not conflict"
+        );
         let mine = SiblingLocks::new(&logs, 0);
         assert!(!mine.conflicts(k, LockMode::Write, 500));
     }
@@ -1040,6 +1514,7 @@ mod tests {
             vec![LockStamp {
                 key: k,
                 mode: LockMode::Read,
+                from: 0,
                 until: 1_000,
             }],
             Vec::new(),

@@ -1,0 +1,103 @@
+//! Poll-driven continuation plumbing for the phase pipeline.
+//!
+//! Since ISSUE 4 every phase (and the workload driver above it) is a
+//! **reified state machine**: transaction code is written in direct style
+//! but compiled into a heap-allocated pollable machine ([`StepFut`]), cut
+//! at exactly its issue points. The two poll outcomes map onto the
+//! step-machine contract:
+//!
+//! - `Poll::Pending` == **Issued** — the machine posted a plan into the
+//!   scheduler's in-flight table (`Flight::Staged`) and parked. Nothing
+//!   on the OS stack holds the lane's state; it lives entirely inside the
+//!   machine.
+//! - `Poll::Ready` == **Done** — the machine ran to the end of its
+//!   transaction.
+//!
+//! The pipelined [`crate::txn::scheduler::FrameScheduler`] keeps one
+//! machine per lane and re-polls whichever runnable machine has the
+//! smallest virtual clock (a flat ready-queue event loop — no nested
+//! pumping, no recursion). Sequential conduits (the legacy coordinator
+//! shell, baselines, recovery) drive the *same* machines with
+//! [`expect_ready`]: without a scheduler sink no issue point ever parks,
+//! so a single poll runs the machine to completion and the classic
+//! blocking call semantics fall out for free.
+//!
+//! The machines are never woken by a reactor — the scheduler knows
+//! exactly which lanes completed (it rang their doorbells itself), so the
+//! waker is a no-op and readiness is tracked in the in-flight table.
+
+use std::future::Future;
+use std::pin::Pin;
+use std::sync::Arc;
+use std::task::{Context, Poll, Wake, Waker};
+
+/// A boxed, heap-reified transaction step machine.
+pub type StepFut<'a, T> = Pin<Box<dyn Future<Output = T> + 'a>>;
+
+/// No-op wake target: readiness lives in the scheduler's in-flight
+/// table, not in a reactor, so waking is meaningless.
+struct NoopWake;
+
+impl Wake for NoopWake {
+    fn wake(self: Arc<Self>) {}
+}
+
+/// The scheduler's waker (see [`NoopWake`]).
+pub fn noop_waker() -> Waker {
+    Waker::from(Arc::new(NoopWake))
+}
+
+/// Poll `fut` once and return its result, panicking if it parks.
+///
+/// This is the *blocking conduit* driver: sequential coordinators,
+/// baselines and recovery run phase machines whose issue points are
+/// direct (no [`crate::txn::phases::StepSink`]), so the machine can
+/// never return `Poll::Pending` — one poll runs the whole transaction
+/// step. A panic here means a suspending conduit leaked into a blocking
+/// path, which is a programming error, not a runtime condition.
+pub fn expect_ready<F: Future>(fut: F) -> F::Output {
+    let waker = noop_waker();
+    let mut cx = Context::from_waker(&waker);
+    let mut fut = std::pin::pin!(fut);
+    match fut.as_mut().poll(&mut cx) {
+        Poll::Ready(v) => v,
+        Poll::Pending => unreachable!(
+            "a blocking (sink-less) phase machine parked at an issue point"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expect_ready_drives_a_straight_line_machine() {
+        let v = expect_ready(async { 7 + 35 });
+        assert_eq!(v, 42);
+    }
+
+    #[test]
+    fn expect_ready_crosses_ready_await_points() {
+        // Multiple immediately-ready awaits complete within one poll —
+        // the property the sequential conduits rely on.
+        async fn inner(x: u64) -> u64 {
+            std::future::ready(x).await + std::future::ready(1).await
+        }
+        let v = expect_ready(async { inner(1).await + inner(2).await });
+        assert_eq!(v, 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "parked")]
+    fn expect_ready_panics_on_a_parking_machine() {
+        struct Park;
+        impl Future for Park {
+            type Output = ();
+            fn poll(self: Pin<&mut Self>, _cx: &mut Context<'_>) -> Poll<()> {
+                Poll::Pending
+            }
+        }
+        expect_ready(Park);
+    }
+}

@@ -10,6 +10,7 @@ use crate::store::index::TableSpec;
 use crate::txn::api::{RecordRef, TxnApi};
 use crate::txn::coordinator::SharedCluster;
 use crate::util::bytes::put_u64;
+use crate::txn::step::StepFut;
 use crate::workloads::zipf::AccessPattern;
 use crate::workloads::{RouteCtx, Workload};
 use crate::Result;
@@ -76,30 +77,36 @@ impl Workload for KvsWorkload {
         Ok(())
     }
 
-    fn run_one(&self, api: &mut dyn TxnApi, route: &RouteCtx<'_>) -> Result<()> {
-        let is_rw = api.rng().percent() < self.rw_pct;
-        if is_rw {
-            let key = route.draw_routed(|| Self::key(self.pattern.next(api.rng())));
-            let r = RecordRef::new(TABLE, key);
-            api.begin(false);
-            let txn = api.txn();
-            txn.add_rw(r);
-            txn.execute()?;
-            let generation = txn
-                .value(r)
-                .map(|v| crate::util::bytes::get_u64(v, 8))
-                .unwrap_or(0);
-            txn.stage_write(r, Self::value_of(key.unique(), generation + 1));
-            txn.commit()
-        } else {
-            let key = Self::key(self.pattern.next(api.rng()));
-            let r = RecordRef::new(TABLE, key);
-            api.begin(true);
-            let txn = api.txn();
-            txn.add_ro(r);
-            txn.execute()?;
-            txn.commit()
-        }
+    fn run_one<'a>(
+        &'a self,
+        api: &'a mut dyn TxnApi,
+        route: &'a RouteCtx<'a>,
+    ) -> StepFut<'a, Result<()>> {
+        Box::pin(async move {
+            let is_rw = api.rng().percent() < self.rw_pct;
+            if is_rw {
+                let key = route.draw_routed(|| Self::key(self.pattern.next(api.rng())));
+                let r = RecordRef::new(TABLE, key);
+                api.begin(false);
+                let txn = api.txn();
+                txn.add_rw(r);
+                txn.execute_step().await?;
+                let generation = txn
+                    .value(r)
+                    .map(|v| crate::util::bytes::get_u64(v, 8))
+                    .unwrap_or(0);
+                txn.stage_write(r, Self::value_of(key.unique(), generation + 1));
+                txn.commit_step().await
+            } else {
+                let key = Self::key(self.pattern.next(api.rng()));
+                let r = RecordRef::new(TABLE, key);
+                api.begin(true);
+                let txn = api.txn();
+                txn.add_ro(r);
+                txn.execute_step().await?;
+                txn.commit_step().await
+            }
+        })
     }
 
     fn read_only_fraction(&self) -> f64 {

@@ -29,6 +29,7 @@ use crate::sharding::router::Router;
 use crate::store::index::TableSpec;
 use crate::txn::api::TxnApi;
 use crate::txn::coordinator::SharedCluster;
+use crate::txn::step::StepFut;
 use crate::Result;
 
 pub use kvs::KvsWorkload;
@@ -80,9 +81,18 @@ pub trait Workload: Send + Sync {
     fn table_specs(&self) -> Vec<TableSpec>;
     /// Bulk-load initial data (init phase; MN CPU, uncharged).
     fn load(&self, cluster: &SharedCluster) -> Result<()>;
-    /// Execute one transaction through the API. An `Err` that
-    /// `is_abort()` counts as an abort; other errors are fatal.
-    fn run_one(&self, api: &mut dyn TxnApi, route: &RouteCtx<'_>) -> Result<()>;
+    /// One transaction through the API, reified as a step machine
+    /// ([`StepFut`]): the driver awaits [`crate::txn::api::TxnCtl`]'s
+    /// `execute_step` / `commit_step`, so the *same* workload code runs
+    /// blocking on sequential conduits (every await completes within one
+    /// poll — drive it with [`crate::txn::step::expect_ready`]) and
+    /// parks at issue points under the pipelined scheduler. An `Err`
+    /// that `is_abort()` counts as an abort; other errors are fatal.
+    fn run_one<'a>(
+        &'a self,
+        api: &'a mut dyn TxnApi,
+        route: &'a RouteCtx<'a>,
+    ) -> StepFut<'a, Result<()>>;
     /// Fraction of read-only transactions in the mix (reporting).
     fn read_only_fraction(&self) -> f64;
 }

@@ -13,6 +13,7 @@ use crate::sharding::key::LotusKey;
 use crate::store::index::TableSpec;
 use crate::txn::api::{RecordRef, TxnApi};
 use crate::txn::coordinator::SharedCluster;
+use crate::txn::step::StepFut;
 use crate::util::bytes::{get_u64, put_u64};
 use crate::workloads::{RouteCtx, Workload};
 use crate::Result;
@@ -141,7 +142,12 @@ impl Workload for SmallBankWorkload {
         Ok(())
     }
 
-    fn run_one(&self, api: &mut dyn TxnApi, route: &RouteCtx<'_>) -> Result<()> {
+    fn run_one<'a>(
+        &'a self,
+        api: &'a mut dyn TxnApi,
+        route: &'a RouteCtx<'a>,
+    ) -> StepFut<'a, Result<()>> {
+        Box::pin(async move {
         let dice = api.rng().percent();
         match dice {
             // Balance (read-only, 15%): read both balances of one account.
@@ -155,10 +161,10 @@ impl Workload for SmallBankWorkload {
                 let txn = api.txn();
                 txn.add_ro(s);
                 txn.add_ro(c);
-                txn.execute()?;
+                txn.execute_step().await?;
                 let _total = Self::balance_of(txn.value(s).unwrap_or(&[0; 16]))
                     + Self::balance_of(txn.value(c).unwrap_or(&[0; 16]));
-                txn.commit()
+                txn.commit_step().await
             }
             // DepositChecking (15%).
             15..=29 => {
@@ -168,10 +174,10 @@ impl Workload for SmallBankWorkload {
                 api.begin(false);
                 let txn = api.txn();
                 txn.add_rw(c);
-                txn.execute()?;
+                txn.execute_step().await?;
                 let bal = Self::balance_of(txn.value(c).unwrap());
                 txn.stage_write(c, Self::encode_balance(bal + 130));
-                txn.commit()?;
+                txn.commit_step().await?;
                 self.injected.fetch_add(130, Ordering::Relaxed);
                 Ok(())
             }
@@ -183,10 +189,10 @@ impl Workload for SmallBankWorkload {
                 api.begin(false);
                 let txn = api.txn();
                 txn.add_rw(s);
-                txn.execute()?;
+                txn.execute_step().await?;
                 let bal = Self::balance_of(txn.value(s).unwrap());
                 txn.stage_write(s, Self::encode_balance(bal.saturating_add(20)));
-                txn.commit()?;
+                txn.commit_step().await?;
                 self.injected.fetch_add(20, Ordering::Relaxed);
                 Ok(())
             }
@@ -202,14 +208,14 @@ impl Workload for SmallBankWorkload {
                 txn.add_rw(sa);
                 txn.add_rw(ca);
                 txn.add_rw(cb);
-                txn.execute()?;
+                txn.execute_step().await?;
                 let total = Self::balance_of(txn.value(sa).unwrap())
                     + Self::balance_of(txn.value(ca).unwrap());
                 let bb = Self::balance_of(txn.value(cb).unwrap());
                 txn.stage_write(sa, Self::encode_balance(0));
                 txn.stage_write(ca, Self::encode_balance(0));
                 txn.stage_write(cb, Self::encode_balance(bb + total));
-                txn.commit()
+                txn.commit_step().await
             }
             // SendPayment (25%): checking a -> checking b.
             60..=84 => {
@@ -220,13 +226,13 @@ impl Workload for SmallBankWorkload {
                 let txn = api.txn();
                 txn.add_rw(ca);
                 txn.add_rw(cb);
-                txn.execute()?;
+                txn.execute_step().await?;
                 let ba = Self::balance_of(txn.value(ca).unwrap());
                 let bb = Self::balance_of(txn.value(cb).unwrap());
                 let amount = 5.min(ba);
                 txn.stage_write(ca, Self::encode_balance(ba - amount));
                 txn.stage_write(cb, Self::encode_balance(bb + amount));
-                txn.commit()
+                txn.commit_step().await
             }
             // WriteCheck (15%): read savings, debit checking.
             _ => {
@@ -246,17 +252,18 @@ impl Workload for SmallBankWorkload {
                 let txn = api.txn();
                 txn.add_ro(s);
                 txn.add_rw(c);
-                txn.execute()?;
+                txn.execute_step().await?;
                 let total = Self::balance_of(txn.value(s).unwrap())
                     + Self::balance_of(txn.value(c).unwrap());
                 let bal = Self::balance_of(txn.value(c).unwrap());
                 let amount = 18.min(total).min(bal);
                 txn.stage_write(c, Self::encode_balance(bal - amount));
-                txn.commit()?;
+                txn.commit_step().await?;
                 self.burned.fetch_add(amount, Ordering::Relaxed);
                 Ok(())
             }
         }
+        })
     }
 
     fn read_only_fraction(&self) -> f64 {

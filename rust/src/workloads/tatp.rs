@@ -14,6 +14,7 @@ use crate::sharding::key::LotusKey;
 use crate::store::index::TableSpec;
 use crate::txn::api::{RecordRef, TxnApi};
 use crate::txn::coordinator::SharedCluster;
+use crate::txn::step::StepFut;
 use crate::util::bytes::{get_u64, put_u64};
 use crate::workloads::{RouteCtx, Workload};
 use crate::{AbortReason, Result};
@@ -157,7 +158,12 @@ impl Workload for TatpWorkload {
         Ok(())
     }
 
-    fn run_one(&self, api: &mut dyn TxnApi, route: &RouteCtx<'_>) -> Result<()> {
+    fn run_one<'a>(
+        &'a self,
+        api: &'a mut dyn TxnApi,
+        route: &'a RouteCtx<'a>,
+    ) -> StepFut<'a, Result<()>> {
+        Box::pin(async move {
         let dice = api.rng().percent();
         match dice {
             // GetSubscriberData (35%, RO).
@@ -167,8 +173,8 @@ impl Workload for TatpWorkload {
                 api.begin(true);
                 let txn = api.txn();
                 txn.add_ro(r);
-                txn.execute()?;
-                txn.commit()
+                txn.execute_step().await?;
+                txn.commit_step().await
             }
             // GetNewDestination (10%, RO): special facility + forwarding.
             35..=44 => {
@@ -179,8 +185,8 @@ impl Workload for TatpWorkload {
                 let cf = RecordRef::new(CALL_FORWARDING, Self::row_key(s, 3, 0));
                 txn.add_ro(sf);
                 txn.add_ro(cf);
-                txn.execute()?;
-                txn.commit()
+                txn.execute_step().await?;
+                txn.commit_step().await
             }
             // GetAccessData (35%, RO).
             45..=79 => {
@@ -190,8 +196,8 @@ impl Workload for TatpWorkload {
                 api.begin(true);
                 let txn = api.txn();
                 txn.add_ro(r);
-                txn.execute()?;
-                txn.commit()
+                txn.execute_step().await?;
+                txn.commit_step().await
             }
             // UpdateSubscriberData (2%): subscriber + special facility.
             80..=81 => {
@@ -202,11 +208,11 @@ impl Workload for TatpWorkload {
                 let txn = api.txn();
                 txn.add_rw(sub);
                 txn.add_rw(sf);
-                txn.execute()?;
+                txn.execute_step().await?;
                 let generation = txn.value(sub).map(|v| get_u64(v, 8)).unwrap_or(0);
                 txn.stage_write(sub, Self::sub_record(s, generation + 1));
                 txn.stage_write(sf, Self::small_record(generation + 1));
-                txn.commit()
+                txn.commit_step().await
             }
             // UpdateLocation (14%).
             82..=95 => {
@@ -215,10 +221,10 @@ impl Workload for TatpWorkload {
                 api.begin(false);
                 let txn = api.txn();
                 txn.add_rw(sub);
-                txn.execute()?;
+                txn.execute_step().await?;
                 let generation = txn.value(sub).map(|v| get_u64(v, 8)).unwrap_or(0);
                 txn.stage_write(sub, Self::sub_record(s, generation + 1));
-                txn.commit()
+                txn.commit_step().await
             }
             // InsertCallForwarding (2%).
             96..=97 => {
@@ -228,8 +234,8 @@ impl Workload for TatpWorkload {
                 api.begin(false);
                 let txn = api.txn();
                 txn.add_insert(cf, Self::small_record(idx));
-                match txn.execute() {
-                    Ok(()) => txn.commit(),
+                match txn.execute_step().await {
+                    Ok(()) => txn.commit_step().await,
                     // TATP counts duplicate-insert as an expected outcome,
                     // not a system abort.
                     Err(e) if e.abort_reason() == Some(AbortReason::Duplicate) => {
@@ -247,8 +253,8 @@ impl Workload for TatpWorkload {
                 api.begin(false);
                 let txn = api.txn();
                 txn.add_delete(cf);
-                match txn.execute() {
-                    Ok(()) => txn.commit(),
+                match txn.execute_step().await {
+                    Ok(()) => txn.commit_step().await,
                     // Deleting a non-existent row is an expected outcome.
                     Err(e) if e.abort_reason() == Some(AbortReason::NotFound) => {
                         txn.rollback();
@@ -258,6 +264,7 @@ impl Workload for TatpWorkload {
                 }
             }
         }
+        })
     }
 
     fn read_only_fraction(&self) -> f64 {

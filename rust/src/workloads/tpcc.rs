@@ -18,6 +18,7 @@ use crate::sharding::key::LotusKey;
 use crate::store::index::TableSpec;
 use crate::txn::api::{RecordRef, TxnApi};
 use crate::txn::coordinator::SharedCluster;
+use crate::txn::step::StepFut;
 use crate::util::bytes::{get_u64, put_u64};
 use crate::workloads::{RouteCtx, Workload};
 use crate::{AbortReason, Result};
@@ -276,15 +277,21 @@ impl Workload for TpccWorkload {
         Ok(())
     }
 
-    fn run_one(&self, api: &mut dyn TxnApi, route: &RouteCtx<'_>) -> Result<()> {
-        let dice = api.rng().percent();
-        match dice {
-            0..=44 => self.new_order(api, route),
-            45..=87 => self.payment(api, route),
-            88..=91 => self.order_status(api),
-            92..=95 => self.delivery(api, route),
-            _ => self.stock_level(api),
-        }
+    fn run_one<'a>(
+        &'a self,
+        api: &'a mut dyn TxnApi,
+        route: &'a RouteCtx<'a>,
+    ) -> StepFut<'a, Result<()>> {
+        Box::pin(async move {
+            let dice = api.rng().percent();
+            match dice {
+                0..=44 => self.new_order(api, route).await,
+                45..=87 => self.payment(api, route).await,
+                88..=91 => self.order_status(api).await,
+                92..=95 => self.delivery(api, route).await,
+                _ => self.stock_level(api).await,
+            }
+        })
     }
 
     fn read_only_fraction(&self) -> f64 {
@@ -296,7 +303,7 @@ impl TpccWorkload {
     /// NewOrder (45%): read warehouse + customer, bump the district's
     /// order counter, update 5–15 stock rows, insert order + new-order +
     /// order lines. 1% abort by user error (spec 2.4.1.4).
-    fn new_order(&self, api: &mut dyn TxnApi, route: &RouteCtx<'_>) -> Result<()> {
+    async fn new_order(&self, api: &mut dyn TxnApi, route: &RouteCtx<'_>) -> Result<()> {
         let (w, d, c) = self.routed_wdc(api, route);
         let ol_cnt = 5 + api.rng().below(6); // 5..=10 lines (log-slot cap)
         let user_abort = api.rng().percent() == 0;
@@ -329,7 +336,7 @@ impl TpccWorkload {
             txn.add_ro(RecordRef::new(ITEM, self.item_key(i)));
             txn.add_rw(*s);
         }
-        txn.execute()?;
+        txn.execute_step().await?;
         if user_abort {
             txn.rollback();
             return Err(crate::abort(AbortReason::UserAbort));
@@ -360,13 +367,13 @@ impl TpccWorkload {
                 Self::filled(56, i),
             );
         }
-        txn.execute()?; // second execution round locks + checks the inserts
-        txn.commit()
+        txn.execute_step().await?; // second execution round locks + checks the inserts
+        txn.commit_step().await
     }
 
     /// Payment (43%): warehouse + district + customer updates, history
     /// insert. 15% of payments are for a remote customer (spec).
-    fn payment(&self, api: &mut dyn TxnApi, route: &RouteCtx<'_>) -> Result<()> {
+    async fn payment(&self, api: &mut dyn TxnApi, route: &RouteCtx<'_>) -> Result<()> {
         let (w, d, c) = self.routed_wdc(api, route);
         let (cw, cd) = if self.warehouses > 1 && api.rng().percent() < 15 {
             (
@@ -390,7 +397,7 @@ impl TpccWorkload {
             RecordRef::new(HISTORY, self.history_key(w, hid)),
             Self::filled(56, hid),
         );
-        txn.execute()?;
+        txn.execute_step().await?;
         let wbuf = txn.value(wh).unwrap();
         txn.stage_write(wh, Self::filled(96, get_u64(wbuf, 0).wrapping_add(amount)));
         let dbuf = txn.value(dist).unwrap();
@@ -398,11 +405,11 @@ impl TpccWorkload {
         txn.stage_write(dist, Self::district_record(next_o, next_deliv, ytd + amount));
         let cbuf = txn.value(cust).unwrap();
         txn.stage_write(cust, Self::filled(672, get_u64(cbuf, 0).wrapping_add(amount)));
-        txn.commit()
+        txn.commit_step().await
     }
 
     /// OrderStatus (4%, read-only): customer + their latest order + lines.
-    fn order_status(&self, api: &mut dyn TxnApi) -> Result<()> {
+    async fn order_status(&self, api: &mut dyn TxnApi) -> Result<()> {
         let (w, d, c) = self.pick_wdc(api);
         let dist = RecordRef::new(DISTRICT, self.district_key(w, d));
         let cust = RecordRef::new(CUSTOMER, self.customer_key(w, d, c));
@@ -410,7 +417,7 @@ impl TpccWorkload {
         let txn = api.txn();
         txn.add_ro(dist);
         txn.add_ro(cust);
-        txn.execute()?;
+        txn.execute_step().await?;
         let next_o = txn.value(dist).map(|v| get_u64(v, 0)).unwrap_or(1);
         let o = next_o.saturating_sub(1);
         txn.add_ro(RecordRef::new(ORDER, self.order_key(w, d, o)));
@@ -420,8 +427,8 @@ impl TpccWorkload {
                 self.orderline_key(w, d, o, ol),
             ));
         }
-        match txn.execute() {
-            Ok(()) => txn.commit(),
+        match txn.execute_step().await {
+            Ok(()) => txn.commit_step().await,
             // The latest order's lines may be fewer than 3 — expected.
             Err(e) if e.abort_reason() == Some(AbortReason::NotFound) => {
                 txn.rollback();
@@ -433,25 +440,25 @@ impl TpccWorkload {
 
     /// Delivery (4%): pop the oldest new-order of a district, mark the
     /// order delivered, credit the customer.
-    fn delivery(&self, api: &mut dyn TxnApi, route: &RouteCtx<'_>) -> Result<()> {
+    async fn delivery(&self, api: &mut dyn TxnApi, route: &RouteCtx<'_>) -> Result<()> {
         let (w, d, _) = self.routed_wdc(api, route);
         let dist = RecordRef::new(DISTRICT, self.district_key(w, d));
         api.begin(false);
         let txn = api.txn();
         txn.add_rw(dist);
-        txn.execute()?;
+        txn.execute_step().await?;
         let dbuf = txn.value(dist).unwrap();
         let (next_o, next_deliv, ytd) = (get_u64(dbuf, 0), get_u64(dbuf, 8), get_u64(dbuf, 16));
         if next_deliv >= next_o {
             // Nothing to deliver — commit the no-op (expected outcome).
-            return txn.commit();
+            return txn.commit_step().await;
         }
         let o = next_deliv;
         let no = RecordRef::new(NEW_ORDER, self.neworder_key(w, d, o));
         let ord = RecordRef::new(ORDER, self.order_key(w, d, o));
         txn.add_delete(no);
         txn.add_rw(ord);
-        match txn.execute() {
+        match txn.execute_step().await {
             Ok(()) => {}
             // Another delivery raced us past this order id — expected.
             Err(e) if e.abort_reason() == Some(AbortReason::NotFound) => {
@@ -465,22 +472,22 @@ impl TpccWorkload {
         txn.stage_write(dist, Self::district_record(next_o, next_deliv + 1, ytd));
         let cust = RecordRef::new(CUSTOMER, self.customer_key(w, d, cid));
         txn.add_rw(cust);
-        txn.execute()?;
+        txn.execute_step().await?;
         let cbuf = txn.value(cust).unwrap();
         txn.stage_write(cust, Self::filled(672, get_u64(cbuf, 0) + 1));
-        txn.commit()
+        txn.commit_step().await
     }
 
     /// StockLevel (4%, read-only): recent orders' lines + their stock.
     /// With few versions this is the high-abort transaction of figs 19/20
     /// (its long read set keeps missing a version at/below its snapshot).
-    fn stock_level(&self, api: &mut dyn TxnApi) -> Result<()> {
+    async fn stock_level(&self, api: &mut dyn TxnApi) -> Result<()> {
         let (w, d, _) = self.pick_wdc(api);
         let dist = RecordRef::new(DISTRICT, self.district_key(w, d));
         api.begin(true);
         let txn = api.txn();
         txn.add_ro(dist);
-        txn.execute()?;
+        txn.execute_step().await?;
         let next_o = txn.value(dist).map(|v| get_u64(v, 0)).unwrap_or(1);
         let from = next_o.saturating_sub(5);
         let mut line_refs = Vec::new();
@@ -495,7 +502,7 @@ impl TpccWorkload {
         for r in &line_refs {
             txn.add_ro(*r);
         }
-        match txn.execute() {
+        match txn.execute_step().await {
             Ok(()) => {}
             Err(e) if e.abort_reason() == Some(AbortReason::NotFound) => {
                 txn.rollback();
@@ -511,8 +518,8 @@ impl TpccWorkload {
         for i in items.into_iter().take(5) {
             txn.add_ro(RecordRef::new(STOCK, self.stock_key(w, i)));
         }
-        txn.execute()?;
-        txn.commit()
+        txn.execute_step().await?;
+        txn.commit_step().await
     }
 }
 

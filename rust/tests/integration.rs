@@ -8,8 +8,9 @@ use lotus::sharding::key::LotusKey;
 use lotus::sim::{Cluster, CrashEvent};
 use lotus::txn::api::{RecordRef, TxnApi, TxnCtl};
 use lotus::txn::coordinator::LotusCoordinator;
+use lotus::txn::scheduler::{FrameScheduler, LaneOutcome};
 use lotus::workloads::smallbank::{CHECKING, SAVINGS};
-use lotus::workloads::{SmallBankWorkload, Workload, WorkloadKind};
+use lotus::workloads::{RouteCtx, SmallBankWorkload, Workload, WorkloadKind};
 
 fn tiny() -> Config {
     let mut cfg = Config::small();
@@ -19,6 +20,9 @@ fn tiny() -> Config {
     cfg.scale.smallbank_accounts = 5_000;
     cfg.scale.tatp_subscribers = 3_000;
     cfg.scale.tpcc_warehouses = 1;
+    // CI matrix hook: pipeline_depth x coalesce_window_ns overrides.
+    // Tests that assert a specific depth/window pin the fields after.
+    cfg.apply_test_env();
     cfg
 }
 
@@ -60,6 +64,7 @@ fn smallbank_conserves_total_balance_under_lotus() {
 fn smallbank_conserves_total_balance_under_pipelined_lotus() {
     let mut cfg = tiny();
     cfg.pipeline_depth = 4;
+    cfg.coalesce_window_ns = 5_000;
     let wl = Arc::new(SmallBankWorkload::new(cfg.scale.smallbank_accounts));
     let cluster = Cluster::build_with(&cfg, wl.clone() as Arc<dyn Workload>).unwrap();
     let report = cluster.run(SystemKind::Lotus).unwrap();
@@ -244,6 +249,7 @@ fn pipelined_crash_recovery_conserves_money_and_locks() {
     let mut cfg = tiny();
     cfg.duration_ns = 30_000_000;
     cfg.pipeline_depth = 4;
+    cfg.coalesce_window_ns = 5_000;
     let wl = Arc::new(SmallBankWorkload::new(cfg.scale.smallbank_accounts));
     let cluster = Cluster::build_with(&cfg, wl.clone() as Arc<dyn Workload>).unwrap();
     let report = cluster
@@ -301,6 +307,122 @@ fn si_outperforms_sr_under_contention() {
         r_si.commits,
         r_sr.commits
     );
+}
+
+/// ISSUE 4 resumption fairness: with the ready-queue scheduler, every
+/// lane parked by a merged doorbell ring is resumed in completion-clock
+/// order — no lane starves behind an "innermost" sibling the way the old
+/// stack-unwind design forced — and `resumed_rings` is visible in the
+/// accounting. Depth 1, by contrast, never stages or resumes anything
+/// and stays byte-identical to the depth-0 legacy shell.
+#[test]
+fn depth4_lanes_resume_in_completion_clock_order() {
+    let mut cfg = tiny();
+    cfg.n_cns = 1;
+    cfg.coordinators_per_cn = 1;
+    cfg.pipeline_depth = 4;
+    cfg.coalesce_window_ns = 5_000;
+    cfg.scale.smallbank_accounts = 2_000;
+    let cluster = Cluster::build(&cfg, WorkloadKind::SmallBank).unwrap();
+    let workload = cluster.workload.clone();
+    let mut sched = FrameScheduler::new(cluster.shared.clone(), 0, 0, 0);
+    sched.enable_resume_trace();
+    let route = RouteCtx {
+        router: &cluster.shared.router,
+        cn: 0,
+        hybrid: false,
+    };
+    let mut outcomes: Vec<LaneOutcome> = Vec::new();
+    while outcomes.len() < 400 {
+        sched.step(&workload, &route, &mut outcomes).unwrap();
+    }
+    sched.finish(&mut outcomes).unwrap();
+
+    // No starvation: every lane completed transactions.
+    for lane in 0..4 {
+        let n = outcomes.iter().filter(|o| o.lane == lane).count();
+        assert!(n > 0, "lane {lane} never completed a transaction");
+    }
+    // Rings resumed parked lanes, and some ring resumed several.
+    let trace = sched.resume_trace();
+    assert!(!trace.is_empty(), "no parked lane was ever resumed");
+    assert!(
+        cluster.shared.cn_nics[0].resumed_rings() > 0,
+        "resumed_rings accounting missed the resumes"
+    );
+    let max_ring = trace.iter().map(|&(r, _, _)| r).max().unwrap();
+    let mut multi_resume = false;
+    for ring in 1..=max_ring {
+        let resumes: Vec<_> = trace.iter().filter(|&&(r, _, _)| r == ring).collect();
+        if resumes.len() >= 2 {
+            multi_resume = true;
+        }
+        // Completion-clock order within a ring: the lane that finished
+        // earlier is polled earlier.
+        for pair in resumes.windows(2) {
+            assert!(
+                pair[0].2 <= pair[1].2,
+                "ring {ring}: lane {} (done {}) resumed before lane {} (done {})",
+                pair[0].1,
+                pair[0].2,
+                pair[1].1,
+                pair[1].2
+            );
+        }
+    }
+    assert!(
+        multi_resume,
+        "no ring ever re-enqueued more than one parked lane"
+    );
+
+    // Depth 1: zero staging / zero resumes, byte-identical to the
+    // depth-0 legacy shell.
+    let run = |depth: usize| {
+        let mut c = cfg.clone();
+        c.pipeline_depth = depth;
+        c.duration_ns = 2_000_000;
+        let cl = Cluster::build(&c, WorkloadKind::SmallBank).unwrap();
+        cl.run(SystemKind::Lotus).unwrap()
+    };
+    let legacy = run(0);
+    let pipe1 = run(1);
+    assert_eq!(legacy.commits, pipe1.commits);
+    assert_eq!(legacy.aborts, pipe1.aborts);
+    assert_eq!(legacy.p50_ns, pipe1.p50_ns);
+    assert_eq!(legacy.p99_ns, pipe1.p99_ns);
+    assert_eq!(legacy.doorbells, pipe1.doorbells);
+    assert_eq!(legacy.doorbell_ops, pipe1.doorbell_ops);
+    assert_eq!(pipe1.staged_plans, 0, "depth 1 must not stage");
+    assert_eq!(pipe1.resumed_rings, 0, "depth 1 must not resume");
+}
+
+/// ISSUE 4 regression (satellite): `coalesce_window_ns = 0` with
+/// `pipeline_depth >= 2` must run without a coalescer — deferred
+/// fire-and-forget plans issue immediately rather than parking until
+/// `finish()` — and still conserve money with the posted gauge drained.
+#[test]
+fn window_zero_pipelined_run_conserves_money() {
+    let mut cfg = tiny();
+    cfg.pipeline_depth = 4;
+    cfg.coalesce_window_ns = 0;
+    let wl = Arc::new(SmallBankWorkload::new(cfg.scale.smallbank_accounts));
+    let cluster = Cluster::build_with(&cfg, wl.clone() as Arc<dyn Workload>).unwrap();
+    let report = cluster.run(SystemKind::Lotus).unwrap();
+    assert!(report.commits > 100);
+    assert_eq!(report.staged_plans, 0, "window 0 must disable staging");
+    assert_eq!(report.resumed_rings, 0);
+    assert_eq!(report.coalesced_ops, 0, "window 0 must disable coalescing");
+    audit_books(&cluster, &wl, cfg.scale.smallbank_accounts, "window-zero");
+    for (i, nic) in cluster.shared.cn_nics.iter().enumerate() {
+        assert_eq!(nic.posted_wqes(), 0, "cn{i}: posted gauge not drained");
+    }
+    let held: usize = cluster
+        .shared
+        .lock_services
+        .iter()
+        .map(|s| s.held_slots())
+        .sum();
+    assert_eq!(held, 0);
 }
 
 /// Direct API use against a shared cluster (the library path a downstream
