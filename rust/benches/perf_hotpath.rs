@@ -198,6 +198,16 @@ fn main() -> lotus::Result<()> {
         d4.mean_resumed_lanes(),
         d4.mean_ring_gap_ns()
     );
+    println!(
+        "rpc plane depth=1: {:.3} messages/txn, {:.2} reqs/message; depth=4: {:.3} messages/txn, {:.2} reqs/message ({} coalesced reqs, {} lock waits, mean wait {:.0} ns)",
+        d1.rpc_messages_per_commit(),
+        d1.reqs_per_rpc_message(),
+        d4.rpc_messages_per_commit(),
+        d4.reqs_per_rpc_message(),
+        d4.coalesced_rpc_reqs,
+        d4.lock_waits,
+        d4.mean_lock_wait_ns()
+    );
 
     let mut systems = JsonObj::new();
     systems
@@ -230,13 +240,31 @@ fn main() -> lotus::Result<()> {
         .num("lotus_depth4_mean_resumed_lanes", d4.mean_resumed_lanes())
         .num("lotus_depth4_mean_ring_gap_ns", d4.mean_ring_gap_ns());
 
+    let mut rpc_plane = JsonObj::new();
+    rpc_plane
+        .num(
+            "lotus_depth1_rpc_messages_per_commit",
+            d1.rpc_messages_per_commit(),
+        )
+        .num(
+            "lotus_depth4_rpc_messages_per_commit",
+            d4.rpc_messages_per_commit(),
+        )
+        .num("lotus_depth1_reqs_per_message", d1.reqs_per_rpc_message())
+        .num("lotus_depth4_reqs_per_message", d4.reqs_per_rpc_message())
+        .int("lotus_depth4_rpc_messages", d4.rpc_messages)
+        .int("lotus_depth4_coalesced_rpc_reqs", d4.coalesced_rpc_reqs)
+        .int("lotus_depth4_lock_waits", d4.lock_waits)
+        .num("lotus_depth4_mean_lock_wait_ns", d4.mean_lock_wait_ns());
+
     let mut root = JsonObj::new();
     root.str("bench", "hotpath")
         .str("workload", "smallbank-quick")
         .obj("structures_ns_per_op", structures)
         .obj("systems_virtual_mtps", systems)
         .obj("doorbells", doorbells)
-        .obj("step_machine", overlap);
+        .obj("step_machine", overlap)
+        .obj("rpc_plane", rpc_plane);
     let json = root.finish();
 
     let out = std::env::var("LOTUS_BENCH_OUT").unwrap_or_else(|_| {

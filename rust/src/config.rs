@@ -239,15 +239,18 @@ impl Config {
     }
 
     /// Apply the CI test-matrix env overrides, if set:
-    /// `LOTUS_TEST_PIPELINE_DEPTH` and `LOTUS_TEST_COALESCE_WINDOW_NS`.
-    /// Invalid values are ignored (the defaults stand).
+    /// `LOTUS_TEST_PIPELINE_DEPTH`, `LOTUS_TEST_COALESCE_WINDOW_NS` and
+    /// `LOTUS_TEST_N_CNS`. Invalid values are ignored (the defaults
+    /// stand).
     ///
     /// Called by the *test suites'* config helpers (never by library
     /// constructors — a downstream user of [`Config::small`] must not be
     /// affected by ambient CI variables). Tests that assert a specific
-    /// depth/window behavior pin those fields explicitly after applying
-    /// this; everything else must hold at every point of the
-    /// `{0, 1, 4} x {0, 5000}` matrix.
+    /// depth/window/topology behavior pin those fields explicitly after
+    /// applying this; everything else must hold at every point of the
+    /// `{0, 1, 4} x {0, 5000} x {1, 3}` matrix (the `n_cns` axis
+    /// exercises the remote-lock RPC plane: at 1 CN every lock is local,
+    /// at 3 CNs most transactions carry remote lock batches).
     pub fn apply_test_env(&mut self) {
         if let Ok(v) = std::env::var("LOTUS_TEST_PIPELINE_DEPTH") {
             if let Ok(d) = v.parse() {
@@ -257,6 +260,13 @@ impl Config {
         if let Ok(v) = std::env::var("LOTUS_TEST_COALESCE_WINDOW_NS") {
             if let Ok(w) = v.parse() {
                 self.coalesce_window_ns = w;
+            }
+        }
+        if let Ok(v) = std::env::var("LOTUS_TEST_N_CNS") {
+            if let Ok(n) = v.parse::<usize>() {
+                if n >= 1 {
+                    self.n_cns = n;
+                }
             }
         }
     }

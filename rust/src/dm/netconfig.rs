@@ -35,6 +35,12 @@ pub struct NetConfig {
     /// Charged once per doorbell batch regardless of how many WQEs ride
     /// in it — the cost cross-transaction coalescing amortizes.
     pub doorbell_ns: u64,
+    /// CN-side NIC per-*message* overhead of a CN-to-CN RPC SEND (one
+    /// WQE post + doorbell on the UD QP, ns). Charged once per RPC
+    /// message regardless of how many lock-class requests ride in it —
+    /// the RPC-plane mirror of `doorbell_ns`, and the cost cross-lane
+    /// RPC coalescing amortizes.
+    pub rpc_send_ns: u64,
     /// Remote-CN CPU time to process one lock/unlock request in an RPC (ns).
     pub rpc_handle_ns: u64,
     /// Local CPU time for one lock-table CAS on the local CN (ns).
@@ -60,6 +66,7 @@ impl Default for NetConfig {
             rpc_rtt_ns: 2_600,
             cn_issue_ns: 15,
             doorbell_ns: 40,
+            rpc_send_ns: 40,
             rpc_handle_ns: 250,
             local_lock_ns: 30,
             ts_oracle_ns: 1_200,

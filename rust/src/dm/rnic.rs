@@ -33,7 +33,9 @@ pub struct Rnic {
     /// High-water mark of `posted_wqes` — the in-flight depth the
     /// step-machine reached on this NIC.
     posted_wqes_hwm: AtomicU64,
-    /// Sync doorbell plans staged in-flight (each is one lane park).
+    /// Sync doorbell plans staged in-flight (each is one doorbell-plane
+    /// lane park; RPC-plane parks are visible through the `rpc_*`
+    /// counters).
     staged_plans: AtomicU64,
     /// Merged doorbell issues that carried >= 2 frames' staged plans.
     overlap_rings: AtomicU64,
@@ -50,6 +52,23 @@ pub struct Rnic {
     /// and the ring that carried them (`mean = ring_gap_ns /
     /// resumed_plans`).
     ring_gap_ns: AtomicU64,
+    /// CN-to-CN RPC messages sent from this CN (one UD SEND each) — the
+    /// RPC-plane mirror of `doorbells`.
+    rpc_messages: AtomicU64,
+    /// Lock-class requests carried by those messages (coalesced riders
+    /// included) — the RPC-plane mirror of `doorbell_ops`.
+    rpc_reqs: AtomicU64,
+    /// Requests that rode an RPC message another lane's lock batch paid
+    /// for instead of sending their own (cross-lane RPC coalescing;
+    /// subset of `rpc_reqs`, 0 without the pipelined scheduler).
+    coalesced_rpc_reqs: AtomicU64,
+    /// Lock-wait wakeups: lanes parked at `Flight::WaitLock` behind an
+    /// anachronistic sibling holder that were woken by its release.
+    lock_waits: AtomicU64,
+    /// Cumulative virtual ns between those waiters' park times and the
+    /// holding siblings' release times (the anachronism span the waits
+    /// bridged).
+    lock_wait_ns: AtomicU64,
 }
 
 impl Rnic {
@@ -172,6 +191,55 @@ impl Rnic {
         self.ring_gap_ns.fetch_add(gap_ns, Ordering::Relaxed);
     }
 
+    /// Count one CN-to-CN RPC message carrying `n_reqs` lock-class
+    /// requests (the RPC-plane mirror of [`Rnic::ring`]).
+    #[inline]
+    pub fn note_rpc_message(&self, n_reqs: u64) {
+        self.rpc_messages.fetch_add(1, Ordering::Relaxed);
+        self.rpc_reqs.fetch_add(n_reqs, Ordering::Relaxed);
+    }
+
+    /// Count `n_reqs` requests that rode an RPC message paid for by
+    /// another lane's lock batch (they are already in `rpc_reqs`; this
+    /// bumps only the coalescing counter — mirror of [`Rnic::note_riders`]).
+    #[inline]
+    pub fn note_rpc_riders(&self, n_reqs: u64) {
+        self.coalesced_rpc_reqs.fetch_add(n_reqs, Ordering::Relaxed);
+    }
+
+    /// Count one lock-wait wakeup whose holder released `gap_ns` virtual
+    /// ns after the waiter parked.
+    #[inline]
+    pub fn note_lock_wait(&self, gap_ns: u64) {
+        self.lock_waits.fetch_add(1, Ordering::Relaxed);
+        self.lock_wait_ns.fetch_add(gap_ns, Ordering::Relaxed);
+    }
+
+    /// RPC messages sent from this CN.
+    pub fn rpc_messages(&self) -> u64 {
+        self.rpc_messages.load(Ordering::Relaxed)
+    }
+
+    /// Lock-class requests carried by those messages.
+    pub fn rpc_reqs(&self) -> u64 {
+        self.rpc_reqs.load(Ordering::Relaxed)
+    }
+
+    /// Requests that shared another lane's RPC message.
+    pub fn coalesced_rpc_reqs(&self) -> u64 {
+        self.coalesced_rpc_reqs.load(Ordering::Relaxed)
+    }
+
+    /// Lock-wait wakeups.
+    pub fn lock_waits(&self) -> u64 {
+        self.lock_waits.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative anachronism span bridged by lock waits (virtual ns).
+    pub fn lock_wait_ns(&self) -> u64 {
+        self.lock_wait_ns.load(Ordering::Relaxed)
+    }
+
     /// WQEs currently posted but not yet rung (0 when nothing in flight).
     pub fn posted_wqes(&self) -> u64 {
         self.posted_wqes.load(Ordering::Relaxed)
@@ -256,6 +324,11 @@ impl Rnic {
         self.resumed_rings.store(0, Ordering::Relaxed);
         self.resumed_plans.store(0, Ordering::Relaxed);
         self.ring_gap_ns.store(0, Ordering::Relaxed);
+        self.rpc_messages.store(0, Ordering::Relaxed);
+        self.rpc_reqs.store(0, Ordering::Relaxed);
+        self.coalesced_rpc_reqs.store(0, Ordering::Relaxed);
+        self.lock_waits.store(0, Ordering::Relaxed);
+        self.lock_wait_ns.store(0, Ordering::Relaxed);
     }
 
     /// Reset the queue to idle at time zero (between benchmark runs —
@@ -371,6 +444,28 @@ mod tests {
         assert_eq!(n.overlap_rings(), 0);
         assert_eq!(n.resumed_rings(), 0);
         assert_eq!(n.ring_gap_ns(), 0);
+    }
+
+    #[test]
+    fn rpc_plane_and_lock_wait_counters() {
+        let n = Rnic::new();
+        n.note_rpc_message(4);
+        n.note_rpc_message(1);
+        assert_eq!(n.rpc_messages(), 2);
+        assert_eq!(n.rpc_reqs(), 5);
+        n.note_rpc_riders(3);
+        assert_eq!(n.coalesced_rpc_reqs(), 3);
+        assert_eq!(n.rpc_reqs(), 5, "riders are already part of rpc_reqs");
+        n.note_lock_wait(700);
+        n.note_lock_wait(300);
+        assert_eq!(n.lock_waits(), 2);
+        assert_eq!(n.lock_wait_ns(), 1_000);
+        n.reset_counters();
+        assert_eq!(n.rpc_messages(), 0);
+        assert_eq!(n.rpc_reqs(), 0);
+        assert_eq!(n.coalesced_rpc_reqs(), 0);
+        assert_eq!(n.lock_waits(), 0);
+        assert_eq!(n.lock_wait_ns(), 0);
     }
 
     #[test]

@@ -8,6 +8,29 @@
 //! (real, shared) lock table after the cost is charged; this is
 //! functionally identical to a synchronous RPC and keeps the simulator
 //! single-address-space.
+//!
+//! # Split-phase surface (ISSUE 5)
+//!
+//! The fabric mirrors [`crate::dm::verbs::Endpoint`]'s split between a
+//! blocking doorbell and the completion-driven `doorbell_timed`:
+//!
+//! - [`RpcFabric::call`] / [`RpcFabric::call_async`] are the blocking /
+//!   fire-and-forget single-owner forms (sequential conduits, baselines,
+//!   recovery, resharding).
+//! - [`RpcFabric::send_timed`] is the completion-driven primitive the
+//!   pipelined scheduler's RPC-plane coalescing builds on: **one** RPC
+//!   message from `src_cn` to `(dst_cn, slot)` carrying several owners'
+//!   lock batches, fired at an explicit virtual time, returning *per
+//!   owner* completion times. Each owner's clock advances only to the
+//!   handler completing its own chunk — never to the whole message.
+//! - [`RpcFabric::send_async_at`] is the fire-and-forget mirror at an
+//!   explicit time (stale parked unlock plans flushing out).
+//!
+//! Every message charges `rpc_send_ns` (the per-message WQE+doorbell
+//! overhead on the UD QP) exactly once — the cost cross-lane coalescing
+//! amortizes — and counts on the source CN's [`Rnic`]
+//! (`rpc_messages`/`rpc_reqs`); requests that ride a message another
+//! lane paid for are `coalesced_rpc_reqs`.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -57,6 +80,12 @@ impl RpcFabric {
         self.failed[cn].load(Ordering::SeqCst)
     }
 
+    /// The UD transport's timeout interval: what a caller burns before
+    /// declaring the target CN unavailable.
+    pub fn timeout_ns(&self) -> u64 {
+        self.net.rpc_rtt_ns * 4
+    }
+
     /// Charge a synchronous RPC carrying `n_reqs` lock-class requests from
     /// `(src_cn)` to `(dst_cn, slot)`; advances `clk` to the reply time.
     /// Fails with `NodeUnavailable` (after a timeout charge) if the target
@@ -71,19 +100,75 @@ impl RpcFabric {
     ) -> Result<()> {
         if self.is_failed(dst_cn) {
             // Timeout: the caller burns a full timeout interval.
-            clk.advance(self.net.rpc_rtt_ns * 4);
+            clk.advance(self.timeout_ns());
             return Err(Error::NodeUnavailable(format!("cn{dst_cn} (rpc timeout)")));
         }
-        let t_send = self.cn_nics[src_cn].charge(clk.now(), self.net.cn_issue_ns);
-        let t_arrive = t_send + self.net.rpc_rtt_ns / 2;
-        // Receive-side NIC + handler CPU (batched requests in ONE message,
-        // paper 4.1: "multiple remote lock requests ... batched into a
-        // single RDMA message, saving IOPS").
-        let t_recv = self.cn_nics[dst_cn].charge(t_arrive, self.net.cn_issue_ns);
-        let t_handled = self.handlers[dst_cn][slot]
-            .charge(t_recv, self.net.rpc_handle_ns * n_reqs.max(1) as u64);
-        clk.catch_up(t_handled + self.net.rpc_rtt_ns / 2);
+        let done = self.send_timed(src_cn, dst_cn, slot, &[n_reqs], clk.now())?;
+        clk.catch_up(done[0]);
         Ok(())
+    }
+
+    /// Split-phase send: **one** RPC message from `src_cn` to
+    /// `(dst_cn, slot)` carrying every owner's lock batch (`owners[i]`
+    /// requests for owner `i`, in post order — parked riders first),
+    /// fired at virtual time `t_send`. Returns each owner's completion
+    /// time: the handler CPU serves the chunks in order, and an owner's
+    /// reply lands a half-RTT after *its* chunk completes (batched
+    /// requests in ONE message, paper 4.1: "multiple remote lock requests
+    /// ... batched into a single RDMA message, saving IOPS").
+    ///
+    /// Counts one `rpc_message` (with the total request count) on the
+    /// source CN NIC; the caller accounts coalesced riders. Fails without
+    /// charging if the target CN is failed — the caller owns the timeout
+    /// charge (see [`RpcFabric::timeout_ns`]).
+    pub fn send_timed(
+        &self,
+        src_cn: usize,
+        dst_cn: usize,
+        slot: usize,
+        owners: &[usize],
+        t_send: u64,
+    ) -> Result<Vec<u64>> {
+        if self.is_failed(dst_cn) {
+            return Err(Error::NodeUnavailable(format!("cn{dst_cn} (rpc timeout)")));
+        }
+        let total: u64 = owners.iter().map(|&n| n.max(1) as u64).sum();
+        self.cn_nics[src_cn].note_rpc_message(total);
+        // One SEND WQE + doorbell per message, however many requests ride.
+        let t_sent = self.cn_nics[src_cn]
+            .charge(t_send, self.net.rpc_send_ns + self.net.cn_issue_ns);
+        let t_arrive = t_sent + self.net.rpc_rtt_ns / 2;
+        let mut t = self.cn_nics[dst_cn].charge(t_arrive, self.net.cn_issue_ns);
+        let mut out = Vec::with_capacity(owners.len());
+        for &n in owners {
+            t = self.handlers[dst_cn][slot].charge(t, self.net.rpc_handle_ns * n.max(1) as u64);
+            out.push(t + self.net.rpc_rtt_ns / 2);
+        }
+        Ok(out)
+    }
+
+    /// Fire-and-forget message at an explicit virtual time (the
+    /// split-phase mirror of [`RpcFabric::call_async`], used to flush
+    /// stale parked unlock plans): charges the queues, returns the
+    /// send-complete time — the only amount a caller's clock may advance.
+    pub fn send_async_at(
+        &self,
+        src_cn: usize,
+        dst_cn: usize,
+        slot: usize,
+        n_reqs: usize,
+        t_send: u64,
+    ) -> Result<u64> {
+        if self.is_failed(dst_cn) {
+            return Err(Error::NodeUnavailable(format!("cn{dst_cn} (async rpc)")));
+        }
+        self.cn_nics[src_cn].note_rpc_message(n_reqs.max(1) as u64);
+        let t_sent = self.cn_nics[src_cn]
+            .charge(t_send, self.net.rpc_send_ns + self.net.cn_issue_ns);
+        let t_arrive = t_sent + self.net.rpc_rtt_ns / 2;
+        let t_recv = self.cn_nics[dst_cn].charge(t_arrive, self.net.cn_issue_ns);
+        self.handlers[dst_cn][slot].charge(t_recv, self.net.rpc_handle_ns * n_reqs.max(1) as u64);
+        Ok(t_sent)
     }
 
     /// Fire-and-forget RPC (async unlock): charges queues, caller clock
@@ -96,14 +181,8 @@ impl RpcFabric {
         n_reqs: usize,
         clk: &mut VClock,
     ) -> Result<()> {
-        if self.is_failed(dst_cn) {
-            return Err(Error::NodeUnavailable(format!("cn{dst_cn} (async rpc)")));
-        }
-        let t_send = self.cn_nics[src_cn].charge(clk.now(), self.net.cn_issue_ns);
-        let t_arrive = t_send + self.net.rpc_rtt_ns / 2;
-        let t_recv = self.cn_nics[dst_cn].charge(t_arrive, self.net.cn_issue_ns);
-        self.handlers[dst_cn][slot].charge(t_recv, self.net.rpc_handle_ns * n_reqs.max(1) as u64);
-        clk.catch_up(t_send);
+        let t_sent = self.send_async_at(src_cn, dst_cn, slot, n_reqs, clk.now())?;
+        clk.catch_up(t_sent);
         Ok(())
     }
 
@@ -173,6 +252,59 @@ mod tests {
         f.call_async(0, 1, 0, 4, &mut clk).unwrap();
         assert!(clk.now() < f.net.rpc_rtt_ns / 2);
         assert!(f.handler_busy_ns(1) > 0);
+    }
+
+    #[test]
+    fn merged_send_is_one_message_with_per_owner_completions() {
+        // Two owners' batches in one message: one rpc_send_ns charge, the
+        // handler serves the chunks in order, and each owner's completion
+        // reflects only its own chunk's place in the queue.
+        let f = fabric(2, 1);
+        let times = f.send_timed(0, 1, 0, &[3, 2], 1_000).unwrap();
+        assert_eq!(times.len(), 2);
+        assert!(times[0] < times[1], "chunks serve in post order");
+        assert!(times[0] >= 1_000 + f.net.rpc_rtt_ns, "at least one RTT");
+        assert_eq!(
+            times[1] - times[0],
+            f.net.rpc_handle_ns * 2,
+            "the later owner waits exactly its own handler time"
+        );
+        assert_eq!(f.cn_nics[0].rpc_messages(), 1, "ONE message for both");
+        assert_eq!(f.cn_nics[0].rpc_reqs(), 5);
+
+        // The same five requests as two separate calls cost two messages
+        // and strictly more virtual time for the later caller.
+        let g = fabric(2, 1);
+        let a = g.send_timed(0, 1, 0, &[3], 1_000).unwrap()[0];
+        let b = g.send_timed(0, 1, 0, &[2], 1_000).unwrap()[0];
+        assert_eq!(g.cn_nics[0].rpc_messages(), 2);
+        assert!(b.max(a) >= times[1], "separate sends cannot beat the merge");
+        // The IOPS saving (paper 4.1): one message's send overhead
+        // instead of two on the source NIC.
+        assert!(
+            g.cn_nics[0].busy_ns() > f.cn_nics[0].busy_ns(),
+            "merging must save send-side NIC time: {} vs {}",
+            g.cn_nics[0].busy_ns(),
+            f.cn_nics[0].busy_ns()
+        );
+    }
+
+    #[test]
+    fn send_timed_to_failed_cn_charges_nothing() {
+        let f = fabric(2, 1);
+        f.set_failed(1, true);
+        assert!(f.send_timed(0, 1, 0, &[1], 0).is_err());
+        assert_eq!(f.cn_nics[0].rpc_messages(), 0);
+        assert_eq!(f.cn_nics[0].op_count(), 0, "no queue charge on timeout");
+    }
+
+    #[test]
+    fn send_async_at_charges_queues_and_returns_send_time() {
+        let f = fabric(2, 1);
+        let t_sent = f.send_async_at(0, 1, 0, 4, 500).unwrap();
+        assert_eq!(t_sent, 500 + f.net.rpc_send_ns + f.net.cn_issue_ns);
+        assert!(f.handler_busy_ns(1) >= f.net.rpc_handle_ns * 4);
+        assert_eq!(f.cn_nics[0].rpc_messages(), 1);
     }
 
     #[test]

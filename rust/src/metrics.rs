@@ -173,7 +173,8 @@ pub struct RunReport {
     pub coalesced_ops: u64,
     /// Sync doorbell plans the step-machine staged in-flight (posted with
     /// the doorbell deferred while the lane yielded); 0 without the
-    /// pipelined scheduler.
+    /// pipelined scheduler. Doorbell-plane only — staged RPC plans are
+    /// visible through the `rpc_*` family instead.
     pub staged_plans: u64,
     /// High-water mark of WQEs posted but not yet rung on any single CN
     /// NIC — the in-flight depth the step-machine reached.
@@ -184,15 +185,36 @@ pub struct RunReport {
     /// Frames' staged plans carried by those merged issues
     /// (>= 2 x `overlap_rings` whenever any overlap happened).
     pub overlap_plans: u64,
-    /// Ring events that completed >= 1 staged plan, re-enqueueing its
-    /// parked lane into the scheduler's ready queue (the continuation
-    /// model's resume events; 0 at depth 1 — nothing stages).
+    /// Ring events that completed >= 1 staged *doorbell* plan,
+    /// re-enqueueing its parked lane into the scheduler's ready queue
+    /// (the continuation model's resume events; 0 at depth 1 — nothing
+    /// stages). Paired with `staged_plans`, so `resumed_plans ==
+    /// staged_plans` in a crash-free run; RPC-plane staging is reported
+    /// by `coalesced_rpc_reqs`/`rpc_messages_per_commit()` instead.
     pub resumed_rings: u64,
-    /// Staged plans completed by those ring events (lane resumptions).
+    /// Staged doorbell plans completed by those ring events (lane
+    /// resumptions).
     pub resumed_plans: u64,
-    /// Cumulative virtual ns staged plans waited between posting and the
-    /// ring that carried them (see [`RunReport::mean_ring_gap_ns`]).
+    /// Cumulative virtual ns staged doorbell plans waited between
+    /// posting and the ring that carried them (see
+    /// [`RunReport::mean_ring_gap_ns`]).
     pub ring_gap_ns: u64,
+    /// CN-to-CN RPC messages sent (remote lock / unlock traffic) — the
+    /// RPC-plane mirror of `doorbells`.
+    pub rpc_messages: u64,
+    /// Lock-class requests those messages carried (coalesced riders
+    /// included) — the RPC-plane mirror of `doorbell_ops`.
+    pub rpc_reqs: u64,
+    /// Requests that rode a message another lane's lock batch paid for
+    /// instead of sending their own (cross-lane RPC coalescing; 0
+    /// without the pipelined scheduler).
+    pub coalesced_rpc_reqs: u64,
+    /// Lock-wait wakeups: lanes parked behind an anachronistic sibling
+    /// holder, woken by its release (0 at depth <= 1).
+    pub lock_waits: u64,
+    /// Cumulative virtual ns between those waiters' park times and the
+    /// holders' releases (see [`RunReport::mean_lock_wait_ns`]).
+    pub lock_wait_ns: u64,
 }
 
 impl RunReport {
@@ -281,6 +303,36 @@ impl RunReport {
             0.0
         } else {
             self.resumed_plans as f64 / self.resumed_rings as f64
+        }
+    }
+
+    /// RPC messages sent per committed transaction — the IOPS the
+    /// RPC-plane coalescing is measured by (the paper's §4.1 batching
+    /// claim, generalized across sibling lanes).
+    pub fn rpc_messages_per_commit(&self) -> f64 {
+        if self.commits == 0 {
+            0.0
+        } else {
+            self.rpc_messages as f64 / self.commits as f64
+        }
+    }
+
+    /// Mean lock-class requests per RPC message (riders included).
+    pub fn reqs_per_rpc_message(&self) -> f64 {
+        if self.rpc_messages == 0 {
+            0.0
+        } else {
+            self.rpc_reqs as f64 / self.rpc_messages as f64
+        }
+    }
+
+    /// Mean virtual ns a lock-wait bridged between the waiter's park and
+    /// the anachronistic holder's release (0 without waits).
+    pub fn mean_lock_wait_ns(&self) -> f64 {
+        if self.lock_waits == 0 {
+            0.0
+        } else {
+            self.lock_wait_ns as f64 / self.lock_waits as f64
         }
     }
 }
@@ -402,6 +454,11 @@ mod tests {
             resumed_rings: 250_000,
             resumed_plans: 1_000_000,
             ring_gap_ns: 2_000_000_000,
+            rpc_messages: 500_000,
+            rpc_reqs: 2_000_000,
+            coalesced_rpc_reqs: 750_000,
+            lock_waits: 10_000,
+            lock_wait_ns: 30_000_000,
         };
         assert!((r.mtps() - 1.0).abs() < 1e-9);
         assert!((r.doorbells_per_commit() - 4.0).abs() < 1e-9);
@@ -410,6 +467,9 @@ mod tests {
         assert!((r.overlap_rate() - 0.6).abs() < 1e-9);
         assert!((r.mean_ring_gap_ns() - 2_000.0).abs() < 1e-9);
         assert!((r.mean_resumed_lanes() - 4.0).abs() < 1e-9);
+        assert!((r.rpc_messages_per_commit() - 0.5).abs() < 1e-9);
+        assert!((r.reqs_per_rpc_message() - 4.0).abs() < 1e-9);
+        assert!((r.mean_lock_wait_ns() - 3_000.0).abs() < 1e-9);
     }
 
     #[test]

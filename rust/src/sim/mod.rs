@@ -236,7 +236,7 @@ impl Cluster {
             }
             for (i, nic) in self.shared.cn_nics.iter().enumerate() {
                 eprintln!(
-                    "cn{i} nic: ops={} busy={}ns wait={}ns util={:.2} doorbells={} db_ops={} coalesced={} staged={} inflight_hwm={} overlap_rings={} overlap_plans={} resumed_rings={} resumed_plans={} ring_gap={}ns",
+                    "cn{i} nic: ops={} busy={}ns wait={}ns util={:.2} doorbells={} db_ops={} coalesced={} staged={} inflight_hwm={} overlap_rings={} overlap_plans={} resumed_rings={} resumed_plans={} ring_gap={}ns rpc_msgs={} rpc_reqs={} coalesced_rpc={} lock_waits={} lock_wait={}ns",
                     nic.op_count(),
                     nic.busy_ns(),
                     nic.wait_ns(),
@@ -250,7 +250,12 @@ impl Cluster {
                     nic.overlap_plans(),
                     nic.resumed_rings(),
                     nic.resumed_plans(),
-                    nic.ring_gap_ns()
+                    nic.ring_gap_ns(),
+                    nic.rpc_messages(),
+                    nic.rpc_reqs(),
+                    nic.coalesced_rpc_reqs(),
+                    nic.lock_waits(),
+                    nic.lock_wait_ns()
                 );
             }
         }
@@ -263,6 +268,8 @@ impl Cluster {
         let (mut doorbells, mut doorbell_ops, mut coalesced_ops) = (0u64, 0u64, 0u64);
         let (mut staged_plans, mut overlap_rings, mut overlap_plans) = (0u64, 0u64, 0u64);
         let (mut resumed_rings, mut resumed_plans, mut ring_gap_ns) = (0u64, 0u64, 0u64);
+        let (mut rpc_messages, mut rpc_reqs, mut coalesced_rpc_reqs) = (0u64, 0u64, 0u64);
+        let (mut lock_waits, mut lock_wait_ns) = (0u64, 0u64);
         let mut inflight_wqes_hwm = 0u64;
         for nic in &self.shared.cn_nics {
             doorbells += nic.doorbells();
@@ -274,6 +281,11 @@ impl Cluster {
             resumed_rings += nic.resumed_rings();
             resumed_plans += nic.resumed_plans();
             ring_gap_ns += nic.ring_gap_ns();
+            rpc_messages += nic.rpc_messages();
+            rpc_reqs += nic.rpc_reqs();
+            coalesced_rpc_reqs += nic.coalesced_rpc_reqs();
+            lock_waits += nic.lock_waits();
+            lock_wait_ns += nic.lock_wait_ns();
             inflight_wqes_hwm = inflight_wqes_hwm.max(nic.posted_wqes_hwm());
         }
         Ok(RunReport {
@@ -296,6 +308,11 @@ impl Cluster {
             resumed_rings,
             resumed_plans,
             ring_gap_ns,
+            rpc_messages,
+            rpc_reqs,
+            coalesced_rpc_reqs,
+            lock_waits,
+            lock_wait_ns,
         })
     }
 
@@ -718,7 +735,8 @@ mod tests {
         // atomics pipeline (the fig. 2 knee); below it the systems tie.
         let mut cfg = tiny_cfg();
         cfg.duration_ns = 5_000_000;
-        cfg.coordinators_per_cn = 8; // 24 concurrent over 2 MNs
+        cfg.n_cns = 3; // pinned: the knee needs 24 concurrent over 2 MNs
+        cfg.coordinators_per_cn = 8;
         let cluster = Cluster::build(&cfg, WorkloadKind::SmallBank).unwrap();
         let lotus = cluster.run(SystemKind::Lotus).unwrap();
         let motor = cluster.run(SystemKind::Motor).unwrap();
@@ -758,11 +776,15 @@ mod tests {
             legacy.doorbell_ops, pipe1.doorbell_ops,
             "doorbell op accounting differs"
         );
-        // Depth 1 has no siblings: nothing stages, nothing resumes.
+        // Depth 1 has no siblings: nothing stages, nothing resumes, and
+        // neither plane coalesces.
         assert_eq!(pipe1.staged_plans, 0, "depth 1 must not stage plans");
         assert_eq!(pipe1.overlap_rings, 0);
         assert_eq!(pipe1.resumed_rings, 0, "depth 1 must never park a lane");
         assert_eq!(pipe1.resumed_plans, 0);
+        assert_eq!(legacy.rpc_messages, pipe1.rpc_messages, "rpc accounting differs");
+        assert_eq!(pipe1.coalesced_rpc_reqs, 0, "depth 1 must not merge RPCs");
+        assert_eq!(pipe1.lock_waits, 0, "depth 1 has no siblings to wait on");
     }
 
     #[test]
@@ -872,6 +894,7 @@ mod tests {
     #[test]
     fn crash_event_dips_and_recovers() {
         let mut cfg = tiny_cfg();
+        cfg.n_cns = 3; // pinned: the event crashes CN 2
         cfg.duration_ns = 60_000_000; // 60 ms
         cfg.timeline_interval_ns = 1_000_000; // 1 ms buckets
         let cluster = Cluster::build(

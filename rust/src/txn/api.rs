@@ -79,10 +79,11 @@ pub trait TxnCtl {
     ///
     /// The default wraps the blocking [`TxnCtl::execute`] in an
     /// immediately-ready machine (sequential implementors need only the
-    /// blocking form).
+    /// blocking form) — a [`StepFut::ready`] value, so the sequential
+    /// and baseline paths pay no heap allocation for the step surface.
     fn execute_step(&mut self) -> StepFut<'_, Result<()>> {
         let r = self.execute();
-        Box::pin(std::future::ready(r))
+        StepFut::ready(r)
     }
     /// Read a record's bytes fetched by `execute`.
     fn value(&self, r: RecordRef) -> Option<&[u8]>;
@@ -96,7 +97,7 @@ pub trait TxnCtl {
     /// Resumable commit (see [`TxnCtl::execute_step`] for the contract).
     fn commit_step(&mut self) -> StepFut<'_, Result<()>> {
         let r = self.commit();
-        Box::pin(std::future::ready(r))
+        StepFut::ready(r)
     }
     /// Abort voluntarily (releases all locks; always succeeds).
     fn rollback(&mut self);

@@ -43,7 +43,7 @@ pub mod timestamp;
 pub use api::{Isolation, TxnApi, TxnCtl};
 pub use coordinator::{LotusCoordinator, SharedCluster};
 pub use doomed::DoomedSet;
-pub use phases::{PhaseCtx, StepSink, TxnFrame};
+pub use phases::{PhaseCtx, Plan, StepSink, TxnFrame};
 pub use step::{expect_ready, StepFut};
 pub use scheduler::{Coalescer, FrameScheduler, LaneOutcome, SiblingLocks};
 pub use timestamp::{compose_ts, logical_of, phys_of, TimestampOracle};

@@ -167,17 +167,15 @@ pub async fn acquire(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame, from: usize) 
             Err(e) => return Err(e),
         }
     }
-    // Remote locks: one batched RPC per target CN (§4.1).
+    // Remote locks: one batched RPC per target CN (§4.1) — an RPC-plane
+    // issue point. Under the pipelined scheduler the message is staged
+    // and the lane parks; sibling lanes' lock batches to the same target
+    // CN within the coalescing window share ONE message (each lane's
+    // clock charged only to the handler completing its own batch).
     for (target, batch) in remote {
-        ctx.ep.gate_sync(ctx.clk);
-        if let Err(e) = ctx
-            .cluster
-            .rpc
-            .call(ctx.cn, target, ctx.slot, batch.len(), ctx.clk)
-        {
+        if ctx.issue_rpc(target, batch.len()).await.is_err() {
             // CN failed: the paper aborts transactions waiting on the
             // failed CN's locks (§6).
-            let _ = e;
             unlock::release(ctx, frame);
             return Err(abort(AbortReason::OwnerFailed));
         }

@@ -26,12 +26,15 @@
 //! write sets, CVT snapshots, held locks) through a [`PhaseCtx`] (the
 //! coordinator's environment: cluster state, endpoint, virtual clock).
 //!
-//! # The reified continuation contract (ISSUE 4)
+//! # The reified continuation contract (ISSUE 4 + ISSUE 5)
 //!
-//! Phases **plan** their one-sided ops into [`crate::dm::OpBatch`]es and
-//! hand them to [`PhaseCtx::issue`] / [`PhaseCtx::issue_deferred`] — the
-//! only points at which a phase touches the fabric. Every phase (and the
-//! workload driver above it) is a **resumable step machine**
+//! Phases **plan** their fabric work as [`Plan`]s — a one-sided
+//! [`crate::dm::OpBatch`] against the memory pool (the **doorbell
+//! plane**) or a batched lock-class RPC message to a sibling CN (the
+//! **RPC plane**) — and hand them to [`PhaseCtx::issue`] /
+//! [`PhaseCtx::issue_rpc`] / the deferred variants: the only points at
+//! which a phase touches either fabric. Every phase (and the workload
+//! driver above it) is a **resumable step machine**
 //! ([`crate::txn::step::StepFut`]), cut at exactly those issue points;
 //! `Poll::Pending` is the *Issued* state, `Poll::Ready` is *Done*. The
 //! conduit behind the issue point decides how execution proceeds:
@@ -42,18 +45,21 @@
 //!   and the machine runs straight through the await — a single poll is
 //!   the classic blocking phase call ([`crate::txn::step::expect_ready`]).
 //! - **Staging** ([`StepSink`] with [`StepSink::stages`] true — the
-//!   pipelined [`crate::txn::scheduler::FrameScheduler`]): the plan's
-//!   WQEs are *posted* to the scheduler's in-flight table
-//!   (`Flight::Staged`), the doorbell is **not** rung, and the machine
-//!   returns `Poll::Pending` — the lane is parked on the heap with no OS
-//!   stack frame pinning it. The scheduler's ready-queue loop keeps
-//!   polling other runnable lanes; when it rings a merged doorbell set,
-//!   every covered lane's in-flight slot flips to `Flight::Done` and the
-//!   lane re-enters the ready queue at its own completion time, to be
+//!   pipelined [`crate::txn::scheduler::FrameScheduler`]): the plan is
+//!   *posted* to the scheduler's in-flight table (`Flight::Staged` —
+//!   doorbell WQEs with the ring deferred, or an RPC message with the
+//!   SEND deferred) and the machine returns `Poll::Pending` — the lane
+//!   is parked on the heap with no OS stack frame pinning it. The
+//!   scheduler's ready-queue loop keeps polling other runnable lanes;
+//!   when it rings, staged doorbell plans merge into one doorbell set
+//!   per MN and staged RPC plans to the **same destination CN** merge
+//!   into one RPC message (within `coalesce_window_ns`), every covered
+//!   lane's in-flight slot flips to its Done state and the lane
+//!   re-enters the ready queue at its own completion time, to be
 //!   resumed in completion-clock order — in *any* interleaving, not the
 //!   stack-unwind (LIFO) order of the old nested-pump design. On resume
-//!   the machine receives its own ops' results (never a sibling's), and
-//!   its virtual clock is charged only to its own slowest completion.
+//!   the machine receives its own results (never a sibling's), and its
+//!   virtual clock is charged only to its own slowest completion.
 //!
 //! The phase code is identical under every conduit — park/resume is
 //! entirely the sink's concern — which is what keeps the
@@ -112,6 +118,39 @@ pub enum WaitVerdict {
     Wait,
 }
 
+/// A staged unit of fabric work — what a phase machine posts at an issue
+/// point. The two planes of the disaggregated design (ISSUE 5):
+///
+/// - [`Plan::Doorbell`] — one-sided verbs against the memory pool,
+///   merged per target MN into shared doorbell rings.
+/// - [`Plan::Rpc`] — a batched lock-class CN-to-CN message, merged per
+///   destination CN into shared RPC sends (the paper's "multiple remote
+///   lock requests ... batched into a single RDMA message", §4.1,
+///   generalized across sibling lanes).
+#[derive(Debug)]
+pub enum Plan {
+    /// A planned one-sided doorbell batch (memory-pool plane).
+    Doorbell(OpBatch),
+    /// `n_reqs` lock-class requests for `dst_cn`'s lock service
+    /// (CN-to-CN RPC plane).
+    Rpc {
+        /// Destination CN (owner of the locks).
+        dst_cn: usize,
+        /// Lock/unlock requests carried by the message.
+        n_reqs: usize,
+    },
+}
+
+impl Plan {
+    /// Nothing to issue?
+    pub fn is_empty(&self) -> bool {
+        match self {
+            Plan::Doorbell(b) => b.is_empty(),
+            Plan::Rpc { n_reqs, .. } => *n_reqs == 0,
+        }
+    }
+}
+
 /// The conduit behind a phase machine's issue points (see the module
 /// docs). Implemented by the pipelined scheduler's shared state; poll
 /// driven — no method ever blocks or pumps sibling lanes, the machine
@@ -129,20 +168,26 @@ pub trait StepSink {
     /// riders.
     fn flush_riders(&self, lane: usize, now: u64) -> crate::Result<()>;
 
-    /// Post a plan's WQEs into the in-flight table (`Flight::Staged`)
-    /// with the doorbell deferred. The machine returns `Poll::Pending`
-    /// right after.
-    fn post(&self, lane: usize, batch: OpBatch, t_post: u64);
+    /// Post a plan into the in-flight table (`Flight::Staged`) with its
+    /// doorbell ring / RPC send deferred. The machine returns
+    /// `Poll::Pending` right after.
+    fn post(&self, lane: usize, plan: Plan, t_post: u64);
 
-    /// Take the lane's results if its doorbell has completed
+    /// Take the lane's results if its staged doorbell plan has completed
     /// (`Flight::Done`): `(results, completion time of the lane's
     /// slowest op)`.
     fn try_take(&self, lane: usize) -> Option<(BatchResult, u64)>;
 
-    /// Park a fire-and-forget plan (commit-log clears) to ride a later
-    /// doorbell; `clk` advances only if the plan is issued inline (no
+    /// Take the lane's RPC reply if its staged RPC plan has completed:
+    /// `(reply arrived (false == destination CN failed), completion
+    /// time)`.
+    fn try_take_rpc(&self, lane: usize) -> Option<(bool, u64)>;
+
+    /// Park a fire-and-forget plan (commit-log clears, remote unlock
+    /// messages) to ride a later doorbell ring / RPC send to the same
+    /// destination; `clk` advances only if the plan is issued inline (no
     /// coalescer: immediate fire-and-forget issue).
-    fn issue_deferred(&self, lane: usize, batch: OpBatch, clk: &mut VClock) -> crate::Result<()>;
+    fn issue_deferred(&self, lane: usize, plan: Plan, clk: &mut VClock) -> crate::Result<()>;
 
     /// Would acquiring `mode` on `key` at virtual time `now` conflict
     /// with a sibling lane's transaction whose recorded lock interval
@@ -153,9 +198,10 @@ pub trait StepSink {
     /// Record a physical lock acquisition (live interval `[now, ..)`).
     fn note_lock(&self, lane: usize, key: LotusKey, mode: LockMode, now: u64);
 
-    /// All of `lane`'s locks were physically released: drop its live
-    /// intervals and wake lanes parked waiting on them.
-    fn note_unlock_all(&self, lane: usize);
+    /// All of `lane`'s locks were physically released at virtual time
+    /// `now`: drop its live intervals and wake lanes parked waiting on
+    /// them (recording each woken lane's wait span, `now - park time`).
+    fn note_unlock_all(&self, lane: usize, now: u64);
 
     /// Triage a failed physical acquisition of `key` (requested in
     /// `mode`) at time `now`.
@@ -193,6 +239,30 @@ impl Future for TakeIssue<'_> {
             return Poll::Pending;
         }
         match self.sink.try_take(self.lane) {
+            Some(done) => Poll::Ready(done),
+            None => Poll::Pending,
+        }
+    }
+}
+
+/// The *Issued -> Done* machine step behind [`PhaseCtx::issue_rpc`]:
+/// first poll parks the machine, every later poll checks the in-flight
+/// table for the RPC reply.
+struct TakeRpc<'a> {
+    sink: &'a dyn StepSink,
+    lane: usize,
+    parked: bool,
+}
+
+impl Future for TakeRpc<'_> {
+    type Output = (bool, u64);
+
+    fn poll(mut self: Pin<&mut Self>, _cx: &mut Context<'_>) -> Poll<Self::Output> {
+        if !self.parked {
+            self.parked = true;
+            return Poll::Pending;
+        }
+        match self.sink.try_take_rpc(self.lane) {
             Some(done) => Poll::Ready(done),
             None => Poll::Pending,
         }
@@ -499,7 +569,7 @@ impl PhaseCtx<'_> {
             sink.flush_riders(self.lane, self.clk.now())?;
             return Ok(BatchResult::empty());
         }
-        sink.post(self.lane, batch, self.clk.now());
+        sink.post(self.lane, Plan::Doorbell(batch), self.clk.now());
         let (res, t_done) = TakeIssue {
             sink,
             lane: self.lane,
@@ -512,14 +582,71 @@ impl PhaseCtx<'_> {
         Ok(res)
     }
 
+    /// Issue a batched lock-class RPC to `dst_cn` and wait for this
+    /// frame's reply — the RPC plane's *issue point* (ISSUE 5). Under a
+    /// staging sink the message is *posted* (`Flight::Staged`) and the
+    /// machine **parks**; the scheduler merges sibling lanes' messages
+    /// to the same destination CN (within `coalesce_window_ns`) into one
+    /// RPC send and resumes each owner at the handler completing its own
+    /// chunk. Under a direct conduit this is exactly the classic
+    /// synchronous [`crate::dm::RpcFabric::call`].
+    ///
+    /// `Err(NodeUnavailable)` means the destination CN is failed and the
+    /// caller burned the UD timeout (clock already charged).
+    pub async fn issue_rpc(&mut self, dst_cn: usize, n_reqs: usize) -> crate::Result<()> {
+        let Some(sink) = self.sink.filter(|s| s.stages()) else {
+            self.ep.gate_sync(self.clk);
+            return self
+                .cluster
+                .rpc
+                .call(self.cn, dst_cn, self.slot, n_reqs, self.clk);
+        };
+        sink.post(self.lane, Plan::Rpc { dst_cn, n_reqs }, self.clk.now());
+        let (ok, t_done) = TakeRpc {
+            sink,
+            lane: self.lane,
+            parked: false,
+        }
+        .await;
+        self.clk.catch_up(t_done.max(sink.clk_floor()));
+        if ok {
+            Ok(())
+        } else {
+            Err(crate::Error::NodeUnavailable(format!(
+                "cn{dst_cn} (rpc timeout)"
+            )))
+        }
+    }
+
     /// Issue a fire-and-forget plan off the critical path (remote log
     /// clears): parked with the sink to ride a later doorbell when
     /// staging, issued immediately (`issue_async`) otherwise — including
     /// under `coalesce_window_ns == 0`, where nothing may park.
     pub fn issue_deferred(&mut self, batch: OpBatch) -> crate::Result<()> {
         match self.sink {
-            Some(sink) => sink.issue_deferred(self.lane, batch, self.clk),
+            Some(sink) => sink.issue_deferred(self.lane, Plan::Doorbell(batch), self.clk),
             None => batch.issue_async(self.ep, &self.cluster.mns, self.clk),
+        }
+    }
+
+    /// Fire-and-forget RPC off the critical path (remote unlocks, paper
+    /// 5.1: the coordinator "returns the result immediately after
+    /// issuing remote unlock requests"): parked with the sink to ride a
+    /// later merged RPC message to the same destination CN when staging,
+    /// sent immediately otherwise. Failures are ignored — recovery
+    /// releases the locks of failed CNs (§6).
+    pub fn issue_rpc_deferred(&mut self, dst_cn: usize, n_reqs: usize) {
+        match self.sink {
+            Some(sink) => {
+                let _ = sink.issue_deferred(self.lane, Plan::Rpc { dst_cn, n_reqs }, self.clk);
+            }
+            None => {
+                self.ep.gate_sync(self.clk);
+                let _ = self
+                    .cluster
+                    .rpc
+                    .call_async(self.cn, dst_cn, self.slot, n_reqs, self.clk);
+            }
         }
     }
 
@@ -540,10 +667,11 @@ impl PhaseCtx<'_> {
         }
     }
 
-    /// All locks released: drop live intervals, wake waiting siblings.
+    /// All locks released: drop live intervals, wake waiting siblings
+    /// (their wait spans are recorded against this release time).
     pub fn note_unlock_all(&self) {
         if let Some(sink) = self.sink {
-            sink.note_unlock_all(self.lane);
+            sink.note_unlock_all(self.lane, self.clk.now());
         }
     }
 
@@ -559,7 +687,9 @@ impl PhaseCtx<'_> {
     /// *unchanged* virtual time (the wait is a scheduling artifact; in
     /// the modeled timeline the lock was free at `now`) — except for
     /// coordinator-level time skips (shard transfers), which apply as a
-    /// floor.
+    /// floor, and a small CPU re-check charge: the woken lane re-probes
+    /// the (now free) lock table before retrying, which is real work on
+    /// the modeled CN CPU (closes the ROADMAP "wait is free" open item).
     pub async fn wait_unlock(&mut self, key: LotusKey) {
         let sink = self.sink.expect("wait_unlock requires a scheduler sink");
         WaitUnlock {
@@ -571,6 +701,8 @@ impl PhaseCtx<'_> {
         }
         .await;
         self.clk.catch_up(sink.clk_floor());
+        let recheck = self.net().local_lock_ns;
+        self.clk.advance(recheck);
     }
 }
 

@@ -6,6 +6,14 @@
 //! clock advances only by the send cost, never a round trip. Failures
 //! are ignored; recovery releases the locks of failed CNs (§6). The same
 //! routine is the abort path's rollback.
+//!
+//! Under the pipelined scheduler the unlock messages are deferred
+//! [`crate::txn::phases::Plan::Rpc`] plans: they park with the coalescer
+//! and ride a sibling lane's next lock message to the same CN (exactly
+//! like commit-log clears ride doorbell rings), falling back to their
+//! own send when the window expires. The lock-table release itself is
+//! immediate either way — only the message's *cost* is deferred, so
+//! waiting siblings are woken without delay.
 
 use crate::txn::phases::{PhaseCtx, TxnFrame};
 
@@ -30,11 +38,7 @@ pub fn release(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame) {
     for (target, n) in remote {
         // Fire-and-forget (paper 5.1): failures are ignored — recovery
         // releases the locks of failed CNs.
-        ctx.ep.gate_sync(ctx.clk);
-        let _ = ctx
-            .cluster
-            .rpc
-            .call_async(ctx.cn, target, ctx.slot, n, ctx.clk);
+        ctx.issue_rpc_deferred(target, n);
     }
     // Drop this lane's live lock intervals with the scheduler sink and
     // wake sibling lanes parked waiting on them (anachronistic-holder

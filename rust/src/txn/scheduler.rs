@@ -58,14 +58,32 @@
 //! `mean_ring_gap_ns()` report how many rings re-enqueued parked lanes
 //! and how long staged plans waited to merge.
 //!
+//! # Two planes, one issue-point fabric (ISSUE 5)
+//!
+//! A staged plan targets **either fabric** ([`crate::txn::phases::Plan`]):
+//! one-sided doorbell batches against the memory pool, or batched
+//! lock-class **CN-to-CN RPC messages** (the lock phase's per-remote-CN
+//! batches). Both park in the same in-flight table and ride the same
+//! ring trigger; when the loop rings, staged doorbell plans merge per
+//! target MN into shared doorbell sets and staged RPC plans merge **per
+//! destination CN** into single RPC messages
+//! ([`crate::dm::RpcFabric::send_timed`] — one `rpc_send_ns` charge per
+//! message, per-owner handler completions), so sibling lanes locking on
+//! the same remote CN within the window pay one message instead of one
+//! each. Fire-and-forget unlock messages defer exactly like commit-log
+//! clears: they ride the next merged lock message to the same CN and
+//! flush out alone when the window expires. RPC-plane accounting lives
+//! on the CN [`crate::dm::rnic::Rnic`]
+//! (`rpc_messages`/`rpc_reqs`/`coalesced_rpc_reqs`).
+//!
 //! Two further mechanisms ride on the lane model:
 //!
 //! - **Fire-and-forget parking** ([`Coalescer`]): deferred plans
-//!   (commit-log clears) park and ride a later ring; stale ones are rung
-//!   out by [`Coalescer::flush_stale`] / [`FrameScheduler::finish`]
-//!   exactly once. With `coalesce_window_ns == 0` there is no coalescer
-//!   and deferred plans issue immediately (fire-and-forget) instead of
-//!   parking.
+//!   (commit-log clears, remote unlock messages) park and ride a later
+//!   ring; stale ones are rung out by [`Coalescer::flush_stale`] /
+//!   [`FrameScheduler::finish`] exactly once. With
+//!   `coalesce_window_ns == 0` there is no coalescer and deferred plans
+//!   issue immediately (fire-and-forget) instead of parking.
 //! - **Sibling lock conflicts by virtual interval** ([`SiblingLocks`] +
 //!   the live holdings of parked lanes): conflicts between lanes are
 //!   decided against *recorded lock intervals* — a committed
@@ -88,6 +106,7 @@
 
 use std::cell::{Cell, RefCell};
 use std::future::Future;
+use std::pin::Pin;
 use std::rc::Rc;
 use std::sync::Arc;
 use std::task::{Context, Poll, Waker};
@@ -95,12 +114,13 @@ use std::task::{Context, Poll, Waker};
 use crate::dm::clock::{TimeGate, VClock};
 use crate::dm::memnode::MemNode;
 use crate::dm::opbatch::{BatchResult, MergedBatch, OpBatch};
+use crate::dm::rpc::RpcFabric;
 use crate::dm::verbs::Endpoint;
 use crate::lock::table::LockMode;
 use crate::sharding::key::LotusKey;
 use crate::txn::api::{RecordRef, TxnApi, TxnCtl};
 use crate::txn::coordinator::SharedCluster;
-use crate::txn::phases::{self, PhaseCtx, StepSink, TxnFrame, TxnRecord, WaitVerdict};
+use crate::txn::phases::{self, PhaseCtx, Plan, StepSink, TxnFrame, TxnRecord, WaitVerdict};
 use crate::txn::step::{noop_waker, StepFut};
 use crate::util::Xoshiro256;
 use crate::workloads::{RouteCtx, Workload};
@@ -145,10 +165,11 @@ fn ride_or_ring(last_ring: &mut Vec<u64>, mn: usize, t: u64, window: u64) -> boo
     }
 }
 
-/// Per-scheduler doorbell coalescer: merges staged sync plans and parked
-/// fire-and-forget plans into shared doorbell rings (see the module
-/// docs). One instance per [`FrameScheduler`]; single-threaded by
-/// construction (interior mutability only so the shared-reference
+/// Per-scheduler two-plane coalescer: merges staged sync plans and
+/// parked fire-and-forget plans into shared doorbell rings (memory-pool
+/// plane) and shared per-destination RPC messages (CN-to-CN plane; see
+/// the module docs). One instance per [`FrameScheduler`]; single-threaded
+/// by construction (interior mutability only so the shared-reference
 /// [`StepSink`] can reach it).
 pub struct Coalescer {
     window_ns: u64,
@@ -157,8 +178,9 @@ pub struct Coalescer {
 
 #[derive(Default)]
 struct CoalesceState {
-    /// Parked fire-and-forget plans: `(plan, park virtual time)`.
-    pending: Vec<(OpBatch, u64)>,
+    /// Parked fire-and-forget plans: `(plan, park virtual time)` — log
+    /// clears (doorbell plane) and remote unlock messages (RPC plane).
+    pending: Vec<(Plan, u64)>,
     /// Per MN: virtual time of the last doorbell rung (`u64::MAX` never).
     last_ring: Vec<u64>,
 }
@@ -177,15 +199,17 @@ impl Coalescer {
         self.window_ns
     }
 
-    /// Parked fire-and-forget plans not yet flushed.
+    /// Parked fire-and-forget plans not yet flushed (both planes).
     pub fn pending_plans(&self) -> usize {
         self.state.borrow().pending.len()
     }
 
-    /// Park a fire-and-forget plan to ride a later doorbell. The plan
-    /// waits at most `coalesce_window_ns` past the scheduler's slowest
-    /// lane before [`Coalescer::flush_stale`] rings it out.
-    pub fn defer(&self, plan: OpBatch, now: u64) {
+    /// Park a fire-and-forget plan to ride a later doorbell ring (log
+    /// clears) or RPC message to the same destination CN (remote
+    /// unlocks). The plan waits at most `coalesce_window_ns` past the
+    /// scheduler's slowest lane before [`Coalescer::flush_stale`] rings
+    /// it out.
+    pub fn defer(&self, plan: Plan, now: u64) {
         if plan.is_empty() {
             return;
         }
@@ -211,19 +235,22 @@ impl Coalescer {
         let n_sync = plans.iter().filter(|p| !p.1.is_empty()).count() as u64;
         let mut st = self.state.borrow_mut();
         let mut merged = MergedBatch::new();
-        // Parked riders first: their WQEs were posted earlier, so they
-        // execute ahead of the sync plans in shared groups.
+        // Parked doorbell riders first: their WQEs were posted earlier,
+        // so they execute ahead of the sync plans in shared groups.
+        // RPC-plane plans stay parked — they ride RPC messages
+        // ([`Coalescer::ring_rpc`]), never doorbells.
         let mut rider_mns: Vec<(usize, u64)> = Vec::new();
-        let mut kept: Vec<(OpBatch, u64)> = Vec::new();
+        let mut kept: Vec<(Plan, u64)> = Vec::new();
         for (plan, pt) in st.pending.drain(..) {
-            if pt <= t_ring.saturating_add(self.window_ns) {
-                for mn in plan.mns() {
-                    let n = plan.group_len(mn) as u64;
-                    bump_mn(&mut rider_mns, mn, n);
+            match plan {
+                Plan::Doorbell(b) if pt <= t_ring.saturating_add(self.window_ns) => {
+                    for mn in b.mns() {
+                        let n = b.group_len(mn) as u64;
+                        bump_mn(&mut rider_mns, mn, n);
+                    }
+                    merged.absorb(b);
                 }
-                merged.absorb(plan);
-            } else {
-                kept.push((plan, pt));
+                other => kept.push((other, pt)),
             }
         }
         st.pending = kept;
@@ -286,19 +313,127 @@ impl Coalescer {
             .collect())
     }
 
+    /// Send every staged RPC plan in `plans` (`(owner lane, destination
+    /// CN, request count, post time)`), merged into **one RPC message
+    /// per destination CN** (plus parked fire-and-forget riders to that
+    /// CN that are not in the message's virtual future beyond the
+    /// window). Each message fires at the latest post time among its
+    /// plans; each owner gets back `(reached the CN, completion time of
+    /// its own handler chunk)` — `false` means the destination is failed
+    /// and the owner burns the UD timeout from its own post time.
+    pub fn ring_rpc(
+        &self,
+        mut plans: Vec<(usize, usize, usize, u64)>,
+        rpc: &RpcFabric,
+        src_cn: usize,
+        slot: usize,
+        ep: &Endpoint,
+    ) -> Vec<(usize, bool, u64)> {
+        // Earlier posts execute first within a shared message.
+        plans.sort_by_key(|p| (p.3, p.0));
+        let mut dsts: Vec<usize> = Vec::new();
+        for p in &plans {
+            if !dsts.contains(&p.1) {
+                dsts.push(p.1);
+            }
+        }
+        let mut out = Vec::with_capacity(plans.len());
+        for dst in dsts {
+            let group: Vec<(usize, usize, u64)> = plans
+                .iter()
+                .filter(|p| p.1 == dst)
+                .map(|p| (p.0, p.2, p.3))
+                .collect();
+            let t_send = group.iter().map(|g| g.2).max().unwrap_or(0);
+            if rpc.is_failed(dst) {
+                // UD timeout: every owner burns the timeout interval from
+                // its own post time; parked riders stay pending (they are
+                // dropped when their window expires).
+                for &(owner, _, tp) in &group {
+                    out.push((owner, false, tp + rpc.timeout_ns()));
+                }
+                continue;
+            }
+            // Parked fire-and-forget riders to this CN absorb into the
+            // message; posted earlier, so the handler serves them first.
+            let mut rider_reqs = 0usize;
+            {
+                let mut st = self.state.borrow_mut();
+                let mut kept: Vec<(Plan, u64)> = Vec::new();
+                for (plan, pt) in st.pending.drain(..) {
+                    match plan {
+                        Plan::Rpc { dst_cn, n_reqs }
+                            if dst_cn == dst
+                                && pt <= t_send.saturating_add(self.window_ns) =>
+                        {
+                            rider_reqs += n_reqs;
+                        }
+                        other => kept.push((other, pt)),
+                    }
+                }
+                st.pending = kept;
+            }
+            let mut owners: Vec<usize> = Vec::with_capacity(group.len() + 1);
+            if rider_reqs > 0 {
+                owners.push(rider_reqs);
+            }
+            owners.extend(group.iter().map(|g| g.1));
+            ep.gate_sync(&VClock(t_send));
+            match rpc.send_timed(src_cn, dst, slot, &owners, t_send) {
+                Ok(times) => {
+                    // The first sync plan pays the message; riders and
+                    // later plans' requests are coalesced.
+                    let total: usize = owners.iter().map(|&n| n.max(1)).sum();
+                    let first = group[0].1.max(1);
+                    if total > first {
+                        ep.nic.note_rpc_riders((total - first) as u64);
+                    }
+                    let skip = usize::from(rider_reqs > 0);
+                    for (i, &(owner, _, _)) in group.iter().enumerate() {
+                        out.push((owner, true, times[skip + i]));
+                    }
+                }
+                Err(_) => {
+                    // Failed between the check and the send (crash
+                    // injection from another thread): same timeout path.
+                    for &(owner, _, tp) in &group {
+                        out.push((owner, false, tp + rpc.timeout_ns()));
+                    }
+                }
+            }
+        }
+        out
+    }
+
     /// Ring out parked plans whose window expired before `horizon` (the
-    /// scheduler's slowest lane): no doorbell came along to ride, so they
-    /// ring their own, charged fire-and-forget at their park times.
-    pub fn flush_stale(&self, ep: &Endpoint, mns: &[Arc<MemNode>], horizon: u64) -> Result<()> {
-        self.flush_inner(ep, mns, Some(horizon))
+    /// scheduler's slowest lane): no doorbell ring / RPC message came
+    /// along to ride, so they issue their own, charged fire-and-forget
+    /// at their park times.
+    pub fn flush_stale(
+        &self,
+        ep: &Endpoint,
+        mns: &[Arc<MemNode>],
+        rpc: &RpcFabric,
+        src_cn: usize,
+        slot: usize,
+        horizon: u64,
+    ) -> Result<()> {
+        self.flush_inner(ep, mns, rpc, src_cn, slot, Some(horizon))
     }
 
     /// Ring out every parked plan (orderly scheduler shutdown). A plan
     /// leaves `pending` the moment it is drained into the merged flush
     /// batch, so end-of-run flushes issue each parked plan exactly once
     /// no matter how often the flush paths run afterwards.
-    pub fn flush_all(&self, ep: &Endpoint, mns: &[Arc<MemNode>]) -> Result<()> {
-        self.flush_inner(ep, mns, None)
+    pub fn flush_all(
+        &self,
+        ep: &Endpoint,
+        mns: &[Arc<MemNode>],
+        rpc: &RpcFabric,
+        src_cn: usize,
+        slot: usize,
+    ) -> Result<()> {
+        self.flush_inner(ep, mns, rpc, src_cn, slot, None)
     }
 
     /// Drop every parked plan without issuing it (fail-stop crash: WQEs
@@ -308,27 +443,57 @@ impl Coalescer {
         self.state.borrow_mut().pending.clear();
     }
 
-    fn flush_inner(&self, ep: &Endpoint, mns: &[Arc<MemNode>], horizon: Option<u64>) -> Result<()> {
+    fn flush_inner(
+        &self,
+        ep: &Endpoint,
+        mns: &[Arc<MemNode>],
+        rpc: &RpcFabric,
+        src_cn: usize,
+        slot: usize,
+        horizon: Option<u64>,
+    ) -> Result<()> {
         let mut st = self.state.borrow_mut();
         if st.pending.is_empty() {
             return Ok(());
         }
         let mut merged = MergedBatch::new();
         let mut t0 = u64::MAX;
-        let mut kept: Vec<(OpBatch, u64)> = Vec::new();
+        // Stale RPC plans merge per destination CN, sent at the earliest
+        // park time among them: `(dst, reqs, t0)`.
+        let mut rpc_flush: Vec<(usize, usize, u64)> = Vec::new();
+        let mut kept: Vec<(Plan, u64)> = Vec::new();
         for (plan, pt) in st.pending.drain(..) {
             let stale = match horizon {
                 Some(h) => pt.saturating_add(self.window_ns) < h,
                 None => true,
             };
-            if stale {
-                t0 = t0.min(pt);
-                merged.absorb(plan);
-            } else {
+            if !stale {
                 kept.push((plan, pt));
+                continue;
+            }
+            match plan {
+                Plan::Doorbell(b) => {
+                    t0 = t0.min(pt);
+                    merged.absorb(b);
+                }
+                Plan::Rpc { dst_cn, n_reqs } => {
+                    match rpc_flush.iter_mut().find(|e| e.0 == dst_cn) {
+                        Some(e) => {
+                            e.1 += n_reqs;
+                            e.2 = e.2.min(pt);
+                        }
+                        None => rpc_flush.push((dst_cn, n_reqs, pt)),
+                    }
+                }
             }
         }
         st.pending = kept;
+        for (dst, n, t_send) in rpc_flush {
+            ep.gate_sync(&VClock(t_send));
+            // Fire-and-forget: a failed destination drops the message
+            // (recovery releases the failed CN's locks).
+            let _ = rpc.send_async_at(src_cn, dst, slot, n, t_send);
+        }
         if merged.n_plans() == 0 {
             return Ok(());
         }
@@ -402,9 +567,10 @@ enum LanePhase {
 enum Flight {
     /// No plan in flight (lane idle, or machine mid-poll).
     Idle,
-    /// WQEs posted, doorbell not yet rung: `(plan, post virtual time)`.
-    /// The lane machine is parked (`Poll::Pending`).
-    Staged(OpBatch, u64),
+    /// A plan posted with its doorbell ring / RPC send deferred:
+    /// `(plan, post virtual time)`. The lane machine is parked
+    /// (`Poll::Pending`).
+    Staged(Plan, u64),
     /// Doorbell rung; the lane is in the ready queue at `t_done`.
     Done {
         /// The lane's own results.
@@ -415,6 +581,19 @@ enum Flight {
         /// value until the machine resumes and catches up.
         t_post: u64,
         /// Ring event that completed this plan (resume-order tracing).
+        ring: u64,
+    },
+    /// RPC message sent (possibly merged with sibling lanes' messages);
+    /// the lane is in the ready queue at `t_done`.
+    RpcDone {
+        /// Reply arrived (`false` == destination CN failed; the lane
+        /// burned the UD timeout).
+        ok: bool,
+        /// Completion time of the lane's own handler chunk.
+        t_done: u64,
+        /// The lane's clock while parked (its post time).
+        t_post: u64,
+        /// Ring event that sent this message (resume-order tracing).
         ring: u64,
     },
     /// Parked waiting for the sibling holding `key` to release (the
@@ -483,9 +662,14 @@ impl StepSink for SchedShared {
         Ok(())
     }
 
-    fn post(&self, lane: usize, batch: OpBatch, t_post: u64) {
-        self.ep.post_wqes(batch.len() as u64);
-        self.flights.borrow_mut()[lane] = Flight::Staged(batch, t_post);
+    fn post(&self, lane: usize, plan: Plan, t_post: u64) {
+        // The posted-WQE gauge tracks one-sided send-queue depth; RPC
+        // plans are SEND messages on the UD QP and have their own
+        // counters (`rpc_messages`/`rpc_reqs`).
+        if let Plan::Doorbell(b) = &plan {
+            self.ep.post_wqes(b.len() as u64);
+        }
+        self.flights.borrow_mut()[lane] = Flight::Staged(plan, t_post);
     }
 
     fn try_take(&self, lane: usize) -> Option<(BatchResult, u64)> {
@@ -499,15 +683,37 @@ impl StepSink for SchedShared {
         }
     }
 
-    fn issue_deferred(&self, _lane: usize, batch: OpBatch, clk: &mut VClock) -> Result<()> {
+    fn try_take_rpc(&self, lane: usize) -> Option<(bool, u64)> {
+        let mut fl = self.flights.borrow_mut();
+        if let Flight::RpcDone { ok, t_done, .. } = fl[lane] {
+            fl[lane] = Flight::Idle;
+            Some((ok, t_done))
+        } else {
+            None
+        }
+    }
+
+    fn issue_deferred(&self, _lane: usize, plan: Plan, clk: &mut VClock) -> Result<()> {
         match &self.coalescer {
             Some(c) => {
-                c.defer(batch, clk.now());
+                c.defer(plan, clk.now());
                 Ok(())
             }
             // No coalescer (depth 1 or window 0): nothing may park — the
             // fire-and-forget plan issues immediately.
-            None => batch.issue_async(&self.ep, &self.cluster.mns, clk),
+            None => match plan {
+                Plan::Doorbell(b) => b.issue_async(&self.ep, &self.cluster.mns, clk),
+                Plan::Rpc { dst_cn, n_reqs } => {
+                    self.ep.gate_sync(clk);
+                    // Fire-and-forget: a failed destination is ignored
+                    // (recovery releases the failed CN's locks, §6).
+                    let _ = self
+                        .cluster
+                        .rpc
+                        .call_async(self.cn, dst_cn, self.slot, n_reqs, clk);
+                    Ok(())
+                }
+            },
         }
     }
 
@@ -539,30 +745,39 @@ impl StepSink for SchedShared {
         }
     }
 
-    fn note_unlock_all(&self, lane: usize) {
+    fn note_unlock_all(&self, lane: usize, now: u64) {
         if self.depth <= 1 {
             return;
         }
         let released: Vec<LotusKey> = {
             let mut live = self.live_locks.borrow_mut();
-            let set = std::mem::take(&mut live[lane]);
+            let mut set = std::mem::take(&mut live[lane]);
             if set.is_empty() {
                 // A later no-op release (e.g. a rollback after an abort
                 // path already released) must not clobber the saved set.
                 return;
             }
             let keys = set.iter().map(|s| s.key).collect();
-            // Keep the per-key acquisition times for the committed
-            // stamping at transaction end.
+            // Close the live intervals at the actual release time and
+            // keep them for the committed stamping at transaction end —
+            // the stamp must cover `[acquired, released)`, not the whole
+            // transaction (a voluntary rollback mid-transaction frees
+            // the locks well before the machine finishes).
+            for s in &mut set {
+                s.until = now;
+            }
             self.released.borrow_mut()[lane] = set;
             keys
         };
         // Wake lanes parked on any of the released keys: they re-check
-        // the (now free) lock at their unchanged virtual time.
+        // the (now free) lock at their unchanged virtual time. Each
+        // wakeup is a lock-wait stat: the span between the waiter's park
+        // time and this release is the anachronism the wait bridged.
         let mut fl = self.flights.borrow_mut();
         for f in fl.iter_mut() {
             if let Flight::WaitLock(k, t) = *f {
                 if released.contains(&k) {
+                    self.ep.nic.note_lock_wait(now.saturating_sub(t));
                     *f = Flight::WaitOver(t);
                 }
             }
@@ -601,7 +816,10 @@ impl StepSink for SchedShared {
                 any_holder = true;
                 if !matches!(
                     fl[i],
-                    Flight::Staged(..) | Flight::Done { .. } | Flight::WaitOver(..)
+                    Flight::Staged(..)
+                        | Flight::Done { .. }
+                        | Flight::RpcDone { .. }
+                        | Flight::WaitOver(..)
                 ) {
                     return WaitVerdict::Abort;
                 }
@@ -717,7 +935,7 @@ impl TxnCtl for LaneApi<'_> {
     }
 
     fn execute_step(&mut self) -> StepFut<'_, Result<()>> {
-        Box::pin(async move {
+        StepFut::from_future(async move {
             debug_assert_ne!(self.phase, LanePhase::Idle);
             let res = {
                 let (mut ctx, frame) = self.parts();
@@ -754,7 +972,7 @@ impl TxnCtl for LaneApi<'_> {
     }
 
     fn commit_step(&mut self) -> StepFut<'_, Result<()>> {
-        Box::pin(async move {
+        StepFut::from_future(async move {
             debug_assert_eq!(self.phase, LanePhase::Executed);
             let res = {
                 let (mut ctx, frame) = self.parts();
@@ -848,12 +1066,14 @@ async fn lane_txn(
     shared.lane_end.borrow_mut()[lane] = t_end;
     // Remember a *committed* transaction's lock set for the sibling
     // conflict check: any lane pumped later whose virtual time falls
-    // inside a lock's actual holding interval `[acquired, t_end)` must
-    // see it as held (the lock set is a pure function of the still-
-    // intact record set; acquisition times were preserved by the unlock
-    // hand-off). Aborted transactions are not stamped — they released
-    // whatever they briefly held, and stamping them would cascade
-    // phantom aborts between siblings.
+    // inside a lock's actual holding interval `[acquired, released)`
+    // must see it as held (the lock set is a pure function of the still-
+    // intact record set; acquisition AND release times were preserved by
+    // the unlock hand-off — a transaction that voluntarily rolled back
+    // and still returned Ok stamps only up to its rollback, not to the
+    // machine's end). Failed transactions are not stamped — they
+    // released whatever they briefly held, and stamping them would
+    // cascade phantom aborts between siblings.
     let released = std::mem::take(&mut shared.released.borrow_mut()[lane]);
     if shared.depth > 1 && res.is_ok() {
         let frame = &api.frame;
@@ -866,11 +1086,17 @@ async fn lane_txn(
                     .map(|s| s.from)
                     .min()
                     .unwrap_or(clk0);
+                let until = released
+                    .iter()
+                    .filter(|s| s.key == key)
+                    .map(|s| s.until)
+                    .max()
+                    .unwrap_or(t_end);
                 logs[lane].push(LockStamp {
                     key,
                     mode,
                     from,
-                    until: t_end,
+                    until,
                 });
             }
         }
@@ -994,7 +1220,7 @@ impl FrameScheduler {
                 } else {
                     match &fl[i] {
                         Flight::Staged(_, t) | Flight::WaitLock(_, t) | Flight::WaitOver(t) => *t,
-                        Flight::Done { t_post, .. } => *t_post,
+                        Flight::Done { t_post, .. } | Flight::RpcDone { t_post, .. } => *t_post,
                         Flight::Idle => self.lanes[i].clk,
                     }
                 }
@@ -1023,8 +1249,12 @@ impl FrameScheduler {
             c.discard_pending();
         }
         for f in self.shared.flights.borrow_mut().iter_mut() {
-            if let Flight::Staged(b, _) = std::mem::replace(f, Flight::Idle) {
-                self.shared.ep.ring_posted(b.len() as u64);
+            if let Flight::Staged(plan, _) = std::mem::replace(f, Flight::Idle) {
+                // Only doorbell plans hold posted-WQE gauge depth; a
+                // staged RPC message simply dies with the CN.
+                if let Plan::Doorbell(b) = plan {
+                    self.shared.ep.ring_posted(b.len() as u64);
+                }
             }
         }
         for lane in &mut self.lanes {
@@ -1062,7 +1292,13 @@ impl FrameScheduler {
             out.append(&mut self.shared.outcomes.borrow_mut());
         }
         if let Some(c) = &self.shared.coalescer {
-            c.flush_all(&self.shared.ep, &self.shared.cluster.mns)?;
+            c.flush_all(
+                &self.shared.ep,
+                &self.shared.cluster.mns,
+                &self.shared.cluster.rpc,
+                self.shared.cn,
+                self.shared.slot,
+            )?;
         }
         Ok(())
     }
@@ -1108,7 +1344,9 @@ impl FrameScheduler {
         for (i, lane) in self.lanes.iter().enumerate() {
             let cand = if lane.task.is_some() {
                 match &fl[i] {
-                    Flight::Done { t_done, .. } => Some((*t_done, 0u8, false)),
+                    Flight::Done { t_done, .. } | Flight::RpcDone { t_done, .. } => {
+                        Some((*t_done, 0u8, false))
+                    }
                     Flight::WaitOver(t) => Some((*t, 0, false)),
                     _ => None,
                 }
@@ -1131,10 +1369,13 @@ impl FrameScheduler {
     }
 
     /// Ring every staged plan within `coalesce_window_ns` of the oldest
-    /// post time `t_init` as one merged doorbell set (plus parked
-    /// riders), and file each owner's results as [`Flight::Done`] — the
-    /// owners re-enter the ready queue at their own completion times.
-    /// Staged plans outside the window stay staged for a later round.
+    /// post time `t_init`: doorbell plans merge into one doorbell set
+    /// per MN (plus parked doorbell riders) and complete as
+    /// [`Flight::Done`]; RPC plans merge into one message per
+    /// destination CN (plus parked unlock riders) and complete as
+    /// [`Flight::RpcDone`] — every owner re-enters the ready queue at
+    /// its own completion time. Staged plans outside the window stay
+    /// staged for a later round.
     fn ring_staged(&mut self, t_init: u64) -> Result<()> {
         let shared = &self.shared;
         let c = shared
@@ -1142,46 +1383,73 @@ impl FrameScheduler {
             .as_ref()
             .expect("staged plans require a coalescer");
         let window = c.window_ns();
-        let mut plans: Vec<(usize, OpBatch, u64)> = Vec::new();
+        let mut db_plans: Vec<(usize, OpBatch, u64)> = Vec::new();
+        let mut rpc_plans: Vec<(usize, usize, usize, u64)> = Vec::new();
         {
             let mut fl = shared.flights.borrow_mut();
             for (i, f) in fl.iter_mut().enumerate() {
                 let take = matches!(*f, Flight::Staged(_, t) if t.abs_diff(t_init) <= window);
                 if take {
-                    if let Flight::Staged(b, t) = std::mem::replace(f, Flight::Idle) {
-                        plans.push((i, b, t));
+                    if let Flight::Staged(plan, t) = std::mem::replace(f, Flight::Idle) {
+                        match plan {
+                            Plan::Doorbell(b) => db_plans.push((i, b, t)),
+                            Plan::Rpc { dst_cn, n_reqs } => {
+                                rpc_plans.push((i, dst_cn, n_reqs, t))
+                            }
+                        }
                     }
                 }
             }
         }
-        if plans.is_empty() {
+        if db_plans.is_empty() && rpc_plans.is_empty() {
             return Ok(());
         }
-        let posted: u64 = plans.iter().map(|(_, b, _)| b.len() as u64).sum();
-        let t_ring = plans.iter().map(|p| p.2).max().unwrap_or(t_init);
-        let gap: u64 = plans.iter().map(|p| t_ring - p.2).sum();
-        let posts: Vec<(usize, u64)> = plans.iter().map(|(i, _, t)| (*i, *t)).collect();
-        let n_plans = plans.len() as u64;
-        let results = c.ring(plans, &shared.ep, &shared.cluster.mns)?;
-        shared.ep.ring_posted(posted);
-        shared.ep.nic.note_resumed(n_plans, gap);
         self.ring_seq += 1;
         let ring = self.ring_seq;
-        let mut fl = shared.flights.borrow_mut();
-        for (lane, res, t_done) in results {
-            // Every result owner came from `plans`; a miss here is a
-            // routing bug and must not be papered over.
-            let t_post = posts
-                .iter()
-                .find(|(l, _)| *l == lane)
-                .map(|&(_, t)| t)
-                .expect("ring returned a result for a lane that staged no plan");
-            fl[lane] = Flight::Done {
-                res,
-                t_done,
-                t_post,
-                ring,
-            };
+        if !db_plans.is_empty() {
+            let posted: u64 = db_plans.iter().map(|(_, b, _)| b.len() as u64).sum();
+            let t_ring = db_plans.iter().map(|p| p.2).max().unwrap_or(t_init);
+            let gap: u64 = db_plans.iter().map(|p| t_ring - p.2).sum();
+            let posts: Vec<(usize, u64)> = db_plans.iter().map(|(i, _, t)| (*i, *t)).collect();
+            let n_plans = db_plans.len() as u64;
+            let results = c.ring(db_plans, &shared.ep, &shared.cluster.mns)?;
+            shared.ep.ring_posted(posted);
+            shared.ep.nic.note_resumed(n_plans, gap);
+            let mut fl = shared.flights.borrow_mut();
+            for (lane, res, t_done) in results {
+                // Every result owner came from the plans; a miss here is
+                // a routing bug and must not be papered over.
+                let t_post = posts
+                    .iter()
+                    .find(|(l, _)| *l == lane)
+                    .map(|&(_, t)| t)
+                    .expect("ring returned a result for a lane that staged no plan");
+                fl[lane] = Flight::Done {
+                    res,
+                    t_done,
+                    t_post,
+                    ring,
+                };
+            }
+        }
+        if !rpc_plans.is_empty() {
+            let posts: Vec<(usize, u64)> = rpc_plans.iter().map(|p| (p.0, p.3)).collect();
+            let results =
+                c.ring_rpc(rpc_plans, &shared.cluster.rpc, shared.cn, shared.slot, &shared.ep);
+            let mut fl = shared.flights.borrow_mut();
+            for (lane, ok, t_done) in results {
+                let t_post = posts
+                    .iter()
+                    .find(|(l, _)| *l == lane)
+                    .map(|&(_, t)| t)
+                    .expect("rpc ring returned a result for a lane that staged no plan");
+                fl[lane] = Flight::RpcDone {
+                    ok,
+                    t_done,
+                    t_post,
+                    ring,
+                };
+            }
         }
         Ok(())
     }
@@ -1191,7 +1459,9 @@ impl FrameScheduler {
     fn poll_lane(&mut self, li: usize) -> Result<()> {
         if self.trace_on {
             let entry = match &self.shared.flights.borrow()[li] {
-                Flight::Done { t_done, ring, .. } => Some((*ring, li, *t_done)),
+                Flight::Done { t_done, ring, .. } | Flight::RpcDone { t_done, ring, .. } => {
+                    Some((*ring, li, *t_done))
+                }
                 _ => None,
             };
             if let Some(e) = entry {
@@ -1200,7 +1470,7 @@ impl FrameScheduler {
         }
         let mut cx = Context::from_waker(&self.waker);
         let task = self.lanes[li].task.as_mut().expect("polled lane has a machine");
-        match task.as_mut().poll(&mut cx) {
+        match Pin::new(task).poll(&mut cx) {
             Poll::Ready(()) => {
                 self.lanes[li].task = None;
                 self.lanes[li].clk = self.shared.lane_end.borrow()[li];
@@ -1251,7 +1521,14 @@ impl FrameScheduler {
         // Ring out parked plans no doorbell came along for, and drop
         // committed sibling lock intervals every lane has passed.
         if let Some(c) = &self.shared.coalescer {
-            c.flush_stale(&self.shared.ep, &self.shared.cluster.mns, t0)?;
+            c.flush_stale(
+                &self.shared.ep,
+                &self.shared.cluster.mns,
+                &self.shared.cluster.rpc,
+                self.shared.cn,
+                self.shared.slot,
+                t0,
+            )?;
         }
         for log in self.shared.lock_logs.borrow_mut().iter_mut() {
             log.retain(|s| s.until > t0);
@@ -1289,7 +1566,7 @@ impl FrameScheduler {
                     workload.clone(),
                     route.hybrid,
                 );
-                self.lanes[li].task = Some(Box::pin(machine));
+                self.lanes[li].task = Some(StepFut::from_future(machine));
             }
             self.poll_lane(li)?;
             let mut done = self.shared.outcomes.borrow_mut();
@@ -1317,6 +1594,17 @@ mod tests {
         (mns, ep)
     }
 
+    /// Like [`setup`], plus an RPC fabric sharing the endpoint's CN NIC
+    /// (CN 0 is the source, as in a real scheduler).
+    fn rpc_setup(n_cns: usize) -> (Vec<Arc<MemNode>>, Endpoint, Arc<RpcFabric>) {
+        let mns = vec![Arc::new(MemNode::new(0, 1 << 16))];
+        let net = Arc::new(NetConfig::default());
+        let nics: Vec<Arc<Rnic>> = (0..n_cns).map(|_| Arc::new(Rnic::new())).collect();
+        let ep = Endpoint::new(0, nics[0].clone(), net.clone());
+        let rpc = Arc::new(RpcFabric::new(nics, 1, net));
+        (mns, ep, rpc)
+    }
+
     #[test]
     fn deferred_plan_rides_the_next_staged_ring() {
         let (mns, ep) = setup();
@@ -1326,7 +1614,7 @@ mod tests {
         // A frame parks a fire-and-forget write...
         let mut park = OpBatch::new();
         park.write(0, r.base, 7u64.to_le_bytes().to_vec());
-        c.defer(park, 100);
+        c.defer(Plan::Doorbell(park), 100);
         assert_eq!(c.pending_plans(), 1);
 
         // ...and another frame's staged read rings within the window.
@@ -1381,20 +1669,20 @@ mod tests {
 
     #[test]
     fn stale_deferred_plan_rings_its_own_doorbell_on_flush() {
-        let (mns, ep) = setup();
+        let (mns, ep, rpc) = rpc_setup(1);
         let r = mns[0].register(64).unwrap();
         let c = Coalescer::new(1_000);
         let mut park = OpBatch::new();
         park.write(0, r.base, 9u64.to_le_bytes().to_vec());
-        c.defer(park, 100);
+        c.defer(Plan::Doorbell(park), 100);
 
         // Horizon still inside the window: nothing flushes.
-        c.flush_stale(&ep, &mns, 900).unwrap();
+        c.flush_stale(&ep, &mns, &rpc, 0, 0, 900).unwrap();
         assert_eq!(c.pending_plans(), 1);
         assert_eq!(ep.nic.doorbells(), 0);
 
         // Window expired: the plan rings out fire-and-forget.
-        c.flush_stale(&ep, &mns, 5_000).unwrap();
+        c.flush_stale(&ep, &mns, &rpc, 0, 0, 5_000).unwrap();
         assert_eq!(c.pending_plans(), 0);
         assert_eq!(ep.nic.doorbells(), 1);
         assert_eq!(mns[0].load_u64(r.base).unwrap(), 9);
@@ -1405,16 +1693,16 @@ mod tests {
         // ISSUE 3 regression: a fire-and-forget plan parked right before
         // `finish()` must be flushed exactly once and charged to the
         // right NIC counters — later flush calls must not re-issue it.
-        let (mns, ep) = setup();
+        let (mns, ep, rpc) = rpc_setup(1);
         let r = mns[0].register(64).unwrap();
         let c = Coalescer::new(5_000);
         let mut park = OpBatch::new();
         // Non-idempotent op: a double flush would be visible in memory.
         park.faa(0, r.base, 1);
-        c.defer(park, 4_900);
+        c.defer(Plan::Doorbell(park), 4_900);
 
         // End-of-run flush (what `FrameScheduler::finish` runs).
-        c.flush_all(&ep, &mns).unwrap();
+        c.flush_all(&ep, &mns, &rpc, 0, 0).unwrap();
         assert_eq!(c.pending_plans(), 0);
         assert_eq!(mns[0].load_u64(r.base).unwrap(), 1, "applied exactly once");
         assert_eq!(ep.nic.doorbells(), 1, "one doorbell for the flush");
@@ -1422,10 +1710,129 @@ mod tests {
         assert_eq!(ep.nic.coalesced_ops(), 0, "own ring, not a rider");
 
         // Any further flush — stale-horizon or full — is a no-op.
-        c.flush_stale(&ep, &mns, u64::MAX).unwrap();
-        c.flush_all(&ep, &mns).unwrap();
+        c.flush_stale(&ep, &mns, &rpc, 0, 0, u64::MAX).unwrap();
+        c.flush_all(&ep, &mns, &rpc, 0, 0).unwrap();
         assert_eq!(mns[0].load_u64(r.base).unwrap(), 1, "no double flush");
         assert_eq!(ep.nic.doorbells(), 1, "no extra doorbell charged");
+    }
+
+    #[test]
+    fn staged_rpc_plans_to_one_cn_share_one_message() {
+        // The RPC-plane mirror of the doorbell merge: two lanes' staged
+        // lock batches to the same destination CN send ONE message, each
+        // lane resumes at its own handler completion, and the later
+        // lane's requests count as coalesced riders.
+        let (_mns, ep, rpc) = rpc_setup(2);
+        let c = Coalescer::new(5_000);
+        let out = c.ring_rpc(
+            vec![(0, 1, 2, 1_000), (1, 1, 3, 1_400)],
+            &rpc,
+            0,
+            0,
+            &ep,
+        );
+        assert_eq!(ep.nic.rpc_messages(), 1, "two lanes, one CN, one message");
+        assert_eq!(ep.nic.rpc_reqs(), 5);
+        assert_eq!(
+            ep.nic.coalesced_rpc_reqs(),
+            3,
+            "the later lane's batch rode the first lane's message"
+        );
+        assert_eq!(out.len(), 2);
+        let (l0, ok0, d0) = out[0];
+        let (l1, ok1, d1) = out[1];
+        assert_eq!((l0, l1), (0, 1), "results route back per owner");
+        assert!(ok0 && ok1);
+        // The message fires at the latest post time; the earlier-posted
+        // lane's chunk is handled first.
+        assert!(d0 >= 1_400 + ep.net.rpc_rtt_ns, "d0={d0}");
+        assert!(d1 > d0, "FIFO handler chunks: d0={d0} d1={d1}");
+        assert_eq!(
+            d1 - d0,
+            ep.net.rpc_handle_ns * 3,
+            "the later lane waits exactly its own handler time"
+        );
+    }
+
+    #[test]
+    fn staged_rpc_plans_to_different_cns_send_separate_messages() {
+        let (_mns, ep, rpc) = rpc_setup(3);
+        let out = Coalescer::new(5_000).ring_rpc(
+            vec![(0, 1, 1, 500), (1, 2, 1, 700)],
+            &rpc,
+            0,
+            0,
+            &ep,
+        );
+        assert_eq!(ep.nic.rpc_messages(), 2, "one message per destination");
+        assert_eq!(ep.nic.coalesced_rpc_reqs(), 0, "nothing merged across CNs");
+        assert!(out.iter().all(|&(_, ok, _)| ok));
+    }
+
+    #[test]
+    fn deferred_unlock_rides_a_sibling_lock_message() {
+        // A parked fire-and-forget unlock plan to CN 1 absorbs into the
+        // next staged lock message to CN 1 — exactly like a commit-log
+        // clear riding a doorbell ring.
+        let (_mns, ep, rpc) = rpc_setup(2);
+        let c = Coalescer::new(5_000);
+        c.defer(Plan::Rpc { dst_cn: 1, n_reqs: 2 }, 100);
+        assert_eq!(c.pending_plans(), 1);
+        let out = c.ring_rpc(vec![(0, 1, 4, 600)], &rpc, 0, 0, &ep);
+        assert_eq!(c.pending_plans(), 0, "the parked unlock rode along");
+        assert_eq!(ep.nic.rpc_messages(), 1, "one merged message, not two");
+        assert_eq!(ep.nic.rpc_reqs(), 6);
+        assert_eq!(ep.nic.coalesced_rpc_reqs(), 2, "the unlock reqs were riders");
+        // The rider's chunk is handled before the sync owner's.
+        let (_, ok, done) = out[0];
+        assert!(ok);
+        assert!(
+            done >= 600 + ep.net.rpc_rtt_ns + ep.net.rpc_handle_ns * 6,
+            "sync owner waited for the rider's chunk too: {done}"
+        );
+    }
+
+    #[test]
+    fn stale_rpc_plan_flushes_as_its_own_message() {
+        let (mns, ep, rpc) = rpc_setup(2);
+        let c = Coalescer::new(1_000);
+        c.defer(Plan::Rpc { dst_cn: 1, n_reqs: 3 }, 100);
+
+        // Horizon still inside the window: nothing flushes.
+        c.flush_stale(&ep, &mns, &rpc, 0, 0, 900).unwrap();
+        assert_eq!(c.pending_plans(), 1);
+        assert_eq!(ep.nic.rpc_messages(), 0);
+
+        // Window expired: the plan sends its own message fire-and-forget.
+        c.flush_stale(&ep, &mns, &rpc, 0, 0, 5_000).unwrap();
+        assert_eq!(c.pending_plans(), 0);
+        assert_eq!(ep.nic.rpc_messages(), 1);
+        assert_eq!(ep.nic.rpc_reqs(), 3);
+        assert!(rpc.handler_busy_ns(1) > 0, "the handler really got the reqs");
+
+        // Further flushes are no-ops (flushed exactly once).
+        c.flush_all(&ep, &mns, &rpc, 0, 0).unwrap();
+        assert_eq!(ep.nic.rpc_messages(), 1);
+    }
+
+    #[test]
+    fn rpc_ring_to_failed_cn_times_out_every_owner() {
+        let (_mns, ep, rpc) = rpc_setup(2);
+        rpc.set_failed(1, true);
+        let out = Coalescer::new(5_000).ring_rpc(
+            vec![(0, 1, 1, 1_000), (1, 1, 2, 1_200)],
+            &rpc,
+            0,
+            0,
+            &ep,
+        );
+        assert_eq!(ep.nic.rpc_messages(), 0, "nothing charged on timeout");
+        assert_eq!(out.len(), 2);
+        for &(owner, ok, t_done) in &out {
+            assert!(!ok, "owner {owner} must see the failure");
+            let t_post = if owner == 0 { 1_000 } else { 1_200 };
+            assert_eq!(t_done, t_post + rpc.timeout_ns(), "timeout from own post");
+        }
     }
 
     #[test]

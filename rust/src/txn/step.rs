@@ -2,9 +2,9 @@
 //!
 //! Since ISSUE 4 every phase (and the workload driver above it) is a
 //! **reified state machine**: transaction code is written in direct style
-//! but compiled into a heap-allocated pollable machine ([`StepFut`]), cut
-//! at exactly its issue points. The two poll outcomes map onto the
-//! step-machine contract:
+//! but compiled into a pollable machine ([`StepFut`]), cut at exactly its
+//! issue points. The two poll outcomes map onto the step-machine
+//! contract:
 //!
 //! - `Poll::Pending` == **Issued** — the machine posted a plan into the
 //!   scheduler's in-flight table (`Flight::Staged`) and parked. Nothing
@@ -22,6 +22,18 @@
 //! so a single poll runs the machine to completion and the classic
 //! blocking call semantics fall out for free.
 //!
+//! # Allocation shape (ISSUE 5)
+//!
+//! [`StepFut`] is a two-variant machine, not always a box:
+//!
+//! - [`StepFut::ready`] wraps an already-computed value with **no heap
+//!   allocation** — the blocking `execute`/`commit` defaults on
+//!   sequential and baseline paths, which used to pay a `Box::pin` per
+//!   call just to satisfy the step surface.
+//! - [`StepFut::from_future`] heap-reifies a real machine (workload
+//!   drivers, the pipelined lanes' phase machines) — the variant that
+//!   must survive parking, so the allocation is the point.
+//!
 //! The machines are never woken by a reactor — the scheduler knows
 //! exactly which lanes completed (it rang their doorbells itself), so the
 //! waker is a no-op and readiness is tracked in the in-flight table.
@@ -31,8 +43,45 @@ use std::pin::Pin;
 use std::sync::Arc;
 use std::task::{Context, Poll, Wake, Waker};
 
-/// A boxed, heap-reified transaction step machine.
-pub type StepFut<'a, T> = Pin<Box<dyn Future<Output = T> + 'a>>;
+/// A transaction step machine: an immediately-ready value (no
+/// allocation) or a boxed, heap-reified continuation.
+pub enum StepFut<'a, T> {
+    /// An already-computed result — one poll yields it, nothing parks,
+    /// nothing allocates. The blocking conduits' default shape.
+    Ready(Option<T>),
+    /// A heap-reified machine that may park at its issue points.
+    Boxed(Pin<Box<dyn Future<Output = T> + 'a>>),
+}
+
+impl<'a, T> StepFut<'a, T> {
+    /// Wrap an already-computed value (no heap allocation).
+    pub fn ready(v: T) -> Self {
+        StepFut::Ready(Some(v))
+    }
+
+    /// Heap-reify a machine (the parkable variant).
+    pub fn from_future<F: Future<Output = T> + 'a>(f: F) -> Self {
+        StepFut::Boxed(Box::pin(f))
+    }
+}
+
+// Safe: the `Ready` payload is moved out on completion, never pinned —
+// only the boxed machine's contents are behind a `Pin`, and `Pin<Box<_>>`
+// is itself `Unpin`.
+impl<T> Unpin for StepFut<'_, T> {}
+
+impl<T> Future for StepFut<'_, T> {
+    type Output = T;
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<T> {
+        match self.get_mut() {
+            StepFut::Ready(v) => {
+                Poll::Ready(v.take().expect("StepFut polled after completion"))
+            }
+            StepFut::Boxed(f) => f.as_mut().poll(cx),
+        }
+    }
+}
 
 /// No-op wake target: readiness lives in the scheduler's in-flight
 /// table, not in a reactor, so waking is meaningless.
@@ -86,6 +135,25 @@ mod tests {
         }
         let v = expect_ready(async { inner(1).await + inner(2).await });
         assert_eq!(v, 7);
+    }
+
+    #[test]
+    fn ready_variant_completes_without_boxing() {
+        let fut: StepFut<'static, u64> = StepFut::ready(9);
+        assert!(matches!(fut, StepFut::Ready(_)));
+        assert_eq!(expect_ready(fut), 9);
+    }
+
+    #[test]
+    fn boxed_variant_awaits_inside_ready_machines() {
+        // A ready-wrapped step composes with a boxed driver exactly like
+        // the old always-boxed shape did.
+        let drive = StepFut::from_future(async {
+            let a = StepFut::ready(20u64).await;
+            let b = StepFut::from_future(std::future::ready(22u64)).await;
+            a + b
+        });
+        assert_eq!(expect_ready(drive), 42);
     }
 
     #[test]

@@ -82,7 +82,7 @@ impl Workload for KvsWorkload {
         api: &'a mut dyn TxnApi,
         route: &'a RouteCtx<'a>,
     ) -> StepFut<'a, Result<()>> {
-        Box::pin(async move {
+        StepFut::from_future(async move {
             let is_rw = api.rng().percent() < self.rw_pct;
             if is_rw {
                 let key = route.draw_routed(|| Self::key(self.pattern.next(api.rng())));

@@ -147,7 +147,7 @@ impl Workload for SmallBankWorkload {
         api: &'a mut dyn TxnApi,
         route: &'a RouteCtx<'a>,
     ) -> StepFut<'a, Result<()>> {
-        Box::pin(async move {
+        StepFut::from_future(async move {
         let dice = api.rng().percent();
         match dice {
             // Balance (read-only, 15%): read both balances of one account.

@@ -163,7 +163,7 @@ impl Workload for TatpWorkload {
         api: &'a mut dyn TxnApi,
         route: &'a RouteCtx<'a>,
     ) -> StepFut<'a, Result<()>> {
-        Box::pin(async move {
+        StepFut::from_future(async move {
         let dice = api.rng().percent();
         match dice {
             // GetSubscriberData (35%, RO).

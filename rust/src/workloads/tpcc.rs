@@ -282,7 +282,7 @@ impl Workload for TpccWorkload {
         api: &'a mut dyn TxnApi,
         route: &'a RouteCtx<'a>,
     ) -> StepFut<'a, Result<()>> {
-        Box::pin(async move {
+        StepFut::from_future(async move {
             let dice = api.rng().percent();
             match dice {
                 0..=44 => self.new_order(api, route).await,

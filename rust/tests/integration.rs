@@ -8,6 +8,7 @@ use lotus::sharding::key::LotusKey;
 use lotus::sim::{Cluster, CrashEvent};
 use lotus::txn::api::{RecordRef, TxnApi, TxnCtl};
 use lotus::txn::coordinator::LotusCoordinator;
+use lotus::txn::expect_ready;
 use lotus::txn::scheduler::{FrameScheduler, LaneOutcome};
 use lotus::workloads::smallbank::{CHECKING, SAVINGS};
 use lotus::workloads::{RouteCtx, SmallBankWorkload, Workload, WorkloadKind};
@@ -215,6 +216,7 @@ fn ablation_configurations_stay_correct() {
 #[test]
 fn crash_recovery_preserves_atomicity() {
     let mut cfg = tiny();
+    cfg.n_cns = 3; // pinned: recovery needs surviving CNs
     cfg.duration_ns = 30_000_000;
     cfg.timeline_interval_ns = 1_000_000;
     let wl = Arc::new(SmallBankWorkload::new(cfg.scale.smallbank_accounts));
@@ -247,6 +249,7 @@ fn crash_recovery_preserves_atomicity() {
 #[test]
 fn pipelined_crash_recovery_conserves_money_and_locks() {
     let mut cfg = tiny();
+    cfg.n_cns = 3; // pinned: recovery needs surviving CNs
     cfg.duration_ns = 30_000_000;
     cfg.pipeline_depth = 4;
     cfg.coalesce_window_ns = 5_000;
@@ -425,11 +428,123 @@ fn window_zero_pipelined_run_conserves_money() {
     assert_eq!(held, 0);
 }
 
+/// ISSUE 5 tentpole acceptance: with multiple CNs and `pipeline_depth =
+/// 4`, sibling lanes' remote-lock batches to the same destination CN
+/// share RPC messages — the run reports `coalesced_rpc_reqs > 0` and a
+/// strictly lower `rpc_messages_per_commit()` than the same cluster at
+/// depth 1 (where every remote batch sends its own message and every
+/// remote unlock its own fire-and-forget send).
+#[test]
+fn depth4_remote_lock_rpcs_coalesce_across_lanes() {
+    let mut cfg = tiny();
+    cfg.n_cns = 3; // pinned: the RPC plane needs remote lock owners
+    cfg.coalesce_window_ns = 5_000;
+    let run = |depth: usize| {
+        let mut c = cfg.clone();
+        c.pipeline_depth = depth;
+        let cluster = Cluster::build(&c, WorkloadKind::SmallBank).unwrap();
+        cluster.run(SystemKind::Lotus).unwrap()
+    };
+    let d1 = run(1);
+    let d4 = run(4);
+    assert!(d4.commits > 100, "commits={}", d4.commits);
+    assert!(
+        d1.rpc_messages > 0,
+        "multi-CN SmallBank must exercise remote lock RPCs"
+    );
+    assert_eq!(
+        d1.coalesced_rpc_reqs, 0,
+        "depth 1 must not merge RPC messages"
+    );
+    assert!(
+        d4.coalesced_rpc_reqs > 0,
+        "no sibling lock batch or unlock ever shared an RPC message"
+    );
+    assert!(
+        d4.rpc_messages_per_commit() < d1.rpc_messages_per_commit(),
+        "RPC coalescing must cut messages/txn: d4 {:.3} vs d1 {:.3}",
+        d4.rpc_messages_per_commit(),
+        d1.rpc_messages_per_commit()
+    );
+    assert!(
+        d4.reqs_per_rpc_message() > d1.reqs_per_rpc_message(),
+        "merged messages must carry more requests each: d4 {:.3} vs d1 {:.3}",
+        d4.reqs_per_rpc_message(),
+        d1.reqs_per_rpc_message()
+    );
+}
+
+/// ISSUE 5 equivalence anchor: with remote keys in play, the depth-1
+/// scheduler routes every lock RPC through the (new) staged issue-point
+/// code — but with no siblings nothing stages, so every message is the
+/// classic synchronous call and the per-transaction outcomes, clocks and
+/// fabric counters are byte-identical to the depth-0 legacy shell.
+#[test]
+fn depth1_remote_rpcs_stay_direct_and_match_depth0() {
+    let mut cfg = tiny();
+    cfg.n_cns = 2; // pinned: remote keys, single driven coordinator
+    cfg.coordinators_per_cn = 1;
+    cfg.pipeline_depth = 1;
+    cfg.coalesce_window_ns = 5_000;
+    cfg.scale.smallbank_accounts = 2_000;
+    const N: usize = 200;
+
+    // Depth-0 legacy shell on its own cluster.
+    let a = Cluster::build(&cfg, WorkloadKind::SmallBank).unwrap();
+    let mut co = LotusCoordinator::new(a.shared.clone(), 0, 0, 0);
+    let route = RouteCtx {
+        router: &a.shared.router,
+        cn: 0,
+        hybrid: false,
+    };
+    let mut seq: Vec<(bool, u64, u64)> = Vec::with_capacity(N);
+    for _ in 0..N {
+        let t0 = co.now();
+        let r = expect_ready(a.workload.run_one(&mut co, &route));
+        seq.push((r.is_ok(), t0, co.now()));
+    }
+
+    // Depth-1 scheduler on a fresh identical cluster.
+    let b = Cluster::build(&cfg, WorkloadKind::SmallBank).unwrap();
+    let workload = b.workload.clone();
+    let mut sched = FrameScheduler::new(b.shared.clone(), 0, 0, 0);
+    let route_b = RouteCtx {
+        router: &b.shared.router,
+        cn: 0,
+        hybrid: false,
+    };
+    let mut outcomes: Vec<LaneOutcome> = Vec::new();
+    while outcomes.len() < N {
+        sched.step(&workload, &route_b, &mut outcomes).unwrap();
+    }
+
+    assert!(
+        b.shared.cn_nics[0].rpc_messages() > 0,
+        "the run must have sent remote lock RPCs"
+    );
+    for (i, o) in outcomes.iter().take(N).enumerate() {
+        let (ok, t0, t1) = seq[i];
+        assert_eq!(o.result.is_ok(), ok, "txn {i}: outcome differs");
+        assert_eq!(o.t_begin, t0, "txn {i}: begin clock differs");
+        assert_eq!(o.t_end, t1, "txn {i}: completion clock differs");
+    }
+    // Byte-identical fabric accounting on both planes, zero staging.
+    let (na, nb) = (&a.shared.cn_nics[0], &b.shared.cn_nics[0]);
+    assert_eq!(na.doorbells(), nb.doorbells(), "doorbells differ");
+    assert_eq!(na.doorbell_ops(), nb.doorbell_ops(), "doorbell ops differ");
+    assert_eq!(na.rpc_messages(), nb.rpc_messages(), "rpc messages differ");
+    assert_eq!(na.rpc_reqs(), nb.rpc_reqs(), "rpc reqs differ");
+    assert_eq!(nb.staged_plans(), 0, "depth 1 must not stage doorbell plans");
+    assert_eq!(nb.coalesced_rpc_reqs(), 0, "depth 1 must not merge RPCs");
+    assert_eq!(nb.lock_waits(), 0, "depth 1 has no siblings to wait on");
+}
+
 /// Direct API use against a shared cluster (the library path a downstream
 /// user takes, mirroring the quickstart).
 #[test]
 fn manual_transactions_interleave_with_benchmark_state() {
-    let cfg = tiny();
+    let mut cfg = tiny();
+    cfg.n_cns = 3; // pinned: the manual coordinator sits on CN 1
     let cluster = Cluster::build(
         &cfg,
         WorkloadKind::Kvs {
