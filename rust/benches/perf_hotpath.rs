@@ -208,6 +208,15 @@ fn main() -> lotus::Result<()> {
         d4.lock_waits,
         d4.mean_lock_wait_ns()
     );
+    println!(
+        "handler queue depth=1: {} chunks, mean wait {:.0} ns, p99 {} ns; depth=4: {} chunks, mean wait {:.0} ns, p99 {} ns",
+        d1.handler_chunks,
+        d1.mean_handler_wait_ns(),
+        d1.handler_wait_p99_ns,
+        d4.handler_chunks,
+        d4.mean_handler_wait_ns(),
+        d4.handler_wait_p99_ns
+    );
 
     let mut systems = JsonObj::new();
     systems
@@ -257,6 +266,25 @@ fn main() -> lotus::Result<()> {
         .int("lotus_depth4_lock_waits", d4.lock_waits)
         .num("lotus_depth4_mean_lock_wait_ns", d4.mean_lock_wait_ns());
 
+    // The destination-side handler queueing delays (ISSUE 6): depth 4
+    // coalesces more reqs per message, so the same load arrives in fewer,
+    // larger chunks — the per-chunk wait is the congestion signal the
+    // adaptive controller steers on.
+    let mut handler_queue = JsonObj::new();
+    handler_queue
+        .int("lotus_depth1_handler_chunks", d1.handler_chunks)
+        .num(
+            "lotus_depth1_mean_handler_wait_ns",
+            d1.mean_handler_wait_ns(),
+        )
+        .int("lotus_depth1_handler_wait_p99_ns", d1.handler_wait_p99_ns)
+        .int("lotus_depth4_handler_chunks", d4.handler_chunks)
+        .num(
+            "lotus_depth4_mean_handler_wait_ns",
+            d4.mean_handler_wait_ns(),
+        )
+        .int("lotus_depth4_handler_wait_p99_ns", d4.handler_wait_p99_ns);
+
     let mut root = JsonObj::new();
     root.str("bench", "hotpath")
         .str("workload", "smallbank-quick")
@@ -264,7 +292,8 @@ fn main() -> lotus::Result<()> {
         .obj("systems_virtual_mtps", systems)
         .obj("doorbells", doorbells)
         .obj("step_machine", overlap)
-        .obj("rpc_plane", rpc_plane);
+        .obj("rpc_plane", rpc_plane)
+        .obj("handler_queue", handler_queue);
     let json = root.finish();
 
     let out = std::env::var("LOTUS_BENCH_OUT").unwrap_or_else(|_| {

@@ -149,6 +149,15 @@ pub struct Config {
     /// disables staging and coalescing entirely (every issue is direct).
     /// Only meaningful with `pipeline_depth >= 2`.
     pub coalesce_window_ns: u64,
+    /// Adaptive coalescing policy (ISSUE 6): when `true`, the
+    /// [`crate::txn::adaptive::AdaptiveController`] steers an *effective*
+    /// window per fabric plane × destination — widening up to
+    /// `coalesce_window_ns × CAP_MULT` where a destination queue is
+    /// IOPS/handler-bound, shrinking toward direct issue where commits
+    /// are latency-bound — with `coalesce_window_ns` as the base/anchor.
+    /// `false` (the default) keeps the fixed window everywhere; fixed
+    /// remains the depth-1 byte-equivalence anchor.
+    pub adaptive_coalescing: bool,
     /// Memory per MN in bytes.
     pub mn_capacity: u64,
     /// Lock-table budget per CN in bytes (paper default 32 MB).
@@ -198,6 +207,7 @@ impl Config {
             coordinators_per_cn: 4,
             pipeline_depth: 4,
             coalesce_window_ns: 5_000,
+            adaptive_coalescing: false,
             mn_capacity: 4 << 30,
             lock_table_bytes: 32 << 20,
             vt_cache_entries: 64 * 1024,
@@ -239,9 +249,10 @@ impl Config {
     }
 
     /// Apply the CI test-matrix env overrides, if set:
-    /// `LOTUS_TEST_PIPELINE_DEPTH`, `LOTUS_TEST_COALESCE_WINDOW_NS` and
-    /// `LOTUS_TEST_N_CNS`. Invalid values are ignored (the defaults
-    /// stand).
+    /// `LOTUS_TEST_PIPELINE_DEPTH`, `LOTUS_TEST_COALESCE_WINDOW_NS`,
+    /// `LOTUS_TEST_N_CNS` and `LOTUS_TEST_ADAPTIVE` (the coalescing
+    /// policy axis: `1`/`true` enables the adaptive controller). Invalid
+    /// values are ignored (the defaults stand).
     ///
     /// Called by the *test suites'* config helpers (never by library
     /// constructors — a downstream user of [`Config::small`] must not be
@@ -267,6 +278,13 @@ impl Config {
                 if n >= 1 {
                     self.n_cns = n;
                 }
+            }
+        }
+        if let Ok(v) = std::env::var("LOTUS_TEST_ADAPTIVE") {
+            match v.as_str() {
+                "1" | "true" => self.adaptive_coalescing = true,
+                "0" | "false" => self.adaptive_coalescing = false,
+                _ => {}
             }
         }
     }
@@ -308,6 +326,7 @@ impl Config {
             "coordinators_per_cn" => self.coordinators_per_cn = p(key, value)?,
             "pipeline_depth" => self.pipeline_depth = p(key, value)?,
             "coalesce_window_ns" => self.coalesce_window_ns = p(key, value)?,
+            "adaptive_coalescing" => self.adaptive_coalescing = p(key, value)?,
             "mn_capacity" => self.mn_capacity = p(key, value)?,
             "lock_table_bytes" => self.lock_table_bytes = p(key, value)?,
             "vt_cache_entries" => self.vt_cache_entries = p(key, value)?,
@@ -386,12 +405,16 @@ mod tests {
         let c = Config::paper();
         assert_eq!(c.pipeline_depth, 4, "ISSUE 2 default depth");
         assert!(c.coalesce_window_ns > 0);
+        assert!(!c.adaptive_coalescing, "fixed window is the default policy");
         let mut c = Config::small();
         c.set("pipeline_depth", "1").unwrap();
         c.set("coalesce_window_ns", "0").unwrap();
         assert_eq!(c.pipeline_depth, 1);
         assert_eq!(c.coalesce_window_ns, 0);
         assert!(c.validate().is_ok(), "depth 1 / window 0 is the sequential mode");
+        c.set("adaptive_coalescing", "true").unwrap();
+        assert!(c.adaptive_coalescing);
+        assert!(c.set("adaptive_coalescing", "maybe").is_err());
     }
 
     #[test]

@@ -42,6 +42,15 @@ pub struct NetConfig {
     /// RPC coalescing amortizes.
     pub rpc_send_ns: u64,
     /// Remote-CN CPU time to process one lock/unlock request in an RPC (ns).
+    ///
+    /// This is the **service time** of the destination's per-(CN, slot)
+    /// handler queue ([`crate::dm::rpc::RpcFabric`]): a message of `n`
+    /// requests occupies the handler for `n * rpc_handle_ns` after any
+    /// queueing delay behind earlier arrivals. That queueing delay —
+    /// arrival to service start — is measured per chunk and surfaced as
+    /// `handler_wait_ns` on the destination CN's NIC and in
+    /// [`crate::metrics::RunReport`]; it is the congestion signal the
+    /// adaptive coalescing controller steers on.
     pub rpc_handle_ns: u64,
     /// Local CPU time for one lock-table CAS on the local CN (ns).
     pub local_lock_ns: u64,

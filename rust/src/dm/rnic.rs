@@ -69,6 +69,15 @@ pub struct Rnic {
     /// holding siblings' release times (the anachronism span the waits
     /// bridged).
     lock_wait_ns: AtomicU64,
+    /// RPC-handler queueing delay accumulated at *this CN as the
+    /// destination*: virtual ns each handled lock batch spent between
+    /// arrival at the handler queue and service start (the congestion
+    /// signal the adaptive coalescing controller consumes).
+    handler_wait_ns: AtomicU64,
+    /// Handled lock batches those waits were measured over (one per
+    /// per-owner chunk of an RPC message; `mean = handler_wait_ns /
+    /// handler_chunks`).
+    handler_chunks: AtomicU64,
 }
 
 impl Rnic {
@@ -215,6 +224,15 @@ impl Rnic {
         self.lock_wait_ns.fetch_add(gap_ns, Ordering::Relaxed);
     }
 
+    /// Count one handled lock batch that waited `wait_ns` virtual ns in
+    /// this CN's RPC-handler queue before its service started (charged to
+    /// the *destination* CN's NIC — the CN whose handler CPU is loaded).
+    #[inline]
+    pub fn note_handler_wait(&self, wait_ns: u64) {
+        self.handler_chunks.fetch_add(1, Ordering::Relaxed);
+        self.handler_wait_ns.fetch_add(wait_ns, Ordering::Relaxed);
+    }
+
     /// RPC messages sent from this CN.
     pub fn rpc_messages(&self) -> u64 {
         self.rpc_messages.load(Ordering::Relaxed)
@@ -238,6 +256,16 @@ impl Rnic {
     /// Cumulative anachronism span bridged by lock waits (virtual ns).
     pub fn lock_wait_ns(&self) -> u64 {
         self.lock_wait_ns.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative handler-queue wait at this CN as a destination (virtual ns).
+    pub fn handler_wait_ns(&self) -> u64 {
+        self.handler_wait_ns.load(Ordering::Relaxed)
+    }
+
+    /// Handled lock batches that wait was measured over.
+    pub fn handler_chunks(&self) -> u64 {
+        self.handler_chunks.load(Ordering::Relaxed)
     }
 
     /// WQEs currently posted but not yet rung (0 when nothing in flight).
@@ -329,6 +357,8 @@ impl Rnic {
         self.coalesced_rpc_reqs.store(0, Ordering::Relaxed);
         self.lock_waits.store(0, Ordering::Relaxed);
         self.lock_wait_ns.store(0, Ordering::Relaxed);
+        self.handler_wait_ns.store(0, Ordering::Relaxed);
+        self.handler_chunks.store(0, Ordering::Relaxed);
     }
 
     /// Reset the queue to idle at time zero (between benchmark runs —
@@ -460,12 +490,18 @@ mod tests {
         n.note_lock_wait(300);
         assert_eq!(n.lock_waits(), 2);
         assert_eq!(n.lock_wait_ns(), 1_000);
+        n.note_handler_wait(2_500);
+        n.note_handler_wait(0);
+        assert_eq!(n.handler_chunks(), 2);
+        assert_eq!(n.handler_wait_ns(), 2_500);
         n.reset_counters();
         assert_eq!(n.rpc_messages(), 0);
         assert_eq!(n.rpc_reqs(), 0);
         assert_eq!(n.coalesced_rpc_reqs(), 0);
         assert_eq!(n.lock_waits(), 0);
         assert_eq!(n.lock_wait_ns(), 0);
+        assert_eq!(n.handler_wait_ns(), 0);
+        assert_eq!(n.handler_chunks(), 0);
     }
 
     #[test]

@@ -31,13 +31,28 @@
 //! amortizes — and counts on the source CN's [`Rnic`]
 //! (`rpc_messages`/`rpc_reqs`); requests that ride a message another
 //! lane paid for are `coalesced_rpc_reqs`.
+//!
+//! # Handler queueing model (ISSUE 6)
+//!
+//! Each handler queue is an exact FIFO server ([`Rnic::charge`]) at
+//! `rpc_handle_ns` per lock-class request, so the fabric measures true
+//! *queueing delay* per handled chunk — virtual ns between a chunk's
+//! arrival at its `(dst CN, slot)` queue and its service start. The delay
+//! is attributed to the **destination** CN's NIC counters
+//! (`handler_wait_ns`/`handler_chunks`, the CN whose handler CPU is the
+//! bottleneck), accumulated per destination on the fabric itself, and
+//! folded into a fabric-wide [`Histogram`] for p99 reporting. A live
+//! backlog probe ([`RpcFabric::handler_backlog_ns`]) exposes the same
+//! signal *before* sending — what the adaptive coalescing controller
+//! steers on.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::dm::clock::VClock;
 use crate::dm::netconfig::NetConfig;
 use crate::dm::rnic::Rnic;
+use crate::metrics::Histogram;
 use crate::{Error, Result};
 
 /// RPC fabric across CNs.
@@ -48,6 +63,12 @@ pub struct RpcFabric {
     handlers: Vec<Vec<Arc<Rnic>>>,
     /// Fail-stop flags per CN.
     failed: Vec<AtomicBool>,
+    /// Cumulative handler-queue wait per *destination* CN (virtual ns).
+    dst_wait_ns: Vec<AtomicU64>,
+    /// Handled chunks that wait was measured over, per destination CN.
+    dst_chunks: Vec<AtomicU64>,
+    /// Fabric-wide distribution of per-chunk handler waits (for p99).
+    wait_hist: Histogram,
     net: Arc<NetConfig>,
 }
 
@@ -61,6 +82,9 @@ impl RpcFabric {
                 .map(|_| (0..slots).map(|_| Arc::new(Rnic::new())).collect())
                 .collect(),
             failed: (0..n).map(|_| AtomicBool::new(false)).collect(),
+            dst_wait_ns: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            dst_chunks: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            wait_hist: Histogram::new(),
             net,
         }
     }
@@ -141,7 +165,13 @@ impl RpcFabric {
         let mut t = self.cn_nics[dst_cn].charge(t_arrive, self.net.cn_issue_ns);
         let mut out = Vec::with_capacity(owners.len());
         for &n in owners {
-            t = self.handlers[dst_cn][slot].charge(t, self.net.rpc_handle_ns * n.max(1) as u64);
+            let svc = self.net.rpc_handle_ns * n.max(1) as u64;
+            let done = self.handlers[dst_cn][slot].charge(t, svc);
+            // Exact queueing delay: arrival -> service start. charge()
+            // completes at max(arrival, busy) + svc, so the wait falls
+            // straight out of the completion time.
+            self.note_handler_wait(dst_cn, done - svc - t);
+            t = done;
             out.push(t + self.net.rpc_rtt_ns / 2);
         }
         Ok(out)
@@ -167,7 +197,9 @@ impl RpcFabric {
             .charge(t_send, self.net.rpc_send_ns + self.net.cn_issue_ns);
         let t_arrive = t_sent + self.net.rpc_rtt_ns / 2;
         let t_recv = self.cn_nics[dst_cn].charge(t_arrive, self.net.cn_issue_ns);
-        self.handlers[dst_cn][slot].charge(t_recv, self.net.rpc_handle_ns * n_reqs.max(1) as u64);
+        let svc = self.net.rpc_handle_ns * n_reqs.max(1) as u64;
+        let done = self.handlers[dst_cn][slot].charge(t_recv, svc);
+        self.note_handler_wait(dst_cn, done - svc - t_recv);
         Ok(t_sent)
     }
 
@@ -192,13 +224,72 @@ impl RpcFabric {
         self.handlers[cn].iter().map(|h| h.busy_ns()).sum()
     }
 
-    /// Reset every handler queue to idle (between benchmark runs).
+    /// Attribute one handled chunk's queueing delay to its destination.
+    fn note_handler_wait(&self, dst_cn: usize, wait_ns: u64) {
+        self.cn_nics[dst_cn].note_handler_wait(wait_ns);
+        self.dst_wait_ns[dst_cn].fetch_add(wait_ns, Ordering::Relaxed);
+        self.dst_chunks[dst_cn].fetch_add(1, Ordering::Relaxed);
+        self.wait_hist.record(wait_ns);
+    }
+
+    /// Cumulative handler-queue wait of chunks handled *at* `cn` (virtual ns).
+    pub fn handler_wait_ns(&self, cn: usize) -> u64 {
+        self.dst_wait_ns[cn].load(Ordering::Relaxed)
+    }
+
+    /// Chunks handled at `cn` that wait was measured over.
+    pub fn handler_chunks(&self, cn: usize) -> u64 {
+        self.dst_chunks[cn].load(Ordering::Relaxed)
+    }
+
+    /// Mean handler-queue wait at destination `cn` (0 if nothing handled).
+    pub fn mean_handler_wait_ns(&self, cn: usize) -> f64 {
+        let n = self.handler_chunks(cn);
+        if n == 0 {
+            0.0
+        } else {
+            self.handler_wait_ns(cn) as f64 / n as f64
+        }
+    }
+
+    /// 99th percentile of per-chunk handler-queue wait, fabric-wide (ns).
+    pub fn handler_wait_p99_ns(&self) -> u64 {
+        self.wait_hist.p99()
+    }
+
+    /// Live backlog probe for a message that would be sent at `t_send`:
+    /// virtual ns the `(dst_cn, slot)` handler queue is booked beyond the
+    /// message's estimated arrival (ignoring source-NIC queueing — the
+    /// probe must not depend on the sender's own load). 0 when the queue
+    /// will have drained by then. This is the pre-send congestion signal
+    /// the adaptive coalescing controller steers on.
+    pub fn handler_backlog_ns(&self, dst_cn: usize, slot: usize, t_send: u64) -> u64 {
+        let t_arrive = t_send
+            + self.net.rpc_send_ns
+            + self.net.cn_issue_ns
+            + self.net.rpc_rtt_ns / 2
+            + self.net.cn_issue_ns;
+        self.handlers[dst_cn][slot]
+            .busy_until()
+            .saturating_sub(t_arrive)
+    }
+
+    /// Reset every per-destination queue to idle (between benchmark runs):
+    /// handler busy time AND the wait accounting (per-destination sums,
+    /// chunk counts, and the fabric-wide wait histogram).
     pub fn reset_queues(&self) {
         for cn in &self.handlers {
             for h in cn {
                 h.reset();
             }
         }
+        for w in &self.dst_wait_ns {
+            w.store(0, Ordering::Relaxed);
+        }
+        for c in &self.dst_chunks {
+            c.store(0, Ordering::Relaxed);
+        }
+        self.wait_hist.reset();
     }
 }
 
@@ -305,6 +396,78 @@ mod tests {
         assert_eq!(t_sent, 500 + f.net.rpc_send_ns + f.net.cn_issue_ns);
         assert!(f.handler_busy_ns(1) >= f.net.rpc_handle_ns * 4);
         assert_eq!(f.cn_nics[0].rpc_messages(), 1);
+    }
+
+    #[test]
+    fn handler_wait_is_queueing_delay_at_the_destination() {
+        let f = fabric(3, 1);
+        // First message to an idle handler: chunks arrive back-to-back, so
+        // the first chunk waits 0 and each later chunk starts the instant
+        // the previous finishes — still 0 queueing delay.
+        f.send_timed(0, 1, 0, &[2, 3], 0).unwrap();
+        assert_eq!(f.handler_wait_ns(1), 0, "idle queue: no wait");
+        assert_eq!(f.handler_chunks(1), 2);
+        // A second message sent at the same instant queues behind the
+        // first's 5 requests: its chunk waits the full residual service.
+        f.send_timed(2, 1, 0, &[1], 0).unwrap();
+        assert_eq!(f.handler_chunks(1), 3);
+        let wait = f.handler_wait_ns(1);
+        assert!(wait > 0, "second message must queue: wait={wait}");
+        assert!(
+            wait <= f.net.rpc_handle_ns * 5,
+            "wait bounded by the first message's service: {wait}"
+        );
+        // Attribution: the wait lands on the DESTINATION CN's NIC, and the
+        // senders' NICs record none.
+        assert_eq!(f.cn_nics[1].handler_wait_ns(), wait);
+        assert_eq!(f.cn_nics[1].handler_chunks(), 3);
+        assert_eq!(f.cn_nics[0].handler_wait_ns(), 0);
+        assert_eq!(f.cn_nics[2].handler_wait_ns(), 0);
+        // Mean + p99 surface through the fabric.
+        assert!(f.mean_handler_wait_ns(1) > 0.0);
+        assert!(f.handler_wait_p99_ns() > 0);
+        assert_eq!(f.mean_handler_wait_ns(0), 0.0);
+    }
+
+    #[test]
+    fn handler_backlog_probe_sees_pre_send_congestion() {
+        let f = fabric(2, 1);
+        // Idle destination: no backlog at any send time.
+        assert_eq!(f.handler_backlog_ns(1, 0, 0), 0);
+        // Load the handler with 40 requests' worth of service.
+        f.send_async_at(0, 1, 0, 40, 0).unwrap();
+        let backlog = f.handler_backlog_ns(1, 0, 0);
+        assert!(
+            backlog > f.net.rpc_handle_ns * 30,
+            "probe must see the booked queue: {backlog}"
+        );
+        // Far enough in the future the queue has drained.
+        assert_eq!(f.handler_backlog_ns(1, 0, 1_000_000), 0);
+    }
+
+    #[test]
+    fn reset_queues_clears_all_per_destination_state() {
+        let f = fabric(2, 2);
+        // Dirty every piece of per-destination queue state: busy time on
+        // both slots, wait sums, chunk counts, and the wait histogram.
+        f.send_async_at(0, 1, 0, 20, 0).unwrap();
+        f.send_async_at(0, 1, 0, 1, 0).unwrap(); // queues -> nonzero wait
+        f.send_async_at(0, 1, 1, 5, 0).unwrap();
+        assert!(f.handler_busy_ns(1) > 0);
+        assert!(f.handler_wait_ns(1) > 0);
+        assert!(f.handler_chunks(1) > 0);
+        assert!(f.handler_wait_p99_ns() > 0 || f.handler_chunks(1) > 0);
+        f.reset_queues();
+        assert_eq!(f.handler_busy_ns(1), 0, "handler busy time survives reset");
+        assert_eq!(f.handler_wait_ns(1), 0, "wait sum survives reset");
+        assert_eq!(f.handler_chunks(1), 0, "chunk count survives reset");
+        assert_eq!(f.handler_wait_p99_ns(), 0, "wait histogram survives reset");
+        assert_eq!(f.handler_backlog_ns(1, 0, 0), 0, "backlog survives reset");
+        assert_eq!(f.handler_backlog_ns(1, 1, 0), 0);
+        // The queues are genuinely idle again: a fresh send sees no wait.
+        f.send_async_at(0, 1, 0, 1, 0).unwrap();
+        assert_eq!(f.handler_wait_ns(1), 0);
+        assert_eq!(f.handler_chunks(1), 1);
     }
 
     #[test]

@@ -215,6 +215,18 @@ pub struct RunReport {
     /// Cumulative virtual ns between those waiters' park times and the
     /// holders' releases (see [`RunReport::mean_lock_wait_ns`]).
     pub lock_wait_ns: u64,
+    /// Cumulative virtual ns RPC chunks spent queued at their
+    /// destination's handler before service began (arrival -> service
+    /// start, charged to the destination CN's NIC; see
+    /// [`RunReport::mean_handler_wait_ns`]).
+    pub handler_wait_ns: u64,
+    /// Handler chunks those waits were measured over (one per
+    /// owner-chunk serviced, including zero-wait chunks).
+    pub handler_chunks: u64,
+    /// 99th percentile per-chunk handler queueing delay (ns) across all
+    /// destinations — the tail the adaptive coalescing controller reacts
+    /// to.
+    pub handler_wait_p99_ns: u64,
 }
 
 impl RunReport {
@@ -333,6 +345,17 @@ impl RunReport {
             0.0
         } else {
             self.lock_wait_ns as f64 / self.lock_waits as f64
+        }
+    }
+
+    /// Mean virtual ns an RPC chunk queued at its destination's handler
+    /// before service began (0 without RPC traffic) — the per-message
+    /// queueing delay of the handler model, destination-side.
+    pub fn mean_handler_wait_ns(&self) -> f64 {
+        if self.handler_chunks == 0 {
+            0.0
+        } else {
+            self.handler_wait_ns as f64 / self.handler_chunks as f64
         }
     }
 }
@@ -459,6 +482,9 @@ mod tests {
             coalesced_rpc_reqs: 750_000,
             lock_waits: 10_000,
             lock_wait_ns: 30_000_000,
+            handler_wait_ns: 1_000_000_000,
+            handler_chunks: 2_000_000,
+            handler_wait_p99_ns: 4_000,
         };
         assert!((r.mtps() - 1.0).abs() < 1e-9);
         assert!((r.doorbells_per_commit() - 4.0).abs() < 1e-9);
@@ -470,6 +496,7 @@ mod tests {
         assert!((r.rpc_messages_per_commit() - 0.5).abs() < 1e-9);
         assert!((r.reqs_per_rpc_message() - 4.0).abs() < 1e-9);
         assert!((r.mean_lock_wait_ns() - 3_000.0).abs() < 1e-9);
+        assert!((r.mean_handler_wait_ns() - 500.0).abs() < 1e-9);
     }
 
     #[test]

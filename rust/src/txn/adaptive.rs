@@ -1,0 +1,325 @@
+//! Adaptive coalescing controller (ISSUE 6): per-plane × per-destination
+//! congestion control over the fabric's queueing signals.
+//!
+//! The fixed `coalesce_window_ns` is only right at one load point (the
+//! paper's fig. 14 TATP ablation): too narrow when an MN RNIC or a hot
+//! destination CN's lock-handler CPU is IOPS-bound, too wide when commits
+//! are latency-bound. This controller closes the loop between the
+//! counters the fabric already emits and the window each staged plan
+//! waits — **per plane** (doorbell vs CN-to-CN RPC) and **per
+//! destination** (MN id vs destination CN id), because the bottleneck is
+//! a property of one destination queue, not of the cluster.
+//!
+//! # Signals
+//!
+//! Each merged issue feeds one [`Obs`] per destination it touched:
+//!
+//! - `queue_wait_ns` — the destination's booked backlog beyond the
+//!   issue's arrival ([`crate::dm::RpcFabric::handler_backlog_ns`] on the
+//!   RPC plane; MN `busy_until - t_ring` on the doorbell plane). This is
+//!   the *pre-send* congestion signal: virtual ns this issue's requests
+//!   will sit in the destination queue before service starts.
+//! - `batch` — requests/WQEs the merged issue carried to the destination
+//!   (the realized `reqs_per_rpc_message` / `ops_per_doorbell`).
+//! - `gap_ns` — how long the issue's oldest plan sat staged
+//!   (the realized per-issue `mean_ring_gap_ns`).
+//! - `hwm` — posted-WQE high-water mark / merged-group depth, evidence
+//!   there is actual concurrency for a wider window to harvest.
+//!
+//! All three continuous signals are EWMA-smoothed (α = 1/8, integer
+//! shift arithmetic — deterministic and wrap-free by saturation).
+//!
+//! # Policy
+//!
+//! - **Widen** (destination IOPS/handler-bound): smoothed queue wait
+//!   exceeds the smoothed staging gap by more than half the base window —
+//!   waiting longer to merge is cheaper than queueing at the destination
+//!   — and there is concurrency to merge (`hwm >= 2` or a multi-plan
+//!   group) and batches are not already saturated. Step up by base/4,
+//!   clamped at `cap_ns` (8 × base).
+//! - **Shrink** (latency-bound): the destination queue is essentially
+//!   drained (smoothed wait under base/8) — staging only adds latency.
+//!   Step down by base/4, saturating at 0 (= direct issue).
+//! - Otherwise hold.
+//!
+//! The controller is *inert until observed*: an unseen destination's
+//! window is exactly the configured base, so a run where nothing stages
+//! (depth 1) or nothing queues behaves byte-identically to the fixed
+//! policy — the depth-1 equivalence anchor holds with
+//! `adaptive_coalescing` enabled.
+
+use std::cell::RefCell;
+
+/// Effective-window cap as a multiple of the configured base window.
+pub const CAP_MULT: u64 = 8;
+
+/// EWMA smoothing shift: α = 1/2^EWMA_SHIFT = 1/8.
+const EWMA_SHIFT: u32 = 3;
+
+/// Batch-size fixed point (×16) above which a destination's merges are
+/// considered saturated — widening further cannot buy more amortization.
+const BATCH_SAT_X16: u64 = 16 * 16;
+
+/// One merged issue's worth of congestion evidence for one destination.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Obs {
+    /// Destination queue backlog beyond this issue's arrival (virtual ns).
+    pub queue_wait_ns: u64,
+    /// Requests/WQEs this merged issue carried to the destination.
+    pub batch: u64,
+    /// Staging delay of the issue's oldest plan (virtual ns).
+    pub gap_ns: u64,
+    /// Posted-WQE HWM / merged-group depth at issue time.
+    pub hwm: u64,
+}
+
+/// The two fabric planes the scheduler coalesces on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Plane {
+    /// One-sided doorbell batches; destinations are MN ids.
+    Doorbell,
+    /// CN-to-CN lock RPC messages; destinations are CN ids.
+    Rpc,
+}
+
+/// Per-destination controller state.
+#[derive(Debug, Clone, Copy)]
+struct DestState {
+    window_ns: u64,
+    ewma_wait_ns: u64,
+    ewma_gap_ns: u64,
+    ewma_batch_x16: u64,
+}
+
+impl DestState {
+    fn new(base_ns: u64) -> Self {
+        Self {
+            window_ns: base_ns,
+            ewma_wait_ns: 0,
+            ewma_gap_ns: 0,
+            ewma_batch_x16: 0,
+        }
+    }
+}
+
+/// Saturating integer EWMA: `prev + (x - prev) / 2^EWMA_SHIFT`.
+#[inline]
+fn ewma(prev: u64, x: u64) -> u64 {
+    prev.saturating_sub(prev >> EWMA_SHIFT)
+        .saturating_add(x >> EWMA_SHIFT)
+}
+
+/// Per-plane × per-destination adaptive window controller.
+///
+/// Interior-mutable (`RefCell` per plane) so the `Coalescer` can consult
+/// it from `&self` contexts; single-coordinator-thread discipline is the
+/// same as the `Coalescer`'s own state.
+#[derive(Debug)]
+pub struct AdaptiveController {
+    base_ns: u64,
+    cap_ns: u64,
+    db: RefCell<Vec<DestState>>,
+    rpc: RefCell<Vec<DestState>>,
+}
+
+impl AdaptiveController {
+    /// Controller anchored at the configured base window.
+    pub fn new(base_ns: u64) -> Self {
+        Self {
+            base_ns,
+            cap_ns: base_ns.saturating_mul(CAP_MULT),
+            db: RefCell::new(Vec::new()),
+            rpc: RefCell::new(Vec::new()),
+        }
+    }
+
+    /// The configured base window (what fixed policy would use).
+    pub fn base_ns(&self) -> u64 {
+        self.base_ns
+    }
+
+    /// The widest window the controller will ever grant.
+    pub fn cap_ns(&self) -> u64 {
+        self.cap_ns
+    }
+
+    /// Current effective window for `(plane, dst)`; the base for
+    /// destinations never observed.
+    pub fn window(&self, plane: Plane, dst: usize) -> u64 {
+        let states = match plane {
+            Plane::Doorbell => self.db.borrow(),
+            Plane::Rpc => self.rpc.borrow(),
+        };
+        states
+            .get(dst)
+            .map(|s| s.window_ns)
+            .unwrap_or(self.base_ns)
+    }
+
+    /// Feed one merged issue's evidence for `(plane, dst)` and adjust
+    /// that destination's window.
+    pub fn observe(&self, plane: Plane, dst: usize, obs: Obs) {
+        let mut states = match plane {
+            Plane::Doorbell => self.db.borrow_mut(),
+            Plane::Rpc => self.rpc.borrow_mut(),
+        };
+        if states.len() <= dst {
+            states.resize(dst + 1, DestState::new(self.base_ns));
+        }
+        let s = &mut states[dst];
+        s.ewma_wait_ns = ewma(s.ewma_wait_ns, obs.queue_wait_ns);
+        s.ewma_gap_ns = ewma(s.ewma_gap_ns, obs.gap_ns);
+        s.ewma_batch_x16 = ewma(s.ewma_batch_x16, obs.batch.saturating_mul(16));
+        let step = (self.base_ns / 4).max(1);
+        let bound = s.ewma_wait_ns > s.ewma_gap_ns.saturating_add(self.base_ns / 2);
+        let drained = s.ewma_wait_ns < self.base_ns / 8;
+        let saturated = s.ewma_batch_x16 >= BATCH_SAT_X16;
+        if bound && obs.hwm >= 2 && !saturated {
+            s.window_ns = s.window_ns.saturating_add(step).min(self.cap_ns);
+        } else if drained {
+            s.window_ns = s.window_ns.saturating_sub(step);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unseen_destination_gets_the_base_window() {
+        let c = AdaptiveController::new(5_000);
+        assert_eq!(c.base_ns(), 5_000);
+        assert_eq!(c.cap_ns(), 40_000);
+        assert_eq!(c.window(Plane::Doorbell, 0), 5_000);
+        assert_eq!(c.window(Plane::Rpc, 17), 5_000);
+    }
+
+    #[test]
+    fn planes_and_destinations_are_independent() {
+        let c = AdaptiveController::new(1_000);
+        // Drain signal on RPC dst 2 only.
+        for _ in 0..20 {
+            c.observe(Plane::Rpc, 2, Obs::default());
+        }
+        assert_eq!(c.window(Plane::Rpc, 2), 0, "drained dst shrinks to direct");
+        assert_eq!(c.window(Plane::Rpc, 1), 1_000, "sibling dst untouched");
+        assert_eq!(c.window(Plane::Doorbell, 2), 1_000, "other plane untouched");
+    }
+
+    #[test]
+    fn hot_destination_widens_and_drained_destination_shrinks() {
+        let c = AdaptiveController::new(5_000);
+        let hot = Obs {
+            queue_wait_ns: 100_000,
+            batch: 4,
+            gap_ns: 2_000,
+            hwm: 4,
+        };
+        for _ in 0..100 {
+            c.observe(Plane::Rpc, 0, hot);
+        }
+        assert_eq!(c.window(Plane::Rpc, 0), c.cap_ns(), "widens to the cap");
+        let idle = Obs {
+            queue_wait_ns: 0,
+            batch: 1,
+            gap_ns: 0,
+            hwm: 1,
+        };
+        for _ in 0..100 {
+            c.observe(Plane::Rpc, 0, idle);
+        }
+        assert_eq!(c.window(Plane::Rpc, 0), 0, "drains back to direct issue");
+    }
+
+    #[test]
+    fn no_widening_without_concurrency_or_past_batch_saturation() {
+        let c = AdaptiveController::new(5_000);
+        // Huge wait but hwm < 2: nothing to merge, window must not grow.
+        let lonely = Obs {
+            queue_wait_ns: 1_000_000,
+            batch: 1,
+            gap_ns: 0,
+            hwm: 1,
+        };
+        for _ in 0..50 {
+            c.observe(Plane::Doorbell, 3, lonely);
+        }
+        assert_eq!(c.window(Plane::Doorbell, 3), 5_000);
+        // Saturated batches: merges already amortize fully; once the batch
+        // EWMA crosses the threshold (a few observations), widening stops.
+        let saturated = Obs {
+            queue_wait_ns: 1_000_000,
+            batch: 64,
+            gap_ns: 0,
+            hwm: 8,
+        };
+        for _ in 0..5 {
+            c.observe(Plane::Doorbell, 4, saturated);
+        }
+        let settled = c.window(Plane::Doorbell, 4);
+        for _ in 0..50 {
+            c.observe(Plane::Doorbell, 4, saturated);
+        }
+        assert_eq!(
+            c.window(Plane::Doorbell, 4),
+            settled,
+            "saturated batches stop widening"
+        );
+        assert!(settled < c.cap_ns());
+    }
+
+    #[test]
+    fn adversarial_inputs_never_escape_the_cap_or_wrap_below_zero() {
+        let c = AdaptiveController::new(5_000);
+        let worst = Obs {
+            queue_wait_ns: u64::MAX,
+            batch: 0, // ewma_batch stays 0 => never saturated
+            gap_ns: 0,
+            hwm: u64::MAX,
+        };
+        for _ in 0..10_000 {
+            c.observe(Plane::Rpc, 0, worst);
+            let w = c.window(Plane::Rpc, 0);
+            assert!(w <= c.cap_ns(), "window {w} escaped cap {}", c.cap_ns());
+        }
+        assert_eq!(c.window(Plane::Rpc, 0), c.cap_ns());
+        // Flood the other direction: all-zero observations forever.
+        for _ in 0..10_000 {
+            c.observe(Plane::Rpc, 0, Obs::default());
+        }
+        assert_eq!(c.window(Plane::Rpc, 0), 0, "saturates at 0, no wrap");
+        // Alternating extremes stay clamped in [0, cap].
+        for i in 0..10_000u64 {
+            let obs = if i % 2 == 0 { worst } else { Obs::default() };
+            c.observe(Plane::Doorbell, 1, obs);
+            let w = c.window(Plane::Doorbell, 1);
+            assert!(w <= c.cap_ns(), "window {w} escaped cap");
+        }
+        // A degenerate base of 0 pins the window at 0 (cap == 0).
+        let z = AdaptiveController::new(0);
+        for _ in 0..100 {
+            z.observe(Plane::Rpc, 0, worst);
+        }
+        assert_eq!(z.window(Plane::Rpc, 0), 0);
+        // u64::MAX base must not overflow the cap computation.
+        let m = AdaptiveController::new(u64::MAX);
+        assert_eq!(m.cap_ns(), u64::MAX);
+        m.observe(Plane::Rpc, 0, worst);
+        assert!(m.window(Plane::Rpc, 0) <= u64::MAX);
+    }
+
+    #[test]
+    fn ewma_is_saturating_and_monotone_toward_input() {
+        assert_eq!(ewma(0, 0), 0);
+        assert_eq!(ewma(0, 800), 100);
+        let big = ewma(u64::MAX, u64::MAX);
+        assert!(big >= u64::MAX - (u64::MAX >> EWMA_SHIFT));
+        // Repeated constant input converges near that constant.
+        let mut v = 0u64;
+        for _ in 0..200 {
+            v = ewma(v, 10_000);
+        }
+        assert!((9_000..=10_000).contains(&v), "v={v}");
+    }
+}

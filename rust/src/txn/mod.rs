@@ -30,7 +30,11 @@
 //!   isolation.
 //! - [`doomed`] — the doomed-transaction registry used by resharding and
 //!   recovery to proactively abort transactions that must not commit.
+//! - [`adaptive`] — the per-plane × per-destination congestion controller
+//!   that turns the fixed coalescing window into an adaptive policy
+//!   steered by the fabric's measured queueing delays (ISSUE 6).
 
+pub mod adaptive;
 pub mod api;
 pub mod coordinator;
 pub mod doomed;
@@ -40,6 +44,7 @@ pub mod scheduler;
 pub mod step;
 pub mod timestamp;
 
+pub use adaptive::{AdaptiveController, Obs, Plane, CAP_MULT};
 pub use api::{Isolation, TxnApi, TxnCtl};
 pub use coordinator::{LotusCoordinator, SharedCluster};
 pub use doomed::DoomedSet;

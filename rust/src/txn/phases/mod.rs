@@ -149,6 +149,16 @@ impl Plan {
             Plan::Rpc { n_reqs, .. } => *n_reqs == 0,
         }
     }
+
+    /// Destination CN of an RPC-plane plan (`None` for doorbell plans) —
+    /// the key the adaptive coalescing controller tracks congestion
+    /// under on the RPC plane.
+    pub fn rpc_dst(&self) -> Option<usize> {
+        match self {
+            Plan::Doorbell(_) => None,
+            Plan::Rpc { dst_cn, .. } => Some(*dst_cn),
+        }
+    }
 }
 
 /// The conduit behind a phase machine's issue points (see the module

@@ -118,6 +118,7 @@ use crate::dm::rpc::RpcFabric;
 use crate::dm::verbs::Endpoint;
 use crate::lock::table::LockMode;
 use crate::sharding::key::LotusKey;
+use crate::txn::adaptive::{AdaptiveController, Obs, Plane};
 use crate::txn::api::{RecordRef, TxnApi, TxnCtl};
 use crate::txn::coordinator::SharedCluster;
 use crate::txn::phases::{self, PhaseCtx, Plan, StepSink, TxnFrame, TxnRecord, WaitVerdict};
@@ -165,6 +166,18 @@ fn ride_or_ring(last_ring: &mut Vec<u64>, mn: usize, t: u64, window: u64) -> boo
     }
 }
 
+/// The coalescer's window policy: the same base window everywhere
+/// (byte-stable, the depth-1 equivalence anchor), or the ISSUE 6
+/// congestion controller granting an *effective* window per fabric
+/// plane × destination.
+enum CoalescePolicy {
+    /// The configured `coalesce_window_ns`, applied uniformly.
+    Fixed(u64),
+    /// Per-plane × per-destination adaptive windows anchored at the
+    /// configured base (see [`crate::txn::adaptive`]).
+    Adaptive(AdaptiveController),
+}
+
 /// Per-scheduler two-plane coalescer: merges staged sync plans and
 /// parked fire-and-forget plans into shared doorbell rings (memory-pool
 /// plane) and shared per-destination RPC messages (CN-to-CN plane; see
@@ -172,7 +185,7 @@ fn ride_or_ring(last_ring: &mut Vec<u64>, mn: usize, t: u64, window: u64) -> boo
 /// by construction (interior mutability only so the shared-reference
 /// [`StepSink`] can reach it).
 pub struct Coalescer {
-    window_ns: u64,
+    policy: CoalescePolicy,
     state: RefCell<CoalesceState>,
 }
 
@@ -186,17 +199,61 @@ struct CoalesceState {
 }
 
 impl Coalescer {
-    /// Coalescer with the given pairing window (virtual ns).
+    /// Coalescer with the given fixed pairing window (virtual ns).
     pub fn new(window_ns: u64) -> Self {
         Self {
-            window_ns,
+            policy: CoalescePolicy::Fixed(window_ns),
             state: RefCell::new(CoalesceState::default()),
         }
     }
 
-    /// The pairing window (virtual ns).
+    /// Coalescer steered by the adaptive congestion controller, anchored
+    /// at `base_ns` (an unobserved destination's window IS the base, so
+    /// the policy is inert until the fabric shows congestion).
+    pub fn adaptive(base_ns: u64) -> Self {
+        Self {
+            policy: CoalescePolicy::Adaptive(AdaptiveController::new(base_ns)),
+            state: RefCell::new(CoalesceState::default()),
+        }
+    }
+
+    /// The base pairing window (virtual ns): the fixed window, or the
+    /// adaptive controller's anchor.
     pub fn window_ns(&self) -> u64 {
-        self.window_ns
+        match &self.policy {
+            CoalescePolicy::Fixed(w) => *w,
+            CoalescePolicy::Adaptive(c) => c.base_ns(),
+        }
+    }
+
+    /// Effective window for doorbell traffic to `mn`.
+    fn window_db(&self, mn: usize) -> u64 {
+        match &self.policy {
+            CoalescePolicy::Fixed(w) => *w,
+            CoalescePolicy::Adaptive(c) => c.window(Plane::Doorbell, mn),
+        }
+    }
+
+    /// Effective window for RPC traffic to destination CN `dst`.
+    fn window_rpc(&self, dst: usize) -> u64 {
+        match &self.policy {
+            CoalescePolicy::Fixed(w) => *w,
+            CoalescePolicy::Adaptive(c) => c.window(Plane::Rpc, dst),
+        }
+    }
+
+    /// Effective window of one plan: its destination's window on its
+    /// plane (a multi-MN doorbell plan takes the tightest of its MNs' —
+    /// the most latency-bound destination bounds the merge wait).
+    pub fn eff_window(&self, plan: &Plan) -> u64 {
+        match plan {
+            Plan::Doorbell(b) => b
+                .mns()
+                .map(|mn| self.window_db(mn))
+                .min()
+                .unwrap_or_else(|| self.window_ns()),
+            Plan::Rpc { dst_cn, .. } => self.window_rpc(*dst_cn),
+        }
     }
 
     /// Parked fire-and-forget plans not yet flushed (both planes).
@@ -232,6 +289,7 @@ impl Coalescer {
         // Earlier posts execute first within shared doorbell groups.
         plans.sort_by_key(|p| (p.2, p.0));
         let t_ring = plans.iter().map(|p| p.2).max().unwrap_or(0);
+        let t_first = plans.iter().map(|p| p.2).min().unwrap_or(t_ring);
         let n_sync = plans.iter().filter(|p| !p.1.is_empty()).count() as u64;
         let mut st = self.state.borrow_mut();
         let mut merged = MergedBatch::new();
@@ -242,8 +300,9 @@ impl Coalescer {
         let mut rider_mns: Vec<(usize, u64)> = Vec::new();
         let mut kept: Vec<(Plan, u64)> = Vec::new();
         for (plan, pt) in st.pending.drain(..) {
+            let w = self.eff_window(&plan);
             match plan {
-                Plan::Doorbell(b) if pt <= t_ring.saturating_add(self.window_ns) => {
+                Plan::Doorbell(b) if pt <= t_ring.saturating_add(w) => {
                     for mn in b.mns() {
                         let n = b.group_len(mn) as u64;
                         bump_mn(&mut rider_mns, mn, n);
@@ -258,10 +317,14 @@ impl Coalescer {
         // that MN's doorbell; later plans' ops on it are coalesced riders.
         let mut payer_mns: Vec<usize> = Vec::new();
         let mut extra_mns: Vec<(usize, u64)> = Vec::new();
+        // Per-MN total op counts of this merged issue (riders + sync) —
+        // the realized doorbell batch the controller observes.
+        let mut all_mns = rider_mns.clone();
         let mut slices: Vec<(usize, usize)> = Vec::with_capacity(plans.len());
         for (owner, plan, _t) in plans {
             for mn in plan.mns() {
                 let n = plan.group_len(mn) as u64;
+                bump_mn(&mut all_mns, mn, n);
                 if payer_mns.contains(&mn) {
                     bump_mn(&mut extra_mns, mn, n);
                 } else {
@@ -280,12 +343,30 @@ impl Coalescer {
             ep.nic.note_overlap(n_sync);
         }
         ep.gate_sync(&VClock(t_ring));
-        let window = self.window_ns;
+        // Feed the congestion controller one observation per destination
+        // MN this merged issue touches, *before* the issue charges the MN
+        // RNICs: the pre-issue backlog (`busy_until - t_ring`) is the
+        // doorbell-plane queueing-delay signal.
+        if let CoalescePolicy::Adaptive(ctl) = &self.policy {
+            let hwm = ep.nic.posted_wqes_hwm();
+            for &(mn, n) in &all_mns {
+                ctl.observe(
+                    Plane::Doorbell,
+                    mn,
+                    Obs {
+                        queue_wait_ns: mns[mn].rnic.busy_until().saturating_sub(t_ring),
+                        batch: n.max(1),
+                        gap_ns: t_ring.saturating_sub(t_first),
+                        hwm: hwm.max(n_sync),
+                    },
+                );
+            }
+        }
         let st_ref = &mut *st;
         let last_ring = &mut st_ref.last_ring;
         let mut rode: Vec<usize> = Vec::new();
         let mut res = merged.issue_timed(ep, mns, t_ring, |mn| {
-            let ride = ride_or_ring(last_ring, mn, t_ring, window);
+            let ride = ride_or_ring(last_ring, mn, t_ring, self.window_db(mn));
             if ride {
                 rode.push(mn);
             }
@@ -356,6 +437,7 @@ impl Coalescer {
             }
             // Parked fire-and-forget riders to this CN absorb into the
             // message; posted earlier, so the handler serves them first.
+            let w_dst = self.window_rpc(dst);
             let mut rider_reqs = 0usize;
             {
                 let mut st = self.state.borrow_mut();
@@ -363,8 +445,7 @@ impl Coalescer {
                 for (plan, pt) in st.pending.drain(..) {
                     match plan {
                         Plan::Rpc { dst_cn, n_reqs }
-                            if dst_cn == dst
-                                && pt <= t_send.saturating_add(self.window_ns) =>
+                            if dst_cn == dst && pt <= t_send.saturating_add(w_dst) =>
                         {
                             rider_reqs += n_reqs;
                         }
@@ -378,12 +459,29 @@ impl Coalescer {
                 owners.push(rider_reqs);
             }
             owners.extend(group.iter().map(|g| g.1));
+            let total: usize = owners.iter().map(|&n| n.max(1)).sum();
+            // Feed the controller this destination's evidence *before*
+            // the send charges its queues: the booked handler backlog
+            // beyond the message's arrival is the RPC-plane
+            // queueing-delay signal.
+            if let CoalescePolicy::Adaptive(ctl) = &self.policy {
+                let t0 = group.iter().map(|g| g.2).min().unwrap_or(t_send);
+                ctl.observe(
+                    Plane::Rpc,
+                    dst,
+                    Obs {
+                        queue_wait_ns: rpc.handler_backlog_ns(dst, slot, t_send),
+                        batch: total as u64,
+                        gap_ns: t_send.saturating_sub(t0),
+                        hwm: ep.nic.posted_wqes_hwm().max(group.len() as u64),
+                    },
+                );
+            }
             ep.gate_sync(&VClock(t_send));
             match rpc.send_timed(src_cn, dst, slot, &owners, t_send) {
                 Ok(times) => {
                     // The first sync plan pays the message; riders and
                     // later plans' requests are coalesced.
-                    let total: usize = owners.iter().map(|&n| n.max(1)).sum();
                     let first = group[0].1.max(1);
                     if total > first {
                         ep.nic.note_rpc_riders((total - first) as u64);
@@ -464,7 +562,7 @@ impl Coalescer {
         let mut kept: Vec<(Plan, u64)> = Vec::new();
         for (plan, pt) in st.pending.drain(..) {
             let stale = match horizon {
-                Some(h) => pt.saturating_add(self.window_ns) < h,
+                Some(h) => pt.saturating_add(self.eff_window(&plan)) < h,
                 None => true,
             };
             if !stale {
@@ -497,11 +595,12 @@ impl Coalescer {
         if merged.n_plans() == 0 {
             return Ok(());
         }
-        let window = self.window_ns;
         let st_ref = &mut *st;
         let last_ring = &mut st_ref.last_ring;
         // Fire-and-forget: completions and results are discarded.
-        merged.issue_timed(ep, mns, t0, |mn| ride_or_ring(last_ring, mn, t0, window))?;
+        merged.issue_timed(ep, mns, t0, |mn| {
+            ride_or_ring(last_ring, mn, t0, self.window_db(mn))
+        })?;
         Ok(())
     }
 }
@@ -1160,7 +1259,13 @@ impl FrameScheduler {
             global_id,
             depth,
             ep,
-            coalescer: (depth > 1 && window > 0).then(|| Coalescer::new(window)),
+            coalescer: (depth > 1 && window > 0).then(|| {
+                if cluster.cfg.adaptive_coalescing {
+                    Coalescer::adaptive(window)
+                } else {
+                    Coalescer::new(window)
+                }
+            }),
             flights: RefCell::new((0..depth).map(|_| Flight::Idle).collect()),
             lock_logs: RefCell::new((0..depth).map(|_| Vec::new()).collect()),
             live_locks: RefCell::new((0..depth).map(|_| Vec::new()).collect()),
@@ -1331,6 +1436,26 @@ impl FrameScheduler {
             .min()
     }
 
+    /// The earliest merge deadline among staged plans: each plan may wait
+    /// until `post + eff_window(plan)` for siblings to merge with it.
+    /// Under the fixed policy this is exactly `staged_min + window`;
+    /// under the adaptive policy a latency-bound destination's shrunken
+    /// window pulls its plans' deadline earlier (toward direct issue)
+    /// while an IOPS-bound destination's widened window lets its plans
+    /// wait longer for company.
+    fn staged_deadline(&self) -> Option<u64> {
+        let c = self.shared.coalescer.as_ref()?;
+        self.shared
+            .flights
+            .borrow()
+            .iter()
+            .filter_map(|f| match f {
+                Flight::Staged(plan, t) => Some(t.saturating_add(c.eff_window(plan))),
+                _ => None,
+            })
+            .min()
+    }
+
     /// The runnable lane with the smallest virtual time:
     /// `(lane, time, starts_new_transaction)`. Ready (Done / WaitOver)
     /// lanes win ties against idle lanes at the same time. With
@@ -1382,13 +1507,19 @@ impl FrameScheduler {
             .coalescer
             .as_ref()
             .expect("staged plans require a coalescer");
-        let window = c.window_ns();
         let mut db_plans: Vec<(usize, OpBatch, u64)> = Vec::new();
         let mut rpc_plans: Vec<(usize, usize, usize, u64)> = Vec::new();
         {
             let mut fl = shared.flights.borrow_mut();
             for (i, f) in fl.iter_mut().enumerate() {
-                let take = matches!(*f, Flight::Staged(_, t) if t.abs_diff(t_init) <= window);
+                // A staged plan joins the ring anchored at `t_init` (the
+                // oldest post) if its own effective window reaches back
+                // to it; a direct-issue (window 0) plan only rings when
+                // it IS the anchor.
+                let take = match &*f {
+                    Flight::Staged(plan, t) => *t <= t_init.saturating_add(c.eff_window(plan)),
+                    _ => false,
+                };
                 if take {
                     if let Flight::Staged(plan, t) = std::mem::replace(f, Flight::Idle) {
                         match plan {
@@ -1533,21 +1664,19 @@ impl FrameScheduler {
         for log in self.shared.lock_logs.borrow_mut().iter_mut() {
             log.retain(|s| s.until > t0);
         }
-        let window = self
-            .shared
-            .coalescer
-            .as_ref()
-            .map(|c| c.window_ns())
-            .unwrap_or(0);
         loop {
             let cand = self.next_runnable(true);
             let staged_min = self.staged_min();
-            // Ring when the oldest staged plan cannot wait for the next
-            // runnable lane: either nothing is runnable, or the next
-            // runnable lane lies beyond the plan's coalescing window.
+            // Ring when a staged plan cannot wait for the next runnable
+            // lane: either nothing is runnable, or the next runnable lane
+            // lies beyond the earliest staged plan's merge deadline
+            // (`post + eff_window` — per destination under the adaptive
+            // policy, `staged_min + window` under the fixed one).
             let ring_now = match (&cand, staged_min) {
                 (None, Some(_)) => true,
-                (Some((_, t, _)), Some(s)) => *t > s.saturating_add(window),
+                (Some((_, t, _)), Some(_)) => {
+                    *t > self.staged_deadline().expect("staged implies a deadline")
+                }
                 _ => false,
             };
             if ring_now {
@@ -1767,6 +1896,38 @@ mod tests {
         assert_eq!(ep.nic.rpc_messages(), 2, "one message per destination");
         assert_eq!(ep.nic.coalesced_rpc_reqs(), 0, "nothing merged across CNs");
         assert!(out.iter().all(|&(_, ok, _)| ok));
+    }
+
+    #[test]
+    fn adaptive_window_widens_on_hot_destination_and_shrinks_idle() {
+        // Per-destination congestion control over the RPC plane: a
+        // destination whose handler queue keeps a backlog (cross traffic
+        // plus multi-lane rings) earns a wider merge window; an idle
+        // destination drains toward direct issue. Windows never escape
+        // [0, base * CAP_MULT].
+        let (_mns, ep, rpc) = rpc_setup(3);
+        let c = Coalescer::adaptive(5_000);
+        let probe = |dst| c.eff_window(&Plan::Rpc { dst_cn: dst, n_reqs: 1 });
+        assert_eq!(probe(1), 5_000, "unseen destination uses the base window");
+
+        for round in 0..50u64 {
+            let t = round * 1_000;
+            // Cross traffic from CN 2 keeps destination 1's handler busy
+            // (64 reqs * rpc_handle_ns per 1_000 ns round >> service rate).
+            rpc.send_async_at(2, 1, 0, 64, t).unwrap();
+            // Two lanes ring destination 1 together; destination 2 idles.
+            c.ring_rpc(vec![(0, 1, 2, t), (1, 1, 2, t + 500)], &rpc, 0, 0, &ep);
+            c.ring_rpc(vec![(0, 2, 1, t)], &rpc, 0, 0, &ep);
+        }
+
+        let hot = probe(1);
+        let idle = probe(2);
+        assert!(hot > 5_000, "hot destination widened: {hot}");
+        assert!(
+            hot <= 5_000 * crate::txn::adaptive::CAP_MULT,
+            "window stays under the cap: {hot}"
+        );
+        assert!(idle < 5_000, "idle destination shrank: {idle}");
     }
 
     #[test]

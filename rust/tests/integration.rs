@@ -539,6 +539,143 @@ fn depth1_remote_rpcs_stay_direct_and_match_depth0() {
     assert_eq!(nb.lock_waits(), 0, "depth 1 has no siblings to wait on");
 }
 
+/// ISSUE 6 tentpole acceptance — the saturation study. Many CNs route a
+/// skewed (low-locality) lock workload at one hot destination CN. A
+/// fixed window faces a dilemma: too narrow and the hot handler queue
+/// drowns in per-message overhead (messages/commit stays high); too wide
+/// and every staged plan eats the full window in latency (p99 balloons).
+/// The per-destination congestion controller must beat the narrow
+/// window on messages/commit AND the wide window on p99 in the same run,
+/// by widening only the hot destination's window and holding the rest
+/// near direct issue.
+#[test]
+fn adaptive_coalescing_beats_both_fixed_windows_under_hot_destination() {
+    let mut cfg = tiny();
+    cfg.n_cns = 6; // pinned: many sources, skew concentrates on few owners
+    cfg.coordinators_per_cn = 2;
+    cfg.pipeline_depth = 4;
+    cfg.features.load_balancing = false; // keep the hot spot hot
+    cfg.scale.kvs_keys = 2_000;
+    let run = |window: u64, adaptive: bool| {
+        let mut c = cfg.clone();
+        c.coalesce_window_ns = window;
+        c.adaptive_coalescing = adaptive;
+        let cluster = Cluster::build(
+            &c,
+            WorkloadKind::Kvs {
+                rw_pct: 100,
+                skewed: true,
+            },
+        )
+        .unwrap();
+        cluster.run(SystemKind::Lotus).unwrap()
+    };
+    let narrow = run(500, false);
+    let wide = run(40_000, false);
+    let adaptive = run(5_000, true);
+    for (r, label) in [(&narrow, "narrow"), (&wide, "wide"), (&adaptive, "adaptive")] {
+        assert!(r.commits > 100, "{label}: commits={}", r.commits);
+        assert!(r.rpc_messages > 0, "{label}: no remote lock traffic");
+    }
+    assert!(
+        adaptive.handler_chunks > 0,
+        "the handler queue model must have measured waits"
+    );
+    assert!(
+        adaptive.rpc_messages_per_commit() < narrow.rpc_messages_per_commit(),
+        "adaptive must out-coalesce the narrow window: {:.3} vs {:.3}",
+        adaptive.rpc_messages_per_commit(),
+        narrow.rpc_messages_per_commit()
+    );
+    assert!(
+        adaptive.p99_ns < wide.p99_ns,
+        "adaptive must undercut the wide window's tail: {} vs {}",
+        adaptive.p99_ns,
+        wide.p99_ns
+    );
+}
+
+/// ISSUE 6 equivalence anchor: `adaptive_coalescing = true` changes
+/// nothing at depth 1 — no coalescer exists, the controller is never
+/// consulted, and the per-transaction outcomes, clocks and fabric
+/// counters stay byte-identical to the depth-0 legacy shell.
+#[test]
+fn depth1_with_adaptive_coalescing_matches_depth0_exactly() {
+    let mut cfg = tiny();
+    cfg.n_cns = 2; // pinned: remote keys, single driven coordinator
+    cfg.coordinators_per_cn = 1;
+    cfg.pipeline_depth = 1;
+    cfg.coalesce_window_ns = 5_000;
+    cfg.adaptive_coalescing = true;
+    cfg.scale.smallbank_accounts = 2_000;
+    const N: usize = 200;
+
+    let a = Cluster::build(&cfg, WorkloadKind::SmallBank).unwrap();
+    let mut co = LotusCoordinator::new(a.shared.clone(), 0, 0, 0);
+    let route = RouteCtx {
+        router: &a.shared.router,
+        cn: 0,
+        hybrid: false,
+    };
+    let mut seq: Vec<(bool, u64, u64)> = Vec::with_capacity(N);
+    for _ in 0..N {
+        let t0 = co.now();
+        let r = expect_ready(a.workload.run_one(&mut co, &route));
+        seq.push((r.is_ok(), t0, co.now()));
+    }
+
+    let b = Cluster::build(&cfg, WorkloadKind::SmallBank).unwrap();
+    let workload = b.workload.clone();
+    let mut sched = FrameScheduler::new(b.shared.clone(), 0, 0, 0);
+    let route_b = RouteCtx {
+        router: &b.shared.router,
+        cn: 0,
+        hybrid: false,
+    };
+    let mut outcomes: Vec<LaneOutcome> = Vec::new();
+    while outcomes.len() < N {
+        sched.step(&workload, &route_b, &mut outcomes).unwrap();
+    }
+
+    for (i, o) in outcomes.iter().take(N).enumerate() {
+        let (ok, t0, t1) = seq[i];
+        assert_eq!(o.result.is_ok(), ok, "txn {i}: outcome differs");
+        assert_eq!(o.t_begin, t0, "txn {i}: begin clock differs");
+        assert_eq!(o.t_end, t1, "txn {i}: completion clock differs");
+    }
+    let (na, nb) = (&a.shared.cn_nics[0], &b.shared.cn_nics[0]);
+    assert_eq!(na.doorbells(), nb.doorbells(), "doorbells differ");
+    assert_eq!(na.doorbell_ops(), nb.doorbell_ops(), "doorbell ops differ");
+    assert_eq!(na.rpc_messages(), nb.rpc_messages(), "rpc messages differ");
+    assert_eq!(na.rpc_reqs(), nb.rpc_reqs(), "rpc reqs differ");
+    assert_eq!(nb.staged_plans(), 0, "depth 1 must not stage doorbell plans");
+    assert_eq!(nb.coalesced_rpc_reqs(), 0, "depth 1 must not merge RPCs");
+}
+
+/// The money audit holds with the congestion controller steering both
+/// planes' windows: adaptive merge timing must not reorder, drop or
+/// duplicate any write or unlock.
+#[test]
+fn smallbank_conserves_money_with_adaptive_coalescing() {
+    let mut cfg = tiny();
+    cfg.n_cns = 3; // pinned: remote lock owners exercise the RPC plane
+    cfg.pipeline_depth = 4;
+    cfg.coalesce_window_ns = 5_000;
+    cfg.adaptive_coalescing = true;
+    let wl = Arc::new(SmallBankWorkload::new(cfg.scale.smallbank_accounts));
+    let cluster = Cluster::build_with(&cfg, wl.clone() as Arc<dyn Workload>).unwrap();
+    let report = cluster.run(SystemKind::Lotus).unwrap();
+    assert!(report.commits > 100);
+    audit_books(&cluster, &wl, cfg.scale.smallbank_accounts, "lotus-adaptive");
+    let held: usize = cluster
+        .shared
+        .lock_services
+        .iter()
+        .map(|s| s.held_slots())
+        .sum();
+    assert_eq!(held, 0, "adaptive coalescing left held lock slots");
+}
+
 /// Direct API use against a shared cluster (the library path a downstream
 /// user takes, mirroring the quickstart).
 #[test]
