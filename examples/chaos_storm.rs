@@ -1,0 +1,151 @@
+//! Domain example: a chaos storm and the recovery curve that retries buy
+//! (ISSUE 7).
+//!
+//! Three CNs run SmallBank. At 20 ms the storm hits: CN 2 fail-stops
+//! (fig. 15 style), the RPC fabric starts losing 20% of lock-class
+//! messages for the rest of the run, and for 10 ms the surviving
+//! handlers go gray (4x service time on half their messages). The same
+//! deterministic [`FaultScript`] runs twice:
+//!
+//! - `rpc_max_retries = 3`: a lost lock message parks its lane in capped
+//!   exponential backoff and reissues — transactions get slower, not
+//!   dead, and cluster throughput climbs back to the pre-storm rate
+//!   after the crashed CN restarts.
+//! - `rpc_max_retries = 0` (the pre-retry default): every lost message
+//!   is a timeout-abort, so the sustained loss keeps a bite out of
+//!   throughput long after recovery finished — the degradation never
+//!   ends.
+//!
+//! ```sh
+//! cargo run --release --example chaos_storm
+//! ```
+
+use std::sync::Arc;
+
+use lotus::config::{Config, SystemKind};
+use lotus::dm::{FaultInjector, FaultRule};
+use lotus::metrics::RunReport;
+use lotus::sim::{Cluster, CrashEvent, FaultScript};
+use lotus::workloads::WorkloadKind;
+
+const STORM_AT: u64 = 20_000_000; // 20 ms
+const BUCKET: u64 = 1_000_000; // 1 ms sampling (fig. 15)
+
+fn storm(cfg: &Config) -> FaultScript {
+    FaultScript {
+        crashes: vec![CrashEvent {
+            at_ns: STORM_AT,
+            cns: vec![2],
+        }],
+        faults: Some(Arc::new(
+            FaultInjector::new(cfg.seed)
+                // Sustained lossy fabric: 20% of lock-class messages
+                // vanish from the storm onward.
+                .rule(FaultRule::drop(200).window(STORM_AT, u64::MAX))
+                // Gray window: for 10 ms, half the surviving messages are
+                // served at 4x handler time.
+                .rule(FaultRule::gray_slow(4, 500).window(STORM_AT, STORM_AT + 10_000_000)),
+        )),
+        suspicions: vec![],
+    }
+}
+
+fn run(cfg: &Config, retries: u32) -> lotus::Result<(RunReport, usize)> {
+    let mut c = cfg.clone();
+    c.rpc_max_retries = retries;
+    let cluster = Cluster::build(&c, WorkloadKind::SmallBank)?;
+    let report = cluster.run_with_faults(SystemKind::Lotus, &storm(&c))?;
+    let held = cluster
+        .shared
+        .lock_services
+        .iter()
+        .map(|s| s.held_slots())
+        .sum();
+    Ok((report, held))
+}
+
+fn print_curve(label: &str, report: &RunReport) -> (f64, f64, f64, i64) {
+    let t = &report.timeline;
+    let to_mtps = |c: u64| c as f64 / (BUCKET as f64 / 1e9) / 1e6;
+    let peak = t.iter().copied().max().unwrap_or(1).max(1);
+    println!("\n{label} — timeline (1 ms buckets):");
+    for (i, &c) in t.iter().enumerate() {
+        println!(
+            "{:>4} ms  {:>7.3} Mtxn/s  {}",
+            i,
+            to_mtps(c),
+            "#".repeat((c * 48 / peak) as usize)
+        );
+    }
+    let pre: f64 = t[10..20].iter().map(|&c| to_mtps(c)).sum::<f64>() / 10.0;
+    let dip = t[20..35].iter().map(|&c| to_mtps(c)).fold(f64::MAX, f64::min);
+    let post: f64 = t[45..55].iter().map(|&c| to_mtps(c)).sum::<f64>() / 10.0;
+    let recover_ms = t
+        .iter()
+        .enumerate()
+        .skip(21)
+        .find(|(_, &c)| to_mtps(c) >= pre * 0.9)
+        .map(|(i, _)| i as i64 - 20)
+        .unwrap_or(-1);
+    println!("  pre-storm  : {pre:.3} Mtxn/s");
+    println!(
+        "  dip        : {dip:.3} Mtxn/s ({:.1}% drop)",
+        (1.0 - dip / pre) * 100.0
+    );
+    println!(
+        "  post-storm : {post:.3} Mtxn/s ({:.1}% of pre-storm)",
+        post / pre * 100.0
+    );
+    match recover_ms {
+        -1 => println!("  recovery   : never reached 90% of the pre-storm rate"),
+        ms => println!("  recovery   : ~{ms} ms after the storm to regain 90%"),
+    }
+    println!(
+        "  fabric     : {} msgs lost, {} retries, {:.1} us backed off, {} commits / {} aborts",
+        report.rpc_dropped,
+        report.rpc_retries,
+        report.backoff_ns as f64 / 1e3,
+        report.commits,
+        report.aborts
+    );
+    (pre, dip, post, recover_ms)
+}
+
+fn main() -> lotus::Result<()> {
+    let mut cfg = Config::small();
+    cfg.n_cns = 3;
+    cfg.coordinators_per_cn = 4;
+    cfg.pipeline_depth = 4;
+    cfg.duration_ns = 60_000_000; // 60 ms window
+    cfg.timeline_interval_ns = BUCKET;
+
+    println!("chaos storm: CN 2 crashes at 20 ms + sustained 20% message loss + 10 ms gray window");
+
+    let (with_retries, held_on) = run(&cfg, 3)?;
+    let (without, held_off) = run(&cfg, 0)?;
+
+    let (pre_on, _, post_on, rec_on) = print_curve("rpc_max_retries = 3", &with_retries);
+    let (pre_off, _, post_off, _) = print_curve("rpc_max_retries = 0", &without);
+
+    println!("\nverdict:");
+    println!(
+        "  retries on : post-storm at {:.1}% of pre-storm (recovered in ~{rec_on} ms)",
+        post_on / pre_on * 100.0
+    );
+    println!(
+        "  retries off: post-storm at {:.1}% of pre-storm (sustained degradation)",
+        post_off / pre_off * 100.0
+    );
+    println!("  stale locks: {held_on} with retries, {held_off} without (must both be 0)");
+    assert_eq!(held_on + held_off, 0, "a chaos storm must strand no locks");
+    assert!(
+        post_on / pre_on >= 0.9,
+        "retries must recover to >= 90% of the pre-storm rate ({:.1}%)",
+        post_on / pre_on * 100.0
+    );
+    assert!(
+        post_on / pre_on > post_off / pre_off,
+        "retries must beat the single-timeout-abort fabric after the storm"
+    );
+    Ok(())
+}

@@ -158,6 +158,14 @@ pub struct Config {
     /// `false` (the default) keeps the fixed window everywhere; fixed
     /// remains the depth-1 byte-equivalence anchor.
     pub adaptive_coalescing: bool,
+    /// Lock-phase RPC retries after a lost or timed-out message, before
+    /// the transaction aborts with `OwnerFailed`. `0` (the default) is
+    /// the pre-retry behavior: a single timeout aborts immediately.
+    pub rpc_max_retries: u32,
+    /// Base of the capped exponential retry backoff (virtual ns): retry
+    /// `k` backs off `rpc_backoff_base_ns << min(k, 4)` before
+    /// reissuing, charged to the lane clock (and `backoff_ns`).
+    pub rpc_backoff_base_ns: u64,
     /// Memory per MN in bytes.
     pub mn_capacity: u64,
     /// Lock-table budget per CN in bytes (paper default 32 MB).
@@ -208,6 +216,8 @@ impl Config {
             pipeline_depth: 4,
             coalesce_window_ns: 5_000,
             adaptive_coalescing: false,
+            rpc_max_retries: 0,
+            rpc_backoff_base_ns: 20_000,
             mn_capacity: 4 << 30,
             lock_table_bytes: 32 << 20,
             vt_cache_entries: 64 * 1024,
@@ -250,9 +260,11 @@ impl Config {
 
     /// Apply the CI test-matrix env overrides, if set:
     /// `LOTUS_TEST_PIPELINE_DEPTH`, `LOTUS_TEST_COALESCE_WINDOW_NS`,
-    /// `LOTUS_TEST_N_CNS` and `LOTUS_TEST_ADAPTIVE` (the coalescing
-    /// policy axis: `1`/`true` enables the adaptive controller). Invalid
-    /// values are ignored (the defaults stand).
+    /// `LOTUS_TEST_N_CNS`, `LOTUS_TEST_ADAPTIVE` (the coalescing
+    /// policy axis: `1`/`true` enables the adaptive controller) and
+    /// `LOTUS_TEST_FAULTS` (the chaos axis: `1`/`true` arms
+    /// `rpc_max_retries = 2`). Invalid values are ignored (the defaults
+    /// stand).
     ///
     /// Called by the *test suites'* config helpers (never by library
     /// constructors — a downstream user of [`Config::small`] must not be
@@ -284,6 +296,19 @@ impl Config {
             match v.as_str() {
                 "1" | "true" => self.adaptive_coalescing = true,
                 "0" | "false" => self.adaptive_coalescing = false,
+                _ => {}
+            }
+        }
+        // Chaos axis: `1`/`true` arms the retry-with-backoff machinery
+        // (the fault-tolerant configuration the chaos suite exercises)
+        // across every suite run under this leg. Fault *injection* stays
+        // per-test — only the dedicated chaos tests install injectors —
+        // so fault-free runs stay byte-identical modulo the retry path
+        // never firing.
+        if let Ok(v) = std::env::var("LOTUS_TEST_FAULTS") {
+            match v.as_str() {
+                "1" | "true" => self.rpc_max_retries = 2,
+                "0" | "false" => self.rpc_max_retries = 0,
                 _ => {}
             }
         }
@@ -327,6 +352,8 @@ impl Config {
             "pipeline_depth" => self.pipeline_depth = p(key, value)?,
             "coalesce_window_ns" => self.coalesce_window_ns = p(key, value)?,
             "adaptive_coalescing" => self.adaptive_coalescing = p(key, value)?,
+            "rpc_max_retries" => self.rpc_max_retries = p(key, value)?,
+            "rpc_backoff_base_ns" => self.rpc_backoff_base_ns = p(key, value)?,
             "mn_capacity" => self.mn_capacity = p(key, value)?,
             "lock_table_bytes" => self.lock_table_bytes = p(key, value)?,
             "vt_cache_entries" => self.vt_cache_entries = p(key, value)?,
@@ -415,6 +442,19 @@ mod tests {
         c.set("adaptive_coalescing", "true").unwrap();
         assert!(c.adaptive_coalescing);
         assert!(c.set("adaptive_coalescing", "maybe").is_err());
+    }
+
+    #[test]
+    fn retry_knobs_default_off_and_override() {
+        let c = Config::paper();
+        assert_eq!(c.rpc_max_retries, 0, "retries must default off (inert)");
+        assert!(c.rpc_backoff_base_ns > 0);
+        let mut c = Config::small();
+        c.set("rpc_max_retries", "3").unwrap();
+        c.set("rpc_backoff_base_ns", "50000").unwrap();
+        assert_eq!(c.rpc_max_retries, 3);
+        assert_eq!(c.rpc_backoff_base_ns, 50_000);
+        assert!(c.set("rpc_max_retries", "lots").is_err());
     }
 
     #[test]

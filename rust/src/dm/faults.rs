@@ -1,0 +1,320 @@
+//! Deterministic, seeded fault injection for the CN-to-CN RPC fabric.
+//!
+//! Real disaggregated deployments fail messier than fail-stop: lock
+//! handlers go gray-slow, UD SENDs get lost, partitions cut specific
+//! CN pairs. The [`FaultInjector`] models those shapes as a list of
+//! [`FaultRule`]s the [`crate::dm::rpc::RpcFabric`] consults once per
+//! message (`call` / `send_timed` / `send_async_at`).
+//!
+//! # Determinism
+//!
+//! Every per-message decision is a **pure function** of the injector
+//! seed, the rule index, and the message coordinates
+//! `(src_cn, dst_cn, slot, t_send, n_reqs)` — a SplitMix64-style hash,
+//! never a shared mutable RNG consumed in arrival order. Coordinator
+//! threads race in wall-clock time, but the virtual-time coordinates of
+//! a message do not depend on that race, so identical seeds and fault
+//! scripts yield byte-identical [`crate::metrics::RunReport`]s.
+//!
+//! Rules carry a virtual-time window `[from_ns, until_ns)`: timed gray
+//! windows and drop storms are expressed by *installing the schedule up
+//! front*, not by toggling shared flags mid-run (which would reintroduce
+//! wall-clock nondeterminism).
+//!
+//! An injector with no rules is **byte-inert**: every message maps to
+//! [`FaultAction::Deliver`] and the fabric charges exactly what it
+//! charges with no injector installed.
+
+/// What a matching rule does to a message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultMode {
+    /// Lose the message. A synchronous send surfaces as a timeout at the
+    /// caller; a fire-and-forget send vanishes after the send charge.
+    Drop,
+    /// Deliver, but the message arrives this much later (virtual ns).
+    Delay(u64),
+    /// Gray failure: the destination handler CPU serves this message's
+    /// chunks at `mult`x the normal service time, feeding the existing
+    /// `handler_wait_ns` queueing-delay signal.
+    GraySlow(u64),
+    /// Cut the `(src, dst)` CN pair: every matching message is lost.
+    Partition(usize, usize),
+}
+
+/// The fabric-facing verdict for one message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// No fault: charge exactly the un-injected costs.
+    Deliver,
+    /// Message lost.
+    Drop,
+    /// Arrival delayed by the given virtual ns.
+    Delay(u64),
+    /// Handler service time multiplied by the given factor (>= 1).
+    Slow(u64),
+}
+
+/// One fault shape, active over a virtual-time window, applied with a
+/// per-message probability to the messages its filters select.
+#[derive(Debug, Clone)]
+pub struct FaultRule {
+    /// The fault to inject when the rule fires.
+    pub mode: FaultMode,
+    /// Window start (virtual ns, inclusive).
+    pub from_ns: u64,
+    /// Window end (virtual ns, exclusive); `u64::MAX` = forever.
+    pub until_ns: u64,
+    /// Chance the rule fires per matching message, in permille (0..=1000).
+    pub prob_permille: u32,
+    /// Only messages sent from this CN (any source when `None`).
+    pub src: Option<usize>,
+    /// Only messages sent to this CN (any destination when `None`).
+    pub dst: Option<usize>,
+}
+
+impl FaultRule {
+    /// Lose `prob_permille`/1000 of matching messages.
+    pub fn drop(prob_permille: u32) -> Self {
+        Self::new(FaultMode::Drop, prob_permille)
+    }
+
+    /// Delay `prob_permille`/1000 of matching messages by `delay_ns`.
+    pub fn delay(delay_ns: u64, prob_permille: u32) -> Self {
+        Self::new(FaultMode::Delay(delay_ns), prob_permille)
+    }
+
+    /// Serve `prob_permille`/1000 of matching messages at `mult`x
+    /// handler time (a gray-slow destination CPU).
+    pub fn gray_slow(mult: u64, prob_permille: u32) -> Self {
+        Self::new(FaultMode::GraySlow(mult), prob_permille)
+    }
+
+    /// Cut every message from `src` to `dst` (a one-way partition).
+    pub fn partition(src: usize, dst: usize) -> Self {
+        Self::new(FaultMode::Partition(src, dst), 1000)
+    }
+
+    fn new(mode: FaultMode, prob_permille: u32) -> Self {
+        Self {
+            mode,
+            from_ns: 0,
+            until_ns: u64::MAX,
+            prob_permille: prob_permille.min(1000),
+            src: None,
+            dst: None,
+        }
+    }
+
+    /// Restrict the rule to the virtual-time window `[from_ns, until_ns)`.
+    pub fn window(mut self, from_ns: u64, until_ns: u64) -> Self {
+        self.from_ns = from_ns;
+        self.until_ns = until_ns;
+        self
+    }
+
+    /// Restrict the rule to messages sent from `cn`.
+    pub fn from_src(mut self, cn: usize) -> Self {
+        self.src = Some(cn);
+        self
+    }
+
+    /// Restrict the rule to messages sent to `cn`.
+    pub fn to_dst(mut self, cn: usize) -> Self {
+        self.dst = Some(cn);
+        self
+    }
+
+    /// Does the rule select this message (ignoring the probability coin)?
+    fn matches(&self, src: usize, dst: usize, t_send: u64) -> bool {
+        if t_send < self.from_ns || t_send >= self.until_ns {
+            return false;
+        }
+        if let FaultMode::Partition(ps, pd) = self.mode {
+            return src == ps && dst == pd;
+        }
+        self.src.is_none_or(|s| s == src) && self.dst.is_none_or(|d| d == dst)
+    }
+}
+
+/// A seeded list of [`FaultRule`]s; the first matching rule whose coin
+/// lands decides the message's [`FaultAction`].
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    seed: u64,
+    rules: Vec<FaultRule>,
+}
+
+impl FaultInjector {
+    /// Injector with no rules (byte-inert until rules are added).
+    pub fn new(seed: u64) -> Self {
+        Self {
+            seed,
+            rules: Vec::new(),
+        }
+    }
+
+    /// Add a rule (builder style).
+    pub fn rule(mut self, rule: FaultRule) -> Self {
+        self.rules.push(rule);
+        self
+    }
+
+    /// True when no rule is installed (every message delivers untouched).
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+
+    /// The deterministic verdict for one message. Pure in
+    /// `(seed, rules, src_cn, dst_cn, slot, t_send, n_reqs)`.
+    pub fn decide(
+        &self,
+        src_cn: usize,
+        dst_cn: usize,
+        slot: usize,
+        t_send: u64,
+        n_reqs: u64,
+    ) -> FaultAction {
+        for (i, r) in self.rules.iter().enumerate() {
+            if !r.matches(src_cn, dst_cn, t_send) {
+                continue;
+            }
+            if r.prob_permille < 1000
+                && self.coin(i, src_cn, dst_cn, slot, t_send, n_reqs) >= r.prob_permille
+            {
+                continue;
+            }
+            return match r.mode {
+                FaultMode::Drop | FaultMode::Partition(..) => FaultAction::Drop,
+                FaultMode::Delay(ns) => FaultAction::Delay(ns),
+                FaultMode::GraySlow(mult) => FaultAction::Slow(mult.max(1)),
+            };
+        }
+        FaultAction::Deliver
+    }
+
+    /// Per-(rule, message) coin in 0..1000.
+    fn coin(
+        &self,
+        rule_idx: usize,
+        src_cn: usize,
+        dst_cn: usize,
+        slot: usize,
+        t_send: u64,
+        n_reqs: u64,
+    ) -> u32 {
+        let mut h = self
+            .seed
+            .wrapping_add((rule_idx as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        for v in [
+            src_cn as u64,
+            dst_cn as u64,
+            slot as u64,
+            t_send,
+            n_reqs,
+        ] {
+            h = mix(h ^ v);
+        }
+        (h % 1000) as u32
+    }
+}
+
+/// SplitMix64 finalizer (same constants as `phases::hash_ref`).
+fn mix(mut z: u64) -> u64 {
+    z ^= 0x9E37_79B9_7F4A_7C15;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_injector_always_delivers() {
+        let inj = FaultInjector::new(7);
+        assert!(inj.is_empty());
+        for t in (0..100_000).step_by(997) {
+            assert_eq!(inj.decide(0, 1, 0, t, 3), FaultAction::Deliver);
+        }
+    }
+
+    #[test]
+    fn decisions_are_pure_functions_of_the_coordinates() {
+        let inj = FaultInjector::new(42).rule(FaultRule::drop(500));
+        for t in (0..50_000).step_by(313) {
+            let a = inj.decide(0, 2, 1, t, 4);
+            let b = inj.decide(0, 2, 1, t, 4);
+            assert_eq!(a, b, "same message, different verdict at t={t}");
+        }
+        // A clone decides identically (no hidden mutable state).
+        let other = inj.clone();
+        assert_eq!(inj.decide(1, 2, 0, 12_345, 2), other.decide(1, 2, 0, 12_345, 2));
+    }
+
+    #[test]
+    fn drop_probability_is_roughly_respected() {
+        let inj = FaultInjector::new(1).rule(FaultRule::drop(100)); // 10%
+        let mut dropped = 0;
+        let n = 10_000;
+        for i in 0..n {
+            if inj.decide(0, 1, 0, i * 37, 1) == FaultAction::Drop {
+                dropped += 1;
+            }
+        }
+        assert!(
+            (500..1500).contains(&dropped),
+            "10% of {n} should be ~1000, got {dropped}"
+        );
+    }
+
+    #[test]
+    fn window_gates_the_rule_in_virtual_time() {
+        let inj = FaultInjector::new(9)
+            .rule(FaultRule::gray_slow(8, 1000).window(1_000, 2_000));
+        assert_eq!(inj.decide(0, 1, 0, 999, 1), FaultAction::Deliver);
+        assert_eq!(inj.decide(0, 1, 0, 1_000, 1), FaultAction::Slow(8));
+        assert_eq!(inj.decide(0, 1, 0, 1_999, 1), FaultAction::Slow(8));
+        assert_eq!(inj.decide(0, 1, 0, 2_000, 1), FaultAction::Deliver);
+    }
+
+    #[test]
+    fn partition_cuts_exactly_the_named_pair() {
+        let inj = FaultInjector::new(3).rule(FaultRule::partition(0, 2));
+        assert_eq!(inj.decide(0, 2, 0, 5_000, 1), FaultAction::Drop);
+        assert_eq!(inj.decide(2, 0, 0, 5_000, 1), FaultAction::Deliver, "one-way");
+        assert_eq!(inj.decide(0, 1, 0, 5_000, 1), FaultAction::Deliver);
+        assert_eq!(inj.decide(1, 2, 0, 5_000, 1), FaultAction::Deliver);
+    }
+
+    #[test]
+    fn src_dst_filters_select_messages() {
+        let inj = FaultInjector::new(4)
+            .rule(FaultRule::delay(7_777, 1000).from_src(1).to_dst(2));
+        assert_eq!(inj.decide(1, 2, 0, 0, 1), FaultAction::Delay(7_777));
+        assert_eq!(inj.decide(0, 2, 0, 0, 1), FaultAction::Deliver);
+        assert_eq!(inj.decide(1, 0, 0, 0, 1), FaultAction::Deliver);
+    }
+
+    #[test]
+    fn first_matching_rule_wins() {
+        let inj = FaultInjector::new(5)
+            .rule(FaultRule::drop(1000).to_dst(1))
+            .rule(FaultRule::delay(99, 1000));
+        assert_eq!(inj.decide(0, 1, 0, 0, 1), FaultAction::Drop);
+        assert_eq!(inj.decide(0, 2, 0, 0, 1), FaultAction::Delay(99));
+    }
+
+    #[test]
+    fn different_seeds_give_different_coin_streams() {
+        let a = FaultInjector::new(100).rule(FaultRule::drop(500));
+        let b = FaultInjector::new(200).rule(FaultRule::drop(500));
+        let mut diff = 0;
+        for i in 0..1_000 {
+            if a.decide(0, 1, 0, i * 11, 1) != b.decide(0, 1, 0, i * 11, 1) {
+                diff += 1;
+            }
+        }
+        assert!(diff > 100, "seeds should decorrelate the coins: {diff}");
+    }
+}

@@ -21,6 +21,7 @@
 //! removes that queue (fig. 3 and LOTUS proper).
 
 pub mod clock;
+pub mod faults;
 pub mod memnode;
 pub mod netconfig;
 pub mod opbatch;
@@ -29,6 +30,7 @@ pub mod rpc;
 pub mod verbs;
 
 pub use clock::{TimeGate, VClock};
+pub use faults::{FaultAction, FaultInjector, FaultMode, FaultRule};
 pub use memnode::{MemNode, MemRegion};
 pub use netconfig::NetConfig;
 pub use opbatch::{BatchResult, MergedBatch, MergedResult, OpBatch, OpTag};

@@ -78,6 +78,21 @@ pub struct Rnic {
     /// per-owner chunk of an RPC message; `mean = handler_wait_ns /
     /// handler_chunks`).
     handler_chunks: AtomicU64,
+    /// Lock-phase RPC reissues after a lost/timed-out message (the
+    /// retry-with-backoff path; 0 with `rpc_max_retries = 0`).
+    rpc_retries: AtomicU64,
+    /// RPC messages from this CN lost by the fault injector (sync sends
+    /// surface as timeouts at the caller; async sends vanish silently).
+    rpc_dropped: AtomicU64,
+    /// Cumulative virtual ns lanes spent in retry backoff on this CN.
+    backoff_ns: AtomicU64,
+    /// Lock-phase degradations where the suspected owner CN was in fact
+    /// alive (the false-positive cost of lease-driven suspicion).
+    false_suspicions: AtomicU64,
+    /// Transactions proactively aborted because their lock owner CN was
+    /// under suspicion (the paper's proactive-abort philosophy under
+    /// graceful degradation).
+    degraded_aborts: AtomicU64,
 }
 
 impl Rnic {
@@ -233,6 +248,61 @@ impl Rnic {
         self.handler_wait_ns.fetch_add(wait_ns, Ordering::Relaxed);
     }
 
+    /// Count one lock-phase RPC reissue (retry after loss/timeout).
+    #[inline]
+    pub fn note_rpc_retry(&self) {
+        self.rpc_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one RPC message lost by the fault injector.
+    #[inline]
+    pub fn note_rpc_dropped(&self) {
+        self.rpc_dropped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Charge `ns` virtual ns of retry backoff spent by a lane on this CN.
+    #[inline]
+    pub fn note_backoff(&self, ns: u64) {
+        self.backoff_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Count one degradation against a suspected-but-alive owner CN.
+    #[inline]
+    pub fn note_false_suspicion(&self) {
+        self.false_suspicions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one proactive abort against a suspected owner CN.
+    #[inline]
+    pub fn note_degraded_abort(&self) {
+        self.degraded_aborts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Lock-phase RPC reissues.
+    pub fn rpc_retries(&self) -> u64 {
+        self.rpc_retries.load(Ordering::Relaxed)
+    }
+
+    /// RPC messages lost by the fault injector.
+    pub fn rpc_dropped(&self) -> u64 {
+        self.rpc_dropped.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative retry backoff charged to lanes on this CN (virtual ns).
+    pub fn backoff_ns(&self) -> u64 {
+        self.backoff_ns.load(Ordering::Relaxed)
+    }
+
+    /// Degradations whose suspected owner was in fact alive.
+    pub fn false_suspicions(&self) -> u64 {
+        self.false_suspicions.load(Ordering::Relaxed)
+    }
+
+    /// Proactive aborts against suspected owner CNs.
+    pub fn degraded_aborts(&self) -> u64 {
+        self.degraded_aborts.load(Ordering::Relaxed)
+    }
+
     /// RPC messages sent from this CN.
     pub fn rpc_messages(&self) -> u64 {
         self.rpc_messages.load(Ordering::Relaxed)
@@ -359,6 +429,11 @@ impl Rnic {
         self.lock_wait_ns.store(0, Ordering::Relaxed);
         self.handler_wait_ns.store(0, Ordering::Relaxed);
         self.handler_chunks.store(0, Ordering::Relaxed);
+        self.rpc_retries.store(0, Ordering::Relaxed);
+        self.rpc_dropped.store(0, Ordering::Relaxed);
+        self.backoff_ns.store(0, Ordering::Relaxed);
+        self.false_suspicions.store(0, Ordering::Relaxed);
+        self.degraded_aborts.store(0, Ordering::Relaxed);
     }
 
     /// Reset the queue to idle at time zero (between benchmark runs —
@@ -494,6 +569,17 @@ mod tests {
         n.note_handler_wait(0);
         assert_eq!(n.handler_chunks(), 2);
         assert_eq!(n.handler_wait_ns(), 2_500);
+        n.note_rpc_retry();
+        n.note_rpc_dropped();
+        n.note_rpc_dropped();
+        n.note_backoff(40_000);
+        n.note_false_suspicion();
+        n.note_degraded_abort();
+        assert_eq!(n.rpc_retries(), 1);
+        assert_eq!(n.rpc_dropped(), 2);
+        assert_eq!(n.backoff_ns(), 40_000);
+        assert_eq!(n.false_suspicions(), 1);
+        assert_eq!(n.degraded_aborts(), 1);
         n.reset_counters();
         assert_eq!(n.rpc_messages(), 0);
         assert_eq!(n.rpc_reqs(), 0);
@@ -502,6 +588,11 @@ mod tests {
         assert_eq!(n.lock_wait_ns(), 0);
         assert_eq!(n.handler_wait_ns(), 0);
         assert_eq!(n.handler_chunks(), 0);
+        assert_eq!(n.rpc_retries(), 0);
+        assert_eq!(n.rpc_dropped(), 0);
+        assert_eq!(n.backoff_ns(), 0);
+        assert_eq!(n.false_suspicions(), 0);
+        assert_eq!(n.degraded_aborts(), 0);
     }
 
     #[test]

@@ -47,9 +47,10 @@
 //! steers on.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 
 use crate::dm::clock::VClock;
+use crate::dm::faults::{FaultAction, FaultInjector};
 use crate::dm::netconfig::NetConfig;
 use crate::dm::rnic::Rnic;
 use crate::metrics::Histogram;
@@ -63,6 +64,9 @@ pub struct RpcFabric {
     handlers: Vec<Vec<Arc<Rnic>>>,
     /// Fail-stop flags per CN.
     failed: Vec<AtomicBool>,
+    /// Optional deterministic fault injector, consulted once per message.
+    /// `None` (the default) is byte-inert: no fault path is evaluated.
+    faults: RwLock<Option<Arc<FaultInjector>>>,
     /// Cumulative handler-queue wait per *destination* CN (virtual ns).
     dst_wait_ns: Vec<AtomicU64>,
     /// Handled chunks that wait was measured over, per destination CN.
@@ -82,6 +86,7 @@ impl RpcFabric {
                 .map(|_| (0..slots).map(|_| Arc::new(Rnic::new())).collect())
                 .collect(),
             failed: (0..n).map(|_| AtomicBool::new(false)).collect(),
+            faults: RwLock::new(None),
             dst_wait_ns: (0..n).map(|_| AtomicU64::new(0)).collect(),
             dst_chunks: (0..n).map(|_| AtomicU64::new(0)).collect(),
             wait_hist: Histogram::new(),
@@ -104,10 +109,51 @@ impl RpcFabric {
         self.failed[cn].load(Ordering::SeqCst)
     }
 
+    /// Install (or clear, with `None`) the deterministic fault injector.
+    pub fn set_faults(&self, faults: Option<Arc<FaultInjector>>) {
+        *self.faults.write().unwrap() = faults;
+    }
+
+    /// The injector's verdict for one message ([`FaultAction::Deliver`]
+    /// when none is installed).
+    fn fault_action(
+        &self,
+        src_cn: usize,
+        dst_cn: usize,
+        slot: usize,
+        t_send: u64,
+        n_reqs: u64,
+    ) -> FaultAction {
+        match self.faults.read().unwrap().as_ref() {
+            Some(f) => f.decide(src_cn, dst_cn, slot, t_send, n_reqs),
+            None => FaultAction::Deliver,
+        }
+    }
+
     /// The UD transport's timeout interval: what a caller burns before
     /// declaring the target CN unavailable.
     pub fn timeout_ns(&self) -> u64 {
         self.net.rpc_rtt_ns * 4
+    }
+
+    /// The single owner of the unreachable-CN timeout contract, shared by
+    /// both planes: a synchronous message that is never answered (failed
+    /// destination, or a lost SEND) costs the caller one full timeout
+    /// interval before `NodeUnavailable` surfaces.
+    ///
+    /// Direct plane: [`RpcFabric::charge_timeout`] burns the interval on
+    /// a live clock. Staged plane: [`RpcFabric::timeout_done`] maps the
+    /// post time to the virtual instant the timeout fires (the caller
+    /// owns the charge — see [`crate::txn::scheduler`]'s RPC ring).
+    pub fn timeout_done(&self, t_post: u64) -> u64 {
+        t_post + self.timeout_ns()
+    }
+
+    /// Burn one timeout interval on `clk` and produce the
+    /// `NodeUnavailable` error the caller surfaces.
+    pub fn charge_timeout(&self, clk: &mut VClock, dst_cn: usize) -> Error {
+        clk.advance(self.timeout_ns());
+        Error::NodeUnavailable(format!("cn{dst_cn} (rpc timeout)"))
     }
 
     /// Charge a synchronous RPC carrying `n_reqs` lock-class requests from
@@ -124,12 +170,17 @@ impl RpcFabric {
     ) -> Result<()> {
         if self.is_failed(dst_cn) {
             // Timeout: the caller burns a full timeout interval.
-            clk.advance(self.timeout_ns());
-            return Err(Error::NodeUnavailable(format!("cn{dst_cn} (rpc timeout)")));
+            return Err(self.charge_timeout(clk, dst_cn));
         }
-        let done = self.send_timed(src_cn, dst_cn, slot, &[n_reqs], clk.now())?;
-        clk.catch_up(done[0]);
-        Ok(())
+        match self.send_timed(src_cn, dst_cn, slot, &[n_reqs], clk.now()) {
+            Ok(done) => {
+                clk.catch_up(done[0]);
+                Ok(())
+            }
+            // A lost or unanswerable message is detected the same way a
+            // failed CN is: by burning the timeout interval.
+            Err(_) => Err(self.charge_timeout(clk, dst_cn)),
+        }
     }
 
     /// Split-phase send: **one** RPC message from `src_cn` to
@@ -157,15 +208,29 @@ impl RpcFabric {
             return Err(Error::NodeUnavailable(format!("cn{dst_cn} (rpc timeout)")));
         }
         let total: u64 = owners.iter().map(|&n| n.max(1) as u64).sum();
+        let act = self.fault_action(src_cn, dst_cn, slot, t_send, total);
+        if act == FaultAction::Drop {
+            // The SEND is lost in the fabric: like the failed-CN path the
+            // caller owns the timeout charge; the loss itself is counted.
+            self.cn_nics[src_cn].note_rpc_dropped();
+            return Err(Error::NodeUnavailable(format!("cn{dst_cn} (rpc lost)")));
+        }
         self.cn_nics[src_cn].note_rpc_message(total);
         // One SEND WQE + doorbell per message, however many requests ride.
         let t_sent = self.cn_nics[src_cn]
             .charge(t_send, self.net.rpc_send_ns + self.net.cn_issue_ns);
-        let t_arrive = t_sent + self.net.rpc_rtt_ns / 2;
+        let mut t_arrive = t_sent + self.net.rpc_rtt_ns / 2;
+        if let FaultAction::Delay(d) = act {
+            t_arrive += d;
+        }
+        let slow = match act {
+            FaultAction::Slow(m) => m.max(1),
+            _ => 1,
+        };
         let mut t = self.cn_nics[dst_cn].charge(t_arrive, self.net.cn_issue_ns);
         let mut out = Vec::with_capacity(owners.len());
         for &n in owners {
-            let svc = self.net.rpc_handle_ns * n.max(1) as u64;
+            let svc = self.net.rpc_handle_ns * n.max(1) as u64 * slow;
             let done = self.handlers[dst_cn][slot].charge(t, svc);
             // Exact queueing delay: arrival -> service start. charge()
             // completes at max(arrival, busy) + svc, so the wait falls
@@ -192,12 +257,26 @@ impl RpcFabric {
         if self.is_failed(dst_cn) {
             return Err(Error::NodeUnavailable(format!("cn{dst_cn} (async rpc)")));
         }
+        let act = self.fault_action(src_cn, dst_cn, slot, t_send, n_reqs.max(1) as u64);
         self.cn_nics[src_cn].note_rpc_message(n_reqs.max(1) as u64);
         let t_sent = self.cn_nics[src_cn]
             .charge(t_send, self.net.rpc_send_ns + self.net.cn_issue_ns);
-        let t_arrive = t_sent + self.net.rpc_rtt_ns / 2;
+        if act == FaultAction::Drop {
+            // Fire-and-forget: the send was paid for, then the message
+            // silently vanished — nothing arrives at the destination.
+            self.cn_nics[src_cn].note_rpc_dropped();
+            return Ok(t_sent);
+        }
+        let mut t_arrive = t_sent + self.net.rpc_rtt_ns / 2;
+        if let FaultAction::Delay(d) = act {
+            t_arrive += d;
+        }
+        let slow = match act {
+            FaultAction::Slow(m) => m.max(1),
+            _ => 1,
+        };
         let t_recv = self.cn_nics[dst_cn].charge(t_arrive, self.net.cn_issue_ns);
-        let svc = self.net.rpc_handle_ns * n_reqs.max(1) as u64;
+        let svc = self.net.rpc_handle_ns * n_reqs.max(1) as u64 * slow;
         let done = self.handlers[dst_cn][slot].charge(t_recv, svc);
         self.note_handler_wait(dst_cn, done - svc - t_recv);
         Ok(t_sent)
@@ -481,5 +560,104 @@ mod tests {
         // c1 may still pay NIC serialization, but not slot-0's handler time.
         let serial = f.net.rpc_handle_ns * 10;
         assert!(c1.now() < c0.now() + serial, "slots share a queue?");
+    }
+
+    #[test]
+    fn dropped_message_surfaces_as_a_timeout_at_the_caller() {
+        use crate::dm::faults::{FaultInjector, FaultRule};
+        let f = fabric(2, 1);
+        f.set_faults(Some(Arc::new(
+            FaultInjector::new(1).rule(FaultRule::drop(1000)),
+        )));
+        let mut clk = VClock::zero();
+        let err = f.call(0, 1, 0, 1, &mut clk).unwrap_err();
+        assert!(matches!(err, Error::NodeUnavailable(_)));
+        assert_eq!(clk.now(), f.timeout_ns(), "caller burns one timeout");
+        assert_eq!(f.cn_nics[0].rpc_dropped(), 1);
+        assert_eq!(f.cn_nics[0].rpc_messages(), 0, "a lost SEND is not a message");
+        assert_eq!(f.handler_busy_ns(1), 0, "nothing reaches the handler");
+        // Clearing the injector restores delivery.
+        f.set_faults(None);
+        f.call(0, 1, 0, 1, &mut clk).unwrap();
+    }
+
+    #[test]
+    fn async_drop_pays_the_send_and_loses_the_message() {
+        use crate::dm::faults::{FaultInjector, FaultRule};
+        let f = fabric(2, 1);
+        f.set_faults(Some(Arc::new(
+            FaultInjector::new(2).rule(FaultRule::drop(1000)),
+        )));
+        let t_sent = f.send_async_at(0, 1, 0, 4, 500).unwrap();
+        assert_eq!(t_sent, 500 + f.net.rpc_send_ns + f.net.cn_issue_ns);
+        assert_eq!(f.cn_nics[0].rpc_dropped(), 1);
+        assert_eq!(f.handler_busy_ns(1), 0, "the payload never arrives");
+    }
+
+    #[test]
+    fn gray_slow_multiplies_handler_service_and_feeds_the_wait_signal() {
+        use crate::dm::faults::{FaultInjector, FaultRule};
+        let plain = fabric(2, 1);
+        let done_plain = plain.send_timed(0, 1, 0, &[2], 1_000).unwrap()[0];
+        let gray = fabric(2, 1);
+        gray.set_faults(Some(Arc::new(
+            FaultInjector::new(3).rule(FaultRule::gray_slow(4, 1000)),
+        )));
+        let done_gray = gray.send_timed(0, 1, 0, &[2], 1_000).unwrap()[0];
+        assert_eq!(
+            done_gray - done_plain,
+            plain.net.rpc_handle_ns * 2 * 3,
+            "4x service on a 2-request chunk costs 3 extra service units"
+        );
+        // A second message behind the gray chunk sees the inflated
+        // backlog through the normal queueing-delay signal.
+        gray.set_faults(None);
+        gray.send_timed(0, 1, 0, &[1], 1_000).unwrap();
+        plain.send_timed(0, 1, 0, &[1], 1_000).unwrap();
+        assert!(
+            gray.handler_wait_ns(1) > plain.handler_wait_ns(1),
+            "gray service must surface as handler_wait_ns at the destination"
+        );
+    }
+
+    #[test]
+    fn delayed_message_arrives_exactly_that_much_later() {
+        use crate::dm::faults::{FaultInjector, FaultRule};
+        let plain = fabric(2, 1);
+        let done_plain = plain.send_timed(0, 1, 0, &[1], 0).unwrap()[0];
+        let slow = fabric(2, 1);
+        slow.set_faults(Some(Arc::new(
+            FaultInjector::new(4).rule(FaultRule::delay(9_000, 1000)),
+        )));
+        let done_slow = slow.send_timed(0, 1, 0, &[1], 0).unwrap()[0];
+        assert_eq!(done_slow - done_plain, 9_000);
+    }
+
+    #[test]
+    fn empty_injector_is_byte_inert() {
+        use crate::dm::faults::FaultInjector;
+        let plain = fabric(3, 2);
+        let inert = fabric(3, 2);
+        inert.set_faults(Some(Arc::new(FaultInjector::new(42))));
+        for (src, dst, slot, owners, t) in [
+            (0usize, 1usize, 0usize, vec![3usize, 2], 1_000u64),
+            (2, 1, 1, vec![1], 2_500),
+            (0, 2, 0, vec![4, 4, 1], 4_000),
+        ] {
+            let a = plain.send_timed(src, dst, slot, &owners, t).unwrap();
+            let b = inert.send_timed(src, dst, slot, &owners, t).unwrap();
+            assert_eq!(a, b, "an empty injector must not perturb timing");
+        }
+        let a = plain.send_async_at(1, 0, 0, 5, 9_000).unwrap();
+        let b = inert.send_async_at(1, 0, 0, 5, 9_000).unwrap();
+        assert_eq!(a, b);
+        for cn in 0..3 {
+            assert_eq!(
+                plain.cn_nics[cn].rpc_messages(),
+                inert.cn_nics[cn].rpc_messages()
+            );
+            assert_eq!(plain.handler_wait_ns(cn), inert.handler_wait_ns(cn));
+            assert_eq!(inert.cn_nics[cn].rpc_dropped(), 0);
+        }
     }
 }

@@ -142,8 +142,10 @@ impl Histogram {
     }
 }
 
-/// Aggregated result of one benchmark run.
-#[derive(Debug, Clone)]
+/// Aggregated result of one benchmark run. `PartialEq` compares every
+/// field — the chaos suite's determinism contract (same seed + same
+/// fault script ⇒ byte-identical report) is asserted with plain `==`.
+#[derive(Debug, Clone, PartialEq)]
 pub struct RunReport {
     /// Committed transactions.
     pub commits: u64,
@@ -227,6 +229,18 @@ pub struct RunReport {
     /// destinations — the tail the adaptive coalescing controller reacts
     /// to.
     pub handler_wait_p99_ns: u64,
+    /// Lock-phase RPC reissues after lost/timed-out messages (0 with
+    /// `rpc_max_retries = 0`).
+    pub rpc_retries: u64,
+    /// RPC messages lost by the fault injector (0 without one).
+    pub rpc_dropped: u64,
+    /// Cumulative virtual ns lanes spent in retry backoff.
+    pub backoff_ns: u64,
+    /// Lock-phase degradations whose suspected owner CN was alive.
+    pub false_suspicions: u64,
+    /// Transactions proactively aborted because their lock owner was
+    /// under suspicion.
+    pub degraded_aborts: u64,
 }
 
 impl RunReport {
@@ -485,6 +499,11 @@ mod tests {
             handler_wait_ns: 1_000_000_000,
             handler_chunks: 2_000_000,
             handler_wait_p99_ns: 4_000,
+            rpc_retries: 0,
+            rpc_dropped: 0,
+            backoff_ns: 0,
+            false_suspicions: 0,
+            degraded_aborts: 0,
         };
         assert!((r.mtps() - 1.0).abs() < 1e-9);
         assert!((r.doorbells_per_commit() - 4.0).abs() < 1e-9);

@@ -5,6 +5,15 @@
 //! `Failed` and failure *detection* is the lease expiry: queries made
 //! within `lease_ns` of the failure still see the node as alive, modelling
 //! the detection delay that shapes the fig. 15 recovery timeline.
+//!
+//! **Suspicion** is the false-positive side of lease churn: a node whose
+//! lease renewal went missing is *suspected* over a virtual-time window
+//! without being declared failed. Suspicion deliberately touches neither
+//! the fail-stop state nor the epoch, and never triggers lock-table
+//! clearing — a suspected-but-alive CN rejoins by simply outliving its
+//! window (the ephemeral-locks invariant: no lock rebuild, no recovery
+//! pass). Observers degrade gracefully instead: the lock phase
+//! proactively aborts transactions that would wait on a suspected owner.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -29,6 +38,10 @@ struct Node {
     since: AtomicU64,
     /// Incarnation (bumps on every restart).
     epoch: AtomicU64,
+    /// Suspicion window start (virtual ns; `u64::MAX` = not suspected).
+    suspect_from: AtomicU64,
+    /// Suspicion window end (virtual ns, exclusive).
+    suspect_until: AtomicU64,
 }
 
 /// Cluster membership registry.
@@ -46,6 +59,8 @@ impl Membership {
                     state: AtomicU64::new(ST_ALIVE),
                     since: AtomicU64::new(0),
                     epoch: AtomicU64::new(0),
+                    suspect_from: AtomicU64::new(u64::MAX),
+                    suspect_until: AtomicU64::new(u64::MAX),
                 })
                 .collect(),
             lease_ns,
@@ -112,6 +127,31 @@ impl Membership {
             .filter(|&cn| self.detected_failed(cn, now))
             .collect()
     }
+
+    /// Suspect `cn` over the virtual-time window `[from_ns, until_ns)`
+    /// (a missed lease renewal, not a failure verdict). Does NOT touch
+    /// the fail-stop state, the epoch, or any lock table — a false
+    /// positive must be survivable without a recovery pass.
+    pub fn suspect(&self, cn: usize, from_ns: u64, until_ns: u64) {
+        self.nodes[cn].suspect_from.store(from_ns, Ordering::Release);
+        self.nodes[cn].suspect_until.store(until_ns, Ordering::Release);
+    }
+
+    /// Clear any suspicion window on `cn` (e.g. between benchmark runs).
+    pub fn clear_suspicion(&self, cn: usize) {
+        self.nodes[cn].suspect_from.store(u64::MAX, Ordering::Release);
+        self.nodes[cn].suspect_until.store(u64::MAX, Ordering::Release);
+    }
+
+    /// Is `cn` under suspicion at `now`? Purely window-based: a node can
+    /// be suspected while genuinely alive (the false-positive case the
+    /// lock phase degrades on) and outlives it with no state change.
+    pub fn is_suspected(&self, cn: usize, now: u64) -> bool {
+        let from = self.nodes[cn].suspect_from.load(Ordering::Acquire);
+        from != u64::MAX
+            && now >= from
+            && now < self.nodes[cn].suspect_until.load(Ordering::Acquire)
+    }
 }
 
 #[cfg(test)]
@@ -135,6 +175,41 @@ mod tests {
         m.complete_restart(1, 11_000);
         assert!(m.is_serving(1));
         assert_eq!(m.epoch(1), e0 + 1);
+    }
+
+    #[test]
+    fn suspicion_is_a_window_with_no_state_change() {
+        let m = Membership::new(3, 1_000);
+        assert!(!m.is_suspected(1, 0), "fresh nodes are unsuspected");
+        let e0 = m.epoch(1);
+        m.suspect(1, 2_000, 5_000);
+        assert!(!m.is_suspected(1, 1_999));
+        assert!(m.is_suspected(1, 2_000));
+        assert!(m.is_suspected(1, 4_999));
+        assert!(!m.is_suspected(1, 5_000), "window end rejoins silently");
+        // Suspicion must not look like failure: state, serving flag,
+        // epoch, and detection all unchanged (no lock rebuild path).
+        assert_eq!(m.state(1), NodeState::Alive);
+        assert!(m.is_serving(1));
+        assert_eq!(m.epoch(1), e0);
+        assert!(!m.detected_failed(1, 3_000));
+        assert!(m.failed_at(3_000).is_empty());
+        m.clear_suspicion(1);
+        assert!(!m.is_suspected(1, 3_000));
+    }
+
+    #[test]
+    fn suspicion_is_independent_of_failure() {
+        let m = Membership::new(2, 100);
+        m.suspect(0, 0, u64::MAX);
+        m.fail(0, 50);
+        assert!(m.is_suspected(0, 60));
+        assert!(m.detected_failed(0, 150), "real failure still detected");
+        m.begin_restart(0, 200);
+        m.complete_restart(0, 300);
+        assert!(m.is_suspected(0, 400), "restart does not clear suspicion");
+        m.clear_suspicion(0);
+        assert!(!m.is_suspected(0, 400));
     }
 
     #[test]

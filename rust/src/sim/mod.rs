@@ -59,6 +59,36 @@ pub struct CrashEvent {
     pub cns: Vec<usize>,
 }
 
+/// A lease-suspicion window (ISSUE 7): `cn` is *suspected* (not failed)
+/// over `[from_ns, until_ns)` — observers degrade gracefully (the lock
+/// phase proactively aborts against it) and the CN rejoins by outliving
+/// the window, with no lock rebuild.
+#[derive(Debug, Clone)]
+pub struct SuspicionWindow {
+    /// The suspected CN.
+    pub cn: usize,
+    /// Window start (virtual ns, inclusive).
+    pub from_ns: u64,
+    /// Window end (virtual ns, exclusive).
+    pub until_ns: u64,
+}
+
+/// A full deterministic fault scenario (ISSUE 7): fail-stop crash storms,
+/// seeded message-level faults (drops / delays / gray slowdowns /
+/// partitions, all pure functions of the message coordinates), and timed
+/// suspicion windows. The same script against the same seed yields a
+/// byte-identical [`RunReport`] — every fault decision is installed up
+/// front and evaluated in virtual time, never toggled mid-run.
+#[derive(Debug, Clone, Default)]
+pub struct FaultScript {
+    /// Fail-stop crash events (possibly staggered — a chaos storm).
+    pub crashes: Vec<CrashEvent>,
+    /// Seeded message-fault injector consulted by the RPC fabric.
+    pub faults: Option<Arc<crate::dm::faults::FaultInjector>>,
+    /// Lease-suspicion windows installed at run start.
+    pub suspicions: Vec<SuspicionWindow>,
+}
+
 /// A built cluster, ready to run benchmarks.
 pub struct Cluster {
     /// Shared state.
@@ -166,6 +196,21 @@ impl Cluster {
 
     /// Run with fail-stop crash injections (fig. 15).
     pub fn run_with_events(&self, system: SystemKind, events: &[CrashEvent]) -> Result<RunReport> {
+        self.run_with_faults(
+            system,
+            &FaultScript {
+                crashes: events.to_vec(),
+                ..FaultScript::default()
+            },
+        )
+    }
+
+    /// Run a full deterministic fault scenario: crash storms, seeded
+    /// message faults, and suspicion windows (ISSUE 7). The injector and
+    /// suspicion windows are installed before the first transaction and
+    /// cleared afterwards, so later runs on the same cluster are clean.
+    pub fn run_with_faults(&self, system: SystemKind, script: &FaultScript) -> Result<RunReport> {
+        let events: &[CrashEvent] = &script.crashes;
         // Each run restarts virtual time at zero: drain the fabric queues
         // left by any previous run on this cluster.
         for mn in &self.shared.mns {
@@ -175,6 +220,10 @@ impl Cluster {
             nic.reset();
         }
         self.shared.rpc.reset_queues();
+        self.shared.rpc.set_faults(script.faults.clone());
+        for s in &script.suspicions {
+            self.shared.membership.suspect(s.cn, s.from_ns, s.until_ns);
+        }
         let cfg = &self.shared.cfg;
         let total = cfg.total_coordinators();
         let gate = Arc::new(TimeGate::new(total, cfg.gate_window_ns));
@@ -219,6 +268,12 @@ impl Cluster {
                 });
             }
         });
+        // The script's faults and suspicions end with the run: clear them
+        // so later runs on this cluster start clean.
+        self.shared.rpc.set_faults(None);
+        for s in &script.suspicions {
+            self.shared.membership.clear_suspicion(s.cn);
+        }
         if let Some(e) = fatal.lock().unwrap().take() {
             return Err(e);
         }
@@ -236,7 +291,7 @@ impl Cluster {
             }
             for (i, nic) in self.shared.cn_nics.iter().enumerate() {
                 eprintln!(
-                    "cn{i} nic: ops={} busy={}ns wait={}ns util={:.2} doorbells={} db_ops={} coalesced={} staged={} inflight_hwm={} overlap_rings={} overlap_plans={} resumed_rings={} resumed_plans={} ring_gap={}ns rpc_msgs={} rpc_reqs={} coalesced_rpc={} lock_waits={} lock_wait={}ns handler_chunks={} handler_wait={}ns mean_handler_wait={:.0}ns",
+                    "cn{i} nic: ops={} busy={}ns wait={}ns util={:.2} doorbells={} db_ops={} coalesced={} staged={} inflight_hwm={} overlap_rings={} overlap_plans={} resumed_rings={} resumed_plans={} ring_gap={}ns rpc_msgs={} rpc_reqs={} coalesced_rpc={} lock_waits={} lock_wait={}ns handler_chunks={} handler_wait={}ns rpc_retries={} rpc_dropped={} backoff={}ns false_susp={} degraded_aborts={} mean_handler_wait={:.0}ns",
                     nic.op_count(),
                     nic.busy_ns(),
                     nic.wait_ns(),
@@ -258,6 +313,11 @@ impl Cluster {
                     nic.lock_wait_ns(),
                     nic.handler_chunks(),
                     nic.handler_wait_ns(),
+                    nic.rpc_retries(),
+                    nic.rpc_dropped(),
+                    nic.backoff_ns(),
+                    nic.false_suspicions(),
+                    nic.degraded_aborts(),
                     self.shared.rpc.mean_handler_wait_ns(i)
                 );
             }
@@ -278,6 +338,8 @@ impl Cluster {
         let (mut rpc_messages, mut rpc_reqs, mut coalesced_rpc_reqs) = (0u64, 0u64, 0u64);
         let (mut lock_waits, mut lock_wait_ns) = (0u64, 0u64);
         let (mut handler_wait_ns, mut handler_chunks) = (0u64, 0u64);
+        let (mut rpc_retries, mut rpc_dropped, mut backoff_ns) = (0u64, 0u64, 0u64);
+        let (mut false_suspicions, mut degraded_aborts) = (0u64, 0u64);
         let mut inflight_wqes_hwm = 0u64;
         for nic in &self.shared.cn_nics {
             doorbells += nic.doorbells();
@@ -296,6 +358,11 @@ impl Cluster {
             lock_wait_ns += nic.lock_wait_ns();
             handler_wait_ns += nic.handler_wait_ns();
             handler_chunks += nic.handler_chunks();
+            rpc_retries += nic.rpc_retries();
+            rpc_dropped += nic.rpc_dropped();
+            backoff_ns += nic.backoff_ns();
+            false_suspicions += nic.false_suspicions();
+            degraded_aborts += nic.degraded_aborts();
             inflight_wqes_hwm = inflight_wqes_hwm.max(nic.posted_wqes_hwm());
         }
         Ok(RunReport {
@@ -326,6 +393,11 @@ impl Cluster {
             handler_wait_ns,
             handler_chunks,
             handler_wait_p99_ns: self.shared.rpc.handler_wait_p99_ns(),
+            rpc_retries,
+            rpc_dropped,
+            backoff_ns,
+            false_suspicions,
+            degraded_aborts,
         })
     }
 
@@ -908,6 +980,62 @@ mod tests {
             .map(|s| s.held_slots())
             .sum();
         assert_eq!(held, 0, "pipelined lanes must leave no held lock slots");
+    }
+
+    #[test]
+    fn suspected_but_alive_cn_degrades_and_rejoins_without_lock_rebuild() {
+        // ISSUE 7: a lease-suspicion window makes observers degrade
+        // gracefully (proactive aborts against the suspect) while the
+        // suspected-but-alive CN keeps serving; it rejoins by outliving
+        // the window with NO restart, NO epoch bump and NO lock-table
+        // clearing — the ephemeral-locks invariant.
+        let mut cfg = tiny_cfg();
+        cfg.n_cns = 3;
+        cfg.duration_ns = 6_000_000;
+        let cluster = Cluster::build(
+            &cfg,
+            WorkloadKind::Kvs {
+                rw_pct: 100,
+                skewed: false,
+            },
+        )
+        .unwrap();
+        let script = FaultScript {
+            suspicions: vec![SuspicionWindow {
+                cn: 2,
+                from_ns: 1_000_000,
+                until_ns: 3_000_000,
+            }],
+            ..FaultScript::default()
+        };
+        let epoch_before = cluster.shared.membership.epoch(2);
+        let report = cluster.run_with_faults(SystemKind::Lotus, &script).unwrap();
+        assert!(report.commits > 0);
+        assert!(
+            report.degraded_aborts > 0,
+            "no transaction degraded against the suspect"
+        );
+        assert_eq!(
+            report.false_suspicions, report.degraded_aborts,
+            "CN 2 was alive throughout: every degradation was a false suspicion"
+        );
+        assert_eq!(
+            cluster.shared.membership.epoch(2),
+            epoch_before,
+            "a mere suspicion must not bump the incarnation"
+        );
+        assert!(cluster.shared.membership.is_serving(2));
+        let held: usize = cluster
+            .shared
+            .lock_services
+            .iter()
+            .map(|s| s.held_slots())
+            .sum();
+        assert_eq!(held, 0, "rejoin must not strand or clear lock slots");
+        assert!(
+            !cluster.shared.membership.is_suspected(2, 2_000_000),
+            "the script's suspicion is cleared after the run"
+        );
     }
 
     #[test]

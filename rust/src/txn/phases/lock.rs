@@ -173,11 +173,42 @@ pub async fn acquire(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame, from: usize) 
     // CN within the coalescing window share ONE message (each lane's
     // clock charged only to the handler completing its own batch).
     for (target, batch) in remote {
-        if ctx.issue_rpc(target, batch.len()).await.is_err() {
-            // CN failed: the paper aborts transactions waiting on the
-            // failed CN's locks (§6).
+        // Lease-driven suspicion, degraded gracefully (ISSUE 7): a
+        // target under suspicion is proactively aborted against instead
+        // of burning timeouts toward a node that may be gone. A
+        // suspected-but-alive target makes this a *false* suspicion
+        // (counted); it rejoins by simply outliving its window — its
+        // ephemeral lock table is never rebuilt or cleared for a mere
+        // suspicion.
+        if ctx.cluster.membership.is_suspected(target, ctx.clk.now()) {
+            ctx.ep.nic.note_degraded_abort();
+            if ctx.cluster.membership.is_serving(target) {
+                ctx.ep.nic.note_false_suspicion();
+            }
             unlock::release(ctx, frame);
             return Err(abort(AbortReason::OwnerFailed));
+        }
+        // A lost or timed-out lock message reissues with capped
+        // exponential backoff up to `rpc_max_retries`, parking the lane
+        // (`Flight::RetryAt`) between attempts so siblings keep running.
+        // With retries disabled (the default) a single timeout aborts —
+        // the pre-retry behavior: the paper aborts transactions waiting
+        // on a failed CN's locks (§6).
+        let mut attempt = 0u32;
+        loop {
+            match ctx.issue_rpc(target, batch.len()).await {
+                Ok(()) => break,
+                Err(_) if attempt < ctx.cluster.cfg.rpc_max_retries => {
+                    ctx.ep.nic.note_rpc_retry();
+                    let base = ctx.cluster.cfg.rpc_backoff_base_ns;
+                    ctx.retry_backoff(base << attempt.min(4)).await;
+                    attempt += 1;
+                }
+                Err(_) => {
+                    unlock::release(ctx, frame);
+                    return Err(abort(AbortReason::OwnerFailed));
+                }
+            }
         }
         for &(key, mode) in &batch {
             match acquire_one(ctx, key, mode, holder, target, true).await {

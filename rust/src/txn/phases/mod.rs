@@ -229,6 +229,17 @@ pub trait StepSink {
     /// Consume a completed wait (`Flight::WaitOver`): true once the
     /// holder released and the lane may retry its acquisition.
     fn try_wait_over(&self, lane: usize) -> bool;
+
+    /// Park the lane in retry backoff until virtual time `t`
+    /// (`Flight::RetryAt`): a lost/timed-out lock RPC is waiting out its
+    /// capped exponential backoff before reissuing, and sibling lanes
+    /// keep running meanwhile.
+    fn park_retry(&self, lane: usize, t: u64);
+
+    /// Consume a completed retry backoff: true once the scheduler's
+    /// ready-queue loop has reached the lane's backoff deadline and the
+    /// lane may reissue its lock RPC.
+    fn try_retry_over(&self, lane: usize) -> bool;
 }
 
 /// The *Issued -> Done* machine step behind [`PhaseCtx::issue`]: first
@@ -298,6 +309,33 @@ impl Future for WaitUnlock<'_> {
             return Poll::Pending;
         }
         if self.sink.try_wait_over(self.lane) {
+            Poll::Ready(())
+        } else {
+            Poll::Pending
+        }
+    }
+}
+
+/// The *retry backoff* step behind [`PhaseCtx::retry_backoff`]: first
+/// poll parks the machine at its backoff deadline (`Flight::RetryAt`),
+/// every later poll asks whether the scheduler has reached it.
+struct RetryPark<'a> {
+    sink: &'a dyn StepSink,
+    lane: usize,
+    t: u64,
+    parked: bool,
+}
+
+impl Future for RetryPark<'_> {
+    type Output = ();
+
+    fn poll(mut self: Pin<&mut Self>, _cx: &mut Context<'_>) -> Poll<()> {
+        if !self.parked {
+            self.parked = true;
+            self.sink.park_retry(self.lane, self.t);
+            return Poll::Pending;
+        }
+        if self.sink.try_retry_over(self.lane) {
             Poll::Ready(())
         } else {
             Poll::Pending
@@ -713,6 +751,30 @@ impl PhaseCtx<'_> {
         self.clk.catch_up(sink.clk_floor());
         let recheck = self.net().local_lock_ns;
         self.clk.advance(recheck);
+    }
+
+    /// Wait out a retry backoff of `backoff` virtual ns before reissuing
+    /// a lost/timed-out lock RPC. Under a staging sink the lane parks
+    /// (`Flight::RetryAt`) so siblings keep running while it backs off;
+    /// under a direct conduit the backoff is charged straight to the
+    /// clock. Either way the time lands on the lane clock and the CN's
+    /// `backoff_ns` counter.
+    pub async fn retry_backoff(&mut self, backoff: u64) {
+        self.ep.nic.note_backoff(backoff);
+        match self.sink.filter(|s| s.stages()) {
+            Some(sink) => {
+                let until = self.clk.now() + backoff;
+                RetryPark {
+                    sink,
+                    lane: self.lane,
+                    t: until,
+                    parked: false,
+                }
+                .await;
+                self.clk.catch_up(until.max(sink.clk_floor()));
+            }
+            None => self.clk.advance(backoff),
+        }
     }
 }
 

@@ -431,7 +431,7 @@ impl Coalescer {
                 // its own post time; parked riders stay pending (they are
                 // dropped when their window expires).
                 for &(owner, _, tp) in &group {
-                    out.push((owner, false, tp + rpc.timeout_ns()));
+                    out.push((owner, false, rpc.timeout_done(tp)));
                 }
                 continue;
             }
@@ -493,9 +493,10 @@ impl Coalescer {
                 }
                 Err(_) => {
                     // Failed between the check and the send (crash
-                    // injection from another thread): same timeout path.
+                    // injection from another thread), or the message was
+                    // lost by fault injection: same timeout path.
                     for &(owner, _, tp) in &group {
-                        out.push((owner, false, tp + rpc.timeout_ns()));
+                        out.push((owner, false, rpc.timeout_done(tp)));
                     }
                 }
             }
@@ -700,6 +701,10 @@ enum Flight {
     WaitLock(LotusKey, u64),
     /// The wait ended: ready to retry the acquisition at time `t`.
     WaitOver(u64),
+    /// Parked in retry backoff after a lost/timed-out lock RPC: the lane
+    /// re-enters the ready queue at its backoff deadline `t` and
+    /// reissues its message (ISSUE 7).
+    RetryAt(u64),
 }
 
 /// One resume-trace entry: `(ring event id, lane, completion time)` —
@@ -913,12 +918,16 @@ impl StepSink for SchedShared {
             }
             if holds_key {
                 any_holder = true;
+                // A holder backing off before an RPC retry (RetryAt) is
+                // progressing: it re-enters the ready queue at its
+                // deadline on its own, exactly like WaitOver.
                 if !matches!(
                     fl[i],
                     Flight::Staged(..)
                         | Flight::Done { .. }
                         | Flight::RpcDone { .. }
                         | Flight::WaitOver(..)
+                        | Flight::RetryAt(..)
                 ) {
                     return WaitVerdict::Abort;
                 }
@@ -938,6 +947,20 @@ impl StepSink for SchedShared {
     fn try_wait_over(&self, lane: usize) -> bool {
         let mut fl = self.flights.borrow_mut();
         if matches!(fl[lane], Flight::WaitOver(_)) {
+            fl[lane] = Flight::Idle;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn park_retry(&self, lane: usize, t: u64) {
+        self.flights.borrow_mut()[lane] = Flight::RetryAt(t);
+    }
+
+    fn try_retry_over(&self, lane: usize) -> bool {
+        let mut fl = self.flights.borrow_mut();
+        if matches!(fl[lane], Flight::RetryAt(_)) {
             fl[lane] = Flight::Idle;
             true
         } else {
@@ -1324,7 +1347,14 @@ impl FrameScheduler {
                     self.lanes[i].clk
                 } else {
                     match &fl[i] {
-                        Flight::Staged(_, t) | Flight::WaitLock(_, t) | Flight::WaitOver(t) => *t,
+                        // A RetryAt lane counts at its backoff deadline:
+                        // on resume it catches its clock up to the
+                        // deadline before doing anything else, so it can
+                        // never charge earlier than that again.
+                        Flight::Staged(_, t)
+                        | Flight::WaitLock(_, t)
+                        | Flight::WaitOver(t)
+                        | Flight::RetryAt(t) => *t,
                         Flight::Done { t_post, .. } | Flight::RpcDone { t_post, .. } => *t_post,
                         Flight::Idle => self.lanes[i].clk,
                     }
@@ -1473,6 +1503,9 @@ impl FrameScheduler {
                         Some((*t_done, 0u8, false))
                     }
                     Flight::WaitOver(t) => Some((*t, 0, false)),
+                    // Backoff served in clock order: the lane re-enters
+                    // the ready queue at its deadline.
+                    Flight::RetryAt(t) => Some((*t, 0, false)),
                     _ => None,
                 }
             } else if include_idle {
@@ -1614,9 +1647,9 @@ impl FrameScheduler {
                 debug_assert!(
                     matches!(
                         self.shared.flights.borrow()[li],
-                        Flight::Staged(..) | Flight::WaitLock(..)
+                        Flight::Staged(..) | Flight::WaitLock(..) | Flight::RetryAt(..)
                     ),
-                    "a parked lane must be staged or lock-waiting"
+                    "a parked lane must be staged, lock-waiting, or backing off"
                 );
             }
         }
@@ -1994,6 +2027,63 @@ mod tests {
             let t_post = if owner == 0 { 1_000 } else { 1_200 };
             assert_eq!(t_done, t_post + rpc.timeout_ns(), "timeout from own post");
         }
+    }
+
+    #[test]
+    fn retry_backoff_parks_and_resumes_through_the_flight_table() {
+        let mut cfg = Config::small();
+        cfg.pipeline_depth = 4;
+        cfg.n_cns = 1;
+        cfg.coordinators_per_cn = 1;
+        let cluster = Cluster::build(
+            &cfg,
+            WorkloadKind::Kvs {
+                rw_pct: 100,
+                skewed: false,
+            },
+        )
+        .unwrap();
+        let sched = FrameScheduler::new(cluster.shared.clone(), 0, 0, 0);
+        let shared = &sched.shared;
+
+        // Park a lane at its backoff deadline and consume it exactly once.
+        shared.park_retry(2, 7_000);
+        assert!(matches!(shared.flights.borrow()[2], Flight::RetryAt(7_000)));
+        assert!(shared.try_retry_over(2));
+        assert!(matches!(shared.flights.borrow()[2], Flight::Idle));
+        assert!(!shared.try_retry_over(2), "consumed exactly once");
+
+        // A waiter triaging a conflicting future holder that is backing
+        // off sees it as *progressing* (Wait, not Abort): the holder
+        // re-enters the ready queue at its deadline on its own.
+        let k = LotusKey::compose(9, 9);
+        shared.note_lock(1, k, LockMode::Write, 5_000);
+        shared.park_retry(1, 6_000);
+        assert_eq!(
+            shared.wait_verdict(0, k, LockMode::Write, 1_000),
+            WaitVerdict::Wait
+        );
+        // The same holder stuck in a lock wait of its own must not be
+        // waited on (the wait graph stays acyclic).
+        shared.flights.borrow_mut()[1] = Flight::WaitLock(k, 5_500);
+        assert_eq!(
+            shared.wait_verdict(0, k, LockMode::Write, 1_000),
+            WaitVerdict::Abort
+        );
+        // When the backing-off holder gives up (retries exhausted, lock
+        // phase releases), the release wakes parked waiters at their
+        // unchanged virtual time — the satellite regression: a waiter
+        // must never be stranded by a holder that aborted out of backoff.
+        shared.flights.borrow_mut()[1] = Flight::RetryAt(6_000);
+        shared.park_wait(0, k, 1_000);
+        shared.note_unlock_all(1, 6_000);
+        assert!(matches!(shared.flights.borrow()[0], Flight::WaitOver(1_000)));
+        assert_eq!(
+            shared.ep.nic.lock_wait_ns(),
+            5_000,
+            "the bridged wait span is the release time minus the park time"
+        );
+        assert!(shared.try_wait_over(0));
     }
 
     #[test]

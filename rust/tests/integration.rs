@@ -4,8 +4,9 @@
 use std::sync::Arc;
 
 use lotus::config::{Config, SystemKind};
+use lotus::dm::{FaultInjector, FaultRule};
 use lotus::sharding::key::LotusKey;
-use lotus::sim::{Cluster, CrashEvent};
+use lotus::sim::{Cluster, CrashEvent, FaultScript, SuspicionWindow};
 use lotus::txn::api::{RecordRef, TxnApi, TxnCtl};
 use lotus::txn::coordinator::LotusCoordinator;
 use lotus::txn::expect_ready;
@@ -289,6 +290,123 @@ fn pipelined_crash_recovery_conserves_money_and_locks() {
             "cn{i}: staged WQEs neither rung nor discarded by the crash"
         );
     }
+}
+
+/// ISSUE 7 tentpole acceptance: a crash storm *plus* a lossy fabric (1%
+/// of messages dropped for the whole run, retries enabled) must still
+/// conserve money and strand zero lock slots — a lost lock message parks
+/// its lane in capped exponential backoff and reissues, exhausted
+/// retries abort cleanly with every acquired lock released, and recovery
+/// drops the crashed CN's ephemeral locks.
+#[test]
+fn chaos_storm_with_lossy_fabric_conserves_money_and_locks() {
+    let mut cfg = tiny();
+    cfg.n_cns = 3; // pinned: recovery needs surviving CNs
+    cfg.duration_ns = 30_000_000;
+    cfg.pipeline_depth = 4;
+    cfg.coalesce_window_ns = 5_000;
+    cfg.rpc_max_retries = 3; // pinned: the retry path must be exercised
+    let wl = Arc::new(SmallBankWorkload::new(cfg.scale.smallbank_accounts));
+    let cluster = Cluster::build_with(&cfg, wl.clone() as Arc<dyn Workload>).unwrap();
+    let script = FaultScript {
+        crashes: vec![CrashEvent {
+            at_ns: 10_000_000,
+            cns: vec![0],
+        }],
+        faults: Some(Arc::new(
+            FaultInjector::new(cfg.seed).rule(FaultRule::drop(10)),
+        )),
+        suspicions: vec![],
+    };
+    let report = cluster.run_with_faults(SystemKind::Lotus, &script).unwrap();
+    assert!(report.commits > 100);
+    assert!(
+        report.rpc_dropped > 0,
+        "the lossy fabric never lost a message"
+    );
+    assert!(
+        report.rpc_retries > 0,
+        "no lost lock message was ever retried"
+    );
+    audit_books(&cluster, &wl, cfg.scale.smallbank_accounts, "chaos-storm");
+    let held: usize = cluster
+        .shared
+        .lock_services
+        .iter()
+        .map(|s| s.held_slots())
+        .sum();
+    assert_eq!(held, 0, "chaos storm + message loss left held lock slots");
+}
+
+/// ISSUE 7 equivalence anchor: an installed-but-empty `FaultInjector` is
+/// byte-inert — a depth-1 multi-CN run under it matches a plain run of
+/// the same cluster config field-for-field (`RunReport` equality), even
+/// with the retry machinery armed (it must never fire).
+#[test]
+fn zero_fault_injector_is_byte_inert() {
+    let mut cfg = tiny();
+    cfg.n_cns = 3; // pinned: remote lock RPCs must flow through the injector hook
+    cfg.pipeline_depth = 1;
+    cfg.rpc_max_retries = 3; // armed, but with no faults it must never fire
+    let run = |faults: Option<Arc<FaultInjector>>| {
+        let cluster = Cluster::build(&cfg, WorkloadKind::SmallBank).unwrap();
+        let script = FaultScript {
+            crashes: vec![],
+            faults,
+            suspicions: vec![],
+        };
+        cluster.run_with_faults(SystemKind::Lotus, &script).unwrap()
+    };
+    let plain = run(None);
+    let inert = run(Some(Arc::new(FaultInjector::new(cfg.seed))));
+    assert!(plain.commits > 100);
+    assert!(plain.rpc_messages > 0, "the run must exercise the fabric");
+    assert_eq!(inert.rpc_dropped, 0);
+    assert_eq!(inert.rpc_retries, 0);
+    assert_eq!(plain, inert, "an empty fault injector perturbed the run");
+}
+
+/// ISSUE 7 determinism acceptance: the same seed and the same
+/// `FaultScript` — crash storm, sustained loss, a gray window, and a
+/// suspicion window — replay to an identical `RunReport` twice in a row,
+/// field for field. Every fault decision is a pure function of the
+/// injector seed and the message coordinates, never of host entropy.
+#[test]
+fn same_seed_same_fault_script_is_deterministic() {
+    let mut cfg = tiny();
+    cfg.n_cns = 3; // pinned: the script names CNs 0 and 2
+    cfg.duration_ns = 20_000_000;
+    cfg.pipeline_depth = 4;
+    cfg.coalesce_window_ns = 5_000;
+    cfg.rpc_max_retries = 2;
+    let script = || FaultScript {
+        crashes: vec![CrashEvent {
+            at_ns: 6_000_000,
+            cns: vec![0],
+        }],
+        faults: Some(Arc::new(
+            FaultInjector::new(cfg.seed)
+                .rule(FaultRule::drop(20).window(6_000_000, u64::MAX))
+                .rule(FaultRule::gray_slow(4, 300).window(6_000_000, 12_000_000)),
+        )),
+        suspicions: vec![SuspicionWindow {
+            cn: 2,
+            from_ns: 8_000_000,
+            until_ns: 9_000_000,
+        }],
+    };
+    let run = || {
+        let cluster = Cluster::build(&cfg, WorkloadKind::SmallBank).unwrap();
+        cluster.run_with_faults(SystemKind::Lotus, &script()).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert!(a.commits > 100);
+    assert!(a.rpc_dropped > 0, "the storm script never dropped a message");
+    assert_eq!(
+        a, b,
+        "same seed + same fault script must replay byte-identically"
+    );
 }
 
 /// Snapshot isolation commits more under read-write contention than SR
