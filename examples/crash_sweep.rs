@@ -1,0 +1,90 @@
+//! Domain example: the exhaustive crash-point sweep (PR 8).
+//!
+//! A bank must balance no matter when its machines die. This example
+//! replays one seeded transfers-only SmallBank run on a 3-CN / 2-MN
+//! cluster, records every issue-point boundary CN 0 crosses, then
+//! crashes CN 0 at each of them — once plain, once with the final
+//! 60 µs of its doorbells landing **torn** (so the commit-log write in
+//! flight at the crash tears mid-slot). After every crash, recovery
+//! runs and the cluster-wide invariants are audited straight from
+//! MN-resident bytes:
+//!
+//! - money conservation (`sum(balances)` == the initial total),
+//! - zero held lock slots,
+//! - byte-identical replicas.
+//!
+//! The whole sweep is deterministic: run it twice, get the same report.
+//!
+//! ```sh
+//! cargo run --release --example crash_sweep
+//! ```
+
+use lotus::sim::crashsweep::{run_sweep, SweepOptions};
+use lotus::workloads::smallbank::SmallBankWorkload;
+
+fn main() -> lotus::Result<()> {
+    let opts = SweepOptions::default();
+    println!(
+        "crash sweep: {} points max over [{} us, {} us), CN {} dies, torn-log variant {}",
+        opts.max_points,
+        opts.window.0 / 1000,
+        opts.window.1 / 1000,
+        opts.crash_cn,
+        if opts.torn_log { "on" } else { "off" },
+    );
+
+    let rep = run_sweep(&opts)?;
+    println!(
+        "\n{} crash points enumerated, {} audited runs — all invariants held:\n",
+        rep.crash_points.len(),
+        rep.outcomes.len()
+    );
+    println!(
+        "{:>10}  {:>4}  {:>8} {:>7}  {:>4} {:>9} {:>10}  {:>12}",
+        "crash (ns)",
+        "torn",
+        "commits",
+        "aborts",
+        "torn",
+        "log torn",
+        "rolled",
+        "bank total"
+    );
+    println!(
+        "{:>10}  {:>4}  {:>8} {:>7}  {:>4} {:>9} {:>10}  {:>12}",
+        "", "", "", "", "rings", "discarded", "fwd/back", ""
+    );
+    for o in &rep.outcomes {
+        println!(
+            "{:>10}  {:>4}  {:>8} {:>7}  {:>4} {:>9} {:>7}/{:<2}  {:>12}",
+            o.t_ns,
+            if o.torn_log { "yes" } else { "no" },
+            o.commits,
+            o.aborts,
+            o.torn_batches,
+            o.torn_slots_discarded,
+            o.completed,
+            o.rolled_back,
+            o.total_balance,
+        );
+    }
+
+    let initial = SmallBankWorkload::initial_total(opts.accounts);
+    let discarded: usize = rep.outcomes.iter().map(|o| o.torn_slots_discarded).sum();
+    let completed: usize = rep.outcomes.iter().map(|o| o.completed).sum();
+    let rolled: usize = rep.outcomes.iter().map(|o| o.rolled_back).sum();
+    println!("\nverdict:");
+    println!("  bank total : {initial} at every single crash point (conserved)");
+    println!("  recovery   : {completed} commits rolled forward, {rolled} rolled back");
+    println!("  torn logs  : {discarded} sealed-slot tears detected and discarded");
+    assert!(
+        rep.outcomes.iter().all(|o| o.total_balance == initial),
+        "money conservation violated somewhere in the sweep"
+    );
+
+    // Determinism: the same seed must replay the identical sweep.
+    let rep2 = run_sweep(&opts)?;
+    assert_eq!(rep, rep2, "same seed, different sweep");
+    println!("  determinism: replaying the sweep reproduced it byte for byte");
+    Ok(())
+}

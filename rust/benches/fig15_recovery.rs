@@ -8,7 +8,7 @@ mod bench_util;
 
 use bench_util::{bench_config, header};
 use lotus::config::SystemKind;
-use lotus::sim::{Cluster, CrashEvent};
+use lotus::sim::{Cluster, CrashEvent, FaultScript};
 use lotus::workloads::WorkloadKind;
 
 fn main() -> lotus::Result<()> {
@@ -19,13 +19,16 @@ fn main() -> lotus::Result<()> {
     cfg.timeline_interval_ns = 1_000_000; // 1 ms sampling (paper)
     let crash_at = 20_000_000;
     let cluster = Cluster::build(&cfg, WorkloadKind::SmallBank)?;
-    let report = cluster.run_with_events(
-        SystemKind::Lotus,
-        &[CrashEvent {
+    // The unified fault-scenario entry point (PR 7): a crash storm is
+    // just a FaultScript with no message faults or suspicion windows.
+    let script = FaultScript {
+        crashes: vec![CrashEvent {
             at_ns: crash_at,
             cns: vec![0, 1, 2],
         }],
-    )?;
+        ..FaultScript::default()
+    };
+    let report = cluster.run_with_faults(SystemKind::Lotus, &script)?;
     let t = &report.timeline;
     let to_mtps = |c: u64| c as f64 / (cfg.timeline_interval_ns as f64 / 1e9) / 1e6;
     let peak = t.iter().copied().max().unwrap_or(1).max(1);
@@ -54,6 +57,20 @@ fn main() -> lotus::Result<()> {
         (1.0 - dip / before) * 100.0
     );
     println!("recovery to 90%      : ~{recover_ms} ms after the crash (paper: 233 ms incl. restart)");
+    // The recovery passes themselves (PR 8: pushed onto the cluster by
+    // the recovery driver).
+    for rec in cluster.shared.recovery_reports.lock().unwrap().iter() {
+        println!(
+            "recovery pass        : {} logs scanned, {} completed, {} rolled back, \
+             {} torn slots discarded, {} locks released in {:.1} us",
+            rec.scanned_logs,
+            rec.completed,
+            rec.rolled_back,
+            rec.torn_slots_discarded,
+            rec.released_locks,
+            rec.duration_ns as f64 / 1e3
+        );
+    }
     let held: usize = cluster
         .shared
         .lock_services

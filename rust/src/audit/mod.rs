@@ -1,0 +1,189 @@
+//! Crash-consistency audits (PR 8).
+//!
+//! This module centralizes the *invariants* the crash-point sweep
+//! ([`crate::sim::crashsweep`]) asserts after every crash/recovery
+//! cycle, plus the [`RingTrace`] instrumentation the sweep uses to
+//! enumerate its crash points (the virtual times at which a CN rings —
+//! or has just completed — a doorbell, i.e. the boundaries where a
+//! crash can tear distributed state).
+//!
+//! The invariants, checked directly against MN-resident bytes (not
+//! against any coordinator-side bookkeeping):
+//!
+//! 1. **Money conservation** — `sum(balances) == initial + net_injected`.
+//!    Under the [`transfers-only`](crate::workloads::smallbank::SmallBankWorkload::transfers_only)
+//!    mix `net_injected == 0`, so this is exact at *arbitrary* crash
+//!    points. A torn commit that recovery half-applied (some cells
+//!    rolled forward, some back) or a resurrected aborted write shows
+//!    up here as a sum drift — this one check subsumes both
+//!    "committed-stays-committed" and "no resurrected aborts" for a
+//!    conserving workload.
+//! 2. **Zero held lock slots** — after recovery, no CN-side lock table
+//!    retains a slot (orphaned locks would wedge the bank forever).
+//! 3. **Replica agreement** — every account's record is present and
+//!    byte-identical on every replica.
+//!
+//! Deliberately *not* an invariant: "no PREPARED log slot at rest".
+//! Survivor CNs keep running during recovery; their in-flight commits
+//! legitimately hold PREPARED slots at any instant we look.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use crate::txn::coordinator::SharedCluster;
+use crate::util::bytes::get_u64;
+use crate::workloads::smallbank::{SmallBankWorkload, CHECKING, SAVINGS};
+use crate::{Error, Result};
+
+/// Issue-point boundary trace: records `(cn, t_ns)` on both sides of
+/// every doorbell ring — immediately before the ring is issued and at
+/// each lane's completion time. The crash-point sweep replays a
+/// reference run with this enabled, then crashes a CN at each recorded
+/// boundary in follow-up runs.
+///
+/// Disabled (the default) it is a single relaxed load per ring — the
+/// hot path of normal runs stays unaffected.
+#[derive(Default)]
+pub struct RingTrace {
+    enabled: AtomicBool,
+    points: Mutex<Vec<(usize, u64)>>,
+}
+
+impl RingTrace {
+    /// Start recording (clears any previously recorded points).
+    pub fn enable(&self) {
+        self.points.lock().unwrap().clear();
+        self.enabled.store(true, Ordering::Release);
+    }
+
+    /// Stop recording (recorded points stay until [`RingTrace::take`]).
+    pub fn disable(&self) {
+        self.enabled.store(false, Ordering::Release);
+    }
+
+    /// Record a ring boundary on `cn` at virtual time `t_ns`.
+    #[inline]
+    pub fn record(&self, cn: usize, t_ns: u64) {
+        if !self.enabled.load(Ordering::Relaxed) {
+            return;
+        }
+        self.points.lock().unwrap().push((cn, t_ns));
+    }
+
+    /// Drain the recorded `(cn, t_ns)` boundaries.
+    pub fn take(&self) -> Vec<(usize, u64)> {
+        std::mem::take(&mut *self.points.lock().unwrap())
+    }
+}
+
+/// What [`Invariants::check`] measured (all checks already passed if
+/// you hold one of these — failures return `Err`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AuditReport {
+    /// Sum of all savings+checking balances read from the primaries.
+    pub total_balance: u128,
+    /// What the sum must equal: `initial + net_injected`.
+    pub expected_balance: i128,
+    /// Accounts audited (2 records each).
+    pub accounts_checked: u64,
+    /// Sum of held lock slots across all CN lock services (must be 0).
+    pub held_lock_slots: usize,
+}
+
+/// The crash-consistency invariant checker.
+pub struct Invariants;
+
+impl Invariants {
+    /// Audit `cluster` against `bank` after a quiesced run (all
+    /// coordinators done, recovery — if any — complete). Returns the
+    /// measurements on success; the *first* violated invariant as
+    /// `Error::Runtime` otherwise.
+    pub fn check(cluster: &SharedCluster, bank: &SmallBankWorkload) -> Result<AuditReport> {
+        // (2) No orphaned lock slots anywhere.
+        let held: usize = cluster.lock_services.iter().map(|s| s.held_slots()).sum();
+        if held != 0 {
+            return Err(Error::Runtime(format!(
+                "audit: {held} lock slots still held after recovery"
+            )));
+        }
+
+        // (1) + (3): sum balances off the primaries, byte-compare every
+        // replica along the way.
+        let n = bank.n_accounts();
+        let replicas = cluster.cfg.replicas;
+        let mut total: u128 = 0;
+        for acc in 0..n {
+            for table_id in [SAVINGS, CHECKING] {
+                let key = SmallBankWorkload::key(table_id, acc);
+                let table = cluster.table(table_id);
+                let primary = table.load_get(&cluster.mns, 0, key).ok_or_else(|| {
+                    Error::Runtime(format!(
+                        "audit: account {acc} table {table_id} vanished from primary"
+                    ))
+                })?;
+                for r in 1..replicas {
+                    let backup = table.load_get(&cluster.mns, r, key);
+                    if backup.as_deref() != Some(&primary[..]) {
+                        return Err(Error::Runtime(format!(
+                            "audit: account {acc} table {table_id} diverges on \
+                             replica {r}: primary={primary:?} backup={backup:?}"
+                        )));
+                    }
+                }
+                total += get_u64(&primary, 0) as u128;
+            }
+        }
+
+        let expected = SmallBankWorkload::initial_total(n) as i128 + bank.net_injected();
+        if total as i128 != expected {
+            return Err(Error::Runtime(format!(
+                "audit: money not conserved: sum(balances)={total} but \
+                 initial+net_injected={expected} (drift {})",
+                total as i128 - expected
+            )));
+        }
+
+        Ok(AuditReport {
+            total_balance: total,
+            expected_balance: expected,
+            accounts_checked: n,
+            held_lock_slots: held,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_trace_records_nothing() {
+        let t = RingTrace::default();
+        t.record(0, 100);
+        t.record(1, 200);
+        assert!(t.take().is_empty());
+    }
+
+    #[test]
+    fn enabled_trace_collects_and_take_drains() {
+        let t = RingTrace::default();
+        t.enable();
+        t.record(0, 100);
+        t.record(2, 250);
+        t.disable();
+        t.record(0, 300); // after disable: dropped
+        assert_eq!(t.take(), vec![(0, 100), (2, 250)]);
+        assert!(t.take().is_empty(), "take drains");
+    }
+
+    #[test]
+    fn enable_clears_stale_points() {
+        let t = RingTrace::default();
+        t.enable();
+        t.record(0, 1);
+        t.disable();
+        t.enable();
+        t.record(1, 2);
+        assert_eq!(t.take(), vec![(1, 2)]);
+    }
+}

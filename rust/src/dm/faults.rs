@@ -24,6 +24,22 @@
 //! An injector with no rules is **byte-inert**: every message maps to
 //! [`FaultAction::Deliver`] and the fabric charges exactly what it
 //! charges with no injector installed.
+//!
+//! # Doorbell plane (PR 8)
+//!
+//! The one-sided CN→MN verb path has its own fault vocabulary:
+//! [`FaultMode::MnUnreachable`] (an MN stops answering for a window),
+//! [`FaultMode::MnDelay`] (PCIe/fabric hiccup on the ring), and
+//! [`FaultMode::TornBatch`] — the crash-consistency one — which lands
+//! only a deterministic *prefix* of a doorbell's WQEs (plus a byte
+//! prefix of the first cut WRITE, so a commit-log slot can land torn
+//! mid-record). [`Endpoint::doorbell`](crate::dm::verbs::Endpoint)
+//! consults [`FaultInjector::decide_doorbell`] once per ring; the three
+//! doorbell modes are invisible to the RPC plane's `decide`, and vice
+//! versa, so arming one plane never perturbs the other's coin stream.
+//! For doorbell rules the `dst` filter selects the **MN id**, not a CN.
+
+use std::sync::{Arc, RwLock};
 
 /// What a matching rule does to a message.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -39,6 +55,16 @@ pub enum FaultMode {
     GraySlow(u64),
     /// Cut the `(src, dst)` CN pair: every matching message is lost.
     Partition(usize, usize),
+    /// Doorbell plane: the named MN stops answering one-sided verbs.
+    /// No WQE of a matching ring executes; the CN sees a timeout.
+    MnUnreachable(usize),
+    /// Doorbell plane: the ring's arrival at the MN is delayed by the
+    /// given virtual ns (PCIe/fabric hiccup); all WQEs still execute.
+    MnDelay(u64),
+    /// Doorbell plane: the ring is torn — only a deterministic prefix
+    /// of its WQEs lands (plus a byte prefix of the first cut WRITE),
+    /// and the CN sees a timeout instead of completions.
+    TornBatch,
 }
 
 /// The fabric-facing verdict for one message.
@@ -52,6 +78,26 @@ pub enum FaultAction {
     Delay(u64),
     /// Handler service time multiplied by the given factor (>= 1).
     Slow(u64),
+}
+
+/// The verdict for one doorbell ring on the CN→MN verb plane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DoorbellFault {
+    /// No fault: every WQE executes and completes normally.
+    Deliver,
+    /// The MN never answers: no WQE executes, the CN times out.
+    Unreachable,
+    /// Every WQE executes, but arrival is delayed by the given ns.
+    Delay(u64),
+    /// Torn ring: WQEs `0..keep_ops` execute fully; the WQE at
+    /// `keep_ops` (if a WRITE) lands only `partial_permille`/1000 of
+    /// its payload bytes; everything after is lost; the CN times out.
+    Torn {
+        /// Number of leading WQEs that land completely (< ring size).
+        keep_ops: usize,
+        /// Byte prefix of the first cut WRITE, in permille of its len.
+        partial_permille: u32,
+    },
 }
 
 /// One fault shape, active over a virtual-time window, applied with a
@@ -92,6 +138,32 @@ impl FaultRule {
     /// Cut every message from `src` to `dst` (a one-way partition).
     pub fn partition(src: usize, dst: usize) -> Self {
         Self::new(FaultMode::Partition(src, dst), 1000)
+    }
+
+    /// Doorbell plane: MN `mn` answers no one-sided verbs (combine with
+    /// [`window`](Self::window) for an outage interval).
+    pub fn mn_unreachable(mn: usize) -> Self {
+        Self::new(FaultMode::MnUnreachable(mn), 1000)
+    }
+
+    /// Doorbell plane: delay `prob_permille`/1000 of matching rings by
+    /// `delay_ns` (the `dst` filter selects an MN id).
+    pub fn mn_delay(delay_ns: u64, prob_permille: u32) -> Self {
+        Self::new(FaultMode::MnDelay(delay_ns), prob_permille)
+    }
+
+    /// Doorbell plane: tear `prob_permille`/1000 of matching rings,
+    /// landing only a deterministic prefix of their WQEs.
+    pub fn torn_batch(prob_permille: u32) -> Self {
+        Self::new(FaultMode::TornBatch, prob_permille)
+    }
+
+    /// Is this a doorbell-plane (CN→MN verbs) rule?
+    fn is_doorbell(&self) -> bool {
+        matches!(
+            self.mode,
+            FaultMode::MnUnreachable(_) | FaultMode::MnDelay(_) | FaultMode::TornBatch
+        )
     }
 
     fn new(mode: FaultMode, prob_permille: u32) -> Self {
@@ -175,7 +247,9 @@ impl FaultInjector {
         n_reqs: u64,
     ) -> FaultAction {
         for (i, r) in self.rules.iter().enumerate() {
-            if !r.matches(src_cn, dst_cn, t_send) {
+            // Doorbell-plane rules never touch RPC messages (and never
+            // perturb this plane's coin stream — coins are per-rule).
+            if r.is_doorbell() || !r.matches(src_cn, dst_cn, t_send) {
                 continue;
             }
             if r.prob_permille < 1000
@@ -187,9 +261,64 @@ impl FaultInjector {
                 FaultMode::Drop | FaultMode::Partition(..) => FaultAction::Drop,
                 FaultMode::Delay(ns) => FaultAction::Delay(ns),
                 FaultMode::GraySlow(mult) => FaultAction::Slow(mult.max(1)),
+                FaultMode::MnUnreachable(_) | FaultMode::MnDelay(_) | FaultMode::TornBatch => {
+                    unreachable!("doorbell rules filtered above")
+                }
             };
         }
         FaultAction::Deliver
+    }
+
+    /// The deterministic verdict for one doorbell ring of `n_ops` WQEs
+    /// from CN `src_cn` to MN `mn`, rung at virtual time `t_ring`. Pure
+    /// in `(seed, rules, src_cn, mn, t_ring, n_ops)`; RPC-plane rules
+    /// are skipped, so arming the RPC plane leaves this plane inert.
+    pub fn decide_doorbell(
+        &self,
+        src_cn: usize,
+        mn: usize,
+        t_ring: u64,
+        n_ops: usize,
+    ) -> DoorbellFault {
+        for (i, r) in self.rules.iter().enumerate() {
+            if !r.is_doorbell() || !r.matches(src_cn, mn, t_ring) {
+                continue;
+            }
+            if let FaultMode::MnUnreachable(m) = r.mode {
+                if m != mn {
+                    continue;
+                }
+            }
+            if r.prob_permille < 1000
+                && self.coin(i, src_cn, mn, DOORBELL_PLANE, t_ring, n_ops as u64)
+                    >= r.prob_permille
+            {
+                continue;
+            }
+            return match r.mode {
+                FaultMode::MnUnreachable(_) => DoorbellFault::Unreachable,
+                FaultMode::MnDelay(ns) => DoorbellFault::Delay(ns),
+                FaultMode::TornBatch => {
+                    // A second, independent hash picks where the tear
+                    // lands: a strict WQE prefix plus a byte prefix of
+                    // the first cut WRITE.
+                    let h = self.hash(
+                        i,
+                        src_cn,
+                        mn,
+                        DOORBELL_PLANE + 1,
+                        t_ring,
+                        n_ops as u64,
+                    );
+                    DoorbellFault::Torn {
+                        keep_ops: (h % n_ops.max(1) as u64) as usize,
+                        partial_permille: ((h >> 32) % 1000) as u32,
+                    }
+                }
+                _ => unreachable!("non-doorbell rules filtered above"),
+            };
+        }
+        DoorbellFault::Deliver
     }
 
     /// Per-(rule, message) coin in 0..1000.
@@ -202,6 +331,19 @@ impl FaultInjector {
         t_send: u64,
         n_reqs: u64,
     ) -> u32 {
+        (self.hash(rule_idx, src_cn, dst_cn, slot, t_send, n_reqs) % 1000) as u32
+    }
+
+    /// The full 64-bit pure hash behind [`coin`](Self::coin).
+    fn hash(
+        &self,
+        rule_idx: usize,
+        src_cn: usize,
+        dst_cn: usize,
+        slot: usize,
+        t_send: u64,
+        n_reqs: u64,
+    ) -> u64 {
         let mut h = self
             .seed
             .wrapping_add((rule_idx as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
@@ -214,7 +356,38 @@ impl FaultInjector {
         ] {
             h = mix(h ^ v);
         }
-        (h % 1000) as u32
+        h
+    }
+}
+
+/// Slot-coordinate salt separating the doorbell plane's coin stream
+/// from the RPC plane's (which uses real slot indices).
+const DOORBELL_PLANE: usize = 0xD00B_E11;
+
+/// A late-binding slot for an injector shared by every [`Endpoint`]
+/// (`crate::dm::verbs::Endpoint`) of a cluster. Endpoints are built
+/// once at cluster construction; `run_with_faults` installs the run's
+/// script here and clears it afterwards. An empty cell (or an installed
+/// injector with no doorbell rules) leaves the plane byte-inert.
+#[derive(Debug, Default)]
+pub struct FaultsCell {
+    inner: RwLock<Option<Arc<FaultInjector>>>,
+}
+
+impl FaultsCell {
+    /// An empty (inert) cell.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Install (or, with `None`, clear) the active injector.
+    pub fn install(&self, inj: Option<Arc<FaultInjector>>) {
+        *self.inner.write().unwrap() = inj;
+    }
+
+    /// The currently installed injector, if any.
+    pub fn snapshot(&self) -> Option<Arc<FaultInjector>> {
+        self.inner.read().unwrap().clone()
     }
 }
 
@@ -303,6 +476,89 @@ mod tests {
             .rule(FaultRule::delay(99, 1000));
         assert_eq!(inj.decide(0, 1, 0, 0, 1), FaultAction::Drop);
         assert_eq!(inj.decide(0, 2, 0, 0, 1), FaultAction::Delay(99));
+    }
+
+    #[test]
+    fn doorbell_rules_are_invisible_to_the_rpc_plane_and_vice_versa() {
+        let inj = FaultInjector::new(11)
+            .rule(FaultRule::mn_unreachable(0))
+            .rule(FaultRule::torn_batch(1000))
+            .rule(FaultRule::mn_delay(5_000, 1000));
+        for t in (0..50_000).step_by(313) {
+            assert_eq!(inj.decide(0, 1, 0, t, 3), FaultAction::Deliver);
+        }
+        let rpc_only = FaultInjector::new(11)
+            .rule(FaultRule::drop(1000))
+            .rule(FaultRule::gray_slow(8, 1000))
+            .rule(FaultRule::partition(0, 1));
+        for t in (0..50_000).step_by(313) {
+            assert_eq!(rpc_only.decide_doorbell(0, 1, t, 4), DoorbellFault::Deliver);
+        }
+    }
+
+    #[test]
+    fn mn_unreachable_hits_only_the_named_mn_inside_its_window() {
+        let inj = FaultInjector::new(2)
+            .rule(FaultRule::mn_unreachable(1).window(1_000, 2_000));
+        assert_eq!(inj.decide_doorbell(0, 1, 999, 2), DoorbellFault::Deliver);
+        assert_eq!(inj.decide_doorbell(0, 1, 1_000, 2), DoorbellFault::Unreachable);
+        assert_eq!(inj.decide_doorbell(2, 1, 1_999, 8), DoorbellFault::Unreachable);
+        assert_eq!(inj.decide_doorbell(0, 0, 1_500, 2), DoorbellFault::Deliver, "other MN");
+        assert_eq!(inj.decide_doorbell(0, 1, 2_000, 2), DoorbellFault::Deliver);
+    }
+
+    #[test]
+    fn torn_batch_keeps_a_strict_prefix_deterministically() {
+        let inj = FaultInjector::new(77).rule(FaultRule::torn_batch(1000).from_src(0));
+        for t in (0..100_000).step_by(997) {
+            for n in 1..=9usize {
+                match inj.decide_doorbell(0, 1, t, n) {
+                    DoorbellFault::Torn {
+                        keep_ops,
+                        partial_permille,
+                    } => {
+                        assert!(keep_ops < n, "tear must cut at least one WQE");
+                        assert!(partial_permille < 1000);
+                        // Pure function of the coordinates.
+                        assert_eq!(
+                            inj.decide_doorbell(0, 1, t, n),
+                            DoorbellFault::Torn {
+                                keep_ops,
+                                partial_permille
+                            }
+                        );
+                    }
+                    other => panic!("permille 1000 must tear, got {other:?}"),
+                }
+            }
+            // src filter: other CNs untouched.
+            assert_eq!(inj.decide_doorbell(1, 1, t, 4), DoorbellFault::Deliver);
+        }
+    }
+
+    #[test]
+    fn mn_delay_lands_with_its_permille_coin() {
+        let inj = FaultInjector::new(6).rule(FaultRule::mn_delay(9_999, 500));
+        let (mut delayed, mut clean) = (0, 0);
+        for i in 0..2_000u64 {
+            match inj.decide_doorbell(0, 1, i * 41, 3) {
+                DoorbellFault::Delay(9_999) => delayed += 1,
+                DoorbellFault::Deliver => clean += 1,
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert!(delayed > 600 && clean > 600, "~50/50: {delayed}/{clean}");
+    }
+
+    #[test]
+    fn faults_cell_starts_inert_and_round_trips_an_injector() {
+        let cell = FaultsCell::new();
+        assert!(cell.snapshot().is_none());
+        let inj = Arc::new(FaultInjector::new(1).rule(FaultRule::torn_batch(1000)));
+        cell.install(Some(inj.clone()));
+        assert!(cell.snapshot().is_some_and(|i| !i.is_empty()));
+        cell.install(None);
+        assert!(cell.snapshot().is_none());
     }
 
     #[test]

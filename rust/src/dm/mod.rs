@@ -30,10 +30,10 @@ pub mod rpc;
 pub mod verbs;
 
 pub use clock::{TimeGate, VClock};
-pub use faults::{FaultAction, FaultInjector, FaultMode, FaultRule};
+pub use faults::{DoorbellFault, FaultAction, FaultInjector, FaultMode, FaultRule, FaultsCell};
 pub use memnode::{MemNode, MemRegion};
 pub use netconfig::NetConfig;
 pub use opbatch::{BatchResult, MergedBatch, MergedResult, OpBatch, OpTag};
 pub use rnic::Rnic;
 pub use rpc::RpcFabric;
-pub use verbs::{Endpoint, VerbOp};
+pub use verbs::{Endpoint, RingOutcome, VerbOp};

@@ -284,10 +284,11 @@ impl BatchResult {
 ///
 /// // ...and each frame gets its own results + completion time back.
 /// let mut res = m.issue_timed(&ep, std::slice::from_ref(&mn), 0, |_| false).unwrap();
-/// let (_ra, t_a) = res.take(sa);
-/// let (rb, t_b) = res.take(sb);
+/// let (_ra, t_a, ok_a) = res.take(sa);
+/// let (rb, t_b, ok_b) = res.take(sb);
 /// assert_eq!(rb.read_buf(tb), &7u64.to_le_bytes()[..]);
 /// assert!(t_a > 0 && t_b >= t_a);
+/// assert!(ok_a && ok_b, "no injector installed: nothing faulted");
 /// # let _ = ta;
 /// ```
 #[derive(Debug, Default)]
@@ -361,9 +362,12 @@ impl MergedBatch {
         mut is_ride: F,
     ) -> Result<MergedResult> {
         let mut per_group: Vec<Vec<u64>> = Vec::with_capacity(self.inner.groups.len());
+        let mut group_faulted: Vec<bool> = Vec::with_capacity(self.inner.groups.len());
         for (mn_id, ops) in self.inner.groups.iter_mut() {
             let ride = is_ride(*mn_id);
-            per_group.push(ep.doorbell_timed(&mns[*mn_id], ops, t_start, ride)?);
+            let out = ep.doorbell_timed(&mns[*mn_id], ops, t_start, ride)?;
+            per_group.push(out.done);
+            group_faulted.push(out.faulted);
         }
         let completion = self
             .inner
@@ -375,6 +379,7 @@ impl MergedBatch {
             groups: self.inner.groups,
             index: self.inner.index,
             completion,
+            group_faulted,
             slices: self.slices,
         })
     }
@@ -387,6 +392,8 @@ pub struct MergedResult {
     index: Vec<(usize, usize)>,
     /// Per merged tag: op completion time (MN done + return half-RTT).
     completion: Vec<u64>,
+    /// Per group: did an injected doorbell fault hit the group's ring?
+    group_faulted: Vec<bool>,
     slices: Vec<Vec<usize>>,
 }
 
@@ -394,12 +401,16 @@ impl MergedResult {
     /// Extract one absorbed plan's results: a [`BatchResult`] addressed by
     /// the plan's **original** [`OpTag`]s, plus the completion time of the
     /// plan's slowest op (0 for an empty plan) — the only amount the
-    /// owning frame's clock must be advanced by. Each slice can be taken
-    /// once; taking it again yields an empty result.
-    pub fn take(&mut self, slice: usize) -> (BatchResult, u64) {
+    /// owning frame's clock must be advanced by — and an `ok` flag that is
+    /// false when any doorbell carrying the plan's ops was hit by an
+    /// injected fault (the owner must treat the whole plan as timed out).
+    /// Each slice can be taken once; taking it again yields an empty
+    /// result.
+    pub fn take(&mut self, slice: usize) -> (BatchResult, u64, bool) {
         let remap = std::mem::take(&mut self.slices[slice]);
         let mut ops = Vec::with_capacity(remap.len());
         let mut done = 0u64;
+        let mut ok = true;
         for &m in &remap {
             let (gi, oi) = self.index[m];
             let op = std::mem::replace(
@@ -410,6 +421,7 @@ impl MergedResult {
                 },
             );
             done = done.max(self.completion[m]);
+            ok &= !self.group_faulted[gi];
             ops.push(op);
         }
         let n = ops.len();
@@ -419,6 +431,7 @@ impl MergedResult {
                 index: (0..n).map(|i| (0, i)).collect(),
             },
             done,
+            ok,
         )
     }
 }
@@ -564,8 +577,9 @@ mod tests {
             "the NIC saw exactly the merged doorbells"
         );
         for fi in (0..3usize).rev() {
-            let (_r, done) = res.take(fi);
+            let (_r, done, ok) = res.take(fi);
             assert!(done >= ep.net.rtt_ns, "frame {fi} completion {done}");
+            assert!(ok, "no injector: frame {fi} must not be faulted");
         }
         for fi in 0..3u64 {
             assert_eq!(mns[0].load_u64(r0.base + fi * 16 + 8).unwrap(), fi);
@@ -592,8 +606,8 @@ mod tests {
         let sa = m.absorb(a);
         let sb = m.absorb(b);
         let mut res = m.issue_timed(&ep, &mns, 0, |_| false).unwrap();
-        let (mut res_b, done_b) = res.take(sb);
-        let (mut res_a, done_a) = res.take(sa);
+        let (mut res_b, done_b, _) = res.take(sb);
+        let (mut res_a, done_a, _) = res.take(sa);
         assert_eq!(res_a.take_read(a0), 111u64.to_le_bytes().to_vec());
         assert_eq!(res_a.take_read(a1), 222u64.to_le_bytes().to_vec());
         assert_eq!(res_b.take_read(b0), 222u64.to_le_bytes().to_vec());
@@ -615,12 +629,46 @@ mod tests {
         let sa = m.absorb(a);
         let sb = m.absorb(b);
         let mut res = m.issue_timed(&ep, &mns, 0, |_| false).unwrap();
-        let (_ra, done_a) = res.take(sa);
-        let (_rb, done_b) = res.take(sb);
+        let (_ra, done_a, _) = res.take(sa);
+        let (_rb, done_b, _) = res.take(sb);
         assert!(
             done_a + 1000 < done_b,
             "A ({done_a}) must complete well before B ({done_b})"
         );
+    }
+
+    #[test]
+    fn faulted_group_marks_only_its_owners_not_ok() {
+        use crate::dm::faults::{FaultInjector, FaultRule, FaultsCell};
+        // MN 0's ring is unreachable; MN 1 serves normally. Frame A rides
+        // both MNs (not ok), frame B touches only MN 1 (ok).
+        let (mns, ep) = setup(2);
+        let cell = Arc::new(FaultsCell::new());
+        cell.install(Some(Arc::new(
+            FaultInjector::new(5).rule(FaultRule::mn_unreachable(0)),
+        )));
+        let ep = ep.with_faults(cell);
+        let r0 = mns[0].register(64).unwrap();
+        let r1 = mns[1].register(64).unwrap();
+        let mut a = OpBatch::new();
+        a.write(0, r0.base, 7u64.to_le_bytes().to_vec());
+        a.read(1, r1.base, 8);
+        let mut b = OpBatch::new();
+        b.write(1, r1.base + 8, 8u64.to_le_bytes().to_vec());
+        let mut m = MergedBatch::new();
+        let sa = m.absorb(a);
+        let sb = m.absorb(b);
+        let mut res = m.issue_timed(&ep, &mns, 0, |_| false).unwrap();
+        let (_ra, done_a, ok_a) = res.take(sa);
+        let (_rb, _done_b, ok_b) = res.take(sb);
+        assert!(!ok_a, "frame A's MN0 ring was unreachable");
+        assert!(ok_b, "frame B never touched the faulted MN");
+        assert!(
+            done_a >= ep.doorbell_timeout_ns(),
+            "faulted completions carry the timeout: {done_a}"
+        );
+        assert_eq!(mns[0].load_u64(r0.base).unwrap(), 0, "MN0 write lost");
+        assert_eq!(mns[1].load_u64(r1.base + 8).unwrap(), 8, "MN1 write landed");
     }
 
     #[test]

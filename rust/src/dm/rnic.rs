@@ -93,6 +93,13 @@ pub struct Rnic {
     /// under suspicion (the paper's proactive-abort philosophy under
     /// graceful degradation).
     degraded_aborts: AtomicU64,
+    /// Doorbell-plane WQEs from this CN affected by an injected MN fault
+    /// (unreachable window, ring delay, or torn tail) — the one-sided
+    /// mirror of `rpc_dropped`.
+    mn_op_faults: AtomicU64,
+    /// Doorbell rings from this CN torn by `FaultMode::TornBatch` (only
+    /// a WQE prefix landed at the MN).
+    torn_batches: AtomicU64,
 }
 
 impl Rnic {
@@ -278,6 +285,18 @@ impl Rnic {
         self.degraded_aborts.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count `n_ops` doorbell-plane WQEs affected by an injected MN fault.
+    #[inline]
+    pub fn note_mn_op_faults(&self, n_ops: u64) {
+        self.mn_op_faults.fetch_add(n_ops, Ordering::Relaxed);
+    }
+
+    /// Count one doorbell ring torn by the fault injector.
+    #[inline]
+    pub fn note_torn_batch(&self) {
+        self.torn_batches.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Lock-phase RPC reissues.
     pub fn rpc_retries(&self) -> u64 {
         self.rpc_retries.load(Ordering::Relaxed)
@@ -301,6 +320,16 @@ impl Rnic {
     /// Proactive aborts against suspected owner CNs.
     pub fn degraded_aborts(&self) -> u64 {
         self.degraded_aborts.load(Ordering::Relaxed)
+    }
+
+    /// Doorbell-plane WQEs affected by injected MN faults.
+    pub fn mn_op_faults(&self) -> u64 {
+        self.mn_op_faults.load(Ordering::Relaxed)
+    }
+
+    /// Doorbell rings torn by the fault injector.
+    pub fn torn_batches(&self) -> u64 {
+        self.torn_batches.load(Ordering::Relaxed)
     }
 
     /// RPC messages sent from this CN.
@@ -434,6 +463,8 @@ impl Rnic {
         self.backoff_ns.store(0, Ordering::Relaxed);
         self.false_suspicions.store(0, Ordering::Relaxed);
         self.degraded_aborts.store(0, Ordering::Relaxed);
+        self.mn_op_faults.store(0, Ordering::Relaxed);
+        self.torn_batches.store(0, Ordering::Relaxed);
     }
 
     /// Reset the queue to idle at time zero (between benchmark runs —
@@ -575,11 +606,15 @@ mod tests {
         n.note_backoff(40_000);
         n.note_false_suspicion();
         n.note_degraded_abort();
+        n.note_mn_op_faults(6);
+        n.note_torn_batch();
         assert_eq!(n.rpc_retries(), 1);
         assert_eq!(n.rpc_dropped(), 2);
         assert_eq!(n.backoff_ns(), 40_000);
         assert_eq!(n.false_suspicions(), 1);
         assert_eq!(n.degraded_aborts(), 1);
+        assert_eq!(n.mn_op_faults(), 6);
+        assert_eq!(n.torn_batches(), 1);
         n.reset_counters();
         assert_eq!(n.rpc_messages(), 0);
         assert_eq!(n.rpc_reqs(), 0);
@@ -593,6 +628,8 @@ mod tests {
         assert_eq!(n.backoff_ns(), 0);
         assert_eq!(n.false_suspicions(), 0);
         assert_eq!(n.degraded_aborts(), 0);
+        assert_eq!(n.mn_op_faults(), 0);
+        assert_eq!(n.torn_batches(), 0);
     }
 
     #[test]

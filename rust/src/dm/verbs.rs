@@ -9,13 +9,28 @@
 //! folded into `cn_issue_ns`); CQ polling with selective signaling is
 //! likewise folded into the issue constant.
 
+//!
+//! # Fault injection (PR 8)
+//!
+//! When a [`FaultsCell`] is attached, every doorbell consults
+//! [`FaultInjector::decide_doorbell`](crate::dm::faults::FaultInjector::decide_doorbell)
+//! once per ring: an unreachable MN times the ring out with no WQE
+//! executed, a delayed ring lands late, and a **torn** ring executes
+//! only a WQE prefix (plus a byte prefix of the first cut WRITE — the
+//! hazard the commit log's seal defends against). Synchronous rings
+//! surface faults as [`Error::NodeUnavailable`]; fire-and-forget rings
+//! swallow them (the loss is discovered by recovery, not the caller).
+//! With no cell attached — or no doorbell rule installed — every path
+//! charges exactly what it charged before faults existed.
+
 use std::sync::Arc;
 
 use crate::dm::clock::{TimeGate, VClock};
+use crate::dm::faults::{DoorbellFault, FaultsCell};
 use crate::dm::memnode::MemNode;
 use crate::dm::netconfig::NetConfig;
 use crate::dm::rnic::Rnic;
-use crate::Result;
+use crate::{Error, Result};
 
 /// One operation inside a doorbell batch.
 #[derive(Debug)]
@@ -85,6 +100,35 @@ impl VerbOp {
             }
         }
     }
+
+    /// Torn-DMA landing: a WRITE lands only `permille`/1000 of its
+    /// payload bytes (prefix), rounded DOWN to a multiple of 8 — the
+    /// MN RNIC delivers aligned 8-byte words atomically (the standard
+    /// RDMA assumption the commit protocol leans on), so a version or
+    /// state word is all-or-nothing and only multi-word payloads
+    /// (records, log slots) can land genuinely torn. Non-WRITE verbs
+    /// are all-or-nothing at the MN RNIC, so a torn one simply does
+    /// not execute.
+    fn execute_partial(&mut self, mn: &MemNode, permille: u32) -> Result<()> {
+        if let VerbOp::Write { addr, data } = self {
+            let keep = (data.len() * permille.min(999) as usize / 1000) & !7;
+            if keep > 0 {
+                return mn.write_bytes(*addr, &data[..keep]);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-op completion times of one (possibly faulted) doorbell ring.
+#[derive(Debug)]
+pub struct RingOutcome {
+    /// Per-op completion times (for a faulted ring: the timeout at
+    /// which the CN gives up on every op of the ring).
+    pub done: Vec<u64>,
+    /// True when an injected doorbell fault hit this ring — the caller
+    /// must treat the whole ring as failed, whatever landed.
+    pub faulted: bool,
 }
 
 /// A coordinator's verb endpoint (shares the CN NIC with its siblings).
@@ -99,6 +143,8 @@ pub struct Endpoint {
     /// Conservative-PDES gate: synced before every fabric charge so
     /// arrivals at shared queues are (nearly) ordered in virtual time.
     gate: Option<(Arc<TimeGate>, usize)>,
+    /// Late-binding doorbell-plane fault injector (empty = inert).
+    faults: Option<Arc<FaultsCell>>,
 }
 
 impl Endpoint {
@@ -109,12 +155,35 @@ impl Endpoint {
             nic,
             net,
             gate: None,
+            faults: None,
         }
     }
 
     /// Attach the run's time gate (coordinator id `gid`).
     pub fn attach_gate(&mut self, gate: Arc<TimeGate>, gid: usize) {
         self.gate = Some((gate, gid));
+    }
+
+    /// Attach the cluster's doorbell-plane fault cell (builder style).
+    pub fn with_faults(mut self, cell: Arc<FaultsCell>) -> Self {
+        self.faults = Some(cell);
+        self
+    }
+
+    /// The deterministic fault verdict for one ring to MN `mn` at
+    /// virtual time `t_ring`. [`DoorbellFault::Deliver`] when no cell
+    /// is attached or no doorbell rule matches.
+    fn ring_fault(&self, mn: usize, t_ring: u64, n_ops: usize) -> DoorbellFault {
+        match self.faults.as_ref().and_then(|c| c.snapshot()) {
+            Some(inj) => inj.decide_doorbell(self.cn, mn, t_ring, n_ops),
+            None => DoorbellFault::Deliver,
+        }
+    }
+
+    /// How long a CN waits on a doorbell's completions before declaring
+    /// the MN unavailable (mirror of the RPC plane's timeout contract).
+    pub fn doorbell_timeout_ns(&self) -> u64 {
+        self.net.rtt_ns * 4
     }
 
     /// Publish + bound this coordinator's clock before touching a queue.
@@ -149,12 +218,52 @@ impl Endpoint {
             return Ok(());
         }
         self.gate_sync(clk);
+        let fault = self.ring_fault(mn.id, clk.now(), ops.len());
         self.nic.ring(ops.len() as u64);
         let t_issue = self.nic.charge(
             clk.now(),
             self.net.doorbell_ns + self.net.cn_issue_ns * ops.len() as u64,
         );
-        let t_arrive = t_issue + self.net.rtt_ns / 2;
+        let mut t_arrive = t_issue + self.net.rtt_ns / 2;
+        match fault {
+            DoorbellFault::Deliver => {}
+            DoorbellFault::Delay(ns) => {
+                self.nic.note_mn_op_faults(ops.len() as u64);
+                t_arrive += ns;
+            }
+            DoorbellFault::Unreachable => {
+                // The MN never serves the ring: no WQE executes and the
+                // CN only learns at the completion timeout.
+                self.nic.note_mn_op_faults(ops.len() as u64);
+                clk.catch_up(t_issue + self.doorbell_timeout_ns());
+                return Err(Error::NodeUnavailable(format!(
+                    "mn{} (doorbell timeout)",
+                    mn.id
+                )));
+            }
+            DoorbellFault::Torn {
+                keep_ops,
+                partial_permille,
+            } => {
+                // A WQE prefix lands (consuming MN service), the rest is
+                // lost; the CN sees missing completions and times out.
+                self.nic.note_torn_batch();
+                self.nic.note_mn_op_faults((ops.len() - keep_ops) as u64);
+                for op in ops[..keep_ops].iter_mut() {
+                    mn.rnic.charge(t_arrive, op.svc(&self.net));
+                    op.execute(mn)?;
+                }
+                if let Some(op) = ops.get_mut(keep_ops) {
+                    mn.rnic.charge(t_arrive, op.svc(&self.net));
+                    op.execute_partial(mn, partial_permille)?;
+                }
+                clk.catch_up(t_issue + self.doorbell_timeout_ns());
+                return Err(Error::NodeUnavailable(format!(
+                    "mn{} (torn doorbell)",
+                    mn.id
+                )));
+            }
+        }
         let mut t_done = t_arrive;
         for op in ops.iter_mut() {
             t_done = mn.rnic.charge(t_arrive, op.svc(&self.net));
@@ -181,10 +290,14 @@ impl Endpoint {
         ops: &mut [VerbOp],
         t_start: u64,
         ride: bool,
-    ) -> Result<Vec<u64>> {
+    ) -> Result<RingOutcome> {
         if ops.is_empty() {
-            return Ok(Vec::new());
+            return Ok(RingOutcome {
+                done: Vec::new(),
+                faulted: false,
+            });
         }
+        let fault = self.ring_fault(mn.id, t_start, ops.len());
         if ride {
             self.nic.note_coalesced(ops.len() as u64);
         } else {
@@ -194,14 +307,52 @@ impl Endpoint {
         let t_issue = self
             .nic
             .charge(t_start, overhead + self.net.cn_issue_ns * ops.len() as u64);
-        let t_arrive = t_issue + self.net.rtt_ns / 2;
+        let mut t_arrive = t_issue + self.net.rtt_ns / 2;
+        match fault {
+            DoorbellFault::Deliver => {}
+            DoorbellFault::Delay(ns) => {
+                self.nic.note_mn_op_faults(ops.len() as u64);
+                t_arrive += ns;
+            }
+            DoorbellFault::Unreachable => {
+                self.nic.note_mn_op_faults(ops.len() as u64);
+                let t_out = t_issue + self.doorbell_timeout_ns();
+                return Ok(RingOutcome {
+                    done: vec![t_out; ops.len()],
+                    faulted: true,
+                });
+            }
+            DoorbellFault::Torn {
+                keep_ops,
+                partial_permille,
+            } => {
+                self.nic.note_torn_batch();
+                self.nic.note_mn_op_faults((ops.len() - keep_ops) as u64);
+                for op in ops[..keep_ops].iter_mut() {
+                    mn.rnic.charge(t_arrive, op.svc(&self.net));
+                    op.execute(mn)?;
+                }
+                if let Some(op) = ops.get_mut(keep_ops) {
+                    mn.rnic.charge(t_arrive, op.svc(&self.net));
+                    op.execute_partial(mn, partial_permille)?;
+                }
+                let t_out = t_issue + self.doorbell_timeout_ns();
+                return Ok(RingOutcome {
+                    done: vec![t_out; ops.len()],
+                    faulted: true,
+                });
+            }
+        }
         let mut completions = Vec::with_capacity(ops.len());
         for op in ops.iter_mut() {
             let t_done = mn.rnic.charge(t_arrive, op.svc(&self.net));
             op.execute(mn)?;
             completions.push(t_done + self.net.rtt_ns / 2);
         }
-        Ok(completions)
+        Ok(RingOutcome {
+            done: completions,
+            faulted: false,
+        })
     }
 
     /// Fire-and-forget batch: charges the NICs but advances the caller's
@@ -213,12 +364,46 @@ impl Endpoint {
             return Ok(());
         }
         self.gate_sync(clk);
+        let fault = self.ring_fault(mn.id, clk.now(), ops.len());
         self.nic.ring(ops.len() as u64);
         let t_issue = self.nic.charge(
             clk.now(),
             self.net.doorbell_ns + self.net.cn_issue_ns * ops.len() as u64,
         );
-        let t_arrive = t_issue + self.net.rtt_ns / 2;
+        let mut t_arrive = t_issue + self.net.rtt_ns / 2;
+        // Fire-and-forget: the caller never observes completions, so
+        // faults are swallowed — whatever fails to land is discovered by
+        // recovery (e.g. a lost commit-log clear leaves a stale PREPARED
+        // slot that recovery completes idempotently).
+        match fault {
+            DoorbellFault::Deliver => {}
+            DoorbellFault::Delay(ns) => {
+                self.nic.note_mn_op_faults(ops.len() as u64);
+                t_arrive += ns;
+            }
+            DoorbellFault::Unreachable => {
+                self.nic.note_mn_op_faults(ops.len() as u64);
+                clk.catch_up(t_issue);
+                return Ok(());
+            }
+            DoorbellFault::Torn {
+                keep_ops,
+                partial_permille,
+            } => {
+                self.nic.note_torn_batch();
+                self.nic.note_mn_op_faults((ops.len() - keep_ops) as u64);
+                for op in ops[..keep_ops].iter_mut() {
+                    mn.rnic.charge(t_arrive, op.svc(&self.net));
+                    op.execute(mn)?;
+                }
+                if let Some(op) = ops.get_mut(keep_ops) {
+                    mn.rnic.charge(t_arrive, op.svc(&self.net));
+                    op.execute_partial(mn, partial_permille)?;
+                }
+                clk.catch_up(t_issue);
+                return Ok(());
+            }
+        }
         for op in ops.iter_mut() {
             mn.rnic.charge(t_arrive, op.svc(&self.net));
             op.execute(mn)?;
@@ -428,5 +613,134 @@ mod tests {
         let mut clk = VClock::zero();
         assert_eq!(ep.faa(&mn, r.base, 2, &mut clk).unwrap(), 0);
         assert_eq!(ep.faa(&mn, r.base, 2, &mut clk).unwrap(), 2);
+    }
+
+    use crate::dm::faults::{FaultInjector, FaultRule};
+
+    fn faulty_ep(rule: FaultRule) -> (Arc<MemNode>, Endpoint, Arc<FaultsCell>) {
+        let (mn, ep) = setup();
+        let cell = Arc::new(FaultsCell::new());
+        cell.install(Some(Arc::new(FaultInjector::new(3).rule(rule))));
+        let ep = ep.with_faults(cell.clone());
+        (mn, ep, cell)
+    }
+
+    #[test]
+    fn unreachable_mn_times_out_and_executes_nothing() {
+        let (mn, ep, _cell) = faulty_ep(FaultRule::mn_unreachable(0));
+        let r = mn.register(64).unwrap();
+        let mut clk = VClock::zero();
+        let err = ep.write(&mn, r.base, &7u64.to_le_bytes(), &mut clk);
+        assert!(matches!(err, Err(Error::NodeUnavailable(_))), "{err:?}");
+        assert_eq!(mn.load_u64(r.base).unwrap(), 0, "no byte may land");
+        assert!(
+            clk.now() >= ep.doorbell_timeout_ns(),
+            "caller burns the timeout: t={}",
+            clk.now()
+        );
+        assert_eq!(ep.nic.mn_op_faults(), 1);
+        assert_eq!(ep.nic.torn_batches(), 0);
+    }
+
+    #[test]
+    fn torn_ring_lands_a_strict_prefix_then_times_out() {
+        let (mn, ep, _cell) = faulty_ep(FaultRule::torn_batch(1000));
+        let r = mn.register(256).unwrap();
+        let mut clk = VClock::zero();
+        let mut ops: Vec<VerbOp> = (0..8)
+            .map(|i| VerbOp::Write {
+                addr: r.base + i * 8,
+                data: vec![0xAB; 8],
+            })
+            .collect();
+        let err = ep.doorbell(&mn, &mut ops, &mut clk);
+        assert!(matches!(err, Err(Error::NodeUnavailable(_))), "{err:?}");
+        assert_eq!(ep.nic.torn_batches(), 1);
+        assert!(ep.nic.mn_op_faults() >= 1);
+        // Landed WQEs form a prefix: once one op's bytes are missing,
+        // every later op's bytes must be missing too.
+        let full = u64::from_le_bytes([0xAB; 8]);
+        let landed: Vec<bool> = (0..8)
+            .map(|i| mn.load_u64(r.base + i * 8).unwrap() == full)
+            .collect();
+        let first_hole = landed.iter().position(|l| !l).expect("tear cuts >= 1 op");
+        assert!(
+            landed[first_hole..].iter().all(|l| !l),
+            "non-prefix landing: {landed:?}"
+        );
+    }
+
+    #[test]
+    fn mn_delay_still_executes_everything() {
+        let (mn, ep, _cell) = faulty_ep(FaultRule::mn_delay(50_000, 1000));
+        let r = mn.register(64).unwrap();
+        let mut clk = VClock::zero();
+        ep.write(&mn, r.base, &9u64.to_le_bytes(), &mut clk).unwrap();
+        assert_eq!(mn.load_u64(r.base).unwrap(), 9);
+        assert!(clk.now() > 50_000, "delay must be charged: t={}", clk.now());
+        assert_eq!(ep.nic.mn_op_faults(), 1);
+    }
+
+    #[test]
+    fn async_ring_swallows_faults() {
+        let (mn, ep, _cell) = faulty_ep(FaultRule::mn_unreachable(0));
+        let r = mn.register(64).unwrap();
+        let mut clk = VClock::zero();
+        let mut ops = vec![VerbOp::Write {
+            addr: r.base,
+            data: vec![5u8; 8],
+        }];
+        ep.doorbell_async(&mn, &mut ops, &mut clk).unwrap();
+        assert_eq!(mn.load_u64(r.base).unwrap(), 0, "nothing landed");
+        assert_eq!(ep.nic.mn_op_faults(), 1, "but the loss is counted");
+    }
+
+    #[test]
+    fn empty_cell_and_rpc_only_rules_leave_the_plane_byte_inert() {
+        // Three endpoints: no cell, an installed empty cell, and a cell
+        // holding RPC-plane rules only. All must charge identically.
+        let run = |ep: &Endpoint| -> (u64, Vec<u8>) {
+            let mn = Arc::new(MemNode::new(0, 1 << 16));
+            let r = mn.register(64).unwrap();
+            let mut clk = VClock::zero();
+            ep.write(&mn, r.base, b"inertness", &mut clk).unwrap();
+            let out = ep.read(&mn, r.base, 9, &mut clk).unwrap();
+            (clk.now(), out)
+        };
+        let bare = Endpoint::new(0, Arc::new(Rnic::new()), Arc::new(NetConfig::default()));
+        let empty_cell = bare.clone().with_faults(Arc::new(FaultsCell::new()));
+        let rpc_cell = Arc::new(FaultsCell::new());
+        rpc_cell.install(Some(Arc::new(
+            FaultInjector::new(9)
+                .rule(FaultRule::drop(1000))
+                .rule(FaultRule::partition(0, 1)),
+        )));
+        let rpc_only = bare.clone().with_faults(rpc_cell);
+        assert_eq!(run(&bare), run(&empty_cell));
+        assert_eq!(run(&bare), run(&rpc_only));
+    }
+
+    #[test]
+    fn timed_ring_reports_faulted_with_timeout_completions() {
+        let (mn, ep, cell) = faulty_ep(FaultRule::mn_unreachable(0).window(0, 1_000_000));
+        let r = mn.register(64).unwrap();
+        let mut ops = vec![VerbOp::Write {
+            addr: r.base,
+            data: vec![1u8; 8],
+        }];
+        let out = ep.doorbell_timed(&mn, &mut ops, 0, false).unwrap();
+        assert!(out.faulted);
+        assert_eq!(out.done.len(), 1);
+        assert!(out.done[0] >= ep.doorbell_timeout_ns());
+        assert_eq!(mn.load_u64(r.base).unwrap(), 0);
+        // Past the window the same endpoint delivers normally.
+        cell.install(Some(Arc::new(FaultInjector::new(3))));
+        let mut ops = vec![VerbOp::Write {
+            addr: r.base,
+            data: vec![1u8; 8],
+        }];
+        let out = ep.doorbell_timed(&mn, &mut ops, 2_000_000, false).unwrap();
+        assert!(!out.faulted);
+        assert_ne!(mn.load_u64(r.base).unwrap(), 0);
     }
 }

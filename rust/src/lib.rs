@@ -64,6 +64,7 @@
 //! println!("tput = {:.2} Mtxn/s, p50 = {} us", report.mtps(), report.p50_us());
 //! ```
 
+pub mod audit;
 pub mod balance;
 pub mod baselines;
 pub mod cache;

@@ -241,6 +241,13 @@ pub struct RunReport {
     /// Transactions proactively aborted because their lock owner was
     /// under suspicion.
     pub degraded_aborts: u64,
+    /// Doorbell-plane WQEs hit by an injected MN fault — unreachable
+    /// window, ring delay, or the dropped tail of a torn batch (0
+    /// without an injector; the one-sided mirror of `rpc_dropped`).
+    pub mn_op_faults: u64,
+    /// Doorbell rings of which only a WQE prefix landed at the MN
+    /// (`FaultMode::TornBatch`; 0 without an injector).
+    pub torn_batches: u64,
 }
 
 impl RunReport {
@@ -504,6 +511,8 @@ mod tests {
             backoff_ns: 0,
             false_suspicions: 0,
             degraded_aborts: 0,
+            mn_op_faults: 0,
+            torn_batches: 0,
         };
         assert!((r.mtps() - 1.0).abs() < 1e-9);
         assert!((r.doorbells_per_commit() - 4.0).abs() < 1e-9);

@@ -25,6 +25,10 @@ pub struct RecoveryReport {
     pub released_locks: usize,
     /// Surviving transactions doomed (their locks lived on a failed CN).
     pub doomed_txns: usize,
+    /// PREPARED slots whose seal did not verify (torn log writes,
+    /// PR 8): discarded — the transaction never reached its commit
+    /// point intact, so the old versions stand untouched.
+    pub torn_slots_discarded: usize,
     /// Virtual time the pass took (ns).
     pub duration_ns: u64,
 }
@@ -53,26 +57,73 @@ pub fn recover_cn_failure(
             let buf = ep.read(mn, log_addr, slot_size() as usize, clk)?;
             report.scanned_logs += 1;
             let rec = LogRecord::parse(&buf);
+            if rec.is_torn() {
+                // A PREPARED state word over a broken seal: the log
+                // write tore (crash or torn doorbell mid-slot). The
+                // transaction never reached its commit point intact —
+                // discard the slot; the old versions stand as the undo
+                // log and the lock cleanup below frees its locks.
+                report.torn_slots_discarded += 1;
+                let mut ops = [VerbOp::Write {
+                    addr: log_addr,
+                    data: STATE_EMPTY.to_le_bytes().to_vec(),
+                }];
+                ep.doorbell(mn, &mut ops, clk)?;
+                continue;
+            }
             if !rec.is_prepared() {
                 continue;
             }
-            // Read the listed CVT cells' version words.
-            let mut visible = true;
-            for e in &rec.entries {
-                let v = ep.read_u64(&cluster.mns[e.mn as usize], e.cell_addr + 8, clk)?;
-                if v == INVISIBLE {
-                    visible = false;
+            // Classify the listed CVT cells: one 16-byte read covers the
+            // cell's head word (cv | valid) and its version word. An
+            // entry whose live cv differs from the logged one has been
+            // *recycled* by a later transaction — it is not ours to roll
+            // back (doing so would destroy that transaction's committed
+            // data); it only means our slot clear raced the crash.
+            let mut ours: Vec<(usize, u64)> = Vec::new();
+            let mut any_invisible = false;
+            for (i, e) in rec.entries.iter().enumerate() {
+                let img = ep.read(&cluster.mns[e.mn as usize], e.cell_addr, 16, clk)?;
+                let live_cv = img[0];
+                let version = u64::from_le_bytes(img[8..16].try_into().unwrap());
+                if live_cv != e.cv {
+                    continue; // recycled: a later committed txn owns it now
+                }
+                ours.push((i, version));
+                if version == INVISIBLE {
+                    any_invisible = true;
                 }
             }
-            if visible {
-                // Commit already took effect (past Write Visible): the
-                // transaction "continues its commit phase" — nothing is
-                // left but the unlock, handled by the lock cleanup below.
+            if !any_invisible {
+                // Commit already took effect on every primary (past
+                // Write Visible there): the transaction "continues its
+                // commit phase" — roll the visibility sweep FORWARD
+                // onto the backups. A torn sweep may have flipped the
+                // primaries while a backup's ring was cut; a backup
+                // left INVISIBLE would serve the old version after an
+                // MN failover. The write is idempotent for backups the
+                // sweep already reached.
+                for &(i, version) in &ours {
+                    let e = &rec.entries[i];
+                    let table = cluster.table(e.table);
+                    for r in 1..table.replicas.len() {
+                        let cell_addr = table.to_replica_addr(e.cell_addr, r);
+                        let mut ops = [VerbOp::Write {
+                            addr: cell_addr + 8,
+                            data: version.to_le_bytes().to_vec(),
+                        }];
+                        ep.doorbell(&cluster.mns[table.replicas[r].mn], &mut ops, clk)?;
+                    }
+                }
                 report.completed += 1;
             } else {
-                // Not yet visible: abort. Invalidate the new cells (old
-                // versions are the undo log) on every replica.
-                for e in &rec.entries {
+                // Some versions still INVISIBLE: abort. Invalidate every
+                // cell the transaction still owns — including ones a
+                // torn visibility sweep already flipped, so the undo is
+                // atomic (old versions are the undo log) — on every
+                // replica.
+                for &(i, _) in &ours {
+                    let e = &rec.entries[i];
                     let table = cluster.table(e.table);
                     for r in 0..table.replicas.len() {
                         let cell_addr = table.to_replica_addr(e.cell_addr, r);
@@ -288,6 +339,7 @@ mod tests {
             vec![crate::txn::log::LogEntry {
                 table: 0,
                 mn: table.primary().mn as u16,
+                cv: 1,
                 cell_addr,
             }],
         )
@@ -321,12 +373,17 @@ mod tests {
         let (slot, _cvt) = table.find_in_bucket(&bucket_buf, key).unwrap();
         // Cell 0 is the loaded, *visible* version — log points at it.
         let cell_addr = table.cvt_addr(0, bucket, slot) + table.layout.cell_off(0);
+        let mut cell_img = vec![0u8; 16];
+        c.mns[table.primary().mn]
+            .read_bytes(cell_addr, &mut cell_img)
+            .unwrap();
         let (log_mn, log_addr) = c.log_slots[1];
         let log = LogRecord::prepared(
             8888,
             vec![crate::txn::log::LogEntry {
                 table: 0,
                 mn: table.primary().mn as u16,
+                cv: cell_img[0],
                 cell_addr,
             }],
         )
@@ -338,6 +395,95 @@ mod tests {
         assert_eq!(rep.rolled_back, 0);
         // Data untouched.
         assert_eq!(table.load_get(&c.mns, 0, key).unwrap(), b"v-9");
+    }
+
+    #[test]
+    fn torn_prepared_slot_is_discarded_never_replayed() {
+        // PR 8: a torn commit-log write (strict prefix of the slot image
+        // landed) reads as PREPARED over a broken seal. Recovery must
+        // discard it — not roll anything back, not complete anything —
+        // and the old versions must stand untouched.
+        let (c, _coords) = mini();
+        let table = c.table(0);
+        let key = LotusKey::compose(11, 11);
+        let bucket = table.bucket_of(key);
+        let mut bucket_buf = vec![0u8; table.layout.bucket_size() as usize];
+        c.mns[table.primary().mn]
+            .read_bytes(table.bucket_addr(0, bucket), &mut bucket_buf)
+            .unwrap();
+        let (slot, _cvt) = table.find_in_bucket(&bucket_buf, key).unwrap();
+        let cell_addr = table.cvt_addr(0, bucket, slot) + table.layout.cell_off(0);
+        let full = LogRecord::prepared(
+            4242,
+            vec![crate::txn::log::LogEntry {
+                table: 0,
+                mn: table.primary().mn as u16,
+                cv: 1,
+                cell_addr,
+            }],
+        )
+        .unwrap()
+        .serialize();
+        // Land only the first 24 bytes (state + txn + n) — the tear.
+        let mut torn = vec![0u8; full.len()];
+        torn[..24].copy_from_slice(&full[..24]);
+        let (log_mn, log_addr) = c.log_slots[0];
+        c.mns[log_mn].write_bytes(log_addr, &torn).unwrap();
+        let (ep, mut clk) = recovery_ep(&c, 1);
+        let rep = recover_cn_failure(&c, &[0], &ep, &mut clk).unwrap();
+        assert_eq!(rep.torn_slots_discarded, 1);
+        assert_eq!(rep.completed, 0);
+        assert_eq!(rep.rolled_back, 0);
+        assert_eq!(table.load_get(&c.mns, 0, key).unwrap(), b"v-11");
+        // The discarded slot was cleared: a second pass is a no-op.
+        let rep2 = recover_cn_failure(&c, &[0], &ep, &mut clk).unwrap();
+        assert_eq!(rep2.torn_slots_discarded, 0);
+    }
+
+    #[test]
+    fn recycled_cell_is_not_rolled_back() {
+        // PR 8: a stale PREPARED slot (the clear raced the crash) whose
+        // cell has since been recycled by a later committed transaction
+        // (cv bumped) must NOT be invalidated — rolling it back would
+        // destroy the later transaction's committed data.
+        let (c, _coords) = mini();
+        let table = c.table(0);
+        let key = LotusKey::compose(13, 13);
+        let bucket = table.bucket_of(key);
+        let mut bucket_buf = vec![0u8; table.layout.bucket_size() as usize];
+        c.mns[table.primary().mn]
+            .read_bytes(table.bucket_addr(0, bucket), &mut bucket_buf)
+            .unwrap();
+        let (slot, _cvt) = table.find_in_bucket(&bucket_buf, key).unwrap();
+        let cell_addr = table.cvt_addr(0, bucket, slot) + table.layout.cell_off(0);
+        let mut cell_img = vec![0u8; 16];
+        c.mns[table.primary().mn]
+            .read_bytes(cell_addr, &mut cell_img)
+            .unwrap();
+        let live_cv = cell_img[0];
+        // The stale slot logged the cell under an *older* cv.
+        let log = LogRecord::prepared(
+            5151,
+            vec![crate::txn::log::LogEntry {
+                table: 0,
+                mn: table.primary().mn as u16,
+                cv: live_cv.wrapping_sub(1),
+                cell_addr,
+            }],
+        )
+        .unwrap();
+        let (log_mn, log_addr) = c.log_slots[0];
+        c.mns[log_mn].write_bytes(log_addr, &log.serialize()).unwrap();
+        let (ep, mut clk) = recovery_ep(&c, 1);
+        let rep = recover_cn_failure(&c, &[0], &ep, &mut clk).unwrap();
+        // Every entry was recycled: nothing pending, nothing destroyed.
+        assert_eq!(rep.rolled_back, 0);
+        assert_eq!(rep.completed, 1);
+        assert_eq!(
+            table.load_get(&c.mns, 0, key).unwrap(),
+            b"v-13",
+            "the recycled cell's committed data survived the stale slot"
+        );
     }
 
     #[test]

@@ -45,6 +45,8 @@ use crate::txn::timestamp::TimestampOracle;
 use crate::workloads::{RouteCtx, Workload, WorkloadKind};
 use crate::{Error, Result};
 
+pub mod crashsweep;
+
 /// Failure-detection lease (virtual ns) used by the crash harness.
 pub const LEASE_NS: u64 = 5_000_000; // 5 ms
 /// Extra virtual time a restarted CN spends re-registering MRs + QPs.
@@ -172,6 +174,9 @@ impl Cluster {
             membership: Arc::new(Membership::new(n_cns, LEASE_NS)),
             log_slots,
             baseline_lock_bases,
+            doorbell_faults: Arc::new(crate::dm::FaultsCell::new()),
+            ring_trace: crate::audit::RingTrace::default(),
+            recovery_reports: Mutex::new(Vec::new()),
             txn_counter: AtomicU64::new(0),
         }))
     }
@@ -221,6 +226,11 @@ impl Cluster {
         }
         self.shared.rpc.reset_queues();
         self.shared.rpc.set_faults(script.faults.clone());
+        // The same injector governs both planes: RPC messages (above)
+        // and one-sided doorbell rings (PR 8). Installing `None` keeps
+        // the doorbell path byte-inert.
+        self.shared.doorbell_faults.install(script.faults.clone());
+        self.shared.recovery_reports.lock().unwrap().clear();
         for s in &script.suspicions {
             self.shared.membership.suspect(s.cn, s.from_ns, s.until_ns);
         }
@@ -271,6 +281,7 @@ impl Cluster {
         // The script's faults and suspicions end with the run: clear them
         // so later runs on this cluster start clean.
         self.shared.rpc.set_faults(None);
+        self.shared.doorbell_faults.install(None);
         for s in &script.suspicions {
             self.shared.membership.clear_suspicion(s.cn);
         }
@@ -291,7 +302,7 @@ impl Cluster {
             }
             for (i, nic) in self.shared.cn_nics.iter().enumerate() {
                 eprintln!(
-                    "cn{i} nic: ops={} busy={}ns wait={}ns util={:.2} doorbells={} db_ops={} coalesced={} staged={} inflight_hwm={} overlap_rings={} overlap_plans={} resumed_rings={} resumed_plans={} ring_gap={}ns rpc_msgs={} rpc_reqs={} coalesced_rpc={} lock_waits={} lock_wait={}ns handler_chunks={} handler_wait={}ns rpc_retries={} rpc_dropped={} backoff={}ns false_susp={} degraded_aborts={} mean_handler_wait={:.0}ns",
+                    "cn{i} nic: ops={} busy={}ns wait={}ns util={:.2} doorbells={} db_ops={} coalesced={} staged={} inflight_hwm={} overlap_rings={} overlap_plans={} resumed_rings={} resumed_plans={} ring_gap={}ns rpc_msgs={} rpc_reqs={} coalesced_rpc={} lock_waits={} lock_wait={}ns handler_chunks={} handler_wait={}ns rpc_retries={} rpc_dropped={} backoff={}ns false_susp={} degraded_aborts={} mn_op_faults={} torn_batches={} mean_handler_wait={:.0}ns",
                     nic.op_count(),
                     nic.busy_ns(),
                     nic.wait_ns(),
@@ -318,6 +329,8 @@ impl Cluster {
                     nic.backoff_ns(),
                     nic.false_suspicions(),
                     nic.degraded_aborts(),
+                    nic.mn_op_faults(),
+                    nic.torn_batches(),
                     self.shared.rpc.mean_handler_wait_ns(i)
                 );
             }
@@ -340,6 +353,7 @@ impl Cluster {
         let (mut handler_wait_ns, mut handler_chunks) = (0u64, 0u64);
         let (mut rpc_retries, mut rpc_dropped, mut backoff_ns) = (0u64, 0u64, 0u64);
         let (mut false_suspicions, mut degraded_aborts) = (0u64, 0u64);
+        let (mut mn_op_faults, mut torn_batches) = (0u64, 0u64);
         let mut inflight_wqes_hwm = 0u64;
         for nic in &self.shared.cn_nics {
             doorbells += nic.doorbells();
@@ -363,6 +377,8 @@ impl Cluster {
             backoff_ns += nic.backoff_ns();
             false_suspicions += nic.false_suspicions();
             degraded_aborts += nic.degraded_aborts();
+            mn_op_faults += nic.mn_op_faults();
+            torn_batches += nic.torn_batches();
             inflight_wqes_hwm = inflight_wqes_hwm.max(nic.posted_wqes_hwm());
         }
         Ok(RunReport {
@@ -398,6 +414,8 @@ impl Cluster {
             backoff_ns,
             false_suspicions,
             degraded_aborts,
+            mn_op_faults,
+            torn_batches,
         })
     }
 
@@ -622,9 +640,11 @@ fn coordinator_thread(
                     .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
                     .is_ok()
             {
-                let ep = Endpoint::new(cn, shared.cn_nics[cn].clone(), shared.net.clone());
+                let ep = Endpoint::new(cn, shared.cn_nics[cn].clone(), shared.net.clone())
+                    .with_faults(shared.doorbell_faults.clone());
                 let mut rclk = VClock(ev.at_ns + LEASE_NS);
-                let _report = recover_cn_failure(&shared, &ev.cns, &ep, &mut rclk)?;
+                let report = recover_cn_failure(&shared, &ev.cns, &ep, &mut rclk)?;
+                shared.recovery_reports.lock().unwrap().push(report);
                 let restart = rclk.now() + RESTART_EXTRA_NS;
                 run.restart_at[k].store(restart, Ordering::Release);
                 for &c in &ev.cns {

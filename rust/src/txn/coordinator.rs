@@ -71,6 +71,17 @@ pub struct SharedCluster {
     /// base address (on each table's primary MN) of one 8B lock word per
     /// CVT slot plus one per bucket (insert locks). Unused by LOTUS.
     pub baseline_lock_bases: Vec<u64>,
+    /// Doorbell-plane fault injector cell (PR 8): endpoints built from
+    /// this cluster consult it per ring. Empty (the default) is
+    /// byte-inert.
+    pub doorbell_faults: Arc<crate::dm::FaultsCell>,
+    /// Issue-point boundary trace for the crash-point sweep (PR 8):
+    /// disabled (and free) outside sweep reference runs.
+    pub ring_trace: crate::audit::RingTrace,
+    /// Recovery reports of the run's crash-recovery passes, pushed by
+    /// the simulator's recovery driver (cleared at run start) so audits
+    /// can observe e.g. `torn_slots_discarded`.
+    pub recovery_reports: std::sync::Mutex<Vec<crate::recovery::recovery::RecoveryReport>>,
     /// Global transaction-id counter.
     pub txn_counter: AtomicU64,
 }
@@ -118,7 +129,8 @@ pub struct LotusCoordinator {
 impl LotusCoordinator {
     /// Coordinator `slot` on CN `cn`.
     pub fn new(cluster: Arc<SharedCluster>, cn: usize, slot: usize, global_id: usize) -> Self {
-        let ep = Endpoint::new(cn, cluster.cn_nics[cn].clone(), cluster.net.clone());
+        let ep = Endpoint::new(cn, cluster.cn_nics[cn].clone(), cluster.net.clone())
+            .with_faults(cluster.doorbell_faults.clone());
         let seed = cluster.cfg.seed ^ (global_id as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
         Self {
             cluster,

@@ -12,6 +12,21 @@
 //! recovery coordinator reads the listed CVT cells and either completes
 //! the commit (all cells already visible) or rolls it back (any cell
 //! still INVISIBLE).
+//!
+//! # Torn-write safety (PR 8)
+//!
+//! The commit-log write rides a doorbell batch that can tear: a crash —
+//! or an injected [`crate::dm::FaultMode::TornBatch`] fault — may land
+//! only a prefix of the slot image, leaving a state word that *reads* as
+//! PREPARED over garbage entries. Every serialized slot therefore ends
+//! with a **seal**: a checksum over the entire meaningful prefix (state,
+//! txn, entry count, entries), with every seal byte forced nonzero so no
+//! strict-prefix tear (trailing bytes still old/zero) can reproduce it.
+//! [`LogRecord::parse`] verifies the seal; a PREPARED slot whose seal
+//! does not verify is **torn** ([`LogRecord::is_torn`]) and must be
+//! discarded by recovery — the transaction never reached its commit
+//! point intact, so the old versions stand. An out-of-range entry count
+//! is handled the same way (never clamped into a plausible parse).
 
 use crate::util::bytes::{get_u16, get_u64, put_u16, put_u64};
 use crate::{Error, Result};
@@ -24,6 +39,9 @@ pub const STATE_EMPTY: u64 = 0;
 /// Slot state: log written, commit in flight.
 pub const STATE_PREPARED: u64 = 1;
 
+/// Offset of the seal word within the slot image (after the last entry).
+const SEAL_OFF: usize = 8 * 3 + MAX_LOG_ENTRIES * 16;
+
 /// One logged write: where the new version's CVT cell lives.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct LogEntry {
@@ -31,6 +49,11 @@ pub struct LogEntry {
     pub table: u16,
     /// Primary MN id.
     pub mn: u16,
+    /// The cell-version byte the new version was written under: recovery
+    /// compares it against the live cell's `cv` to detect that the cell
+    /// has since been recycled by a *later* transaction — rolling back a
+    /// recycled cell would destroy that transaction's committed data.
+    pub cv: u8,
     /// CVT cell address on the primary MN.
     pub cell_addr: u64,
 }
@@ -44,12 +67,45 @@ pub struct LogRecord {
     pub state: u64,
     /// Logged writes.
     pub entries: Vec<LogEntry>,
+    /// Did the slot's seal verify? Always true for freshly built
+    /// records; false after parsing a torn or corrupt image.
+    pub sealed: bool,
 }
 
 /// Byte size of one log slot in the memory pool.
 pub const fn slot_size() -> u64 {
-    // state | txn | n | entries * (cell_addr, table|mn)
-    8 * 3 + (MAX_LOG_ENTRIES as u64) * 16
+    // state | txn | n | entries * (cell_addr, table|mn|cv) | seal
+    (SEAL_OFF as u64) + 8
+}
+
+/// SplitMix64 finalizer (a bijection on u64).
+#[inline]
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// The slot seal: a mix-fold over the image's meaningful prefix
+/// (`[0, 24 + n*16)` — state, txn, entry count, entries). Every byte of
+/// the result is forced nonzero, so a strict-prefix tear of the image
+/// (whose un-landed tail is old/zero bytes) can never reproduce it.
+fn seal_of(buf: &[u8], n: usize) -> u64 {
+    let mut h = 0x5EA1_0F1A_B10C_D00Bu64 ^ ((n as u64) << 1);
+    let end = 24 + n * 16;
+    let mut off = 0;
+    while off < end {
+        h = mix(h ^ get_u64(buf, off));
+        off += 8;
+    }
+    let mut b = h.to_le_bytes();
+    for x in &mut b {
+        if *x == 0 {
+            *x = 0xA5;
+        }
+    }
+    u64::from_le_bytes(b)
 }
 
 impl LogRecord {
@@ -66,13 +122,13 @@ impl LogRecord {
             txn,
             state: STATE_PREPARED,
             entries,
+            sealed: true,
         })
     }
 
-    /// Serialize to the slot image. The state word is written **last**
-    /// positionally (offset 0 still works because the whole image goes in
-    /// a single WRITE; the word-atomic memory keeps the state word
-    /// consistent).
+    /// Serialize to the slot image, seal last. The whole image goes in a
+    /// single WRITE; the seal makes a *partially landed* WRITE (torn
+    /// doorbell, crash mid-transfer) detectable at parse time.
     pub fn serialize(&self) -> Vec<u8> {
         let mut buf = vec![0u8; slot_size() as usize];
         put_u64(&mut buf, 0, self.state);
@@ -83,15 +139,38 @@ impl LogRecord {
             put_u64(&mut buf, off, e.cell_addr);
             put_u16(&mut buf, off + 8, e.table);
             put_u16(&mut buf, off + 10, e.mn);
+            buf[off + 12] = e.cv;
         }
+        put_u64(&mut buf, SEAL_OFF, seal_of(&buf, self.entries.len()));
         buf
     }
 
-    /// Parse a slot image.
+    /// Parse a slot image, verifying the seal. A short buffer, an
+    /// out-of-range entry count, or a seal mismatch all parse as
+    /// *unsealed* — such a slot is never prepared, and a PREPARED state
+    /// word over an unsealed image is a torn write.
     pub fn parse(buf: &[u8]) -> Self {
+        if buf.len() < slot_size() as usize {
+            return Self {
+                txn: 0,
+                state: STATE_EMPTY,
+                entries: Vec::new(),
+                sealed: false,
+            };
+        }
         let state = get_u64(buf, 0);
         let txn = get_u64(buf, 8);
-        let n = (get_u64(buf, 16) as usize).min(MAX_LOG_ENTRIES);
+        let n = get_u64(buf, 16) as usize;
+        if n > MAX_LOG_ENTRIES {
+            // A corrupt count must surface as torn, never be clamped
+            // into a plausible-looking record.
+            return Self {
+                txn,
+                state,
+                entries: Vec::new(),
+                sealed: false,
+            };
+        }
         let entries = (0..n)
             .map(|i| {
                 let off = 24 + i * 16;
@@ -99,15 +178,30 @@ impl LogRecord {
                     cell_addr: get_u64(buf, off),
                     table: get_u16(buf, off + 8),
                     mn: get_u16(buf, off + 10),
+                    cv: buf[off + 12],
                 }
             })
             .collect();
-        Self { txn, state, entries }
+        let sealed = get_u64(buf, SEAL_OFF) == seal_of(buf, n);
+        Self {
+            txn,
+            state,
+            entries,
+            sealed,
+        }
     }
 
-    /// Is this slot describing an in-flight commit?
+    /// Is this slot describing an intact in-flight commit?
     pub fn is_prepared(&self) -> bool {
-        self.state == STATE_PREPARED && self.txn != 0
+        self.state == STATE_PREPARED && self.txn != 0 && self.sealed
+    }
+
+    /// A PREPARED state word over an image whose seal does not verify:
+    /// the slot write tore. The transaction never reached its commit
+    /// point intact; recovery must discard the slot (old versions are
+    /// the undo log).
+    pub fn is_torn(&self) -> bool {
+        self.state == STATE_PREPARED && !self.sealed
     }
 }
 
@@ -119,6 +213,7 @@ mod tests {
         LogEntry {
             table: i as u16,
             mn: (i % 3) as u16,
+            cv: (i % 251) as u8,
             cell_addr: 0x1000 + i * 32,
         }
     }
@@ -130,6 +225,7 @@ mod tests {
         assert_eq!(buf.len() as u64, slot_size());
         assert_eq!(LogRecord::parse(&buf), rec);
         assert!(rec.is_prepared());
+        assert!(!rec.is_torn());
     }
 
     #[test]
@@ -137,6 +233,7 @@ mod tests {
         let buf = vec![0u8; slot_size() as usize];
         let rec = LogRecord::parse(&buf);
         assert!(!rec.is_prepared());
+        assert!(!rec.is_torn(), "an EMPTY slot is not torn, just empty");
         assert_eq!(rec.state, STATE_EMPTY);
     }
 
@@ -152,6 +249,77 @@ mod tests {
         let rec = LogRecord::prepared(1, entries).unwrap();
         let parsed = LogRecord::parse(&rec.serialize());
         assert_eq!(parsed.entries.len(), MAX_LOG_ENTRIES);
+        assert!(parsed.is_prepared());
+    }
+
+    #[test]
+    fn every_strict_prefix_tear_parses_as_not_prepared() {
+        // The torn-doorbell image: a strict prefix of the slot landed,
+        // the tail still holds the slot's prior bytes. Recovery must
+        // never see such an image as prepared — over an EMPTY prior
+        // image (the common case: slots are cleared after commit)...
+        let rec = LogRecord::prepared(0xDEAD_BEEF, (0..7).map(entry).collect()).unwrap();
+        let img = rec.serialize();
+        for k in 0..img.len() {
+            let mut torn = vec![0u8; img.len()];
+            torn[..k].copy_from_slice(&img[..k]);
+            let parsed = LogRecord::parse(&torn);
+            assert!(
+                !parsed.is_prepared(),
+                "prefix of {k} bytes parsed as prepared"
+            );
+            // A tear that landed the PREPARED state word is *torn*, not
+            // merely empty (the distinction recovery counts).
+            if k >= 8 {
+                assert!(parsed.is_torn(), "prefix of {k} bytes not flagged torn");
+            }
+        }
+        // ...and over a PREVIOUS transaction's stale image (slot reuse:
+        // the clear raced the crash), where the tail bytes are valid
+        // pieces of an older sealed record.
+        let old = LogRecord::prepared(41, (0..MAX_LOG_ENTRIES as u64).map(entry).collect())
+            .unwrap()
+            .serialize();
+        for k in 1..img.len() {
+            let mut torn = old.clone();
+            torn[..k].copy_from_slice(&img[..k]);
+            let parsed = LogRecord::parse(&torn);
+            assert!(
+                !(parsed.is_prepared() && parsed.txn == 0xDEAD_BEEF),
+                "prefix of {k} bytes over a stale image resurrected the new txn"
+            );
+        }
+    }
+
+    #[test]
+    fn every_single_byte_seal_corruption_fails_the_seal() {
+        let rec = LogRecord::prepared(99, (0..4).map(entry).collect()).unwrap();
+        let img = rec.serialize();
+        let seal_off = slot_size() as usize - 8;
+        for i in seal_off..img.len() {
+            for flip in [0x01u8, 0x80, 0xFF] {
+                let mut bad = img.clone();
+                bad[i] ^= flip;
+                let parsed = LogRecord::parse(&bad);
+                assert!(!parsed.is_prepared(), "seal byte {i}^{flip:#x} verified");
+                assert!(parsed.is_torn());
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_entry_count_is_torn_not_clamped() {
+        // Regression (PR 8 satellite): a count beyond MAX_LOG_ENTRIES
+        // used to be silently clamped into a "valid" record.
+        let rec = LogRecord::prepared(7, (0..3).map(entry).collect()).unwrap();
+        let mut img = rec.serialize();
+        for bogus in [MAX_LOG_ENTRIES as u64 + 1, u64::MAX, 1 << 40] {
+            put_u64(&mut img, 16, bogus);
+            let parsed = LogRecord::parse(&img);
+            assert!(!parsed.is_prepared());
+            assert!(parsed.is_torn());
+            assert!(parsed.entries.is_empty(), "no garbage entries surfaced");
+        }
     }
 
     #[test]
@@ -164,12 +332,49 @@ mod tests {
                     .map(|_| LogEntry {
                         table: g.u64(0, u16::MAX as u64) as u16,
                         mn: g.u64(0, 255) as u16,
+                        cv: g.u64(0, 255) as u8,
                         cell_addr: g.u64(0, 1 << 40),
                     })
                     .collect(),
             )
             .unwrap();
             assert_eq!(LogRecord::parse(&rec.serialize()), rec);
+        });
+    }
+
+    #[test]
+    fn prop_random_prefix_tears_never_parse_prepared() {
+        // Property form of the exhaustive test above: random records,
+        // random tear points, random prior images.
+        crate::testing::prop(100, |g| {
+            let n = g.usize(1, MAX_LOG_ENTRIES);
+            let rec = LogRecord::prepared(
+                g.u64(1, u64::MAX / 2),
+                (0..n)
+                    .map(|_| LogEntry {
+                        table: g.u64(0, u16::MAX as u64) as u16,
+                        mn: g.u64(0, 255) as u16,
+                        cv: g.u64(0, 255) as u8,
+                        cell_addr: g.u64(0, 1 << 40),
+                    })
+                    .collect(),
+            )
+            .unwrap();
+            let img = rec.serialize();
+            let k = g.usize(0, img.len() - 1);
+            let mut torn = if g.bool(500) {
+                vec![0u8; img.len()]
+            } else {
+                LogRecord::prepared(g.u64(1, 1 << 30), vec![entry(1), entry(2)])
+                    .unwrap()
+                    .serialize()
+            };
+            torn[..k].copy_from_slice(&img[..k]);
+            let parsed = LogRecord::parse(&torn);
+            assert!(
+                !(parsed.is_prepared() && parsed.txn == rec.txn && parsed.entries == rec.entries),
+                "a strict-prefix tear at {k} reproduced the full record"
+            );
         });
     }
 }

@@ -42,8 +42,36 @@ pub async fn commit_rw(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame) -> Result<(
     };
 
     // --- Write Visible ---
+    //
+    // The log write above was the commit point: once the PREPARED slot
+    // is sealed on its MN, this transaction is committed and must roll
+    // *forward*. A doorbell fault here (MN unreachable / torn batch,
+    // PR 8) therefore cannot abort — the visibility sweep is retried
+    // with capped exponential backoff until the MN answers again; the
+    // gray-failure windows the injector models are finite by contract.
+    // Exhaustion is a fatal error (a committed transaction would
+    // otherwise be silently lost), never a silent abort.
     if log_and_visible {
-        write_log::write_visible(ctx, frame, &plans, commit_ts).await?;
+        let mut attempt = 0u32;
+        loop {
+            match write_log::write_visible(ctx, frame, &plans, commit_ts).await {
+                Ok(()) => break,
+                Err(crate::Error::NodeUnavailable(who)) if attempt < 16 => {
+                    let base = ctx.net().rtt_ns.max(1);
+                    ctx.retry_backoff(base << attempt.min(4)).await;
+                    attempt += 1;
+                    let _ = who;
+                }
+                Err(crate::Error::NodeUnavailable(who)) => {
+                    return Err(crate::Error::Runtime(format!(
+                        "roll-forward failed: write_visible of committed txn {} \
+                         could not reach {who} after {attempt} retries",
+                        frame.txn_id
+                    )));
+                }
+                Err(e) => return Err(e),
+            }
+        }
     }
 
     // Synchronous VT-cache update for locally owned keys (§4.4 "zero

@@ -185,8 +185,9 @@ pub trait StepSink {
 
     /// Take the lane's results if its staged doorbell plan has completed
     /// (`Flight::Done`): `(results, completion time of the lane's
-    /// slowest op)`.
-    fn try_take(&self, lane: usize) -> Option<(BatchResult, u64)>;
+    /// slowest op, ok)` — `ok == false` means an injected doorbell fault
+    /// hit one of the lane's rings and the batch must count as lost.
+    fn try_take(&self, lane: usize) -> Option<(BatchResult, u64, bool)>;
 
     /// Take the lane's RPC reply if its staged RPC plan has completed:
     /// `(reply arrived (false == destination CN failed), completion
@@ -252,7 +253,7 @@ struct TakeIssue<'a> {
 }
 
 impl Future for TakeIssue<'_> {
-    type Output = (BatchResult, u64);
+    type Output = (BatchResult, u64, bool);
 
     fn poll(mut self: Pin<&mut Self>, _cx: &mut Context<'_>) -> Poll<Self::Output> {
         if !self.parked {
@@ -618,7 +619,7 @@ impl PhaseCtx<'_> {
             return Ok(BatchResult::empty());
         }
         sink.post(self.lane, Plan::Doorbell(batch), self.clk.now());
-        let (res, t_done) = TakeIssue {
+        let (res, t_done, ok) = TakeIssue {
             sink,
             lane: self.lane,
             parked: false,
@@ -627,6 +628,14 @@ impl PhaseCtx<'_> {
         // The owning coordinator may have skipped time forward (shard
         // transfer) while this machine was parked.
         self.clk.catch_up(t_done.max(sink.clk_floor()));
+        if !ok {
+            // An injected doorbell fault hit one of this lane's rings
+            // (MN unreachable or a torn batch, PR 8): the batch is lost,
+            // exactly as the direct conduit's `Endpoint::doorbell` error.
+            return Err(crate::Error::NodeUnavailable(
+                "mn (doorbell fault)".to_string(),
+            ));
+        }
         Ok(res)
     }
 

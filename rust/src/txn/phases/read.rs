@@ -72,7 +72,14 @@ async fn probe_place_insert(
             )
         })
         .collect();
-    let res = ctx.issue(batch).await?;
+    let res = match ctx.issue(batch).await {
+        Ok(r) => r,
+        Err(e) => {
+            // Lost doorbell (injected fault): abort, never leak locks.
+            unlock::release(ctx, frame);
+            return Err(e);
+        }
+    };
     let mut placed = None;
     for (&b, &tag) in buckets.iter().zip(&tags) {
         let out = res.read_buf(tag);
@@ -175,7 +182,14 @@ pub async fn read_cvt(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame, from: usize)
         .iter()
         .map(|&(_, mn, addr, len, _)| batch.read(mn, addr, len))
         .collect();
-    let mut results = ctx.issue(batch).await?;
+    let mut results = match ctx.issue(batch).await {
+        Ok(r) => r,
+        Err(e) => {
+            // Lost doorbell (injected fault): abort, never leak locks.
+            unlock::release(ctx, frame);
+            return Err(e);
+        }
+    };
 
     // Pass 3: parse, validate, retry stale addresses via bucket read.
     for (ri, &(i, _mn_id, addr, _len, whole_bucket)) in reads.iter().enumerate() {
@@ -186,7 +200,13 @@ pub async fn read_cvt(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame, from: usize)
             // Home bucket was read in the batch; probe successors on miss.
             let found = match table.find_in_bucket(&buf, key) {
                 Some((slot, cvt)) => Some((table.bucket_of(key), slot, cvt)),
-                None => probe_find(ctx, &table, key, 1)?,
+                None => match probe_find(ctx, &table, key, 1) {
+                    Ok(f) => f,
+                    Err(e) => {
+                        unlock::release(ctx, frame);
+                        return Err(e);
+                    }
+                },
             };
             let Some((b, slot, cvt)) = found else {
                 unlock::release(ctx, frame);
@@ -200,7 +220,14 @@ pub async fn read_cvt(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame, from: usize)
             if cvt.is_empty() || cvt.key != key.0 {
                 // Stale cached address: fall back to a probe search.
                 ctx.cluster.addr_caches[ctx.cn].invalidate(key);
-                let Some((b, slot, cvt)) = probe_find(ctx, &table, key, 0)? else {
+                let probed = match probe_find(ctx, &table, key, 0) {
+                    Ok(f) => f,
+                    Err(e) => {
+                        unlock::release(ctx, frame);
+                        return Err(e);
+                    }
+                };
+                let Some((b, slot, cvt)) = probed else {
                     unlock::release(ctx, frame);
                     return Err(abort(AbortReason::NotFound));
                 };
@@ -281,7 +308,14 @@ pub async fn read_data(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame, from: usize
             batch.read(mn, addr, record::slot_size(record_len))
         })
         .collect();
-    let mut results = ctx.issue(batch).await?;
+    let mut results = match ctx.issue(batch).await {
+        Ok(r) => r,
+        Err(e) => {
+            // Lost doorbell (injected fault): abort, never leak locks.
+            unlock::release(ctx, frame);
+            return Err(e);
+        }
+    };
     for (ri, &(i, _mn, _addr, payload_len, record_len, want_cv)) in reads.iter().enumerate() {
         let buf = results.take_read(tags[ri]);
         let decoded = record::decode(&buf, payload_len, record_len);

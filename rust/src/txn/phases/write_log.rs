@@ -115,6 +115,7 @@ pub async fn write_data_and_log(
         log_entries.push(LogEntry {
             table: rec.r.table,
             mn: table.primary().mn as u16,
+            cv: new_cv,
             cell_addr: cell_addr_primary,
         });
         plans.push(PlannedWrite {
@@ -129,7 +130,14 @@ pub async fn write_data_and_log(
         let log_img = LogRecord::prepared(frame.txn_id, log_entries)?.serialize();
         batch.write(log_mn, log_addr, log_img);
     }
-    ctx.issue(batch).await?;
+    if let Err(e) = ctx.issue(batch).await {
+        // The batch is lost (MN unreachable / torn doorbell): nothing is
+        // committed yet — the log write IS the commit point and it did
+        // not land intact — so this is a pre-commit abort and the held
+        // locks must be released, not leaked until recovery.
+        unlock::release(ctx, frame);
+        return Err(e);
+    }
     Ok(plans)
 }
 

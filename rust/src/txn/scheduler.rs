@@ -279,13 +279,15 @@ impl Coalescer {
     /// beyond the window. The ring fires at the latest post time; per-MN
     /// groups are issued completion-driven, and each owner gets back its
     /// own [`BatchResult`] plus the completion time of its slowest op —
-    /// the only amount its clock must advance by.
+    /// the only amount its clock must advance by — plus an `ok` flag
+    /// (`false` == an injected doorbell fault hit one of the owner's
+    /// rings; the owner must treat the batch as lost, PR 8).
     pub fn ring(
         &self,
         mut plans: Vec<(usize, OpBatch, u64)>,
         ep: &Endpoint,
         mns: &[Arc<MemNode>],
-    ) -> Result<Vec<(usize, BatchResult, u64)>> {
+    ) -> Result<Vec<(usize, BatchResult, u64, bool)>> {
         // Earlier posts execute first within shared doorbell groups.
         plans.sort_by_key(|p| (p.2, p.0));
         let t_ring = plans.iter().map(|p| p.2).max().unwrap_or(0);
@@ -336,7 +338,7 @@ impl Coalescer {
         if merged.is_empty() {
             return Ok(slices
                 .into_iter()
-                .map(|(owner, _)| (owner, BatchResult::empty(), 0))
+                .map(|(owner, _)| (owner, BatchResult::empty(), 0, true))
                 .collect());
         }
         if n_sync >= 2 {
@@ -388,8 +390,8 @@ impl Coalescer {
         Ok(slices
             .into_iter()
             .map(|(owner, s)| {
-                let (r, t) = res.take(s);
-                (owner, r, t)
+                let (r, t, ok) = res.take(s);
+                (owner, r, t, ok)
             })
             .collect())
     }
@@ -682,6 +684,9 @@ enum Flight {
         t_post: u64,
         /// Ring event that completed this plan (resume-order tracing).
         ring: u64,
+        /// `false` == an injected doorbell fault hit one of the lane's
+        /// rings: the batch is lost and the lane must abort (PR 8).
+        ok: bool,
     },
     /// RPC message sent (possibly merged with sibling lanes' messages);
     /// the lane is in the ready queue at `t_done`.
@@ -776,13 +781,13 @@ impl StepSink for SchedShared {
         self.flights.borrow_mut()[lane] = Flight::Staged(plan, t_post);
     }
 
-    fn try_take(&self, lane: usize) -> Option<(BatchResult, u64)> {
+    fn try_take(&self, lane: usize) -> Option<(BatchResult, u64, bool)> {
         let mut fl = self.flights.borrow_mut();
         if !matches!(fl[lane], Flight::Done { .. }) {
             return None;
         }
         match std::mem::replace(&mut fl[lane], Flight::Idle) {
-            Flight::Done { res, t_done, .. } => Some((res, t_done)),
+            Flight::Done { res, t_done, ok, .. } => Some((res, t_done, ok)),
             _ => unreachable!(),
         }
     }
@@ -1274,7 +1279,8 @@ impl FrameScheduler {
     pub fn new(cluster: Arc<SharedCluster>, cn: usize, slot: usize, global_id: usize) -> Self {
         let depth = cluster.cfg.pipeline_depth.max(1);
         let window = cluster.cfg.coalesce_window_ns;
-        let ep = Endpoint::new(cn, cluster.cn_nics[cn].clone(), cluster.net.clone());
+        let ep = Endpoint::new(cn, cluster.cn_nics[cn].clone(), cluster.net.clone())
+            .with_faults(cluster.doorbell_faults.clone());
         let seed = cluster.cfg.seed ^ (global_id as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
         let shared = Rc::new(SchedShared {
             cn,
@@ -1576,11 +1582,15 @@ impl FrameScheduler {
             let gap: u64 = db_plans.iter().map(|p| t_ring - p.2).sum();
             let posts: Vec<(usize, u64)> = db_plans.iter().map(|(i, _, t)| (*i, *t)).collect();
             let n_plans = db_plans.len() as u64;
+            // Both sides of the issue boundary are crash-sweep points:
+            // the ring time (WQEs posted, doorbell about to fire) and
+            // each completion (results back, machine not yet resumed).
+            shared.cluster.ring_trace.record(shared.cn, t_ring);
             let results = c.ring(db_plans, &shared.ep, &shared.cluster.mns)?;
             shared.ep.ring_posted(posted);
             shared.ep.nic.note_resumed(n_plans, gap);
             let mut fl = shared.flights.borrow_mut();
-            for (lane, res, t_done) in results {
+            for (lane, res, t_done, ok) in results {
                 // Every result owner came from the plans; a miss here is
                 // a routing bug and must not be papered over.
                 let t_post = posts
@@ -1588,11 +1598,13 @@ impl FrameScheduler {
                     .find(|(l, _)| *l == lane)
                     .map(|&(_, t)| t)
                     .expect("ring returned a result for a lane that staged no plan");
+                shared.cluster.ring_trace.record(shared.cn, t_done);
                 fl[lane] = Flight::Done {
                     res,
                     t_done,
                     t_post,
                     ring,
+                    ok,
                 };
             }
         }
@@ -1783,9 +1795,10 @@ mod tests {
         let mut sync = OpBatch::new();
         let tag = sync.read(0, r.base, 8);
         let mut out = c.ring(vec![(0, sync, 600)], &ep, &mns).unwrap();
-        let (owner, res, done) = out.pop().unwrap();
+        let (owner, res, done, ok) = out.pop().unwrap();
 
         assert_eq!(owner, 0);
+        assert!(ok, "no injector: the ring cannot fault");
         assert_eq!(c.pending_plans(), 0, "the parked plan rode along");
         assert_eq!(ep.nic.doorbells(), 1, "one merged ring, not two");
         assert_eq!(ep.nic.coalesced_ops(), 1, "the parked write was a rider");
@@ -1818,9 +1831,10 @@ mod tests {
         assert_eq!(ep.nic.overlap_rings(), 1);
         assert_eq!(ep.nic.overlap_plans(), 2);
         assert_eq!(ep.nic.coalesced_ops(), 1, "the later plan's op rode");
-        let (l1, r1, d1) = out.pop().unwrap();
-        let (l0, r0, d0) = out.pop().unwrap();
+        let (l1, r1, d1, ok1) = out.pop().unwrap();
+        let (l0, r0, d0, ok0) = out.pop().unwrap();
         assert_eq!((l0, l1), (0, 1), "results route back per owner");
+        assert!(ok0 && ok1, "no injector: neither owner faulted");
         assert_eq!(r0.read_buf(ta), &11u64.to_le_bytes()[..]);
         assert_eq!(r1.read_buf(tb), &22u64.to_le_bytes()[..]);
         // The ring fires at the latest post time; the earlier-posted

@@ -363,7 +363,82 @@ fn zero_fault_injector_is_byte_inert() {
     assert!(plain.rpc_messages > 0, "the run must exercise the fabric");
     assert_eq!(inert.rpc_dropped, 0);
     assert_eq!(inert.rpc_retries, 0);
+    // PR 8: the injector is installed on the doorbell plane too — with
+    // no doorbell rules it must stay silent there as well.
+    assert_eq!(inert.mn_op_faults, 0);
+    assert_eq!(inert.torn_batches, 0);
     assert_eq!(plain, inert, "an empty fault injector perturbed the run");
+}
+
+/// PR 8 equivalence anchor: the doorbell-plane fault hook is byte-inert
+/// when the installed injector is empty — a depth-4, 3-CN, 2-MN run,
+/// where every commit rides coalesced doorbell rings through the hook,
+/// matches the plain run field-for-field. RPC-plane-only rules must be
+/// equally invisible to the doorbell plane.
+#[test]
+fn empty_injector_leaves_the_doorbell_plane_byte_inert_at_depth_4() {
+    let mut cfg = tiny();
+    cfg.n_cns = 3; // pinned with 2 MNs: rings fan out across MNs
+    cfg.pipeline_depth = 4;
+    cfg.coalesce_window_ns = 5_000;
+    cfg.adaptive_coalescing = false;
+    let run = |faults: Option<Arc<FaultInjector>>| {
+        let cluster = Cluster::build(&cfg, WorkloadKind::SmallBank).unwrap();
+        let script = FaultScript {
+            crashes: vec![],
+            faults,
+            suspicions: vec![],
+        };
+        cluster.run_with_faults(SystemKind::Lotus, &script).unwrap()
+    };
+    let plain = run(None);
+    let inert = run(Some(Arc::new(FaultInjector::new(cfg.seed))));
+    assert!(plain.commits > 100);
+    assert!(plain.doorbells > 0, "the run must ring doorbells");
+    assert_eq!(plain.mn_op_faults, 0);
+    assert_eq!(plain.torn_batches, 0);
+    assert_eq!(plain, inert, "an empty injector perturbed the doorbell plane");
+    // An injector with RPC-plane rules that can never fire (0 permille)
+    // still exercises the rule-matching path per ring — and must still
+    // change nothing.
+    let rpc_only = run(Some(Arc::new(
+        FaultInjector::new(cfg.seed).rule(FaultRule::gray_slow(4, 0)),
+    )));
+    assert_eq!(plain, rpc_only, "an RPC-plane rule leaked into the doorbell plane");
+}
+
+/// PR 8: a gray MN spell mid-run — an unreachable window followed by a
+/// torn-doorbell window, no crash — must cost only aborts and retries:
+/// no stranded locks, no money drift, and every sealed commit is kept
+/// (the commit phase rolls `write_visible` forward through the faults).
+#[test]
+fn gray_mn_windows_abort_cleanly_and_conserve_money() {
+    let mut cfg = tiny();
+    cfg.n_cns = 3;
+    cfg.pipeline_depth = 4;
+    let wl = Arc::new(SmallBankWorkload::new(cfg.scale.smallbank_accounts));
+    let cluster = Cluster::build_with(&cfg, wl.clone() as Arc<dyn Workload>).unwrap();
+    let script = FaultScript {
+        crashes: vec![],
+        faults: Some(Arc::new(
+            FaultInjector::new(cfg.seed)
+                .rule(FaultRule::mn_unreachable(0).window(1_000_000, 1_300_000))
+                .rule(FaultRule::torn_batch(300).window(2_000_000, 2_300_000)),
+        )),
+        suspicions: vec![],
+    };
+    let report = cluster.run_with_faults(SystemKind::Lotus, &script).unwrap();
+    assert!(report.commits > 100, "commits={}", report.commits);
+    assert!(report.mn_op_faults > 0, "the windows must hit some rings");
+    assert!(report.torn_batches > 0, "the torn window must tear some rings");
+    audit_books(&cluster, &wl, cfg.scale.smallbank_accounts, "gray-mn");
+    let held: usize = cluster
+        .shared
+        .lock_services
+        .iter()
+        .map(|s| s.held_slots())
+        .sum();
+    assert_eq!(held, 0, "a doorbell fault stranded a lock slot");
 }
 
 /// ISSUE 7 determinism acceptance: the same seed and the same
