@@ -52,7 +52,92 @@ fn smallbank_run(depth: usize) -> lotus::Result<RunReport> {
     cluster.run(SystemKind::Lotus)
 }
 
+/// One wall-clock trajectory point: the cluster is built *outside* the
+/// timed region, so the measurement covers the steady-state simulation
+/// loop only. Under `--features alloc-count` the point also reports heap
+/// allocations per committed transaction (global-allocator delta across
+/// the run, all coordinator threads).
+fn wall_point(label: &str, cfg: &Config, out: &mut JsonObj) -> lotus::Result<()> {
+    let cluster = Cluster::build(cfg, WorkloadKind::SmallBank)?;
+    #[cfg(feature = "alloc-count")]
+    let a0 = lotus::alloc_count::total_allocs();
+    let t0 = Instant::now();
+    let rep = cluster.run(SystemKind::Lotus)?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    let txns_per_s = rep.commits as f64 / wall_s.max(1e-9);
+    #[cfg(feature = "alloc-count")]
+    let allocs_per_txn = (lotus::alloc_count::total_allocs() - a0) as f64
+        / rep.commits.max(1) as f64;
+    // Without the counting allocator the field is emitted as JSON null.
+    #[cfg(not(feature = "alloc-count"))]
+    let allocs_per_txn = f64::NAN;
+    let allocs_str = if allocs_per_txn.is_finite() {
+        format!("{allocs_per_txn:.1} allocs/txn")
+    } else {
+        String::from("allocs/txn n/a (build with --features alloc-count)")
+    };
+    println!(
+        "wall {label:<20} {wall_s:>7.3} s, {txns_per_s:>12.0} txn/wall-s ({} commits, {allocs_str})",
+        rep.commits,
+    );
+    let mut p = JsonObj::new();
+    p.num("wall_seconds", wall_s)
+        .num("txns_per_wall_second", txns_per_s)
+        .int("commits", rep.commits)
+        .int("gate_publish_ns", cfg.gate_publish_ns)
+        .num("allocs_per_txn", allocs_per_txn);
+    out.obj(label, p);
+    Ok(())
+}
+
+/// The wall-clock trajectory (ISSUE 9): real seconds and transactions
+/// per wall-second — the quantity epoch-batched clock publication and
+/// lane-arena reuse actually optimize — at depth 1 vs depth 4 on the
+/// small topology, plus one paper-scale topology point (3 MNs x 9 CNs x
+/// 4 coordinators, epoch publication at 20 us).
+fn wall_clock_section() -> lotus::Result<JsonObj> {
+    println!("\n== wall-clock trajectory (real seconds, not virtual) ==");
+    let mut wall = JsonObj::new();
+    let mut cfg = Config::small();
+    cfg.duration_ns = 8_000_000;
+    cfg.scale.smallbank_accounts = 20_000;
+    cfg.coalesce_window_ns = 5_000;
+    cfg.pipeline_depth = 1;
+    wall_point("lotus_depth1", &cfg, &mut wall)?;
+    cfg.pipeline_depth = 4;
+    wall_point("lotus_depth4", &cfg, &mut wall)?;
+    let mut paper = Config::paper();
+    paper.duration_ns = 4_000_000;
+    paper.scale.smallbank_accounts = 100_000;
+    wall_point("lotus_paper_scale", &paper, &mut wall)?;
+    Ok(wall)
+}
+
+/// Write the machine-readable output to `LOTUS_BENCH_OUT` (default:
+/// `BENCH_hotpath.json` at the repository root).
+fn write_json(json: String) -> lotus::Result<()> {
+    let out = std::env::var("LOTUS_BENCH_OUT").unwrap_or_else(|_| {
+        format!("{}/../BENCH_hotpath.json", env!("CARGO_MANIFEST_DIR"))
+    });
+    std::fs::write(&out, format!("{json}\n"))
+        .map_err(|e| lotus::Error::Config(format!("write {out}: {e}")))?;
+    println!("\nwrote {out}");
+    Ok(())
+}
+
 fn main() -> lotus::Result<()> {
+    // CI's `wall-clock-smoke` leg: run only the wall-clock trajectory
+    // (release mode, under a time budget), skipping the microbenchmarks
+    // and the virtual-throughput sections.
+    if std::env::var("LOTUS_WALL_SMOKE").is_ok() {
+        let wall = wall_clock_section()?;
+        let mut root = JsonObj::new();
+        root.str("bench", "hotpath-wall-smoke")
+            .str("workload", "smallbank")
+            .obj("wall_clock", wall);
+        return write_json(root.finish());
+    }
+
     println!("== §Perf hot-path microbenchmarks (wall-clock) ==\n");
     let mut structures = JsonObj::new();
 
@@ -285,6 +370,8 @@ fn main() -> lotus::Result<()> {
         )
         .int("lotus_depth4_handler_wait_p99_ns", d4.handler_wait_p99_ns);
 
+    let wall_clock = wall_clock_section()?;
+
     let mut root = JsonObj::new();
     root.str("bench", "hotpath")
         .str("workload", "smallbank-quick")
@@ -293,14 +380,7 @@ fn main() -> lotus::Result<()> {
         .obj("doorbells", doorbells)
         .obj("step_machine", overlap)
         .obj("rpc_plane", rpc_plane)
-        .obj("handler_queue", handler_queue);
-    let json = root.finish();
-
-    let out = std::env::var("LOTUS_BENCH_OUT").unwrap_or_else(|_| {
-        format!("{}/../BENCH_hotpath.json", env!("CARGO_MANIFEST_DIR"))
-    });
-    std::fs::write(&out, format!("{json}\n"))
-        .map_err(|e| lotus::Error::Config(format!("write {out}: {e}")))?;
-    println!("\nwrote {out}");
-    Ok(())
+        .obj("handler_queue", handler_queue)
+        .obj("wall_clock", wall_clock);
+    write_json(root.finish())
 }

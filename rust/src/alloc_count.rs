@@ -1,0 +1,91 @@
+//! A counting global allocator (feature `alloc-count`): wraps the
+//! system allocator and tallies every allocation, so the zero-alloc
+//! steady-state invariant of the frame scheduler (ISSUE 9) and the
+//! `wall_clock` bench section's allocs-per-transaction trajectory are
+//! *measured*, not asserted by inspection.
+//!
+//! Two counters, one per consumer:
+//!
+//! - a process-global [`total_allocs`] for the bench harness, which
+//!   sums allocations across coordinator threads;
+//! - a thread-local [`thread_allocs`] for unit tests, immune to the
+//!   test harness running sibling tests on other threads.
+//!
+//! Both count `alloc` and `realloc` calls (a `realloc` that moves is a
+//! fresh heap acquisition on the hot path; one that shrinks in place is
+//! free in practice but counting it keeps the signal conservative).
+//! Deallocations are not counted — the invariant under test is "no new
+//! heap traffic per transaction", and frees pair with counted allocs.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    // const-init: reading the counter never allocates (a lazily-init
+    // TLS slot could recurse into the allocator on first touch).
+    static TL_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// [`System`] with allocation counting; installed as the global
+/// allocator whenever the `alloc-count` feature is on.
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        TL_ALLOCS.with(|c| c.set(c.get() + 1));
+        unsafe { System.alloc(layout) }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        TL_ALLOCS.with(|c| c.set(c.get() + 1));
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Process-wide allocation count (all threads) since start.
+pub fn total_allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// This thread's allocation count since the thread started.
+pub fn thread_allocs() -> u64 {
+    TL_ALLOCS.with(|c| c.get())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_a_heap_allocation() {
+        let t0 = thread_allocs();
+        let g0 = total_allocs();
+        let v: Vec<u64> = Vec::with_capacity(32);
+        assert!(thread_allocs() > t0, "Vec::with_capacity must be counted");
+        assert!(total_allocs() > g0);
+        drop(v);
+    }
+
+    #[test]
+    fn pure_arithmetic_allocates_nothing() {
+        let mut acc = 0u64;
+        let t0 = thread_allocs();
+        for i in 0..1_000u64 {
+            acc = acc.wrapping_mul(31).wrapping_add(i);
+        }
+        assert_eq!(thread_allocs(), t0, "no heap traffic in the loop");
+        assert_ne!(acc, 0);
+    }
+}

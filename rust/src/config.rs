@@ -188,6 +188,13 @@ pub struct Config {
     pub duration_ns: u64,
     /// Virtual-time skew window for the [`crate::dm::TimeGate`].
     pub gate_window_ns: u64,
+    /// Epoch-batched gate publication (ISSUE 9): a coordinator pays the
+    /// cross-core [`crate::dm::TimeGate`] store only per this much
+    /// virtual progress (or when the skew window forces it). `0` (the
+    /// small-topology/test default) publishes on every bump — the legacy
+    /// byte-exact behavior; the paper preset batches, widening the
+    /// realized skew bound to `gate_window_ns + gate_publish_ns`.
+    pub gate_publish_ns: u64,
     /// Timeline sampling interval for recovery plots (0 = no timeline).
     pub timeline_interval_ns: u64,
     /// GC staleness threshold (ns, paper 7.1: 500 ms).
@@ -229,6 +236,7 @@ impl Config {
             net: NetConfig::default(),
             duration_ns: 100_000_000, // 100 ms virtual
             gate_window_ns: 1_000,
+            gate_publish_ns: 20_000,
             timeline_interval_ns: 0,
             gc_threshold_ns: crate::store::gc::DEFAULT_GC_THRESHOLD_NS,
             balance_interval_ns: 100_000_000,
@@ -248,6 +256,11 @@ impl Config {
             vt_cache_entries: 4096,
             replicas: 2,
             duration_ns: 10_000_000, // 10 ms virtual
+            // Per-bump publication: the small topology anchors the
+            // byte-exact equivalence/determinism suites (epoch batching
+            // is opted into explicitly by the inertness tests and the
+            // LOTUS_TEST_GATE_PUBLISH_NS CI leg).
+            gate_publish_ns: 0,
             scale: Scale {
                 kvs_keys: 20_000,
                 smallbank_accounts: 20_000,
@@ -263,8 +276,9 @@ impl Config {
     /// `LOTUS_TEST_N_CNS`, `LOTUS_TEST_ADAPTIVE` (the coalescing
     /// policy axis: `1`/`true` enables the adaptive controller) and
     /// `LOTUS_TEST_FAULTS` (the chaos axis: `1`/`true` arms
-    /// `rpc_max_retries = 2`). Invalid values are ignored (the defaults
-    /// stand).
+    /// `rpc_max_retries = 2`) and `LOTUS_TEST_GATE_PUBLISH_NS` (the
+    /// wall-clock axis: epoch-batched gate publication). Invalid values
+    /// are ignored (the defaults stand).
     ///
     /// Called by the *test suites'* config helpers (never by library
     /// constructors — a downstream user of [`Config::small`] must not be
@@ -310,6 +324,15 @@ impl Config {
                 "1" | "true" => self.rpc_max_retries = 2,
                 "0" | "false" => self.rpc_max_retries = 0,
                 _ => {}
+            }
+        }
+        // Wall-clock axis (ISSUE 9): a nonzero value runs the whole
+        // suite with epoch-batched gate publication armed. Tests that
+        // assert byte-exact per-bump publication pin `gate_publish_ns`
+        // explicitly.
+        if let Ok(v) = std::env::var("LOTUS_TEST_GATE_PUBLISH_NS") {
+            if let Ok(ns) = v.parse() {
+                self.gate_publish_ns = ns;
             }
         }
     }
@@ -363,6 +386,7 @@ impl Config {
             "duration_ns" => self.duration_ns = p(key, value)?,
             "duration_ms" => self.duration_ns = p::<u64>(key, value)? * 1_000_000,
             "gate_window_ns" => self.gate_window_ns = p(key, value)?,
+            "gate_publish_ns" => self.gate_publish_ns = p(key, value)?,
             "timeline_interval_ns" => self.timeline_interval_ns = p(key, value)?,
             "gc_threshold_ns" => self.gc_threshold_ns = p(key, value)?,
             "balance_interval_ns" => self.balance_interval_ns = p(key, value)?,

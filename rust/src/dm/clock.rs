@@ -8,6 +8,21 @@
 //! publishes its clock and may only proceed while it is within `window_ns`
 //! of the slowest live coordinator (a conservative discrete-event
 //! synchronization, cf. conservative PDES null-message windows).
+//!
+//! # Epoch-batched publication (ISSUE 9)
+//!
+//! At paper scale the gate itself becomes the wall-clock bottleneck:
+//! every lane clock bump is a cross-core `AtomicU64` store that every
+//! peer's scan reads back. [`TimeGate::publish`] batches publication
+//! into epochs of `publish_ns` virtual progress: a store is paid only
+//! when the coordinator advanced at least `publish_ns` past its last
+//! *published* value, or when it may have left the skew window (then it
+//! must publish its true clock and block — [`TimeGate::sync`]). The
+//! published clock is thus a conservative bound on the true clock, stale
+//! by less than `publish_ns`, and the realized skew bound widens from
+//! `window_ns` to `window_ns + publish_ns`. With `publish_ns == 0` (the
+//! default) every call publishes — byte-identical to the legacy per-bump
+//! behavior.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -43,21 +58,69 @@ impl VClock {
     }
 }
 
+/// One coordinator's published clock, padded to its own cache line: the
+/// owner stores it, every blocked peer scans it, and without the padding
+/// neighbouring coordinators' stores false-share one line and the gate
+/// serializes on cache-coherence traffic instead of virtual time.
+#[repr(align(64))]
+struct ClockSlot(AtomicU64);
+
+/// Spin-then-park backoff for the gate's blocking slow path. A bare
+/// `yield_now` loop burns a core per blocked coordinator, which at paper
+/// scale (dozens of coordinator threads on a few cores) starves the very
+/// peers the waiter is gated on. Escalates: busy spins, then scheduler
+/// yields, then short parks.
+struct Backoff(u32);
+
+impl Backoff {
+    const SPIN_LIMIT: u32 = 64;
+    const YIELD_LIMIT: u32 = 96;
+    const PARK_NS: u64 = 20_000;
+
+    fn new() -> Self {
+        Backoff(0)
+    }
+
+    fn wait(&mut self) {
+        let round = self.0;
+        self.0 = self.0.saturating_add(1);
+        if round < Self::SPIN_LIMIT {
+            std::hint::spin_loop();
+        } else if round < Self::YIELD_LIMIT {
+            std::thread::yield_now();
+        } else {
+            std::thread::sleep(std::time::Duration::from_nanos(Self::PARK_NS));
+        }
+    }
+}
+
 /// Bounded-skew synchronizer across coordinator threads.
 pub struct TimeGate {
-    clocks: Vec<AtomicU64>,
+    clocks: Vec<ClockSlot>,
     cached_min: AtomicU64,
     window_ns: u64,
+    /// Publication epoch (virtual ns); 0 == publish on every call.
+    publish_ns: u64,
 }
 
 impl TimeGate {
-    /// Gate for `n` coordinators with the given skew window.
+    /// Gate for `n` coordinators with the given skew window (per-bump
+    /// publication; see [`TimeGate::with_publish`]).
     pub fn new(n: usize, window_ns: u64) -> Self {
         Self {
-            clocks: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            clocks: (0..n).map(|_| ClockSlot(AtomicU64::new(0))).collect(),
             cached_min: AtomicU64::new(0),
             window_ns,
+            publish_ns: 0,
         }
+    }
+
+    /// Set the publication epoch: [`TimeGate::publish`] skips the
+    /// cross-core store while the caller is within `publish_ns` of its
+    /// last published clock *and* safely inside the skew window.
+    pub fn with_publish(mut self, publish_ns: u64) -> Self {
+        self.publish_ns = publish_ns;
+        self
     }
 
     /// Number of registered coordinators.
@@ -73,7 +136,7 @@ impl TimeGate {
     fn scan_min(&self) -> u64 {
         let mut min = u64::MAX;
         for c in &self.clocks {
-            let v = c.load(Ordering::Acquire);
+            let v = c.0.load(Ordering::Acquire);
             if v < min {
                 min = v;
             }
@@ -85,30 +148,65 @@ impl TimeGate {
         // path run unboundedly far ahead of the true slowest clock.
         // Racing stores are fine: every stored value is a genuinely
         // scanned min from some recent instant, and the slow path
-        // rescans.
-        self.cached_min.store(min, Ordering::Release);
+        // rescans. A fully drained gate (every coordinator finished,
+        // `min == u64::MAX`) keeps the last *live* min instead: the
+        // report path calls this after `finish()`, and caching the
+        // sentinel would hand late readers of the fast path a bogus
+        // "everyone is at the end of time" floor.
+        if min != u64::MAX {
+            self.cached_min.store(min, Ordering::Release);
+        }
         min
     }
 
-    /// Publish `now` for coordinator `id` and block (spin-yield) until the
-    /// slowest live coordinator is within the window.
+    /// Publish `now` for coordinator `id`, epoch-batched: skip the store
+    /// while within `publish_ns` of the last published clock and safely
+    /// inside the skew window (see the module docs). Falls through to
+    /// [`TimeGate::sync`] — publishing the true clock first, so two
+    /// mutually stale coordinators can never deadlock on each other's
+    /// old values — whenever the epoch is exhausted or blocking may be
+    /// required. With `publish_ns == 0` this *is* `sync`.
+    #[inline]
+    pub fn publish(&self, id: usize, now: u64) {
+        if self.publish_ns > 0 {
+            // `abs_diff`, not a subtraction: a regressed clock (lane
+            // switch) farther than the epoch below the published value
+            // must re-publish, restoring the conservative bound.
+            let last = self.clocks[id].0.load(Ordering::Relaxed);
+            if now.abs_diff(last) < self.publish_ns
+                && now
+                    <= self
+                        .cached_min
+                        .load(Ordering::Acquire)
+                        .saturating_add(self.window_ns)
+            {
+                return;
+            }
+        }
+        self.sync(id, now);
+    }
+
+    /// Publish `now` for coordinator `id` and block (spin, then yield,
+    /// then park) until the slowest live coordinator is within the
+    /// window.
     pub fn sync(&self, id: usize, now: u64) {
-        self.clocks[id].store(now, Ordering::Release);
+        self.clocks[id].0.store(now, Ordering::Release);
         if now <= self.cached_min.load(Ordering::Acquire).saturating_add(self.window_ns) {
             return;
         }
+        let mut backoff = Backoff::new();
         loop {
             let min = self.scan_min();
             if now <= min.saturating_add(self.window_ns) {
                 return;
             }
-            std::thread::yield_now();
+            backoff.wait();
         }
     }
 
     /// Mark coordinator `id` finished so it never blocks others.
     pub fn finish(&self, id: usize) {
-        self.clocks[id].store(u64::MAX, Ordering::Release);
+        self.clocks[id].0.store(u64::MAX, Ordering::Release);
     }
 
     /// Lowest live clock (u64::MAX when all are finished).
@@ -171,5 +269,66 @@ mod tests {
         g.sync(1, 100);
         g.sync(2, 900);
         assert_eq!(g.min_clock(), 100);
+    }
+
+    #[test]
+    fn drained_gate_keeps_last_live_cached_min() {
+        // Satellite fix: after every coordinator finished, the report
+        // path's scans must not cache the u64::MAX sentinel — a late
+        // fast-path reader would inherit an "infinite" floor.
+        let g = TimeGate::new(2, 100);
+        g.sync(0, 50);
+        g.sync(1, 80);
+        assert_eq!(g.min_clock(), 50);
+        g.finish(0);
+        assert_eq!(g.min_clock(), 80);
+        assert_eq!(g.cached_min.load(Ordering::Acquire), 80);
+        g.finish(1);
+        assert_eq!(g.min_clock(), u64::MAX, "drained gate reports MAX");
+        assert_eq!(
+            g.cached_min.load(Ordering::Acquire),
+            80,
+            "cached min keeps the last live value, not the sentinel"
+        );
+    }
+
+    #[test]
+    fn publish_zero_epoch_matches_per_bump_publication() {
+        // publish_ns == 0 is the legacy behavior: every publish stores.
+        let g = TimeGate::new(2, 1000);
+        g.publish(0, 40);
+        g.publish(1, 60);
+        assert_eq!(g.min_clock(), 40);
+        g.publish(0, 70);
+        assert_eq!(g.min_clock(), 60);
+    }
+
+    #[test]
+    fn publish_batches_stores_into_epochs() {
+        let g = TimeGate::new(1, 1_000).with_publish(500);
+        g.publish(0, 100); // within epoch AND window: store skipped
+        assert_eq!(g.min_clock(), 0, "stale published clock kept");
+        g.publish(0, 600); // epoch exhausted: must publish
+        assert_eq!(g.min_clock(), 600);
+        g.publish(0, 700); // new epoch, within window: skipped again
+        assert_eq!(g.min_clock(), 600);
+    }
+
+    #[test]
+    fn throttled_publisher_still_blocks_beyond_window() {
+        // The epoch only batches *stores*; the bounded-skew invariant is
+        // untouched. A publisher leaving the window publishes its true
+        // clock and blocks exactly like sync.
+        let g = Arc::new(TimeGate::new(2, 100).with_publish(1_000_000));
+        let g2 = g.clone();
+        let t = std::thread::spawn(move || {
+            g2.publish(0, 500);
+            true
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(!t.is_finished(), "should be gated on coordinator 1");
+        g.publish(1, 450); // beyond the cached window: publishes too
+        assert!(t.join().unwrap());
+        assert_eq!(g.min_clock(), 450);
     }
 }

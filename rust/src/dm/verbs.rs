@@ -187,10 +187,14 @@ impl Endpoint {
     }
 
     /// Publish + bound this coordinator's clock before touching a queue.
+    /// Epoch-batched ([`TimeGate::publish`]): with `gate_publish_ns == 0`
+    /// every call stores (the legacy per-bump behavior); with a nonzero
+    /// epoch the cross-core store is paid only per `gate_publish_ns` of
+    /// virtual progress or when the skew window demands it.
     #[inline]
     pub fn gate_sync(&self, clk: &VClock) {
         if let Some((gate, gid)) = &self.gate {
-            gate.sync(*gid, clk.now());
+            gate.publish(*gid, clk.now());
         }
     }
 

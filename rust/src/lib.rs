@@ -64,6 +64,8 @@
 //! println!("tput = {:.2} Mtxn/s, p50 = {} us", report.mtps(), report.p50_us());
 //! ```
 
+#[cfg(feature = "alloc-count")]
+pub mod alloc_count;
 pub mod audit;
 pub mod balance;
 pub mod baselines;

@@ -34,6 +34,13 @@
 //!   drivers, the pipelined lanes' phase machines) — the variant that
 //!   must survive parking, so the allocation is the point.
 //!
+//! Since ISSUE 9 the scheduler boxes one *perpetual* machine per lane
+//! (`lane_loop`), parked between transactions and handed each new start
+//! clock through the in-flight table — so the per-transaction driver box
+//! is paid once per lane, not once per transaction. The phase-level
+//! `execute_step`/`commit_step` machines still box per call (a
+//! documented follow-on).
+//!
 //! The machines are never woken by a reactor — the scheduler knows
 //! exactly which lanes completed (it rang their doorbells itself), so the
 //! waker is a no-op and readiness is tracked in the in-flight table.

@@ -407,6 +407,56 @@ fn empty_injector_leaves_the_doorbell_plane_byte_inert_at_depth_4() {
     assert_eq!(plain, rpc_only, "an RPC-plane rule leaked into the doorbell plane");
 }
 
+/// ISSUE 9 equivalence anchor: epoch-batched clock publication is
+/// byte-inert at depth 1 — throttling the cross-core clock store changes
+/// *when* peers observe a coordinator's progress (wall-clock), never the
+/// conservative lower bound they gate on (virtual time), so a 3-CN run
+/// with `gate_publish_ns` raised matches the per-bump run
+/// field-for-field.
+#[test]
+fn epoch_batched_clock_publication_is_byte_inert_at_depth_1() {
+    let run = |publish_ns: u64| {
+        let mut cfg = tiny();
+        cfg.n_cns = 3; // pinned: cross-coordinator skew must be live
+        cfg.pipeline_depth = 1;
+        cfg.gate_publish_ns = publish_ns; // after apply_test_env: this axis is the test
+        let cluster = Cluster::build(&cfg, WorkloadKind::SmallBank).unwrap();
+        cluster.run(SystemKind::Lotus).unwrap()
+    };
+    let per_bump = run(0);
+    let batched = run(2_500);
+    assert!(per_bump.commits > 100);
+    assert_eq!(
+        per_bump, batched,
+        "epoch-batched publication perturbed a depth-1 run"
+    );
+}
+
+/// ISSUE 9 equivalence anchor, pipelined flavor: the same inertness must
+/// hold at depth 4 with coalescing live, where lanes overlap and the
+/// gate is consulted on every doorbell ring.
+#[test]
+fn epoch_batched_clock_publication_is_byte_inert_at_depth_4() {
+    let run = |publish_ns: u64| {
+        let mut cfg = tiny();
+        cfg.n_cns = 3; // pinned with 2 MNs: rings fan out across MNs
+        cfg.pipeline_depth = 4;
+        cfg.coalesce_window_ns = 5_000;
+        cfg.adaptive_coalescing = false;
+        cfg.gate_publish_ns = publish_ns;
+        let cluster = Cluster::build(&cfg, WorkloadKind::SmallBank).unwrap();
+        cluster.run(SystemKind::Lotus).unwrap()
+    };
+    let per_bump = run(0);
+    let batched = run(2_500);
+    assert!(per_bump.commits > 100);
+    assert!(per_bump.doorbells > 0, "the run must ring doorbells");
+    assert_eq!(
+        per_bump, batched,
+        "epoch-batched publication perturbed a depth-4 run"
+    );
+}
+
 /// PR 8: a gray MN spell mid-run — an unreachable window followed by a
 /// torn-doorbell window, no crash — must cost only aborts and retries:
 /// no stranded locks, no money drift, and every sealed commit is kept
