@@ -33,7 +33,7 @@ pub use clock::{TimeGate, VClock};
 pub use faults::{DoorbellFault, FaultAction, FaultInjector, FaultMode, FaultRule, FaultsCell};
 pub use memnode::{MemNode, MemRegion};
 pub use netconfig::NetConfig;
-pub use opbatch::{BatchResult, MergedBatch, MergedResult, OpBatch, OpTag};
+pub use opbatch::{BatchResult, BufPool, MergedBatch, MergedResult, OpBatch, OpTag};
 pub use rnic::Rnic;
 pub use rpc::RpcFabric;
 pub use verbs::{Endpoint, RingOutcome, VerbOp};

@@ -52,6 +52,69 @@ use crate::Result;
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct OpTag(usize);
 
+/// Caller-owned scratch for READ result buffers, reused across doorbell
+/// rings (ROADMAP #4 follow-on (b)).
+///
+/// [`OpBatch::read`] allocates a fresh `vec![0u8; len]` per planned READ;
+/// on the hot path that is one heap allocation per record per round,
+/// every round, for buffers that are parsed and dropped microseconds
+/// later. A `BufPool` breaks the cycle: plan READs with
+/// [`OpBatch::read_pooled`], harvest results as usual, then hand buffers
+/// back with [`BufPool::put`] / [`BatchResult::recycle`] — the next ring
+/// reuses their capacity instead of hitting the allocator.
+///
+/// The pool is owned by the coordinator (one per sequential coordinator,
+/// one per pipelined lane machine) and threaded through
+/// [`crate::txn::phases::PhaseCtx`]; buffers survive the merge/split
+/// round trip of a [`MergedBatch`] untouched, so pooling composes with
+/// doorbell coalescing. Purely a host-allocator optimisation: buffer
+/// *contents* and every virtual-time charge are identical with or
+/// without the pool.
+#[derive(Debug, Default)]
+pub struct BufPool {
+    free: Vec<Vec<u8>>,
+    /// READs served from the free list (vs fresh allocations).
+    reuses: u64,
+}
+
+impl BufPool {
+    /// An empty pool.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A zeroed buffer of exactly `len` bytes — recycled capacity when
+    /// the free list has any, a fresh allocation otherwise.
+    pub fn get(&mut self, len: usize) -> Vec<u8> {
+        match self.free.pop() {
+            Some(mut b) => {
+                self.reuses += 1;
+                b.clear();
+                b.resize(len, 0);
+                b
+            }
+            None => vec![0u8; len],
+        }
+    }
+
+    /// Return a buffer's capacity to the free list.
+    pub fn put(&mut self, b: Vec<u8>) {
+        if b.capacity() > 0 {
+            self.free.push(b);
+        }
+    }
+
+    /// Buffers currently on the free list.
+    pub fn available(&self) -> usize {
+        self.free.len()
+    }
+
+    /// READs served from recycled capacity since construction.
+    pub fn reuses(&self) -> u64 {
+        self.reuses
+    }
+}
+
 /// Sentinel for "this MN has no group yet" in the per-MN group index.
 const NO_GROUP: u32 = u32::MAX;
 
@@ -101,6 +164,14 @@ impl OpBatch {
                 out: vec![0u8; len],
             },
         )
+    }
+
+    /// Plan a READ whose result buffer comes from `pool` instead of a
+    /// fresh allocation (see [`BufPool`]). Identical to [`OpBatch::read`]
+    /// in grouping, cost charges and result bytes.
+    pub fn read_pooled(&mut self, mn: usize, addr: u64, len: usize, pool: &mut BufPool) -> OpTag {
+        let out = pool.get(len);
+        self.push(mn, VerbOp::Read { addr, out })
     }
 
     /// Plan a WRITE of `data` at `addr` on `mn`.
@@ -230,6 +301,21 @@ impl BatchResult {
         match &mut self.groups[gi].1[oi] {
             VerbOp::Read { out, .. } => std::mem::take(out),
             other => panic!("OpTag does not name a READ: {other:?}"),
+        }
+    }
+
+    /// Return every remaining READ buffer's capacity to `pool` (buffers
+    /// already moved out through [`BatchResult::take_read`] are skipped —
+    /// the caller hands those back individually once parsed). Call after
+    /// harvesting so the next ring's [`OpBatch::read_pooled`] plans reuse
+    /// the capacity.
+    pub fn recycle(self, pool: &mut BufPool) {
+        for (_, ops) in self.groups {
+            for op in ops {
+                if let VerbOp::Read { out, .. } = op {
+                    pool.put(out);
+                }
+            }
         }
     }
 
@@ -669,6 +755,78 @@ mod tests {
         );
         assert_eq!(mns[0].load_u64(r0.base).unwrap(), 0, "MN0 write lost");
         assert_eq!(mns[1].load_u64(r1.base + 8).unwrap(), 8, "MN1 write landed");
+    }
+
+    #[test]
+    fn pooled_reads_recycle_capacity_across_rings_with_identical_results() {
+        let (mns, ep) = setup(1);
+        let r = mns[0].register(256).unwrap();
+        for i in 0..8u64 {
+            mns[0].store_u64(r.base + i * 8, 0x1000 + i).unwrap();
+        }
+        let mut pool = BufPool::new();
+
+        // Ring 1: pool is empty — every READ allocates fresh.
+        let mut clk_a = VClock::zero();
+        let mut a = OpBatch::new();
+        let tags_a: Vec<OpTag> = (0..8u64)
+            .map(|i| a.read_pooled(0, r.base + i * 8, 8, &mut pool))
+            .collect();
+        assert_eq!(pool.reuses(), 0, "empty pool cannot serve a reuse");
+        let mut res_a = a.issue(&ep, &mns, &mut clk_a).unwrap();
+        for (i, &t) in tags_a.iter().enumerate() {
+            assert_eq!(res_a.read_buf(t), &(0x1000 + i as u64).to_le_bytes()[..]);
+        }
+        // One buffer the caller keeps (take_read), the rest recycle.
+        let kept = res_a.take_read(tags_a[0]);
+        res_a.recycle(&mut pool);
+        assert_eq!(pool.available(), 7, "7 of 8 buffers back on the free list");
+
+        // Ring 2: the same plan shape reuses the recycled capacity —
+        // same bytes, same virtual-time charge as ring 1.
+        let mut clk_b = VClock::zero();
+        let mut b = OpBatch::new();
+        let tags_b: Vec<OpTag> = (0..8u64)
+            .map(|i| b.read_pooled(0, r.base + i * 8, 8, &mut pool))
+            .collect();
+        assert_eq!(pool.reuses(), 7, "7 READs served from recycled buffers");
+        assert_eq!(pool.available(), 0);
+        let res_b = b.issue(&ep, &mns, &mut clk_b).unwrap();
+        for (i, &t) in tags_b.iter().enumerate() {
+            assert_eq!(res_b.read_buf(t), &(0x1000 + i as u64).to_le_bytes()[..]);
+        }
+        assert_eq!(clk_a.now(), clk_b.now(), "pooling never changes costs");
+        // Buffers handed back individually (the parse-then-put idiom).
+        pool.put(kept);
+        res_b.recycle(&mut pool);
+        assert_eq!(pool.available(), 9);
+    }
+
+    #[test]
+    fn pooled_buffers_survive_the_merge_split_round_trip() {
+        // A pooled plan absorbed into a MergedBatch comes back through
+        // MergedResult::take with the same buffers; recycle reclaims them.
+        let (mns, ep) = setup(1);
+        let r = mns[0].register(64).unwrap();
+        mns[0].store_u64(r.base, 77).unwrap();
+        let mut pool = BufPool::new();
+        pool.put(Vec::with_capacity(64));
+
+        let mut plan = OpBatch::new();
+        let tag = plan.read_pooled(0, r.base, 8, &mut pool);
+        assert_eq!(pool.reuses(), 1, "served from the seeded buffer");
+        let mut m = MergedBatch::new();
+        let s = m.absorb(plan);
+        let mut res = m.issue_timed(&ep, &mns, 0, |_| false).unwrap();
+        let (br, done, ok) = res.take(s);
+        assert!(ok && done > 0);
+        assert_eq!(br.read_buf(tag), &77u64.to_le_bytes()[..]);
+        br.recycle(&mut pool);
+        assert_eq!(pool.available(), 1);
+        assert!(
+            pool.get(8).capacity() >= 64,
+            "the seeded capacity round-tripped through merge/split"
+        );
     }
 
     #[test]

@@ -100,6 +100,19 @@ pub struct Rnic {
     /// Doorbell rings from this CN torn by `FaultMode::TornBatch` (only
     /// a WQE prefix landed at the MN).
     torn_batches: AtomicU64,
+    /// Shard transfers executed by this CN's balance tick (ISSUE 10).
+    reshard_moves: AtomicU64,
+    /// Transactions doomed by those transfers (lock holders force-
+    /// released while their shard migrated).
+    reshard_aborted_txns: AtomicU64,
+    /// Cumulative virtual ns of shard-transfer interruption charged by
+    /// this CN's balance tick to the coordinator clock floor.
+    reshard_interruption_ns: AtomicU64,
+    /// Lock acquisitions on this CN bounced with `WrongShardOwner`
+    /// while racing a transfer, then retried against the fresh routing
+    /// map (the park-and-retry path; a bounce that exhausts its budget
+    /// aborts the transaction and still counts here once per attempt).
+    wrong_owner_bounces: AtomicU64,
 }
 
 impl Rnic {
@@ -297,6 +310,23 @@ impl Rnic {
         self.torn_batches.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one executed shard transfer: the transactions it doomed
+    /// and the interruption (virtual ns) it charged to the clock floor.
+    #[inline]
+    pub fn note_reshard_move(&self, aborted_txns: u64, interruption_ns: u64) {
+        self.reshard_moves.fetch_add(1, Ordering::Relaxed);
+        self.reshard_aborted_txns
+            .fetch_add(aborted_txns, Ordering::Relaxed);
+        self.reshard_interruption_ns
+            .fetch_add(interruption_ns, Ordering::Relaxed);
+    }
+
+    /// Count one `WrongShardOwner` bounce retried against the fresh map.
+    #[inline]
+    pub fn note_wrong_owner_bounce(&self) {
+        self.wrong_owner_bounces.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Lock-phase RPC reissues.
     pub fn rpc_retries(&self) -> u64 {
         self.rpc_retries.load(Ordering::Relaxed)
@@ -330,6 +360,26 @@ impl Rnic {
     /// Doorbell rings torn by the fault injector.
     pub fn torn_batches(&self) -> u64 {
         self.torn_batches.load(Ordering::Relaxed)
+    }
+
+    /// Shard transfers executed by this CN's balance tick.
+    pub fn reshard_moves(&self) -> u64 {
+        self.reshard_moves.load(Ordering::Relaxed)
+    }
+
+    /// Transactions doomed by this CN's shard transfers.
+    pub fn reshard_aborted_txns(&self) -> u64 {
+        self.reshard_aborted_txns.load(Ordering::Relaxed)
+    }
+
+    /// Shard-transfer interruption charged by this CN (virtual ns).
+    pub fn reshard_interruption_ns(&self) -> u64 {
+        self.reshard_interruption_ns.load(Ordering::Relaxed)
+    }
+
+    /// `WrongShardOwner` bounces retried against the fresh routing map.
+    pub fn wrong_owner_bounces(&self) -> u64 {
+        self.wrong_owner_bounces.load(Ordering::Relaxed)
     }
 
     /// RPC messages sent from this CN.
@@ -465,6 +515,10 @@ impl Rnic {
         self.degraded_aborts.store(0, Ordering::Relaxed);
         self.mn_op_faults.store(0, Ordering::Relaxed);
         self.torn_batches.store(0, Ordering::Relaxed);
+        self.reshard_moves.store(0, Ordering::Relaxed);
+        self.reshard_aborted_txns.store(0, Ordering::Relaxed);
+        self.reshard_interruption_ns.store(0, Ordering::Relaxed);
+        self.wrong_owner_bounces.store(0, Ordering::Relaxed);
     }
 
     /// Reset the queue to idle at time zero (between benchmark runs —
@@ -608,6 +662,13 @@ mod tests {
         n.note_degraded_abort();
         n.note_mn_op_faults(6);
         n.note_torn_batch();
+        n.note_reshard_move(3, 12_000);
+        n.note_reshard_move(0, 8_000);
+        n.note_wrong_owner_bounce();
+        assert_eq!(n.reshard_moves(), 2);
+        assert_eq!(n.reshard_aborted_txns(), 3);
+        assert_eq!(n.reshard_interruption_ns(), 20_000);
+        assert_eq!(n.wrong_owner_bounces(), 1);
         assert_eq!(n.rpc_retries(), 1);
         assert_eq!(n.rpc_dropped(), 2);
         assert_eq!(n.backoff_ns(), 40_000);
@@ -630,6 +691,10 @@ mod tests {
         assert_eq!(n.degraded_aborts(), 0);
         assert_eq!(n.mn_op_faults(), 0);
         assert_eq!(n.torn_batches(), 0);
+        assert_eq!(n.reshard_moves(), 0);
+        assert_eq!(n.reshard_aborted_txns(), 0);
+        assert_eq!(n.reshard_interruption_ns(), 0);
+        assert_eq!(n.wrong_owner_bounces(), 0);
     }
 
     #[test]

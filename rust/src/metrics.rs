@@ -248,6 +248,19 @@ pub struct RunReport {
     /// Doorbell rings of which only a WQE prefix landed at the MN
     /// (`FaultMode::TornBatch`; 0 without an injector).
     pub torn_batches: u64,
+    /// Shard transfers the balance tick executed mid-run (0 with the
+    /// tick disabled or a plan that never moves anything).
+    pub reshard_moves: u64,
+    /// Transactions doomed by those transfers (holders force-released
+    /// while their shard migrated; they abort and retry).
+    pub reshard_aborted_txns: u64,
+    /// Cumulative virtual ns of shard-transfer interruption charged to
+    /// coordinator clock floors (pause -> ownership flip -> resume).
+    pub reshard_interruption_ns: u64,
+    /// Lock acquisitions that bounced with `WrongShardOwner` while
+    /// racing a transfer and retried against the fresh routing map
+    /// instead of aborting (0 without concurrent transfers).
+    pub wrong_owner_bounces: u64,
 }
 
 impl RunReport {
@@ -513,6 +526,10 @@ mod tests {
             degraded_aborts: 0,
             mn_op_faults: 0,
             torn_batches: 0,
+            reshard_moves: 0,
+            reshard_aborted_txns: 0,
+            reshard_interruption_ns: 0,
+            wrong_owner_bounces: 0,
         };
         assert!((r.mtps() - 1.0).abs() < 1e-9);
         assert!((r.doorbells_per_commit() - 4.0).abs() < 1e-9);

@@ -304,7 +304,7 @@ impl Cluster {
             }
             for (i, nic) in self.shared.cn_nics.iter().enumerate() {
                 eprintln!(
-                    "cn{i} nic: ops={} busy={}ns wait={}ns util={:.2} doorbells={} db_ops={} coalesced={} staged={} inflight_hwm={} overlap_rings={} overlap_plans={} resumed_rings={} resumed_plans={} ring_gap={}ns rpc_msgs={} rpc_reqs={} coalesced_rpc={} lock_waits={} lock_wait={}ns handler_chunks={} handler_wait={}ns rpc_retries={} rpc_dropped={} backoff={}ns false_susp={} degraded_aborts={} mn_op_faults={} torn_batches={} mean_handler_wait={:.0}ns",
+                    "cn{i} nic: ops={} busy={}ns wait={}ns util={:.2} doorbells={} db_ops={} coalesced={} staged={} inflight_hwm={} overlap_rings={} overlap_plans={} resumed_rings={} resumed_plans={} ring_gap={}ns rpc_msgs={} rpc_reqs={} coalesced_rpc={} lock_waits={} lock_wait={}ns handler_chunks={} handler_wait={}ns rpc_retries={} rpc_dropped={} backoff={}ns false_susp={} degraded_aborts={} mn_op_faults={} torn_batches={} reshard_moves={} reshard_aborted={} reshard_interruption={}ns wrong_owner_bounces={} mean_handler_wait={:.0}ns",
                     nic.op_count(),
                     nic.busy_ns(),
                     nic.wait_ns(),
@@ -333,6 +333,10 @@ impl Cluster {
                     nic.degraded_aborts(),
                     nic.mn_op_faults(),
                     nic.torn_batches(),
+                    nic.reshard_moves(),
+                    nic.reshard_aborted_txns(),
+                    nic.reshard_interruption_ns(),
+                    nic.wrong_owner_bounces(),
                     self.shared.rpc.mean_handler_wait_ns(i)
                 );
             }
@@ -356,6 +360,8 @@ impl Cluster {
         let (mut rpc_retries, mut rpc_dropped, mut backoff_ns) = (0u64, 0u64, 0u64);
         let (mut false_suspicions, mut degraded_aborts) = (0u64, 0u64);
         let (mut mn_op_faults, mut torn_batches) = (0u64, 0u64);
+        let (mut reshard_moves, mut reshard_aborted_txns) = (0u64, 0u64);
+        let (mut reshard_interruption_ns, mut wrong_owner_bounces) = (0u64, 0u64);
         let mut inflight_wqes_hwm = 0u64;
         for nic in &self.shared.cn_nics {
             doorbells += nic.doorbells();
@@ -381,6 +387,10 @@ impl Cluster {
             degraded_aborts += nic.degraded_aborts();
             mn_op_faults += nic.mn_op_faults();
             torn_batches += nic.torn_batches();
+            reshard_moves += nic.reshard_moves();
+            reshard_aborted_txns += nic.reshard_aborted_txns();
+            reshard_interruption_ns += nic.reshard_interruption_ns();
+            wrong_owner_bounces += nic.wrong_owner_bounces();
             inflight_wqes_hwm = inflight_wqes_hwm.max(nic.posted_wqes_hwm());
         }
         Ok(RunReport {
@@ -418,6 +428,10 @@ impl Cluster {
             degraded_aborts,
             mn_op_faults,
             torn_batches,
+            reshard_moves,
+            reshard_aborted_txns,
+            reshard_interruption_ns,
+            wrong_owner_bounces,
         })
     }
 
@@ -695,13 +709,32 @@ fn coordinator_thread(
                     shared.metrics.drain_counts(counts);
                     shared.metrics.latency_matrix(lat);
                     if let Ok(plan) = planner.plan(counts, lat) {
+                        // Bounded move execution (ISSUE 10): at most
+                        // `max_moves_per_tick` transfers charge this
+                        // interval's clock floor (0 = the whole plan, the
+                        // legacy one-jump behavior). The rest of the plan
+                        // is dropped, not queued — the next sealed
+                        // interval re-plans from fresh counts, so a
+                        // persistent imbalance keeps moving one bounded
+                        // step at a time.
+                        let mut executed = 0usize;
                         for (shard, from, to) in plan.moves() {
+                            if cfg.max_moves_per_tick > 0 && executed >= cfg.max_moves_per_tick {
+                                break;
+                            }
                             if shared.router.owner_of(shard) == from
                                 && shared.membership.is_serving(from)
                                 && shared.membership.is_serving(to)
                             {
                                 let mut clk = VClock(driver.now());
-                                let _ = transfer_shard(&shared, shard, from, to, &mut clk);
+                                if let Ok(rep) = transfer_shard(&shared, shard, from, to, &mut clk)
+                                {
+                                    shared.cn_nics[cn].note_reshard_move(
+                                        rep.aborted_txns as u64,
+                                        rep.interruption_ns,
+                                    );
+                                    executed += 1;
+                                }
                                 driver.skip_to(clk.now());
                             }
                         }
@@ -846,6 +879,8 @@ mod tests {
         cfg.duration_ns = 5_000_000;
         cfg.n_cns = 3; // pinned: the knee needs 24 concurrent over 2 MNs
         cfg.coordinators_per_cn = 8;
+        cfg.balance_interval_ns = 100_000_000; // pinned: no mid-run transfers in the margin
+
         let cluster = Cluster::build(&cfg, WorkloadKind::SmallBank).unwrap();
         let lotus = cluster.run(SystemKind::Lotus).unwrap();
         let motor = cluster.run(SystemKind::Motor).unwrap();
@@ -867,6 +902,7 @@ mod tests {
         cfg.n_cns = 1;
         cfg.coordinators_per_cn = 1;
         cfg.duration_ns = 2_000_000;
+        cfg.balance_interval_ns = 100_000_000; // pinned: armed rebalance races the planner
         let run = |depth: usize| {
             let mut c = cfg.clone();
             c.pipeline_depth = depth;
@@ -967,6 +1003,7 @@ mod tests {
         // This is the fixed-window acceptance test; the adaptive policy
         // has its own saturation-study coverage in tests/integration.rs.
         cfg.adaptive_coalescing = false;
+        cfg.balance_interval_ns = 100_000_000; // pinned: no mid-run transfers in the margin
         let run = |depth: usize| {
             let mut c = cfg.clone();
             c.pipeline_depth = depth;

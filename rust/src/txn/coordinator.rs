@@ -124,6 +124,9 @@ pub struct LotusCoordinator {
     ep: Endpoint,
     rng: crate::util::Xoshiro256,
     phase: Phase,
+    /// READ-buffer scratch reused across doorbell rings and transactions
+    /// (ROADMAP #4 follow-on (b)).
+    pool: crate::dm::BufPool,
 }
 
 impl LotusCoordinator {
@@ -142,6 +145,7 @@ impl LotusCoordinator {
             ep,
             rng: crate::util::Xoshiro256::new(seed),
             phase: Phase::Idle,
+            pool: crate::dm::BufPool::new(),
         }
     }
 
@@ -159,6 +163,7 @@ impl LotusCoordinator {
                 // sibling frames to conflict with.
                 lane: 0,
                 sink: None,
+                pool: &mut self.pool,
             },
             &mut self.frame,
         )

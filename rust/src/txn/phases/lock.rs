@@ -22,6 +22,20 @@
 //! (the holder's interval covers the requester's now) abort lock-first
 //! exactly as before, and a holder that is itself wait-parked is never
 //! waited on (the wait graph stays acyclic).
+//!
+//! # Wrong-owner bounce-and-retry (live resharding)
+//!
+//! A request racing a shard transfer bounces with `WrongShardOwner`
+//! (stale route, or the shard paused mid-transfer). That is not an
+//! abort (ISSUE 10): the lane parks-and-retries at its unchanged
+//! virtual time ([`PhaseCtx::bounce_park`] — a first-class scheduler
+//! event like `Flight::RetryAt`), re-resolves the owner from the fresh
+//! routing map and re-dispatches, charging a single-request message to
+//! the new owner (or a CPU acquisition if the key came home). Sibling
+//! lanes need no special handling: each lock phase partitions against
+//! the live router, so they pick up the new owner on their next pass.
+//! Bounces are bounded by [`MAX_OWNER_BOUNCES`], then degrade to the
+//! legacy abort.
 
 use crate::lock::table::LockMode;
 use crate::sharding::key::LotusKey;
@@ -35,6 +49,13 @@ use crate::{abort, AbortReason, Error, Result};
 /// harmless, but a pathological re-lock storm must degrade to the abort
 /// path rather than loop.
 const MAX_LOCK_WAITS: usize = 16;
+
+/// Bound on `WrongShardOwner` bounce-and-retry rounds per lock request
+/// (ISSUE 10): a request racing a shard transfer re-resolves the owner
+/// from the fresh routing map and retries; a shard that stays paused (or
+/// keeps migrating) across this many bounces degrades to the abort path
+/// — the pre-bounce behavior.
+const MAX_OWNER_BOUNCES: usize = 4;
 
 /// The lock set for `frame.records[from..]`: `(key, mode)` per request.
 pub fn requests(
@@ -63,8 +84,10 @@ pub fn requests(
     reqs
 }
 
-/// One physical acquisition with wait-park triage. `Ok(true)` acquired,
-/// `Ok(false)` conflict (abort), `Err` fatal.
+/// One physical acquisition with wait-park triage and wrong-owner
+/// bounce-and-retry. `Ok(Some(owner_cn))` acquired — at `owner_cn`,
+/// which may differ from the initial `target` if the request bounced to
+/// a fresh owner mid-transfer; `Ok(None)` conflict (abort), `Err` fatal.
 async fn acquire_one(
     ctx: &mut PhaseCtx<'_>,
     key: LotusKey,
@@ -72,22 +95,25 @@ async fn acquire_one(
     holder: crate::lock::state::HolderId,
     target: usize,
     from_remote: bool,
-) -> Result<bool> {
+) -> Result<Option<usize>> {
     let router = ctx.cluster.router.clone();
+    let mut target = target;
+    let mut from_remote = from_remote;
     let mut waits = 0usize;
+    let mut bounces = 0usize;
     loop {
         // Interval check per acquisition attempt, not just once per
         // phase: the lane's clock advances between acquisitions, and
         // whole sibling transactions may run while this lane is parked
         // at a wait — either can move a recorded interval over `now`.
         if ctx.sibling_conflict(key, mode) {
-            return Ok(false);
+            return Ok(None);
         }
         match ctx.cluster.lock_services[target].try_acquire(&router, key, mode, holder, from_remote)
         {
             Ok(true) => {
                 ctx.note_lock(key, mode);
-                return Ok(true);
+                return Ok(Some(target));
             }
             Ok(false) => {
                 if waits < MAX_LOCK_WAITS && ctx.wait_verdict(key, mode) == WaitVerdict::Wait {
@@ -100,12 +126,43 @@ async fn acquire_one(
                     ctx.wait_unlock(key).await;
                     continue;
                 }
-                return Ok(false);
+                return Ok(None);
             }
-            Err(Error::LockBucketFull) | Err(Error::WrongShardOwner { .. }) => {
-                // Bucket-full or stale route (shard migrating) — abort;
-                // the retry will see the fresh map.
-                return Ok(false);
+            Err(Error::LockBucketFull) => {
+                // Bucket-full — abort; the retry hashes elsewhere.
+                return Ok(None);
+            }
+            Err(Error::WrongShardOwner { .. }) => {
+                // Stale route: the shard migrated (or is paused mid-
+                // transfer) between routing and acquisition. Not an
+                // abort (ISSUE 10): park-and-retry at the unchanged
+                // virtual time, re-resolve the owner from the fresh
+                // map, and re-dispatch — charging a fresh single-
+                // request message if the key re-routes to a different
+                // remote CN, or a CPU acquisition if it came home. A
+                // shard that keeps bouncing degrades to the abort path
+                // after `MAX_OWNER_BOUNCES`.
+                if bounces >= MAX_OWNER_BOUNCES {
+                    return Ok(None);
+                }
+                bounces += 1;
+                ctx.ep.nic.note_wrong_owner_bounce();
+                ctx.bounce_park().await;
+                let fresh = router.owner_of_key(key);
+                if fresh != target {
+                    ctx.cluster.metrics.record_request(fresh, key.shard());
+                    if fresh == ctx.cn {
+                        ctx.clk.advance(ctx.net().local_lock_ns);
+                        from_remote = false;
+                    } else {
+                        if ctx.issue_rpc(fresh, 1).await.is_err() {
+                            return Ok(None);
+                        }
+                        from_remote = true;
+                    }
+                    target = fresh;
+                }
+                continue;
             }
             Err(e) => return Err(e),
         }
@@ -150,17 +207,19 @@ pub async fn acquire(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame, from: usize) 
             }
         }
     }
-    // Local locks: CPU CAS (Algorithm 1).
+    // Local locks: CPU CAS (Algorithm 1). A bounce may hand the key to
+    // a fresh remote owner mid-acquire — `Held.owner_cn` records where
+    // the lock really landed, so the unlock goes to the right CN.
     for &(key, mode) in &local {
         ctx.clk.advance(ctx.net().local_lock_ns);
         let cn = ctx.cn;
         match acquire_one(ctx, key, mode, holder, cn, false).await {
-            Ok(true) => frame.held.push(Held {
+            Ok(Some(owner_cn)) => frame.held.push(Held {
                 key,
                 mode,
-                owner_cn: cn,
+                owner_cn,
             }),
-            Ok(false) => {
+            Ok(None) => {
                 unlock::release(ctx, frame);
                 return Err(abort(AbortReason::LockConflict));
             }
@@ -212,12 +271,12 @@ pub async fn acquire(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame, from: usize) 
         }
         for &(key, mode) in &batch {
             match acquire_one(ctx, key, mode, holder, target, true).await {
-                Ok(true) => frame.held.push(Held {
+                Ok(Some(owner_cn)) => frame.held.push(Held {
                     key,
                     mode,
-                    owner_cn: target,
+                    owner_cn,
                 }),
-                Ok(false) => {
+                Ok(None) => {
                     unlock::release(ctx, frame);
                     return Err(abort(AbortReason::LockConflict));
                 }

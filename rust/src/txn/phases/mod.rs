@@ -95,7 +95,7 @@ use std::pin::Pin;
 use std::task::{Context, Poll};
 
 use crate::dm::clock::VClock;
-use crate::dm::opbatch::{BatchResult, OpBatch};
+use crate::dm::opbatch::{BatchResult, BufPool, OpBatch};
 use crate::dm::verbs::Endpoint;
 use crate::dm::NetConfig;
 use crate::lock::state::HolderId;
@@ -582,6 +582,11 @@ pub struct PhaseCtx<'a> {
     /// [`crate::txn::scheduler::FrameScheduler`]; `None` issues planned
     /// batches directly (sequential coordinator, recovery, baselines).
     pub sink: Option<&'a dyn StepSink>,
+    /// Caller-owned READ-buffer scratch, reused across doorbell rings
+    /// (ROADMAP #4 follow-on (b)). Owned by the sequential coordinator
+    /// or the pipelined lane machine — either way it outlives the
+    /// transaction, so capacity recycles across frames.
+    pub pool: &'a mut BufPool,
 }
 
 impl PhaseCtx<'_> {
@@ -783,6 +788,30 @@ impl PhaseCtx<'_> {
                 self.clk.catch_up(until.max(sink.clk_floor()));
             }
             None => self.clk.advance(backoff),
+        }
+    }
+
+    /// Park-and-retry at the lane's *unchanged* virtual time (ISSUE 10):
+    /// the first-class scheduler event behind a `WrongShardOwner`
+    /// bounce. Like [`Self::retry_backoff`] with a zero deadline — the
+    /// lane parks (`Flight::RetryAt` at its own clock) so runnable
+    /// siblings are served first, then resumes and catches up to any
+    /// coordinator-level clock floor (a shard transfer's interruption
+    /// charged via `skip_to` while it was parked). In the modeled
+    /// timeline the retry happens at the same instant the bounce did;
+    /// only the re-routed acquisition itself charges time. A no-op
+    /// under a direct conduit (nothing to yield to).
+    pub async fn bounce_park(&mut self) {
+        if let Some(sink) = self.sink.filter(|s| s.stages()) {
+            let now = self.clk.now();
+            RetryPark {
+                sink,
+                lane: self.lane,
+                t: now,
+                parked: false,
+            }
+            .await;
+            self.clk.catch_up(now.max(sink.clk_floor()));
         }
     }
 }

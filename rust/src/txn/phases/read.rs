@@ -62,16 +62,15 @@ async fn probe_place_insert(
     let buckets: Vec<u64> = table.probe_buckets(key).collect();
     let mn_id = table.primary().mn;
     let mut batch = OpBatch::new();
-    let tags: Vec<OpTag> = buckets
-        .iter()
-        .map(|&b| {
-            batch.read(
-                mn_id,
-                table.bucket_addr(0, b),
-                table.layout.bucket_size() as usize,
-            )
-        })
-        .collect();
+    let mut tags: Vec<OpTag> = Vec::with_capacity(buckets.len());
+    for &b in &buckets {
+        tags.push(batch.read_pooled(
+            mn_id,
+            table.bucket_addr(0, b),
+            table.layout.bucket_size() as usize,
+            ctx.pool,
+        ));
+    }
     let res = match ctx.issue(batch).await {
         Ok(r) => r,
         Err(e) => {
@@ -81,17 +80,23 @@ async fn probe_place_insert(
         }
     };
     let mut placed = None;
+    let mut duplicate = false;
     for (&b, &tag) in buckets.iter().zip(&tags) {
         let out = res.read_buf(tag);
         if table.find_in_bucket(out, key).is_some() {
-            unlock::release(ctx, frame);
-            return Err(abort(AbortReason::Duplicate));
+            duplicate = true;
+            break;
         }
         if placed.is_none() {
             if let Some(slot) = table.find_empty_in_bucket(out) {
                 placed = Some((b, slot));
             }
         }
+    }
+    res.recycle(ctx.pool);
+    if duplicate {
+        unlock::release(ctx, frame);
+        return Err(abort(AbortReason::Duplicate));
     }
     match placed {
         Some(p) => Ok(p),
@@ -176,12 +181,14 @@ pub async fn read_cvt(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame, from: usize)
     }
 
     // Pass 2: plan per-MN doorbell batches through OpBatch; the conduit
-    // issues them (possibly merged with sibling frames' plans).
+    // issues them (possibly merged with sibling frames' plans). Result
+    // buffers come from the coordinator's pool — parsed into owned
+    // snapshots below and recycled, never kept.
     let mut batch = OpBatch::new();
-    let tags: Vec<OpTag> = reads
-        .iter()
-        .map(|&(_, mn, addr, len, _)| batch.read(mn, addr, len))
-        .collect();
+    let mut tags: Vec<OpTag> = Vec::with_capacity(reads.len());
+    for &(_, mn, addr, len, _) in &reads {
+        tags.push(batch.read_pooled(mn, addr, len, ctx.pool));
+    }
     let mut results = match ctx.issue(batch).await {
         Ok(r) => r,
         Err(e) => {
@@ -239,6 +246,9 @@ pub async fn read_cvt(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame, from: usize)
                 (s, cvt, addr)
             }
         };
+        // The CVT/bucket bytes are parsed into owned snapshots above —
+        // the scratch goes back to the pool for the next ring.
+        ctx.pool.put(buf);
         let local = ctx.cluster.router.owner_of_key(key) == ctx.cn;
         let (slot, cvt, cvt_addr) = parsed;
         if use_vt_cache && local {
@@ -300,14 +310,13 @@ pub async fn read_data(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame, from: usize
             cell.cv,
         ));
     }
-    // Per-MN doorbell batches through OpBatch, issued via the conduit.
+    // Per-MN doorbell batches through OpBatch, issued via the conduit;
+    // slot-sized result buffers come from the coordinator's pool.
     let mut batch = OpBatch::new();
-    let tags: Vec<OpTag> = reads
-        .iter()
-        .map(|&(_, mn, addr, _, record_len, _)| {
-            batch.read(mn, addr, record::slot_size(record_len))
-        })
-        .collect();
+    let mut tags: Vec<OpTag> = Vec::with_capacity(reads.len());
+    for &(_, mn, addr, _, record_len, _) in &reads {
+        tags.push(batch.read_pooled(mn, addr, record::slot_size(record_len), ctx.pool));
+    }
     let mut results = match ctx.issue(batch).await {
         Ok(r) => r,
         Err(e) => {
@@ -319,6 +328,8 @@ pub async fn read_data(ctx: &mut PhaseCtx<'_>, frame: &mut TxnFrame, from: usize
     for (ri, &(i, _mn, _addr, payload_len, record_len, want_cv)) in reads.iter().enumerate() {
         let buf = results.take_read(tags[ri]);
         let decoded = record::decode(&buf, payload_len, record_len);
+        // decode copies the payload out; the slot scratch recycles.
+        ctx.pool.put(buf);
         match decoded {
             Some((cv, payload)) if cv == want_cv => {
                 frame.records[i].value = Some(payload);

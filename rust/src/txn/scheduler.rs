@@ -1090,6 +1090,10 @@ struct LaneApi<'s> {
     clk: VClock,
     rng: RngReturn,
     phase: LanePhase,
+    /// READ-buffer scratch reused across doorbell rings; the machine is
+    /// recycled across transactions (ISSUE 9), so the capacity is too
+    /// (ROADMAP #4 follow-on (b)).
+    pool: crate::dm::BufPool,
 }
 
 impl<'s> LaneApi<'s> {
@@ -1097,7 +1101,9 @@ impl<'s> LaneApi<'s> {
     fn parts(&mut self) -> (PhaseCtx<'_>, &mut TxnFrame) {
         let lane = self.lane;
         let shared = self.shared;
-        let LaneApi { frame, clk, .. } = self;
+        let LaneApi {
+            frame, clk, pool, ..
+        } = self;
         (
             PhaseCtx {
                 cluster: &shared.cluster,
@@ -1108,6 +1114,7 @@ impl<'s> LaneApi<'s> {
                 clk,
                 lane,
                 sink: Some(shared),
+                pool,
             },
             frame,
         )
@@ -1295,6 +1302,7 @@ async fn lane_loop(
             slot: rng_slot,
         },
         phase: LanePhase::Idle,
+        pool: crate::dm::BufPool::new(),
     };
     loop {
         let clk0 = StartGate {

@@ -11,7 +11,7 @@ use crate::txn::api::{RecordRef, TxnApi};
 use crate::txn::coordinator::SharedCluster;
 use crate::util::bytes::put_u64;
 use crate::txn::step::StepFut;
-use crate::workloads::zipf::AccessPattern;
+use crate::workloads::zipf::{AccessPattern, SkewDrift};
 use crate::workloads::{RouteCtx, Workload};
 use crate::Result;
 
@@ -25,6 +25,9 @@ pub struct KvsWorkload {
     n_keys: u64,
     rw_pct: u32,
     pattern: AccessPattern,
+    /// Moving-skew remap (ISSUE 10): identity when disabled, so the
+    /// legacy stationary hot set stays byte-inert.
+    drift: SkewDrift,
 }
 
 impl KvsWorkload {
@@ -35,7 +38,22 @@ impl KvsWorkload {
             n_keys,
             rw_pct,
             pattern: AccessPattern::new(n_keys, skewed),
+            drift: SkewDrift::disabled(),
         }
+    }
+
+    /// Arm a moving-skew remap (drifting hot-spot and/or flash crowd).
+    pub fn with_drift(mut self, drift: SkewDrift) -> Self {
+        self.drift = drift;
+        self
+    }
+
+    /// Draw the next key id at virtual time `now_ns`: popularity rank
+    /// from the stationary generator, remapped by the (possibly
+    /// drifting) rank-to-key mapping.
+    #[inline]
+    fn draw(&self, rng: &mut crate::util::Xoshiro256, now_ns: u64) -> u64 {
+        self.drift.map(self.pattern.next(rng), self.n_keys, now_ns)
     }
 
     /// The LOTUS key of logical key `i`: the key id is its own critical
@@ -83,9 +101,10 @@ impl Workload for KvsWorkload {
         route: &'a RouteCtx<'a>,
     ) -> StepFut<'a, Result<()>> {
         StepFut::from_future(async move {
+            let now = api.now();
             let is_rw = api.rng().percent() < self.rw_pct;
             if is_rw {
-                let key = route.draw_routed(|| Self::key(self.pattern.next(api.rng())));
+                let key = route.draw_routed(|| Self::key(self.draw(api.rng(), now)));
                 let r = RecordRef::new(TABLE, key);
                 api.begin(false);
                 let txn = api.txn();
@@ -98,7 +117,7 @@ impl Workload for KvsWorkload {
                 txn.stage_write(r, Self::value_of(key.unique(), generation + 1));
                 txn.commit_step().await
             } else {
-                let key = Self::key(self.pattern.next(api.rng()));
+                let key = Self::key(self.draw(api.rng(), now));
                 let r = RecordRef::new(TABLE, key);
                 api.begin(true);
                 let txn = api.txn();

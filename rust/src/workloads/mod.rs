@@ -36,7 +36,7 @@ pub use kvs::KvsWorkload;
 pub use smallbank::SmallBankWorkload;
 pub use tatp::TatpWorkload;
 pub use tpcc::{CriticalField, TpccWorkload};
-pub use zipf::{AccessPattern, Zipf};
+pub use zipf::{AccessPattern, SkewDrift, Zipf};
 
 /// Routing context a coordinator passes to the workload.
 pub struct RouteCtx<'a> {
@@ -121,9 +121,16 @@ impl WorkloadKind {
     /// Instantiate the workload at the configured scale.
     pub fn instantiate(self, cfg: &Config) -> Arc<dyn Workload> {
         match self {
-            WorkloadKind::Kvs { rw_pct, skewed } => {
-                Arc::new(KvsWorkload::new(cfg.scale.kvs_keys, rw_pct, skewed))
-            }
+            // The moving-skew knobs (ISSUE 10) ride the config: drift
+            // and flash crowd only remap the KVS rank-to-key mapping,
+            // and the disabled mapping is the identity, so existing
+            // configs instantiate the byte-identical legacy workload.
+            WorkloadKind::Kvs { rw_pct, skewed } => Arc::new(
+                KvsWorkload::new(cfg.scale.kvs_keys, rw_pct, skewed).with_drift(SkewDrift {
+                    drift_interval_ns: cfg.drift_interval_ns,
+                    flash_crowd_at_ns: cfg.flash_crowd_at_ns,
+                }),
+            ),
             WorkloadKind::SmallBank => {
                 Arc::new(SmallBankWorkload::new(cfg.scale.smallbank_accounts))
             }

@@ -109,6 +109,67 @@ impl AccessPattern {
     }
 }
 
+/// Hot-key stride of one drift rotation. Odd (so it is coprime to the
+/// 4096-shard space and the walk eventually visits every shard) and
+/// about a third of it, so each rotation jumps the hot head by roughly
+/// one CN's contiguous lock range under the default 3-CN owner map —
+/// the hot spot *changes owner* nearly every rotation instead of
+/// crawling within one CN's range.
+pub const DRIFT_STRIDE: u64 = 1367;
+
+/// Time-driven remap of access-pattern ranks onto keys (ISSUE 10).
+///
+/// The generators above are stationary: rank 0 is always the same key,
+/// so a planner converges once and never works again. `SkewDrift` makes
+/// the *mapping* from popularity rank to key id a pure function of
+/// virtual time: a drifting hot-spot rotates the mapping by
+/// [`DRIFT_STRIDE`] every `drift_interval_ns`, and a flash crowd
+/// (`telecom_cache`-style) jumps it by half the key space at
+/// `flash_crowd_at_ns` — a cold range abruptly becomes the hot set.
+/// Both are deterministic given (seed, virtual time): no extra RNG
+/// draws, and the disabled mapping is the identity, so a run with both
+/// knobs at 0 is byte-identical to one that never heard of drift.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SkewDrift {
+    /// Rotate the rank-to-key mapping every this many virtual ns
+    /// (0 = static).
+    pub drift_interval_ns: u64,
+    /// Virtual time at which the flash crowd arrives (0 = never).
+    pub flash_crowd_at_ns: u64,
+}
+
+impl SkewDrift {
+    /// The identity mapping (legacy stationary skew).
+    pub fn disabled() -> Self {
+        Self {
+            drift_interval_ns: 0,
+            flash_crowd_at_ns: 0,
+        }
+    }
+
+    /// True when the mapping is the identity at every instant.
+    pub fn is_static(&self) -> bool {
+        self.drift_interval_ns == 0 && self.flash_crowd_at_ns == 0
+    }
+
+    /// Map a popularity rank (0 most popular) to a key id in `[0, n)`
+    /// at virtual time `now_ns`.
+    #[inline]
+    pub fn map(&self, rank: u64, n: u64, now_ns: u64) -> u64 {
+        if self.is_static() {
+            return rank;
+        }
+        let mut off = 0u64;
+        if self.drift_interval_ns > 0 {
+            off = (now_ns / self.drift_interval_ns).wrapping_mul(DRIFT_STRIDE);
+        }
+        if self.flash_crowd_at_ns > 0 && now_ns >= self.flash_crowd_at_ns {
+            off = off.wrapping_add(n / 2);
+        }
+        (rank + off % n) % n
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -163,6 +224,59 @@ mod tests {
             seen[p.next(&mut rng) as usize] = true;
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn static_drift_is_identity() {
+        let d = SkewDrift::disabled();
+        assert!(d.is_static());
+        for now in [0, 1, 999_999, u64::MAX] {
+            for rank in [0, 1, 17, 9_999] {
+                assert_eq!(d.map(rank, 10_000, now), rank);
+            }
+        }
+    }
+
+    #[test]
+    fn drift_rotates_every_interval() {
+        let d = SkewDrift {
+            drift_interval_ns: 1_000_000,
+            flash_crowd_at_ns: 0,
+        };
+        let n = 20_000;
+        // Within one interval the mapping is constant...
+        assert_eq!(d.map(0, n, 0), d.map(0, n, 999_999));
+        // ...and each interval boundary advances it by one stride.
+        assert_eq!(d.map(0, n, 1_000_000), DRIFT_STRIDE % n);
+        assert_eq!(d.map(0, n, 2_500_000), (2 * DRIFT_STRIDE) % n);
+        // The rotation preserves rank order offsets (a pure shift).
+        assert_eq!(
+            d.map(5, n, 3_000_000),
+            (d.map(0, n, 3_000_000) + 5) % n
+        );
+        // Deterministic: same (rank, n, now) -> same key, always.
+        assert_eq!(d.map(7, n, 4_200_000), d.map(7, n, 4_200_000));
+    }
+
+    #[test]
+    fn flash_crowd_jumps_half_the_key_space() {
+        let d = SkewDrift {
+            drift_interval_ns: 0,
+            flash_crowd_at_ns: 5_000_000,
+        };
+        let n = 20_000;
+        assert_eq!(d.map(0, n, 4_999_999), 0, "cold before the crowd hits");
+        assert_eq!(d.map(0, n, 5_000_000), n / 2, "hot set jumps to the cold range");
+        assert_eq!(d.map(0, n, 9_000_000), n / 2, "and stays there");
+        // Composes with drift: both offsets apply after the trigger.
+        let both = SkewDrift {
+            drift_interval_ns: 1_000_000,
+            flash_crowd_at_ns: 5_000_000,
+        };
+        assert_eq!(
+            both.map(0, n, 6_000_000),
+            (6 * DRIFT_STRIDE % n + n / 2) % n
+        );
     }
 
     #[test]

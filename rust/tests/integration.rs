@@ -4,8 +4,9 @@
 use std::sync::Arc;
 
 use lotus::config::{Config, SystemKind};
-use lotus::dm::{FaultInjector, FaultRule};
+use lotus::dm::{FaultInjector, FaultRule, VClock};
 use lotus::sharding::key::LotusKey;
+use lotus::sharding::transfer_shard;
 use lotus::sim::{Cluster, CrashEvent, FaultScript, SuspicionWindow};
 use lotus::txn::api::{RecordRef, TxnApi, TxnCtl};
 use lotus::txn::coordinator::LotusCoordinator;
@@ -348,6 +349,7 @@ fn zero_fault_injector_is_byte_inert() {
     cfg.n_cns = 3; // pinned: remote lock RPCs must flow through the injector hook
     cfg.pipeline_depth = 1;
     cfg.rpc_max_retries = 3; // armed, but with no faults it must never fire
+    cfg.balance_interval_ns = 100_000_000; // pinned: armed rebalance races the planner
     let run = |faults: Option<Arc<FaultInjector>>| {
         let cluster = Cluster::build(&cfg, WorkloadKind::SmallBank).unwrap();
         let script = FaultScript {
@@ -382,6 +384,7 @@ fn empty_injector_leaves_the_doorbell_plane_byte_inert_at_depth_4() {
     cfg.pipeline_depth = 4;
     cfg.coalesce_window_ns = 5_000;
     cfg.adaptive_coalescing = false;
+    cfg.balance_interval_ns = 100_000_000; // pinned: armed rebalance races the planner
     let run = |faults: Option<Arc<FaultInjector>>| {
         let cluster = Cluster::build(&cfg, WorkloadKind::SmallBank).unwrap();
         let script = FaultScript {
@@ -420,6 +423,7 @@ fn epoch_batched_clock_publication_is_byte_inert_at_depth_1() {
         cfg.n_cns = 3; // pinned: cross-coordinator skew must be live
         cfg.pipeline_depth = 1;
         cfg.gate_publish_ns = publish_ns; // after apply_test_env: this axis is the test
+        cfg.balance_interval_ns = 100_000_000; // pinned: armed rebalance races the planner
         let cluster = Cluster::build(&cfg, WorkloadKind::SmallBank).unwrap();
         cluster.run(SystemKind::Lotus).unwrap()
     };
@@ -444,6 +448,7 @@ fn epoch_batched_clock_publication_is_byte_inert_at_depth_4() {
         cfg.coalesce_window_ns = 5_000;
         cfg.adaptive_coalescing = false;
         cfg.gate_publish_ns = publish_ns;
+        cfg.balance_interval_ns = 100_000_000; // pinned: armed rebalance races the planner
         let cluster = Cluster::build(&cfg, WorkloadKind::SmallBank).unwrap();
         cluster.run(SystemKind::Lotus).unwrap()
     };
@@ -504,6 +509,7 @@ fn same_seed_same_fault_script_is_deterministic() {
     cfg.pipeline_depth = 4;
     cfg.coalesce_window_ns = 5_000;
     cfg.rpc_max_retries = 2;
+    cfg.balance_interval_ns = 100_000_000; // pinned: armed rebalance races the planner
     let script = || FaultScript {
         crashes: vec![CrashEvent {
             at_ns: 6_000_000,
@@ -569,6 +575,7 @@ fn depth4_lanes_resume_in_completion_clock_order() {
     cfg.pipeline_depth = 4;
     cfg.coalesce_window_ns = 5_000;
     cfg.scale.smallbank_accounts = 2_000;
+    cfg.balance_interval_ns = 100_000_000; // pinned: armed rebalance races the planner
     let cluster = Cluster::build(&cfg, WorkloadKind::SmallBank).unwrap();
     let workload = cluster.workload.clone();
     let mut sched = FrameScheduler::new(cluster.shared.clone(), 0, 0, 0);
@@ -798,6 +805,7 @@ fn adaptive_coalescing_beats_both_fixed_windows_under_hot_destination() {
     cfg.coordinators_per_cn = 2;
     cfg.pipeline_depth = 4;
     cfg.features.load_balancing = false; // keep the hot spot hot
+    cfg.drift_interval_ns = 0; // pinned: the hot spot must not move either
     cfg.scale.kvs_keys = 2_000;
     let run = |window: u64, adaptive: bool| {
         let mut c = cfg.clone();
@@ -945,4 +953,185 @@ fn manual_transactions_interleave_with_benchmark_state() {
     co.txn().add_ro(r);
     co.txn().execute().unwrap();
     assert_eq!(co.txn().value(r).unwrap(), b"manual");
+}
+
+/// ISSUE 10 tentpole acceptance: under a *drifting* hot spot, the
+/// periodic balance tick must chase lock ownership of the hot shards
+/// and strictly beat static placement on committed throughput at depth
+/// 4 across 3 CNs — while the post-move dip recovers and no lock slot
+/// is stranded.
+#[test]
+fn rebalancing_chases_a_drifting_hot_spot_and_beats_static() {
+    let run = |balance_interval_ns: u64| {
+        let mut cfg = tiny();
+        cfg.n_cns = 3; // pinned: a hot CN needs cold peers to shed to
+        cfg.coordinators_per_cn = 2;
+        cfg.pipeline_depth = 4;
+        cfg.coalesce_window_ns = 5_000;
+        cfg.duration_ns = 24_000_000;
+        cfg.timeline_interval_ns = 1_000_000;
+        cfg.scale.kvs_keys = 50_000;
+        cfg.drift_interval_ns = 6_000_000; // pinned: the hot spot must move
+        cfg.flash_crowd_at_ns = 0;
+        cfg.balance_interval_ns = balance_interval_ns;
+        cfg.max_moves_per_tick = 1;
+        let cluster = Cluster::build(
+            &cfg,
+            WorkloadKind::Kvs {
+                rw_pct: 100,
+                skewed: true,
+            },
+        )
+        .unwrap();
+        let report = cluster.run(SystemKind::Lotus).unwrap();
+        let held: usize = cluster
+            .shared
+            .lock_services
+            .iter()
+            .map(|s| s.held_slots())
+            .sum();
+        assert_eq!(held, 0, "balance={balance_interval_ns}: stranded lock slots");
+        report
+    };
+    let reb = run(1_000_000); // 1 ms balance tick
+    let sta = run(0); // tick disabled: static placement
+    assert!(
+        reb.reshard_moves > 0,
+        "a moving hot spot must trigger shard moves"
+    );
+    assert!(
+        reb.reshard_interruption_ns > 0,
+        "moves must charge a lock-service interruption"
+    );
+    assert_eq!(sta.reshard_moves, 0, "static placement must never move");
+    assert_eq!(sta.wrong_owner_bounces, 0, "a static map is never stale");
+    assert!(
+        reb.commits > sta.commits,
+        "chasing the hot spot must beat static placement ({} vs {})",
+        reb.commits,
+        sta.commits
+    );
+    // Dip-and-recovery: after the moves settle, the tail of the curve
+    // sits at or above the worst post-warmup bucket.
+    let t = &reb.timeline;
+    assert!(t.len() >= 12, "timeline too short: {} buckets", t.len());
+    let dip = t[4..].iter().copied().min().unwrap();
+    let tail = t[t.len() - 4..].iter().sum::<u64>() / 4;
+    assert!(
+        tail >= dip,
+        "throughput must recover after the post-move dip (dip {dip}, tail {tail})"
+    );
+}
+
+/// ISSUE 10 satellite: an *armed* balance tick that plans zero moves is
+/// byte-inert. Under uniform load the overload predicate (latency 1.5x
+/// over the cluster mean for three straight sealed intervals) never
+/// trips, so sealing/draining/planning stay host-side: the RunReport is
+/// identical to a tick-disabled run, at depth 1 and at depth 4.
+#[test]
+fn armed_tick_with_zero_planned_moves_is_byte_inert() {
+    for depth in [1usize, 4] {
+        let run = |balance_interval_ns: u64| {
+            let mut cfg = tiny();
+            cfg.n_cns = 3; // pinned: symmetric CNs keep the predicate cold
+            cfg.pipeline_depth = depth;
+            cfg.coalesce_window_ns = 5_000;
+            cfg.drift_interval_ns = 0; // pinned: uniform load stays uniform
+            cfg.balance_interval_ns = balance_interval_ns;
+            let cluster = Cluster::build(
+                &cfg,
+                WorkloadKind::Kvs {
+                    rw_pct: 50,
+                    skewed: false,
+                },
+            )
+            .unwrap();
+            cluster.run(SystemKind::Lotus).unwrap()
+        };
+        let armed = run(500_000);
+        let off = run(0);
+        assert_eq!(
+            armed.reshard_moves, 0,
+            "depth {depth}: uniform load must plan no moves"
+        );
+        assert_eq!(
+            armed, off,
+            "depth {depth}: an idle balance tick perturbed the run"
+        );
+    }
+}
+
+/// ISSUE 10 satellite: a lane whose lock request lands on a CN that just
+/// lost the shard must bounce with `WrongShardOwner`, park, re-resolve
+/// against the fresh map, and retry — not abort. Every shard carrying
+/// the SmallBank working set ping-pongs between both CNs while a
+/// depth-4 scheduler is mid-flight, so staged owner resolutions go stale
+/// wholesale; the bounces surface on the NIC counter, bounced lanes
+/// still commit, and the books balance.
+#[test]
+fn wrong_owner_bounce_parks_and_retries_against_fresh_map() {
+    let mut cfg = tiny();
+    cfg.n_cns = 2; // pinned: ping-pong partner for every shard
+    cfg.coordinators_per_cn = 1;
+    cfg.pipeline_depth = 4;
+    cfg.coalesce_window_ns = 5_000;
+    cfg.scale.smallbank_accounts = 200; // hot: staged plans hit moved shards
+    cfg.balance_interval_ns = 100_000_000; // pinned: this test moves shards itself
+    let wl = Arc::new(SmallBankWorkload::new(cfg.scale.smallbank_accounts));
+    let cluster = Cluster::build_with(&cfg, wl.clone() as Arc<dyn Workload>).unwrap();
+    let workload = cluster.workload.clone();
+    let mut sched = FrameScheduler::new(cluster.shared.clone(), 0, 0, 0);
+    let route = RouteCtx {
+        router: &cluster.shared.router,
+        cn: 0,
+        hybrid: false,
+    };
+
+    // Every shard with a SmallBank key on it: one ping-pong round
+    // invalidates every staged owner resolution at once.
+    let mut shards: Vec<u16> = (0..cfg.scale.smallbank_accounts)
+        .flat_map(|acc| [SAVINGS, CHECKING].map(|t| SmallBankWorkload::key(t, acc).shard()))
+        .collect();
+    shards.sort_unstable();
+    shards.dedup();
+
+    let mut outcomes: Vec<LaneOutcome> = Vec::new();
+    let mut moved = 0usize;
+    let mut next_flip = 50usize;
+    while outcomes.len() < 600 {
+        sched.step(&workload, &route, &mut outcomes).unwrap();
+        if outcomes.len() >= next_flip {
+            next_flip += 50;
+            // The transfers are charged to the scheduler's own clock so
+            // the interruption lands on the virtual timeline it drives.
+            let mut clk = VClock(sched.now());
+            for &s in &shards {
+                let from = cluster.shared.router.owner_of(s);
+                transfer_shard(&cluster.shared, s, from, 1 - from, &mut clk).unwrap();
+                moved += 1;
+            }
+            sched.skip_to(clk.now());
+        }
+    }
+    sched.finish(&mut outcomes).unwrap();
+
+    assert!(moved > shards.len(), "the map must flip more than once");
+    let bounces = cluster.shared.cn_nics[0].wrong_owner_bounces();
+    assert!(
+        bounces > 0,
+        "mid-flight transfers must bounce some lock requests"
+    );
+    let commits = outcomes.iter().filter(|o| o.result.is_ok()).count();
+    assert!(
+        commits > 200,
+        "bounced lanes must retry and commit (only {commits}/600)"
+    );
+    audit_books(&cluster, &wl, cfg.scale.smallbank_accounts, "bounce");
+    let held: usize = cluster
+        .shared
+        .lock_services
+        .iter()
+        .map(|s| s.held_slots())
+        .sum();
+    assert_eq!(held, 0, "bounce-and-retry left held lock slots");
 }
